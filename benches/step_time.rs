@@ -1,0 +1,11 @@
+//! Bench: per-step wall-clock, MeZO vs fused-step vs FT, across the size
+//! ladder (regenerates Table 23; `harness = false` — no criterion offline).
+//!
+//!     cargo bench --bench step_time
+use mezo::exp::{tables, Ctx};
+
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let ctx = Ctx::new(quick).expect("runtime");
+    tables::table23(&ctx).expect("table23");
+}

@@ -1,0 +1,18 @@
+//! Bench harness: regenerate every paper table/figure end to end.
+//!
+//!     cargo bench --bench tables                  # quick: memory tables only
+//!     cargo bench --bench tables -- table1        # one exhibit
+//!     cargo bench --bench tables -- --full all    # full budgets
+use mezo::exp::{tables, Ctx};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let id = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "table22".to_string());
+    let ctx = Ctx::new(!full).expect("runtime");
+    tables::run(&ctx, &id, "ar", "tiny").expect("experiment");
+}

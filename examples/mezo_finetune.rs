@@ -1,0 +1,58 @@
+//! Compare zero-shot → FT(Adam, backprop) → MeZO on one task.
+use anyhow::Result;
+use mezo::data::tasks::{generate, GenOpts, Task};
+use mezo::eval::Evaluator;
+use mezo::optim::ft::{FtConfig, FtFlavor, FtOptimizer};
+use mezo::optim::mezo::{MezoConfig, MezoSgd};
+use mezo::optim::MezoStepper;
+use mezo::train::pretrain::{artifact_name, pretrained, params_for, PretrainCfg};
+use mezo::train::{train_ft, train_zo, TrainCfg};
+use mezo::runtime::Runtime;
+use mezo::tokenizer::Vocab;
+use mezo::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let task = Task::from_name(&args.str("task", "sst2")).expect("unknown task");
+    let family = args.str("family", "ar");
+    let size = args.str("size", "tiny");
+    let rt = Runtime::from_env()?;
+    let vocab = Vocab::standard();
+    pretrained(&rt, &family, &size, &PretrainCfg::default())?;
+    let loss_art = rt.load(&artifact_name(&family, &size, "loss", "full"))?;
+    let grad_art = rt.load(&artifact_name(&family, &size, "grad", "full"))?;
+    let logits_art = rt.load(&artifact_name(&family, &size, "logits", "full"))?;
+    let ev = Evaluator::new(loss_art.clone(), Some(logits_art), family == "mlm");
+    let n_train = args.usize("n-train", 256);
+    let data = generate(task, &vocab, GenOpts { n_train, n_val: 96, n_test: 192, ..Default::default() });
+
+    let params0 = params_for(&rt, &loss_art.meta.name, &family, &size, 0)?;
+    let zs = ev.evaluate(&params0, task, &data.test)?.score;
+    println!("zero-shot: {:.3}", zs);
+
+    // FT
+    let ft_steps = args.usize("ft-steps", 200);
+    let mut p_ft = params_for(&rt, &loss_art.meta.name, &family, &size, 0)?;
+    let tr = p_ft.indices_of(&grad_art.meta.trainable);
+    let mut ft = FtOptimizer::new(FtConfig { lr: args.f32("ft-lr", 1e-4), total_steps: ft_steps,
+        flavor: FtFlavor::Adam, ..Default::default() }, tr, &p_ft);
+    let r = train_ft(&mut ft, &mut p_ft, &grad_art, &ev, task, &data.train, &data.val,
+        &TrainCfg { steps: ft_steps, eval_every: ft_steps/4, ..Default::default() })?;
+    println!("FT: test {:.3} (best val {:.3}, losses {:?})",
+             ev.evaluate(&p_ft, task, &data.test)?.score, r.best_val,
+             r.curve.iter().map(|x| (x.1*100.0).round()/100.0).collect::<Vec<_>>());
+
+    // MeZO
+    let steps = args.usize("steps", 2000);
+    let mut p_zo = params_for(&rt, &loss_art.meta.name, &family, &size, 0)?;
+    let tr = p_zo.indices_of(&loss_art.meta.trainable);
+    let cfg = MezoConfig { lr: args.f32("lr", 3e-4), eps: args.f32("eps", 1e-3),
+        total_steps: steps, ..Default::default() };
+    let mut opt = MezoStepper::new(MezoSgd::new(cfg, tr, 7));
+    let r = train_zo(&mut opt, &mut p_zo, &loss_art, &ev, task, &data.train, &data.val,
+        &TrainCfg { steps, eval_every: steps/5, ..Default::default() })?;
+    println!("MeZO: test {:.3} (best val {:.3}, fwd {})",
+             ev.evaluate(&p_zo, task, &data.test)?.score, r.best_val, r.forward_passes);
+    println!("  val curve: {:?}", r.val_curve);
+    Ok(())
+}

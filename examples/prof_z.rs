@@ -1,0 +1,11 @@
+use mezo::rng::GaussianStream;
+use std::time::Instant;
+fn main() {
+    let g = GaussianStream::new(7);
+    let n = 20_000_000u64;
+    let t = Instant::now();
+    let mut acc = 0.0f32;
+    for i in 0..n { acc += g.z(i); }
+    let dt = t.elapsed().as_secs_f64();
+    println!("z(): {:.1} M/s ({:.1} ns each) acc={}", n as f64/dt/1e6, dt*1e9/n as f64, acc);
+}

@@ -1,0 +1,247 @@
+"""AOT lowering: JAX/Pallas -> HLO text + metadata, consumed by rust.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a pure function with a fixed ABI:
+    inputs  = [*params (param_specs order), *batch tensors, *extras]
+    outputs = tuple (lowered with return_tuple=True)
+and ships with a `.meta.json` sidecar describing every input/output tensor,
+the trainable set, model dims and a FLOP estimate. Rust reads the sidecar to
+allocate parameter buffers and marshal literals — python is never imported at
+runtime.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts            # default set
+    python -m compile.aot --out-dir ../artifacts --only ar_small_full_loss_b8_s64
+    python -m compile.aot --list
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(mode, b, s):
+    """Batch tensors appended after params, per artifact mode."""
+    ii = ("input_ids", (b, s), "i32")
+    tg = ("targets", (b, s), "i32")
+    lm = ("loss_mask", (b, s), "f32")
+    am = ("attn_mask", (b, s), "f32")
+    if mode in ("loss", "loss_pallas", "grad"):
+        return [ii, tg, lm, am]
+    if mode in ("logits", "kv"):
+        return [ii, am]
+    if mode == "fused":
+        return [ii, tg, lm, am, ("seed", (1,), "i32"),
+                ("eps", (1,), "f32"), ("lr", (1,), "f32")]
+    raise ValueError(mode)
+
+
+_DT = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def build_fn(cfg: M.ModelConfig, mode):
+    """Returns (fn taking flat positional args, input descriptors, output names)."""
+    pspecs = M.param_specs(cfg)
+    n_params = len(pspecs)
+    tnames = M.trainable_names(cfg)
+
+    def unpack(args):
+        params = {name: a for (name, _), a in zip(pspecs, args[:n_params])}
+        return params, args[n_params:]
+
+    if mode in ("loss", "loss_pallas"):
+        use_pallas = mode == "loss_pallas"
+
+        def fn(*args):
+            params, (ii, tg, lm, am) = unpack(args)
+            mean, per_ex = M.loss_fn(cfg, params, ii, tg, lm, am, use_pallas)
+            return mean, per_ex
+        outs = ["mean_loss", "per_example_loss"]
+    elif mode == "logits":
+        def fn(*args):
+            params, (ii, am) = unpack(args)
+            return M.logits_features_fn(cfg, params, ii, am, use_pallas=False)
+        outs = ["logits", "hidden"]
+    elif mode == "grad":
+        def fn(*args):
+            params, (ii, tg, lm, am) = unpack(args)
+            loss, grads = M.grad_fn(cfg, params, ii, tg, lm, am)
+            return tuple([loss] + grads)
+        outs = ["loss"] + [f"grad.{n}" for n in tnames]
+    elif mode == "kv":
+        def fn(*args):
+            params, (ii, am) = unpack(args)
+            return tuple(M.kv_activations_fn(cfg, params, ii, am))
+        outs = []
+        for i in range(cfg.n_layers):
+            outs += [f"kv.layer{i}.k", f"kv.layer{i}.v"]
+    elif mode == "fused":
+        def fn(*args):
+            params, (ii, tg, lm, am, seed, eps, lr) = unpack(args)
+            res = M.mezo_fused_step_fn(cfg, params, ii, tg, lm, am, seed, eps, lr)
+            return tuple(res)
+        outs = [f"new.{n}" for n in tnames] + ["loss_plus", "loss_minus", "pgrad"]
+    else:
+        raise ValueError(mode)
+    return fn, outs
+
+
+def flops_forward(cfg: M.ModelConfig, b, s):
+    """2*MACs estimate of one forward pass (matmuls only)."""
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    per_tok = L * (4 * d * d + 2 * d * f) + cfg.vocab * d
+    attn = L * 2 * s * d  # scores + weighted sum per token
+    return 2 * b * s * (per_tok + attn)
+
+
+def artifact_name(cfg: M.ModelConfig, mode, b, s):
+    return f"{cfg.family}_{cfg.size}_{cfg.tuning}_{mode}_b{b}_s{s}"
+
+
+def lower_artifact(cfg: M.ModelConfig, mode, b, s, out_dir):
+    name = artifact_name(cfg, mode, b, s)
+    fn, out_names = build_fn(cfg, mode)
+    pspecs = M.param_specs(cfg)
+    bspecs = batch_specs(mode, b, s)
+    in_specs = (
+        [_spec(shape) for _, shape in pspecs]
+        + [_spec(shape, _DT[dt]) for _, shape, dt in bspecs])
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    # Derive output shapes by abstract evaluation (robust across jax versions).
+    out_avals = jax.eval_shape(fn, *in_specs)
+    if not isinstance(out_avals, tuple):
+        out_avals = (out_avals,)
+    out_shapes = [
+        {"name": n, "shape": list(map(int, a.shape)), "dtype": str(a.dtype)}
+        for n, a in zip(out_names, out_avals)]
+
+    meta = {
+        "name": name,
+        "family": cfg.family,
+        "size": cfg.size,
+        "tuning": cfg.tuning,
+        "mode": mode,
+        "batch": b,
+        "seq": s,
+        "vocab": cfg.vocab,
+        "max_seq": cfg.max_seq,
+        "dims": {"d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                 "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                 "head_dim": cfg.head_dim},
+        "lora_r": cfg.lora_r,
+        "lora_alpha": cfg.lora_alpha,
+        "prefix_len": cfg.prefix_len,
+        "params": [{"name": n, "shape": list(sh)} for n, sh in pspecs],
+        "trainable": M.trainable_names(cfg),
+        "batch_inputs": [{"name": n, "shape": list(sh), "dtype": dt}
+                         for n, sh, dt in bspecs],
+        "outputs": out_shapes,
+        "flops_forward": flops_forward(cfg, b, s),
+        "n_params": int(sum(
+            int(jnp.prod(jnp.asarray(sh))) for _, sh in pspecs)),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    hlo_path = os.path.join(out_dir, name + ".hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, name + ".meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return name, len(text)
+
+
+# (family, size, tuning, mode, batch, seq) — the default artifact set.
+B, S = 8, 64
+
+
+def default_set():
+    arts = []
+    for family in ("ar", "mlm"):
+        for size in ("tiny", "small"):
+            arts += [
+                (family, size, "full", "loss", B, S),
+                (family, size, "full", "loss_pallas", B, S),
+                (family, size, "full", "logits", B, S),
+                (family, size, "full", "grad", B, S),
+            ]
+        # PEFT variants at the headline size.
+        for tuning in ("lora", "prefix"):
+            arts += [
+                (family, "small", tuning, "loss", B, S),
+                (family, "small", tuning, "grad", B, S),
+                (family, "small", tuning, "logits", B, S),
+                (family, "tiny", tuning, "logits", B, S),
+            ]
+        arts += [(family, "small", "prefix", "kv", 1, 8)]
+    # Scaling ladder for wall-clock / memory studies (ar family, like OPT).
+    for size in ("base", "large"):
+        arts += [
+            ("ar", size, "full", "loss", B, S),
+            ("ar", size, "full", "logits", B, S),
+            ("ar", size, "full", "grad", B, S),
+        ]
+    # Fused-step perf variant.
+    arts += [("ar", "tiny", "full", "fused", B, S),
+             ("ar", "small", "full", "fused", B, S)]
+    # PEFT for tiny (ablations run at tiny scale).
+    for tuning in ("lora", "prefix"):
+        arts += [("ar", "tiny", tuning, "loss", B, S),
+                 ("mlm", "tiny", tuning, "loss", B, S)]
+    arts += [("ar", "tiny", "prefix", "kv", 1, 8),
+             ("mlm", "tiny", "prefix", "kv", 1, 8),
+             ("mlm", "small", "full", "fused", B, S)]
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="lower only the artifact with this name")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    todo = default_set()
+    if args.list:
+        for fam, size, tuning, mode, b, s in todo:
+            cfg = M.ModelConfig(family=fam, size=size, tuning=tuning)
+            print(artifact_name(cfg, mode, b, s))
+        return
+
+    for fam, size, tuning, mode, b, s in todo:
+        cfg = M.ModelConfig(family=fam, size=size, tuning=tuning)
+        name = artifact_name(cfg, mode, b, s)
+        if args.only and name != args.only:
+            continue
+        hlo_path = os.path.join(args.out_dir, name + ".hlo.txt")
+        if not args.only and os.path.exists(hlo_path):
+            print(f"[aot] {name}: up to date", flush=True)
+            continue
+        n, sz = lower_artifact(cfg, mode, b, s, args.out_dir)
+        print(f"[aot] wrote {n} ({sz/1e6:.1f} MB hlo text)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

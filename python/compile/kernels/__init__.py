@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+from . import ref  # noqa: F401
+from .attention import attention  # noqa: F401
+from .layernorm import layernorm  # noqa: F401
+from .linear import linear  # noqa: F401
+from .softmax_xent import softmax_xent  # noqa: F401
+from .spsa import spsa_perturb  # noqa: F401

@@ -1,0 +1,109 @@
+"""Flash-style tiled attention as a Pallas kernel (L1 hot-spot).
+
+TPU adaptation of the paper's stock attention (DESIGN.md §Hardware-Adaptation):
+Q is staged through VMEM one (block_q, head_dim) tile at a time via BlockSpec,
+and the kernel streams K/V in block_k-sized tiles with an *online softmax*
+(running max / running sum), so the S×S score matrix never materialises —
+VMEM footprint is O(block_q·d + block_k·d) instead of O(S²).
+
+interpret=True is mandatory here: real-TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. Correctness is pinned
+to `ref.attention_ref` by python/tests/test_kernels.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, block_q,
+                      block_k, kv_len, causal, causal_offset, scale):
+    """One (batch·head, q-block) grid cell: online-softmax over k blocks.
+
+    causal_offset supports prefix-tuning: query i may attend key j when
+    j <= i + causal_offset (the first `offset` keys are the always-visible
+    tuned prefix).
+    """
+    q = q_ref[0].astype(jnp.float32)  # (block_q, dh)
+    dh = q.shape[-1]
+    q_start = pl.program_id(1) * block_q
+    row_ids = q_start + jax.lax.iota(jnp.int32, block_q)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_start = kb * block_k
+        k = pl.load(k_ref, (0, pl.ds(k_start, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.ds(k_start, block_k), slice(None)))
+        km = pl.load(mask_ref, (0, pl.ds(k_start, block_k)))
+        s = jnp.dot(q, k.astype(jnp.float32).T) * scale  # (bq, bk)
+        s = s + (1.0 - km.astype(jnp.float32))[None, :] * NEG_INF
+        if causal:
+            col_ids = k_start + jax.lax.iota(jnp.int32, block_k)
+            visible = col_ids[None, :] <= row_ids[:, None] + causal_offset
+            s = jnp.where(visible, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v.astype(jnp.float32))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, kv_len // block_k, body, (m0, l0, acc0))
+    # Fully-masked rows (pure padding) have l == 0; emit zeros, not NaN.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _largest_divisor_block(n, cap=32):
+    for c in range(min(cap, n), 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+def attention(q, k, v, key_mask, causal, block_q=None, block_k=None):
+    """Pallas attention. q: (B, H, Sq, Dh); k,v: (B, H, Sk, Dh) with
+    Sk >= Sq (Sk > Sq when a tuned prefix is prepended to keys/values);
+    key_mask: (B, Sk) 1=valid. Returns (B, H, Sq, Dh).
+
+    Matches ref.attention_ref (with the prefix columns always visible
+    under causal masking).
+    """
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    offset = sk - sq
+    block_q = block_q or _largest_divisor_block(sq)
+    block_k = block_k or _largest_divisor_block(sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    scale = 1.0 / (dh**0.5)
+
+    qf = q.reshape(b * h, sq, dh)
+    kf = k.reshape(b * h, sk, dh)
+    vf = v.reshape(b * h, sk, dh)
+    maskf = jnp.repeat(key_mask, h, axis=0)  # (B*H, Sk)
+
+    kernel = functools.partial(
+        _attention_kernel, block_q=block_q, block_k=block_k, kv_len=sk,
+        causal=causal, causal_offset=offset, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, qb: (bh, qb, 0)),
+            pl.BlockSpec((1, sk, dh), lambda bh, qb: (bh, 0, 0)),
+            pl.BlockSpec((1, sk, dh), lambda bh, qb: (bh, 0, 0)),
+            pl.BlockSpec((1, sk), lambda bh, qb: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, qb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+        interpret=True,
+    )(qf, kf, vf, maskf)
+    return out.reshape(b, h, sq, dh)

@@ -1,0 +1,40 @@
+"""Fused LayerNorm as a Pallas kernel.
+
+Row-tiled: each grid cell normalises a (block_rows, D) tile in a single pass
+(mean, variance, scale, shift fused — one HBM read + one HBM write per row,
+versus the 3+ round-trips of an unfused mean/var/normalize graph).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...][None, :] + b_ref[...][None, :]).astype(o_ref.dtype)
+
+
+def layernorm(x, gain, bias, eps=1e-5, block_rows=None):
+    """x: (R, D) -> (R, D), normalised over D. Matches ref.layernorm_ref."""
+    r, d = x.shape
+    block_rows = block_rows or min(64, r)
+    assert r % block_rows == 0, (r, block_rows)
+    kernel = functools.partial(_layernorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=True,
+    )(x, gain, bias)

@@ -1,0 +1,66 @@
+"""Tiled matmul + bias + GELU epilogue as a Pallas kernel.
+
+Classic (M, N, K)-tiled schedule: the grid iterates K innermost, accumulating
+partial products into the output tile resident in VMEM; bias-add and the
+optional GELU epilogue are fused into the final K step, so the activation
+never takes an extra HBM round-trip. On a real TPU the (block_m, block_n)
+tile feeds the 128×128 MXU; for this model's small dims the tile is the whole
+operand (documented in DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k_blocks, activation):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+    @pl.when(pl.program_id(2) == n_k_blocks - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...][None, :]
+        if activation == "gelu":
+            y = _gelu(y)
+        o_ref[...] = y
+
+
+def linear(x, w, b, activation=None, block_m=None, block_n=None, block_k=None):
+    """x: (M, K) @ w: (K, N) + b: (N,), optional fused GELU.
+
+    Matches ref.linear_ref.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    block_m = block_m or min(128, m)
+    block_n = block_n or min(128, n)
+    block_k = block_k or min(128, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    n_k_blocks = k // block_k
+    kernel = functools.partial(
+        _linear_kernel, n_k_blocks=n_k_blocks, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)

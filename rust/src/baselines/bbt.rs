@@ -1,0 +1,173 @@
+//! BBTv2-style baseline (Sun et al. 2022; paper Appendix F.4 / Table 21).
+//!
+//! BBTv2 tunes a *low-dimensional projection* of per-layer prefixes with an
+//! evolutionary strategy (CMA-ES) — gradient-free like MeZO, but limited to
+//! the projected prefix subspace. We implement a (μ/μ, λ) ES with diagonal
+//! covariance adaptation over z ∈ R^dlow, mapped to the prefix tensors by a
+//! fixed random Gaussian projection A (one per tensor), prefix = A·z.
+
+use crate::model::params::ParamStore;
+use crate::rng::{GaussianStream, Pcg};
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct BbtCfg {
+    /// intrinsic dimension of the search space (BBTv2 uses 500)
+    pub d_low: usize,
+    /// population size λ
+    pub lambda: usize,
+    /// parents μ
+    pub mu: usize,
+    /// initial step size
+    pub sigma: f32,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for BbtCfg {
+    fn default() -> Self {
+        BbtCfg { d_low: 64, lambda: 12, mu: 4, sigma: 0.3, iters: 50, seed: 0 }
+    }
+}
+
+pub struct Bbt {
+    pub cfg: BbtCfg,
+    /// indices of the prefix tensors this optimizer controls
+    pub tensors: Vec<usize>,
+    /// projection seed (A is regenerated, never stored — same trick as MeZO)
+    proj_seed: u64,
+    pub mean: Vec<f32>,
+    pub sigma: Vec<f32>,
+    rng: Pcg,
+    /// saved originals of the controlled tensors
+    base: Vec<Vec<f32>>,
+}
+
+impl Bbt {
+    pub fn new(cfg: BbtCfg, tensors: Vec<usize>, params: &ParamStore) -> Bbt {
+        let base = tensors.iter().map(|&ti| params.data[ti].clone()).collect();
+        Bbt {
+            mean: vec![0.0; cfg.d_low],
+            sigma: vec![cfg.sigma; cfg.d_low],
+            rng: Pcg::new(cfg.seed ^ 0xBB7),
+            proj_seed: cfg.seed ^ 0x9E37_79B9,
+            cfg,
+            tensors,
+            base,
+        }
+    }
+
+    /// prefix_t = base_t + A_t · z, with A_t entries N(0, 1/sqrt(d_low))
+    /// regenerated from (proj_seed, tensor, coordinate) counters.
+    pub fn apply(&self, params: &mut ParamStore, z: &[f32]) {
+        let scale = 1.0 / (self.cfg.d_low as f32).sqrt();
+        for (k, &ti) in self.tensors.iter().enumerate() {
+            let stream = GaussianStream::new(self.proj_seed ^ (k as u64) << 32);
+            let buf = &mut params.data[ti];
+            for (j, th) in buf.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                let row = j as u64 * self.cfg.d_low as u64;
+                for (i, &zi) in z.iter().enumerate() {
+                    acc += stream.z(row + i as u64) * zi;
+                }
+                *th = self.base[k][j] + scale * acc;
+            }
+        }
+    }
+
+    /// One ES generation. `loss` evaluates the current params.
+    pub fn step<F>(&mut self, params: &mut ParamStore, mut loss: F) -> Result<f32>
+    where
+        F: FnMut(&ParamStore) -> Result<f32>,
+    {
+        let d = self.cfg.d_low;
+        let lambda = self.cfg.lambda;
+        let mu = self.cfg.mu.min(lambda);
+        let mut pop: Vec<(f32, Vec<f32>)> = Vec::with_capacity(lambda);
+        for _ in 0..lambda {
+            let z: Vec<f32> = (0..d)
+                .map(|i| self.mean[i] + self.sigma[i] * self.rng.normal() as f32)
+                .collect();
+            self.apply(params, &z);
+            let l = loss(params)?;
+            pop.push((l, z));
+        }
+        pop.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // recombine the μ best
+        let mut new_mean = vec![0.0f32; d];
+        for (_, z) in pop.iter().take(mu) {
+            for (m, &zi) in new_mean.iter_mut().zip(z) {
+                *m += zi / mu as f32;
+            }
+        }
+        // diagonal covariance adaptation toward the elite spread
+        for i in 0..d {
+            let var: f32 = pop
+                .iter()
+                .take(mu)
+                .map(|(_, z)| (z[i] - new_mean[i]).powi(2))
+                .sum::<f32>()
+                / mu as f32;
+            self.sigma[i] = (0.8 * self.sigma[i] + 0.2 * var.sqrt()).max(1e-3);
+        }
+        self.mean = new_mean;
+        // leave params at the current best mean
+        let mean = self.mean.clone();
+        self.apply(params, &mean);
+        Ok(pop[0].0)
+    }
+
+    pub fn forward_passes(&self, iters_done: usize) -> usize {
+        iters_done * (self.cfg.lambda + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+
+    fn toy() -> ParamStore {
+        let mut p = ParamStore::from_specs(vec![TensorDesc {
+            name: "prefix".into(),
+            shape: vec![16],
+            dtype: "f32".into(),
+        }]);
+        p.init(0);
+        p
+    }
+
+    #[test]
+    fn es_minimizes_quadratic_in_projected_space() {
+        let mut p = toy();
+        let target: Vec<f32> = (0..16).map(|i| (i as f32) * 0.05).collect();
+        let tgt = target.clone();
+        let loss = move |p: &ParamStore| -> Result<f32> {
+            Ok(p.data[0].iter().zip(&tgt).map(|(a, b)| (a - b) * (a - b)).sum())
+        };
+        let cfg = BbtCfg { d_low: 8, lambda: 16, mu: 4, sigma: 0.5, iters: 0, seed: 1 };
+        let mut bbt = Bbt::new(cfg, vec![0], &p);
+        let l0 = loss(&p).unwrap();
+        let mut last = l0;
+        for _ in 0..40 {
+            last = bbt.step(&mut p, &loss).unwrap();
+        }
+        assert!(last < l0 * 0.7, "l0={} last={}", l0, last);
+    }
+
+    #[test]
+    fn apply_is_deterministic_given_z() {
+        let mut p = toy();
+        let cfg = BbtCfg { d_low: 4, ..Default::default() };
+        let bbt = Bbt::new(cfg, vec![0], &p);
+        let z = vec![0.3, -0.2, 0.1, 0.9];
+        bbt.apply(&mut p, &z);
+        let a = p.data[0].clone();
+        bbt.apply(&mut p, &z);
+        assert_eq!(a, p.data[0]);
+        // z = 0 restores the base exactly
+        bbt.apply(&mut p, &[0.0; 4]);
+        let base = toy();
+        assert_eq!(p.data[0], base.data[0]);
+    }
+}

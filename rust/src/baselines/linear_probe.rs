@@ -1,0 +1,195 @@
+//! Linear probing: multinomial logistic regression on frozen features
+//! (the paper's "LP" baseline — memory cost ≈ inference, like MeZO).
+//!
+//! Features are the final hidden state at the prediction position
+//! (Evaluator::features). Trained full-batch with gradient descent +
+//! early stopping on training loss plateau; no external solver (the paper
+//! used scipy — substrate rule: build it).
+
+use crate::rng::Pcg;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct LogRegCfg {
+    pub lr: f64,
+    pub l2: f64,
+    pub max_iters: usize,
+    pub tol: f64,
+}
+
+impl Default for LogRegCfg {
+    fn default() -> Self {
+        LogRegCfg { lr: 0.5, l2: 1e-4, max_iters: 500, tol: 1e-6 }
+    }
+}
+
+/// W: (n_classes, d+1) with bias folded in as the last column.
+#[derive(Debug, Clone)]
+pub struct LogReg {
+    pub w: Vec<Vec<f64>>,
+    pub n_classes: usize,
+    pub d: usize,
+}
+
+impl LogReg {
+    pub fn fit(
+        feats: &[Vec<f32>],
+        labels: &[usize],
+        n_classes: usize,
+        cfg: &LogRegCfg,
+    ) -> Result<LogReg> {
+        assert_eq!(feats.len(), labels.len());
+        let n = feats.len();
+        let d = feats[0].len();
+        // standardize features for stable GD
+        let mut mean = vec![0.0f64; d];
+        let mut std = vec![0.0f64; d];
+        for f in feats {
+            for (j, &x) in f.iter().enumerate() {
+                mean[j] += x as f64;
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= n as f64);
+        for f in feats {
+            for (j, &x) in f.iter().enumerate() {
+                std[j] += (x as f64 - mean[j]).powi(2);
+            }
+        }
+        std.iter_mut().for_each(|s| *s = (*s / n as f64).sqrt().max(1e-6));
+        let xs: Vec<Vec<f64>> = feats
+            .iter()
+            .map(|f| {
+                let mut v: Vec<f64> = f
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &x)| (x as f64 - mean[j]) / std[j])
+                    .collect();
+                v.push(1.0); // bias
+                v
+            })
+            .collect();
+
+        let dim = d + 1;
+        let mut rng = Pcg::new(13);
+        let mut w: Vec<Vec<f64>> = (0..n_classes)
+            .map(|_| (0..dim).map(|_| rng.normal() * 0.01).collect())
+            .collect();
+        let mut prev_loss = f64::INFINITY;
+        for _ in 0..cfg.max_iters {
+            // forward: probs (n, C), grad accumulation
+            let mut grad = vec![vec![0.0f64; dim]; n_classes];
+            let mut loss = 0.0f64;
+            for (x, &y) in xs.iter().zip(labels) {
+                let logits: Vec<f64> = w
+                    .iter()
+                    .map(|wc| wc.iter().zip(x).map(|(a, b)| a * b).sum())
+                    .collect();
+                let mx = logits.iter().cloned().fold(f64::MIN, f64::max);
+                let exps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+                let z: f64 = exps.iter().sum();
+                loss -= ((exps[y] / z) + 1e-12).ln();
+                for c in 0..n_classes {
+                    let p = exps[c] / z;
+                    let err = p - if c == y { 1.0 } else { 0.0 };
+                    for j in 0..dim {
+                        grad[c][j] += err * x[j];
+                    }
+                }
+            }
+            loss /= n as f64;
+            for c in 0..n_classes {
+                for j in 0..dim {
+                    let g = grad[c][j] / n as f64 + cfg.l2 * w[c][j];
+                    w[c][j] -= cfg.lr * g;
+                }
+            }
+            if (prev_loss - loss).abs() < cfg.tol {
+                break;
+            }
+            prev_loss = loss;
+        }
+        // fold standardization back into the weights so predict() takes raw
+        // features: w·((x−mean)/std) + b = (w/std)·x + (b − w·mean/std)
+        for wc in w.iter_mut() {
+            let mut bias_adj = 0.0;
+            for j in 0..d {
+                wc[j] /= std[j];
+                bias_adj += wc[j] * mean[j];
+            }
+            wc[d] -= bias_adj;
+        }
+        Ok(LogReg { w, n_classes, d })
+    }
+
+    pub fn predict(&self, feat: &[f32]) -> usize {
+        let mut best = 0;
+        let mut bv = f64::MIN;
+        for (c, wc) in self.w.iter().enumerate() {
+            let mut s = wc[self.d];
+            for (j, &x) in feat.iter().enumerate() {
+                s += wc[j] * x as f64;
+            }
+            if s > bv {
+                bv = s;
+                best = c;
+            }
+        }
+        best
+    }
+
+    pub fn accuracy(&self, feats: &[Vec<f32>], labels: &[usize]) -> f64 {
+        let preds: Vec<usize> = feats.iter().map(|f| self.predict(f)).collect();
+        crate::eval::metrics::accuracy(&preds, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n: usize, d: usize, classes: usize, sep: f32, seed: u64) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let mut rng = Pcg::new(seed);
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n {
+            let c = i % classes;
+            let mut f = vec![0.0f32; d];
+            for (j, fj) in f.iter_mut().enumerate() {
+                let center = if j % classes == c { sep } else { 0.0 };
+                *fj = center + rng.normal() as f32;
+            }
+            feats.push(f);
+            labels.push(c);
+        }
+        (feats, labels)
+    }
+
+    #[test]
+    fn separable_blobs_reach_high_accuracy() {
+        let (feats, labels) = blobs(120, 8, 3, 4.0, 0);
+        let lr = LogReg::fit(&feats, &labels, 3, &LogRegCfg::default()).unwrap();
+        assert!(lr.accuracy(&feats, &labels) > 0.95);
+    }
+
+    #[test]
+    fn random_labels_stay_near_chance_on_heldout() {
+        let (feats, _) = blobs(200, 8, 2, 0.0, 1);
+        let mut rng = Pcg::new(2);
+        let labels: Vec<usize> = (0..200).map(|_| rng.below(2)).collect();
+        let lr = LogReg::fit(&feats[..100].to_vec(), &labels[..100].to_vec(), 2,
+                             &LogRegCfg::default()).unwrap();
+        let acc = lr.accuracy(&feats[100..].to_vec(), &labels[100..].to_vec());
+        assert!(acc > 0.25 && acc < 0.75, "acc {}", acc);
+    }
+
+    #[test]
+    fn standardization_fold_is_transparent() {
+        // shifting/scaling features must not change predictions after fit
+        let (mut feats, labels) = blobs(60, 4, 2, 3.0, 3);
+        for f in feats.iter_mut() {
+            f[0] = f[0] * 100.0 + 500.0;
+        }
+        let lr = LogReg::fit(&feats, &labels, 2, &LogRegCfg::default()).unwrap();
+        assert!(lr.accuracy(&feats, &labels) > 0.9);
+    }
+}

@@ -1,0 +1,46 @@
+//! Memory-equivalent baselines the paper compares MeZO against:
+//! zero-shot, in-context learning, linear probing, and a BBTv2-style
+//! gradient-free prefix optimizer.
+
+pub mod bbt;
+pub mod linear_probe;
+
+use crate::data::batch::icl_example;
+use crate::data::tasks::{Example, Task};
+use crate::eval::Evaluator;
+use crate::model::params::ParamStore;
+use anyhow::Result;
+
+/// Zero-shot: evaluate the pre-trained model with the prompt, no tuning.
+pub fn zero_shot(
+    evaluator: &Evaluator,
+    params: &ParamStore,
+    task: Task,
+    test: &[Example],
+) -> Result<f64> {
+    Ok(evaluator.evaluate(params, task, test)?.score)
+}
+
+/// In-context learning: prepend up to `max_demos` gold demonstrations from
+/// the train split to every test prompt (paper Appendix E.4).
+pub fn icl(
+    evaluator: &Evaluator,
+    params: &ParamStore,
+    task: Task,
+    train: &[Example],
+    test: &[Example],
+    max_demos: usize,
+) -> Result<f64> {
+    let s = evaluator.loss_art.meta.seq;
+    let wrapped: Vec<Example> = test
+        .iter()
+        .map(|ex| icl_example(train, ex, max_demos, s))
+        .collect();
+    Ok(evaluator.evaluate(params, task, &wrapped)?.score)
+}
+
+#[cfg(test)]
+mod tests {
+    // zero_shot / icl are exercised end-to-end in tests/pipeline.rs where a
+    // compiled artifact is available.
+}

@@ -1,0 +1,236 @@
+//! Batch assembly: fixed-shape (B, S) tensors matching the artifact ABI.
+//!
+//! The artifacts are compiled for static shapes, so every sequence is padded
+//! to S with [PAD], `attn_mask` zeroed on padding, and `loss_mask` selecting
+//! exactly the positions the objective covers:
+//!   * AR:  position t predicts token t+1 (targets are the input shifted
+//!          left); a candidate spanning tokens [a, b) is scored by masking
+//!          predictor positions [a-1, b-1).
+//!   * MLM: the candidate's single token is replaced by [MASK] in the input
+//!          and supervised in place.
+
+use crate::data::tasks::Example;
+use crate::rng::Pcg;
+use crate::tokenizer::{MASK, PAD, SEP};
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub b: usize,
+    pub s: usize,
+    pub input_ids: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub attn_mask: Vec<f32>,
+}
+
+impl Batch {
+    pub fn zeros(b: usize, s: usize) -> Batch {
+        Batch {
+            b,
+            s,
+            input_ids: vec![PAD as i32; b * s],
+            targets: vec![PAD as i32; b * s],
+            loss_mask: vec![0.0; b * s],
+            attn_mask: vec![0.0; b * s],
+        }
+    }
+
+    fn set_row_ar(&mut self, row: usize, seq: &[u32], score: std::ops::Range<usize>) {
+        let s = self.s;
+        assert!(seq.len() <= s, "sequence {} exceeds S={}", seq.len(), s);
+        assert!(score.start >= 1, "AR cannot score position 0 (no left context)");
+        for (t, &tok) in seq.iter().enumerate() {
+            self.input_ids[row * s + t] = tok as i32;
+            self.attn_mask[row * s + t] = 1.0;
+            if t + 1 < seq.len() {
+                self.targets[row * s + t] = seq[t + 1] as i32;
+            }
+        }
+        for t in score.start.saturating_sub(1)..score.end - 1 {
+            self.loss_mask[row * s + t] = 1.0;
+        }
+    }
+
+    fn set_row_mlm(&mut self, row: usize, seq: &[u32], score: std::ops::Range<usize>) {
+        let s = self.s;
+        assert!(seq.len() <= s, "sequence {} exceeds S={}", seq.len(), s);
+        for (t, &tok) in seq.iter().enumerate() {
+            self.input_ids[row * s + t] = tok as i32;
+            self.attn_mask[row * s + t] = 1.0;
+        }
+        for t in score.clone() {
+            self.input_ids[row * s + t] = MASK as i32;
+            self.targets[row * s + t] = seq[t] as i32;
+            self.loss_mask[row * s + t] = 1.0;
+        }
+    }
+
+    pub fn set_row(&mut self, row: usize, seq: &[u32], score: std::ops::Range<usize>, mlm: bool) {
+        if mlm {
+            self.set_row_mlm(row, seq, score)
+        } else {
+            self.set_row_ar(row, seq, score)
+        }
+    }
+}
+
+/// Training batches from examples (gold candidate filled).
+/// Pads the final batch by repeating examples; `weights` gives the number of
+/// *distinct* examples in each batch row (1.0 for real rows, 0-loss rows are
+/// avoided by repetition which leaves the mean unbiased enough for training).
+pub fn example_batches(examples: &[Example], b: usize, s: usize, mlm: bool) -> Vec<Batch> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < examples.len() {
+        let mut batch = Batch::zeros(b, s);
+        for row in 0..b {
+            let ex = &examples[(i + row) % examples.len()];
+            let (seq, range) = ex.filled();
+            batch.set_row(row, &seq, range, mlm);
+        }
+        out.push(batch);
+        i += b;
+    }
+    out
+}
+
+/// One training batch from a sampled subset of examples.
+pub fn sample_batch(examples: &[Example], rng: &mut Pcg, b: usize, s: usize, mlm: bool) -> Batch {
+    let mut batch = Batch::zeros(b, s);
+    for row in 0..b {
+        let ex = rng.choice(examples);
+        let (seq, range) = ex.filled();
+        batch.set_row(row, &seq, range, mlm);
+    }
+    batch
+}
+
+/// LM pre-training batch from packed corpus sequences.
+pub fn lm_batch(seqs: &[Vec<u32>], rng: &mut Pcg, b: usize, s: usize, mlm: bool) -> Batch {
+    let mut batch = Batch::zeros(b, s);
+    for row in 0..b {
+        let seq = rng.choice(seqs);
+        assert_eq!(seq.len(), s);
+        if mlm {
+            // BERT-style: mask 15% of positions
+            for (t, &tok) in seq.iter().enumerate() {
+                batch.input_ids[row * s + t] = tok as i32;
+                batch.attn_mask[row * s + t] = 1.0;
+            }
+            for t in 0..s {
+                if rng.next_f32() < 0.15 {
+                    batch.input_ids[row * s + t] = MASK as i32;
+                    batch.targets[row * s + t] = seq[t] as i32;
+                    batch.loss_mask[row * s + t] = 1.0;
+                }
+            }
+        } else {
+            batch.set_row_ar(row, seq, 1..seq.len());
+        }
+    }
+    batch
+}
+
+/// In-context learning: prepend as many demonstrations (gold-filled,
+/// [SEP]-separated) as fit the S-token budget before the test context
+/// (paper Appendix E.4 uses 32; our budget fits ~3).
+pub fn icl_example(demos: &[Example], test: &Example, max_demos: usize, s: usize) -> Example {
+    let mut ctx: Vec<u32> = Vec::new();
+    let test_len = test.context.len()
+        + test.suffix.len()
+        + test
+            .candidates
+            .iter()
+            .map(|c| c.len())
+            .max()
+            .unwrap_or(test.answer.len())
+        + 1;
+    for demo in demos.iter().take(max_demos) {
+        let (seq, _) = demo.filled();
+        if ctx.len() + seq.len() + 1 + test_len > s {
+            break;
+        }
+        ctx.extend_from_slice(&seq);
+        ctx.push(SEP);
+    }
+    ctx.extend_from_slice(&test.context);
+    Example {
+        context: ctx,
+        suffix: test.suffix.clone(),
+        candidates: test.candidates.clone(),
+        label: test.label,
+        answer: test.answer.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{generate, GenOpts, Task};
+    use crate::tokenizer::Vocab;
+
+    #[test]
+    fn ar_row_shifts_targets() {
+        let mut b = Batch::zeros(1, 8);
+        let seq = [10u32, 11, 12, 13];
+        b.set_row(0, &seq, 3..4, false);
+        assert_eq!(&b.input_ids[..4], &[10, 11, 12, 13]);
+        assert_eq!(b.targets[2], 13); // position 2 predicts token 3
+        assert_eq!(b.loss_mask[2], 1.0);
+        assert_eq!(b.loss_mask.iter().sum::<f32>(), 1.0);
+        assert_eq!(b.attn_mask[3], 1.0);
+        assert_eq!(b.attn_mask[4], 0.0);
+        assert_eq!(b.input_ids[7], PAD as i32);
+    }
+
+    #[test]
+    fn mlm_row_masks_in_place() {
+        let mut b = Batch::zeros(1, 8);
+        let seq = [10u32, 11, 12, 13];
+        b.set_row(0, &seq, 2..3, true);
+        assert_eq!(b.input_ids[2], MASK as i32);
+        assert_eq!(b.targets[2], 12);
+        assert_eq!(b.loss_mask[2], 1.0);
+        assert_eq!(b.loss_mask.iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn example_batches_cover_all() {
+        let v = Vocab::standard();
+        let data = generate(Task::Sst2, &v, GenOpts { n_train: 10, ..Default::default() });
+        let batches = example_batches(&data.train, 4, 64, false);
+        assert_eq!(batches.len(), 3); // ceil(10/4)
+        for b in &batches {
+            assert!(b.loss_mask.iter().sum::<f32>() > 0.0);
+        }
+    }
+
+    #[test]
+    fn lm_batch_ar_and_mlm() {
+        let v = Vocab::standard();
+        let mut rng = Pcg::new(0);
+        let seqs = crate::data::corpus::pack_sequences(&mut rng, &v, 4, 32);
+        let ar = lm_batch(&seqs, &mut Pcg::new(1), 2, 32, false);
+        assert!(ar.loss_mask.iter().sum::<f32>() >= 31.0);
+        let mlm = lm_batch(&seqs, &mut Pcg::new(2), 2, 32, true);
+        let n_masked = mlm.loss_mask.iter().sum::<f32>();
+        assert!(n_masked > 0.0 && n_masked < 32.0);
+        // masked positions read [MASK]
+        for t in 0..32 {
+            if mlm.loss_mask[t] == 1.0 {
+                assert_eq!(mlm.input_ids[t], MASK as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn icl_fits_budget_and_keeps_label() {
+        let v = Vocab::standard();
+        let data = generate(Task::Sst2, &v, GenOpts { n_train: 8, ..Default::default() });
+        let ex = icl_example(&data.train, &data.test[0], 8, 64);
+        assert_eq!(ex.label, data.test[0].label);
+        let (seq, _) = ex.filled();
+        assert!(seq.len() <= 64);
+        assert!(ex.context.len() > data.test[0].context.len());
+    }
+}

@@ -1,0 +1,245 @@
+//! Synthetic pre-training corpus generator.
+//!
+//! Substitutes the paper's web-scale pre-training data (DESIGN.md §2.1):
+//! sentences are drawn from a structured grammar whose surface patterns are
+//! *exactly* the patterns the downstream prompts reuse — polarity words
+//! co-occur with the sentiment label words ("... it was great"), topic nouns
+//! co-occur with topic labels ("about sports"), yes/no agreement patterns
+//! appear for NLI, and fact/retrieval patterns for QA. Pre-training on this
+//! corpus is what gives MeZO the benign, low-effective-rank fine-tuning
+//! landscape the theory (§4) requires.
+
+use crate::rng::Pcg;
+use crate::tokenizer::{Vocab, EOS, NOUNS_PER_TOPIC, N_DIGIT, N_NEG_ADJ, N_PERSON,
+                        N_PLACE, N_POS_ADJ, N_VERB, TOPICS};
+
+/// One corpus sentence (token ids, no padding).
+pub fn sample_sentence(rng: &mut Pcg, v: &Vocab) -> Vec<u32> {
+    match rng.below(10) {
+        0 | 1 => sentiment_sentence(rng, v),
+        2 => sentiment_review(rng, v),
+        3 | 4 => topic_sentence(rng, v),
+        5 => agreement_pair(rng, v),
+        6 => fact_sentence(rng, v),
+        7 => qa_pattern(rng, v),
+        8 => score_pattern(rng, v),
+        _ => filler_sentence(rng, v),
+    }
+}
+
+/// "the <noun> was <adj> and <adj-same-polarity>"
+fn sentiment_sentence(rng: &mut Pcg, v: &Vocab) -> Vec<u32> {
+    let topic = rng.below(TOPICS.len());
+    let noun = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+    let pos = rng.below(2) == 0;
+    let adj = |rng: &mut Pcg| {
+        if pos {
+            v.pos_adj(rng.below(N_POS_ADJ))
+        } else {
+            v.neg_adj(rng.below(N_NEG_ADJ))
+        }
+    };
+    let mut s = vec![v.id("the"), noun, v.id("was"), adj(rng)];
+    if rng.below(2) == 0 {
+        s.push(v.id("and"));
+        s.push(adj(rng));
+    }
+    s.push(v.id("."));
+    s
+}
+
+/// "review : the <noun> was <adj...> . it was <label> ." — the bridge
+/// between content polarity and the sentiment label words.
+///
+/// The label word is *sampled from a polarity-conditional distribution*
+/// (not a deterministic function of surface form): positive contexts emit
+/// great/good, negative ones terrible/bad, neutral ones okay, with strength
+/// (1 vs 2 adjectives) shifting the mix. This forces the model to learn
+/// p(label-word | polarity) — the transferable signal the downstream
+/// sentiment prompts reuse — rather than an adjective-counting shortcut.
+fn sentiment_review(rng: &mut Pcg, v: &Vocab) -> Vec<u32> {
+    let topic = rng.below(TOPICS.len());
+    let noun = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+    let polarity = rng.below(5); // 0,1 neg; 2 neutral; 3,4 pos
+    let two = rng.below(2) == 0;
+    let adj = |rng: &mut Pcg| match polarity {
+        0 | 1 => v.neg_adj(rng.below(N_NEG_ADJ)),
+        2 => v.neu_adj(rng.below(crate::tokenizer::N_NEU_ADJ)),
+        _ => v.pos_adj(rng.below(N_POS_ADJ)),
+    };
+    let label = match polarity {
+        0 | 1 => {
+            // stronger (two-adjective) reviews skew to the extreme word
+            let p_extreme = if two { 0.7 } else { 0.3 };
+            if rng.next_f64() < p_extreme { "terrible" } else { "bad" }
+        }
+        2 => "okay",
+        _ => {
+            let p_extreme = if two { 0.7 } else { 0.3 };
+            if rng.next_f64() < p_extreme { "great" } else { "good" }
+        }
+    };
+    let mut s = vec![v.id("review"), v.id(":"), v.id("the"), noun, v.id("was"), adj(rng)];
+    if two {
+        s.push(v.id("and"));
+        s.push(adj(rng));
+    }
+    s.extend([v.id("."), v.id("it"), v.id("was"), v.id(label), v.id(".")]);
+    s
+}
+
+/// "the <noun> and the <noun2> . about <topic> ."
+fn topic_sentence(rng: &mut Pcg, v: &Vocab) -> Vec<u32> {
+    let topic = rng.below(TOPICS.len());
+    let n1 = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+    let n2 = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+    let verb = v.verb(rng.below(N_VERB));
+    vec![
+        v.id("the"), n1, verb, v.id("the"), n2, v.id("."),
+        v.id("about"), v.topic_label(topic), v.id("."),
+    ]
+}
+
+/// "the <noun> was <adjA> . the <noun2> was <adjB> ? <Yes|No|Maybe> ." —
+/// premise, hypothesis, then the agreement label at the END (AR models must
+/// be able to condition the label on both sentences; the paper's OPT
+/// prompts likewise put the label word last).
+fn agreement_pair(rng: &mut Pcg, v: &Vocab) -> Vec<u32> {
+    let topic = rng.below(TOPICS.len());
+    let noun = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+    let pos = rng.below(2) == 0;
+    let adj = if pos { v.pos_adj(rng.below(N_POS_ADJ)) } else { v.neg_adj(rng.below(N_NEG_ADJ)) };
+    let kind = rng.below(3);
+    let (label, noun2, adj2) = match kind {
+        0 => ("Yes", noun, adj),
+        1 => {
+            // contradiction: same noun, opposite polarity
+            let a2 = if pos { v.neg_adj(rng.below(N_NEG_ADJ)) } else { v.pos_adj(rng.below(N_POS_ADJ)) };
+            ("No", noun, a2)
+        }
+        _ => {
+            // neutral: different noun
+            let t2 = rng.below(TOPICS.len());
+            ("Maybe", v.noun(t2, rng.below(NOUNS_PER_TOPIC)), adj)
+        }
+    };
+    vec![
+        v.id("the"), noun, v.id("was"), adj, v.id("."),
+        v.id("the"), noun2, v.id("was"), adj2, v.id("?"),
+        v.id(label), v.id("."),
+    ]
+}
+
+/// "<person> went to <place> ."
+fn fact_sentence(rng: &mut Pcg, v: &Vocab) -> Vec<u32> {
+    vec![
+        v.person(rng.below(N_PERSON)), v.id("went"), v.id("to"),
+        v.place(rng.below(N_PLACE)), v.id("."),
+    ]
+}
+
+/// "passage : <person> went to <place> . question : <person> ? answer : <place> ."
+fn qa_pattern(rng: &mut Pcg, v: &Vocab) -> Vec<u32> {
+    let p = v.person(rng.below(N_PERSON));
+    let pl = v.place(rng.below(N_PLACE));
+    vec![
+        v.id("passage"), v.id(":"), p, v.id("went"), v.id("to"), pl, v.id("."),
+        v.id("question"), v.id(":"), p, v.id("?"),
+        v.id("answer"), v.id(":"), pl, v.id("."),
+    ]
+}
+
+/// "<person> scored <num> . question : <person> ? answer : <num> ."
+fn score_pattern(rng: &mut Pcg, v: &Vocab) -> Vec<u32> {
+    let p = v.person(rng.below(N_PERSON));
+    let d = v.digit(rng.below(N_DIGIT));
+    vec![
+        p, v.id("scored"), d, v.id("."),
+        v.id("question"), v.id(":"), p, v.id("?"),
+        v.id("answer"), v.id(":"), d, v.id("."),
+    ]
+}
+
+/// unconditional filler to keep the distribution from being fully templated
+fn filler_sentence(rng: &mut Pcg, v: &Vocab) -> Vec<u32> {
+    let topic = rng.below(TOPICS.len());
+    let mut s = vec![v.id("a")];
+    for _ in 0..rng.range(2, 5) {
+        s.push(v.noun(topic, rng.below(NOUNS_PER_TOPIC)));
+    }
+    s.push(v.id("."));
+    s
+}
+
+/// Pack sentences into fixed-length sequences of `seq_len` tokens
+/// (documents separated by EOS), yielding `n_seqs` rows.
+pub fn pack_sequences(rng: &mut Pcg, v: &Vocab, n_seqs: usize, seq_len: usize) -> Vec<Vec<u32>> {
+    let mut out = Vec::with_capacity(n_seqs);
+    let mut buf: Vec<u32> = Vec::new();
+    while out.len() < n_seqs {
+        while buf.len() < seq_len {
+            buf.extend(sample_sentence(rng, v));
+            buf.push(EOS);
+        }
+        out.push(buf.drain(..seq_len).collect());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::PAD;
+
+    #[test]
+    fn sentences_are_valid_token_ids() {
+        let v = Vocab::standard();
+        let mut rng = Pcg::new(0);
+        for _ in 0..500 {
+            let s = sample_sentence(&mut rng, &v);
+            assert!(!s.is_empty());
+            for &t in &s {
+                assert!(t < v.used, "token {} out of lexicon", t);
+                assert_ne!(t, PAD);
+            }
+        }
+    }
+
+    #[test]
+    fn packing_yields_exact_lengths() {
+        let v = Vocab::standard();
+        let mut rng = Pcg::new(1);
+        let seqs = pack_sequences(&mut rng, &v, 10, 64);
+        assert_eq!(seqs.len(), 10);
+        assert!(seqs.iter().all(|s| s.len() == 64));
+    }
+
+    #[test]
+    fn review_pattern_links_polarity_to_label() {
+        let v = Vocab::standard();
+        let mut rng = Pcg::new(2);
+        let mut seen_great = false;
+        let mut seen_terrible = false;
+        for _ in 0..200 {
+            let s = sentiment_review(&mut rng, &v);
+            let text = v.decode(&s);
+            if text.contains("it was great") {
+                assert!(text.contains("pos_a"), "{}", text);
+                seen_great = true;
+            }
+            if text.contains("it was terrible") {
+                assert!(text.contains("neg_a"), "{}", text);
+                seen_terrible = true;
+            }
+        }
+        assert!(seen_great && seen_terrible);
+    }
+
+    #[test]
+    fn corpus_is_deterministic_per_seed() {
+        let v = Vocab::standard();
+        let a = pack_sequences(&mut Pcg::new(7), &v, 5, 32);
+        let b = pack_sequences(&mut Pcg::new(7), &v, 5, 32);
+        assert_eq!(a, b);
+    }
+}

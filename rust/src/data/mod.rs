@@ -1,0 +1,5 @@
+//! Synthetic workload substrate: pre-training corpus, downstream task
+//! suite, prompt formats, and fixed-shape batch assembly.
+pub mod batch;
+pub mod corpus;
+pub mod tasks;

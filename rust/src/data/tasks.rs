@@ -1,0 +1,688 @@
+//! The 11-task synthetic downstream suite (DESIGN.md §2.3).
+//!
+//! Each task mirrors one of the paper's evaluation datasets in *type* and
+//! *prompt format* (Appendix E.2): classification via single-token label
+//! words, multiple choice via candidate log-likelihood, and generation via
+//! teacher forcing + greedy decoding. Labels derive from the same latent
+//! attributes the pre-training corpus encodes, so prompt-based transfer is
+//! real, not memorised.
+
+use crate::rng::Pcg;
+use crate::tokenizer::{Vocab, NOUNS_PER_TOPIC, N_DIGIT, N_NEG_ADJ, N_NEU_ADJ,
+                        N_PERSON, N_PLACE, N_POS_ADJ, N_VERB, TOPICS};
+
+/// Paper-task analogs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Sst2,    // SST-2: 2-way sentiment
+    Sst5,    // SST-5: 5-way sentiment strength
+    Snli,    // SNLI: 3-way NLI
+    Mnli,    // MNLI: 3-way NLI (shifted topic distribution)
+    Rte,     // RTE: 2-way NLI
+    Cb,      // CB: 3-way NLI, small data regime
+    Trec,    // TREC: 6-way topic
+    BoolQ,   // BoolQ: passage yes/no
+    Wsc,     // WSC analog: membership yes/no
+    Wic,     // WiC analog: same-sense yes/no
+    MultiRc, // MultiRC: answer-correctness yes/no over a passage
+    Copa,    // COPA: 2-choice plausible continuation
+    Record,  // ReCoRD: entity cloze multiple choice
+    Squad,   // SQuAD: extractive QA, generation
+    Drop,    // DROP: numeric QA, generation
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskType {
+    Classification,
+    MultipleChoice,
+    Generation,
+}
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Sst2 => "sst2",
+            Task::Sst5 => "sst5",
+            Task::Snli => "snli",
+            Task::Mnli => "mnli",
+            Task::Rte => "rte",
+            Task::Cb => "cb",
+            Task::Trec => "trec",
+            Task::BoolQ => "boolq",
+            Task::Wsc => "wsc",
+            Task::Wic => "wic",
+            Task::MultiRc => "multirc",
+            Task::Copa => "copa",
+            Task::Record => "record",
+            Task::Squad => "squad",
+            Task::Drop => "drop",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Task> {
+        ALL_TASKS.iter().copied().find(|t| t.name() == s)
+    }
+
+    pub fn task_type(&self) -> TaskType {
+        match self {
+            Task::Copa | Task::Record => TaskType::MultipleChoice,
+            Task::Squad | Task::Drop => TaskType::Generation,
+            _ => TaskType::Classification,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Task::Sst2 | Task::Rte | Task::BoolQ | Task::Wsc | Task::Wic
+            | Task::MultiRc | Task::Copa => 2,
+            Task::Snli | Task::Mnli | Task::Cb => 3,
+            Task::Sst5 => 5,
+            Task::Trec => 6,
+            Task::Record => 3, // candidates per example
+            Task::Squad | Task::Drop => 0,
+        }
+    }
+}
+
+pub const ALL_TASKS: [Task; 15] = [
+    Task::Sst2, Task::Sst5, Task::Snli, Task::Mnli, Task::Rte, Task::Cb,
+    Task::Trec, Task::BoolQ, Task::Wsc, Task::Wic, Task::MultiRc, Task::Copa,
+    Task::Record, Task::Squad, Task::Drop,
+];
+
+/// The OPT (Table 1) eleven and the RoBERTa (Table 18 / Fig. 2) six.
+pub const OPT_TASKS: [Task; 11] = [
+    Task::Sst2, Task::Rte, Task::Cb, Task::BoolQ, Task::Wsc, Task::Wic,
+    Task::MultiRc, Task::Copa, Task::Record, Task::Squad, Task::Drop,
+];
+pub const ROBERTA_TASKS: [Task; 6] =
+    [Task::Sst2, Task::Sst5, Task::Snli, Task::Mnli, Task::Rte, Task::Trec];
+
+/// One task example. `context` holds the full prompt with a single hole:
+/// for classification/multiple-choice the hole is where a candidate goes
+/// (position `hole` in the assembled sequence); for generation the answer
+/// is generated after the context.
+#[derive(Debug, Clone)]
+pub struct Example {
+    /// tokens before the hole
+    pub context: Vec<u32>,
+    /// tokens after the hole (empty for generation / end-positioned holes)
+    pub suffix: Vec<u32>,
+    /// candidate completions (cls: single-token label words)
+    pub candidates: Vec<Vec<u32>>,
+    /// index of the correct candidate (cls / mch)
+    pub label: usize,
+    /// gold answer tokens (generation; == candidates[label] otherwise)
+    pub answer: Vec<u32>,
+}
+
+impl Example {
+    /// Assemble the full training sequence with the gold candidate filled in.
+    pub fn filled(&self) -> (Vec<u32>, std::ops::Range<usize>) {
+        let cand = if self.candidates.is_empty() {
+            &self.answer
+        } else {
+            &self.candidates[self.label]
+        };
+        let mut seq = self.context.clone();
+        let start = seq.len();
+        seq.extend_from_slice(cand);
+        let end = seq.len();
+        seq.extend_from_slice(&self.suffix);
+        (seq, start..end)
+    }
+
+    /// Assemble with candidate `i` filled in (for log-likelihood scoring).
+    pub fn with_candidate(&self, i: usize) -> (Vec<u32>, std::ops::Range<usize>) {
+        let mut seq = self.context.clone();
+        let start = seq.len();
+        seq.extend_from_slice(&self.candidates[i]);
+        let end = seq.len();
+        seq.extend_from_slice(&self.suffix);
+        (seq, start..end)
+    }
+}
+
+/// A generated dataset split.
+#[derive(Debug, Clone)]
+pub struct TaskData {
+    pub task: Task,
+    pub train: Vec<Example>,
+    pub val: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+/// Generation options. `prompt=false` reproduces the Table 5 ablation:
+/// the raw input is presented without the template words that tie the task
+/// to pre-training patterns.
+#[derive(Debug, Clone, Copy)]
+pub struct GenOpts {
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    pub prompt: bool,
+}
+
+impl Default for GenOpts {
+    fn default() -> Self {
+        GenOpts { seed: 0, n_train: 256, n_val: 128, n_test: 256, prompt: true }
+    }
+}
+
+/// k-shot per class (paper §3.1: k = 16 / 512).
+pub fn kshot(task: Task, v: &Vocab, k: usize, opts: GenOpts) -> TaskData {
+    let per_class = k.max(1);
+    let n = per_class * task.n_classes().max(1);
+    generate(task, v, GenOpts { n_train: n, n_val: n, ..opts })
+}
+
+pub fn generate(task: Task, v: &Vocab, opts: GenOpts) -> TaskData {
+    let mut rng = Pcg::new(opts.seed ^ (task as u64).wrapping_mul(0x9E37));
+    let gen_split = |rng: &mut Pcg, n: usize| -> Vec<Example> {
+        let mut out = Vec::with_capacity(n);
+        let classes = task.n_classes().max(1);
+        for i in 0..n {
+            // balanced labels for classification tasks
+            let want = i % classes;
+            out.push(gen_example(task, v, rng, want, opts.prompt));
+        }
+        out
+    };
+    let train = gen_split(&mut rng, opts.n_train);
+    let val = gen_split(&mut rng, opts.n_val);
+    let test = gen_split(&mut rng, opts.n_test);
+    TaskData { task, train, val, test }
+}
+
+// ---------------------------------------------------------------------
+// per-task generators
+// ---------------------------------------------------------------------
+
+fn sample_adj(v: &Vocab, rng: &mut Pcg, positive: bool) -> u32 {
+    if positive {
+        v.pos_adj(rng.below(N_POS_ADJ))
+    } else {
+        v.neg_adj(rng.below(N_NEG_ADJ))
+    }
+}
+
+fn sentiment_words(v: &Vocab, rng: &mut Pcg, strength: usize) -> Vec<u32> {
+    // strength: 0 terrible .. 4 great
+    match strength {
+        0 => vec![v.neg_adj(rng.below(N_NEG_ADJ)), v.id("and"), v.neg_adj(rng.below(N_NEG_ADJ))],
+        1 => vec![v.neg_adj(rng.below(N_NEG_ADJ))],
+        2 => vec![v.neu_adj(rng.below(N_NEU_ADJ))],
+        3 => vec![v.pos_adj(rng.below(N_POS_ADJ))],
+        _ => vec![v.pos_adj(rng.below(N_POS_ADJ)), v.id("and"), v.pos_adj(rng.below(N_POS_ADJ))],
+    }
+}
+
+fn label_words(v: &Vocab, words: &[&str]) -> Vec<Vec<u32>> {
+    words.iter().map(|w| vec![v.id(w)]).collect()
+}
+
+fn gen_example(task: Task, v: &Vocab, rng: &mut Pcg, want: usize, prompt: bool) -> Example {
+    match task {
+        Task::Sst2 => {
+            // want: 0 = terrible, 1 = great. Three adjectives with a 2:1
+            // polarity majority — the corpus never mixes polarities within
+            // a review, so zero-shot is imperfect and the majority rule has
+            // to be *learned* (headroom for MeZO/FT, as in the paper).
+            let topic = rng.below(TOPICS.len());
+            let noun = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+            let maj = want == 1;
+            let mut adjs = vec![
+                sample_adj(v, rng, maj),
+                sample_adj(v, rng, maj),
+                sample_adj(v, rng, !maj),
+            ];
+            rng.shuffle(&mut adjs);
+            let mut ctx = if prompt { vec![v.id("review"), v.id(":")] } else { vec![] };
+            ctx.extend([v.id("the"), noun, v.id("was")]);
+            for (i, a) in adjs.iter().enumerate() {
+                if i > 0 {
+                    ctx.push(v.id("and"));
+                }
+                ctx.push(*a);
+            }
+            ctx.push(v.id("."));
+            if prompt {
+                ctx.extend([v.id("it"), v.id("was")]);
+            }
+            Example {
+                context: ctx,
+                suffix: vec![],
+                candidates: label_words(v, &["terrible", "great"]),
+                label: want,
+                answer: vec![],
+            }
+        }
+        Task::Sst5 => {
+            // two adjective slots; label = summed polarity + 2
+            // (−2 → terrible … +2 → great). Mixed pairs (label 1..3) never
+            // co-occur with label words in the corpus.
+            let topic = rng.below(TOPICS.len());
+            let noun = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+            let (p1, p2): (i32, i32) = match want {
+                0 => (-1, -1),
+                1 => (-1, 0),
+                2 => (0, 0),
+                3 => (1, 0),
+                _ => (1, 1),
+            };
+            let adj = |rng: &mut Pcg, p: i32| match p {
+                -1 => v.neg_adj(rng.below(N_NEG_ADJ)),
+                0 => v.neu_adj(rng.below(N_NEU_ADJ)),
+                _ => v.pos_adj(rng.below(N_POS_ADJ)),
+            };
+            let mut pair = vec![adj(rng, p1), adj(rng, p2)];
+            rng.shuffle(&mut pair);
+            let mut ctx = if prompt { vec![v.id("review"), v.id(":")] } else { vec![] };
+            ctx.extend([v.id("the"), noun, v.id("was"), pair[0], v.id("and"), pair[1], v.id(".")]);
+            if prompt {
+                ctx.extend([v.id("it"), v.id("was")]);
+            }
+            Example {
+                context: ctx,
+                suffix: vec![],
+                candidates: label_words(v, &["terrible", "bad", "okay", "good", "great"]),
+                label: want,
+                answer: vec![],
+            }
+        }
+        Task::Snli | Task::Mnli | Task::Cb | Task::Rte => {
+            // premise . hypothesis ? <label> — label at the END so the AR
+            // family can condition on both sentences (OPT prompt style).
+            // 0=entail(Yes), 1=neutral(Maybe), 2=contradict(No); RTE is
+            // 2-way (Yes/No).
+            let topics: &[usize] = match task {
+                Task::Mnli => &[3, 4, 5],
+                _ => &[0, 1, 2],
+            };
+            let topic = *rng.choice(topics);
+            let noun = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+            let pos = rng.below(2) == 0;
+            let adj = if pos { v.pos_adj(rng.below(N_POS_ADJ)) } else { v.neg_adj(rng.below(N_NEG_ADJ)) };
+            let two_way = task == Task::Rte;
+            let label = want;
+            let (noun2, adj2) = match (two_way, label) {
+                (_, 0) => {
+                    // entailment: same noun, same-polarity adjective
+                    (noun, sample_adj(v, rng, pos))
+                }
+                (false, 1) => {
+                    // neutral: unrelated noun
+                    let t2 = *rng.choice(topics);
+                    (v.noun(t2, rng.below(NOUNS_PER_TOPIC)), adj)
+                }
+                _ => {
+                    // contradiction: same noun, flipped polarity
+                    (noun, sample_adj(v, rng, !pos))
+                }
+            };
+            let mut ctx = vec![v.id("the"), noun, v.id("was"), adj, v.id(".")];
+            ctx.extend([v.id("the"), noun2, v.id("was"), adj2]);
+            ctx.push(if prompt { v.id("?") } else { v.id(".") });
+            let candidates = if two_way {
+                label_words(v, &["Yes", "No"])
+            } else {
+                label_words(v, &["Yes", "Maybe", "No"])
+            };
+            Example { context: ctx, suffix: vec![], candidates, label, answer: vec![] }
+        }
+        Task::Trec => {
+            // three nouns, 2:1 topic majority — corpus topic sentences are
+            // pure, so the majority rule must be learned.
+            let topic = want;
+            let mut other = rng.below(TOPICS.len());
+            while other == topic {
+                other = rng.below(TOPICS.len());
+            }
+            let mut nouns = vec![
+                v.noun(topic, rng.below(NOUNS_PER_TOPIC)),
+                v.noun(topic, rng.below(NOUNS_PER_TOPIC)),
+                v.noun(other, rng.below(NOUNS_PER_TOPIC)),
+            ];
+            rng.shuffle(&mut nouns);
+            let verb = v.verb(rng.below(N_VERB));
+            let mut ctx = vec![v.id("the"), nouns[0], verb, v.id("the"), nouns[1],
+                               v.id("and"), v.id("the"), nouns[2], v.id(".")];
+            if prompt {
+                ctx.push(v.id("about"));
+            }
+            let candidates = (0..TOPICS.len()).map(|t| vec![v.topic_label(t)]).collect();
+            Example { context: ctx, suffix: vec![], candidates, label: want, answer: vec![] }
+        }
+        Task::BoolQ => {
+            // passage: two facts; question about one fact (Yes) or a
+            // corrupted fact (No)
+            let p1 = rng.below(N_PERSON);
+            let mut p2 = rng.below(N_PERSON);
+            while p2 == p1 { p2 = rng.below(N_PERSON); }
+            let pl1 = rng.below(N_PLACE);
+            let mut pl2 = rng.below(N_PLACE);
+            while pl2 == pl1 { pl2 = rng.below(N_PLACE); }
+            let mut ctx = vec![];
+            if prompt {
+                ctx.extend([v.id("passage"), v.id(":")]);
+            }
+            ctx.extend([v.person(p1), v.id("went"), v.id("to"), v.place(pl1), v.id(".")]);
+            ctx.extend([v.person(p2), v.id("went"), v.id("to"), v.place(pl2), v.id(".")]);
+            // question: did p1 go to X?
+            let asked_place = if want == 0 {
+                pl1 // true fact -> Yes
+            } else {
+                // wrong place -> No
+                let mut w = rng.below(N_PLACE);
+                while w == pl1 { w = rng.below(N_PLACE); }
+                w
+            };
+            if prompt {
+                ctx.extend([v.id("question"), v.id(":")]);
+            }
+            ctx.extend([v.id("did"), v.person(p1), v.id("went"), v.id("to"),
+                        v.place(asked_place), v.id("?")]);
+            Example {
+                context: ctx,
+                suffix: vec![],
+                candidates: label_words(v, &["Yes", "No"]),
+                label: want,
+                answer: vec![],
+            }
+        }
+        Task::Wsc => {
+            // membership: "the <noun> is in <topic> ? Yes/No"
+            let topic = rng.below(TOPICS.len());
+            let noun = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+            let asked = if want == 0 {
+                topic
+            } else {
+                let mut t = rng.below(TOPICS.len());
+                while t == topic { t = rng.below(TOPICS.len()); }
+                t
+            };
+            let mut ctx = vec![v.id("the"), noun, v.id("is"), v.id("in"), v.topic_label(asked)];
+            ctx.push(if prompt { v.id("?") } else { v.id(".") });
+            Example {
+                context: ctx,
+                suffix: vec![],
+                candidates: label_words(v, &["Yes", "No"]),
+                label: want,
+                answer: vec![],
+            }
+        }
+        Task::Wic => {
+            // same-category: "<w1> and <w2> same ? Yes/No"
+            let t1 = rng.below(TOPICS.len());
+            let w1 = v.noun(t1, rng.below(NOUNS_PER_TOPIC));
+            let w2 = if want == 0 {
+                v.noun(t1, rng.below(NOUNS_PER_TOPIC))
+            } else {
+                let mut t2 = rng.below(TOPICS.len());
+                while t2 == t1 { t2 = rng.below(TOPICS.len()); }
+                v.noun(t2, rng.below(NOUNS_PER_TOPIC))
+            };
+            let mut ctx = vec![w1, v.id("and"), w2, v.id("same")];
+            ctx.push(if prompt { v.id("?") } else { v.id(".") });
+            Example {
+                context: ctx,
+                suffix: vec![],
+                candidates: label_words(v, &["Yes", "No"]),
+                label: want,
+                answer: vec![],
+            }
+        }
+        Task::MultiRc => {
+            // passage + question + proposed answer; is it correct?
+            let p1 = rng.below(N_PERSON);
+            let pl1 = rng.below(N_PLACE);
+            let mut ctx = vec![];
+            if prompt {
+                ctx.extend([v.id("passage"), v.id(":")]);
+            }
+            ctx.extend([v.person(p1), v.id("went"), v.id("to"), v.place(pl1), v.id(".")]);
+            if prompt {
+                ctx.extend([v.id("question"), v.id(":")]);
+            }
+            ctx.extend([v.person(p1), v.id("?")]);
+            let proposed = if want == 0 {
+                pl1
+            } else {
+                let mut w = rng.below(N_PLACE);
+                while w == pl1 { w = rng.below(N_PLACE); }
+                w
+            };
+            if prompt {
+                ctx.extend([v.id("answer"), v.id(":")]);
+            }
+            ctx.extend([v.place(proposed), v.id("."), v.id("correct"), v.id("?")]);
+            Example {
+                context: ctx,
+                suffix: vec![],
+                candidates: label_words(v, &["Yes", "No"]),
+                label: want,
+                answer: vec![],
+            }
+        }
+        Task::Copa => {
+            // premise with polarity; choose the plausible effect clause
+            let topic = rng.below(TOPICS.len());
+            let noun = v.noun(topic, rng.below(NOUNS_PER_TOPIC));
+            let pos = want == 0; // candidate 0 = "it was great"
+            let adj = if pos { v.pos_adj(rng.below(N_POS_ADJ)) } else { v.neg_adj(rng.below(N_NEG_ADJ)) };
+            let mut ctx = vec![v.id("the"), noun, v.id("was"), adj];
+            if prompt {
+                ctx.push(v.id("so"));
+            } else {
+                ctx.push(v.id("."));
+            }
+            let candidates = vec![
+                vec![v.id("it"), v.id("was"), v.id("great"), v.id(".")],
+                vec![v.id("it"), v.id("was"), v.id("terrible"), v.id(".")],
+            ];
+            Example {
+                context: ctx,
+                suffix: vec![],
+                candidates,
+                label: if pos { 0 } else { 1 },
+                answer: vec![],
+            }
+        }
+        Task::Record => {
+            // passage with 3 facts; cloze query about one person;
+            // candidates = the three mentioned places.
+            let mut persons = vec![];
+            let mut places = vec![];
+            while persons.len() < 3 {
+                let p = rng.below(N_PERSON);
+                if !persons.contains(&p) { persons.push(p); }
+            }
+            while places.len() < 3 {
+                let p = rng.below(N_PLACE);
+                if !places.contains(&p) { places.push(p); }
+            }
+            let mut ctx = vec![];
+            if prompt {
+                ctx.extend([v.id("passage"), v.id(":")]);
+            }
+            for i in 0..3 {
+                ctx.extend([v.person(persons[i]), v.id("went"), v.id("to"),
+                            v.place(places[i]), v.id(".")]);
+            }
+            let q = want % 3;
+            ctx.extend([v.person(persons[q]), v.id("went"), v.id("to")]);
+            let candidates: Vec<Vec<u32>> =
+                places.iter().map(|&p| vec![v.place(p)]).collect();
+            Example { context: ctx, suffix: vec![], candidates, label: q, answer: vec![] }
+        }
+        Task::Squad => {
+            let p1 = rng.below(N_PERSON);
+            let mut p2 = rng.below(N_PERSON);
+            while p2 == p1 { p2 = rng.below(N_PERSON); }
+            let pl1 = rng.below(N_PLACE);
+            let pl2 = rng.below(N_PLACE);
+            let mut ctx = vec![];
+            if prompt {
+                ctx.extend([v.id("passage"), v.id(":")]);
+            }
+            ctx.extend([v.person(p1), v.id("went"), v.id("to"), v.place(pl1), v.id(".")]);
+            ctx.extend([v.person(p2), v.id("went"), v.id("to"), v.place(pl2), v.id(".")]);
+            let ask_first = rng.below(2) == 0;
+            let (qp, gold) = if ask_first { (p1, pl1) } else { (p2, pl2) };
+            if prompt {
+                ctx.extend([v.id("question"), v.id(":")]);
+            }
+            ctx.extend([v.person(qp), v.id("?")]);
+            if prompt {
+                ctx.extend([v.id("answer"), v.id(":")]);
+            }
+            Example {
+                context: ctx,
+                suffix: vec![],
+                candidates: vec![],
+                label: 0,
+                answer: vec![v.place(gold), v.id(".")],
+            }
+        }
+        Task::Drop => {
+            let p1 = rng.below(N_PERSON);
+            let mut p2 = rng.below(N_PERSON);
+            while p2 == p1 { p2 = rng.below(N_PERSON); }
+            let d1 = rng.below(N_DIGIT);
+            let d2 = rng.below(N_DIGIT);
+            let mut ctx = vec![];
+            if prompt {
+                ctx.extend([v.id("passage"), v.id(":")]);
+            }
+            ctx.extend([v.person(p1), v.id("scored"), v.digit(d1), v.id(".")]);
+            ctx.extend([v.person(p2), v.id("scored"), v.digit(d2), v.id(".")]);
+            let ask_first = rng.below(2) == 0;
+            let (qp, gold) = if ask_first { (p1, d1) } else { (p2, d2) };
+            if prompt {
+                ctx.extend([v.id("question"), v.id(":")]);
+            }
+            ctx.extend([v.person(qp), v.id("?")]);
+            if prompt {
+                ctx.extend([v.id("answer"), v.id(":")]);
+            }
+            Example {
+                context: ctx,
+                suffix: vec![],
+                candidates: vec![],
+                label: 0,
+                answer: vec![v.digit(gold), v.id(".")],
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_and_fit_sequence_budget() {
+        let v = Vocab::standard();
+        for &task in ALL_TASKS.iter() {
+            let data = generate(task, &v, GenOpts { n_train: 24, n_val: 12, n_test: 24, ..Default::default() });
+            assert_eq!(data.train.len(), 24);
+            for ex in data.train.iter().chain(&data.test) {
+                let (seq, range) = ex.filled();
+                assert!(seq.len() + 2 <= 64, "{} seq too long: {}", task.name(), seq.len());
+                assert!(range.end <= seq.len() && range.start < range.end);
+                for &t in &seq {
+                    assert!(t < v.used);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_balanced() {
+        let v = Vocab::standard();
+        for &task in &[Task::Sst2, Task::Snli, Task::Trec] {
+            let data = generate(task, &v, GenOpts { n_train: 60, ..Default::default() });
+            let classes = task.n_classes();
+            let mut counts = vec![0usize; classes];
+            for ex in &data.train {
+                counts[ex.label] += 1;
+            }
+            for &c in &counts {
+                assert_eq!(c, 60 / classes);
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_fill_matches_label() {
+        let v = Vocab::standard();
+        let data = generate(Task::Sst2, &v, GenOpts { n_train: 8, ..Default::default() });
+        for ex in &data.train {
+            let (gold, r) = ex.filled();
+            let (with, r2) = ex.with_candidate(ex.label);
+            assert_eq!(gold, with);
+            assert_eq!(r, r2);
+        }
+    }
+
+    #[test]
+    fn sst2_labels_track_polarity() {
+        let v = Vocab::standard();
+        let data = generate(Task::Sst2, &v, GenOpts { n_train: 40, ..Default::default() });
+        for ex in &data.train {
+            let text = v.decode(&ex.context);
+            if ex.label == 1 {
+                assert!(text.contains("pos_a"), "{}", text);
+            } else {
+                assert!(text.contains("neg_a"), "{}", text);
+            }
+        }
+    }
+
+    #[test]
+    fn prompt_false_strips_template() {
+        let v = Vocab::standard();
+        let with = generate(Task::Sst2, &v, GenOpts { seed: 5, n_train: 4, ..Default::default() });
+        let without = generate(Task::Sst2, &v,
+            GenOpts { seed: 5, n_train: 4, prompt: false, ..Default::default() });
+        let t_with = v.decode(&with.train[0].context);
+        let t_without = v.decode(&without.train[0].context);
+        assert!(t_with.ends_with("it was"));
+        assert!(!t_without.ends_with("it was"));
+    }
+
+    #[test]
+    fn generation_tasks_have_answers() {
+        let v = Vocab::standard();
+        for &task in &[Task::Squad, Task::Drop] {
+            let data = generate(task, &v, GenOpts { n_train: 10, ..Default::default() });
+            for ex in &data.train {
+                assert!(ex.candidates.is_empty());
+                assert!(!ex.answer.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn squad_answer_is_in_passage() {
+        let v = Vocab::standard();
+        let data = generate(Task::Squad, &v, GenOpts { n_train: 20, ..Default::default() });
+        for ex in &data.train {
+            assert!(ex.context.contains(&ex.answer[0]));
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let v = Vocab::standard();
+        let a = generate(Task::Rte, &v, GenOpts { seed: 9, ..Default::default() });
+        let b = generate(Task::Rte, &v, GenOpts { seed: 9, ..Default::default() });
+        assert_eq!(a.train[0].context, b.train[0].context);
+        let c = generate(Task::Rte, &v, GenOpts { seed: 10, ..Default::default() });
+        assert_ne!(
+            (0..16).map(|i| a.train[i].context.clone()).collect::<Vec<_>>(),
+            (0..16).map(|i| c.train[i].context.clone()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,101 @@
+//! Task metrics: accuracy, macro-F1, token-level F1 and exact match
+//! (the paper reports accuracy for classification/multiple-choice and
+//! F1 for SQuAD/DROP-style generation).
+
+/// Plain accuracy over (pred, gold) pairs.
+pub fn accuracy(preds: &[usize], golds: &[usize]) -> f64 {
+    assert_eq!(preds.len(), golds.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let hits = preds.iter().zip(golds).filter(|(p, g)| p == g).count();
+    hits as f64 / preds.len() as f64
+}
+
+/// Macro-averaged F1 over classes 0..n_classes.
+pub fn macro_f1(preds: &[usize], golds: &[usize], n_classes: usize) -> f64 {
+    assert_eq!(preds.len(), golds.len());
+    let mut f1_sum = 0.0;
+    for c in 0..n_classes {
+        let tp = preds.iter().zip(golds).filter(|(p, g)| **p == c && **g == c).count() as f64;
+        let fp = preds.iter().zip(golds).filter(|(p, g)| **p == c && **g != c).count() as f64;
+        let f_n = preds.iter().zip(golds).filter(|(p, g)| **p != c && **g == c).count() as f64;
+        let prec = if tp + fp > 0.0 { tp / (tp + fp) } else { 0.0 };
+        let rec = if tp + f_n > 0.0 { tp / (tp + f_n) } else { 0.0 };
+        f1_sum += if prec + rec > 0.0 { 2.0 * prec * rec / (prec + rec) } else { 0.0 };
+    }
+    f1_sum / n_classes as f64
+}
+
+/// Token-overlap F1 (SQuAD-style, bag-of-tokens with multiplicity).
+pub fn token_f1(pred: &[u32], gold: &[u32]) -> f64 {
+    if pred.is_empty() && gold.is_empty() {
+        return 1.0;
+    }
+    if pred.is_empty() || gold.is_empty() {
+        return 0.0;
+    }
+    let mut gold_counts = std::collections::HashMap::new();
+    for &t in gold {
+        *gold_counts.entry(t).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0usize;
+    for &t in pred {
+        if let Some(c) = gold_counts.get_mut(&t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let prec = overlap as f64 / pred.len() as f64;
+    let rec = overlap as f64 / gold.len() as f64;
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Exact match.
+pub fn exact_match(pred: &[u32], gold: &[u32]) -> f64 {
+    if pred == gold {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 1], &[0, 1, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn macro_f1_perfect_and_degenerate() {
+        assert!((macro_f1(&[0, 1, 0, 1], &[0, 1, 0, 1], 2) - 1.0).abs() < 1e-12);
+        // all-one-class predictions get 0 F1 on the other class
+        let f = macro_f1(&[0, 0, 0, 0], &[0, 0, 1, 1], 2);
+        assert!(f < 0.5);
+    }
+
+    #[test]
+    fn token_f1_overlap() {
+        assert_eq!(token_f1(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(token_f1(&[1, 3], &[1, 2]), 0.5);
+        assert_eq!(token_f1(&[], &[1]), 0.0);
+        assert_eq!(token_f1(&[], &[]), 1.0);
+        // multiplicity counts
+        assert!((token_f1(&[5, 5], &[5]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn em_is_strict() {
+        assert_eq!(exact_match(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(exact_match(&[1, 2, 3], &[1, 2]), 0.0);
+    }
+}

@@ -1,0 +1,395 @@
+//! Experiment registry: one entry per paper table/figure (DESIGN.md §5).
+//!
+//! `Ctx` owns the runtime + cached pre-trained checkpoints; `run_method`
+//! executes one (task × method) cell the way the paper's protocol does
+//! (prompted data, constant-LR MeZO with best-val checkpointing, linear
+//! -decay FT, candidate scoring / greedy decode). Each `table*` function in
+//! [`tables`] prints the paper-shaped rows and writes a JSON record under
+//! `runs/results/` for EXPERIMENTS.md.
+
+pub mod tables;
+
+use crate::baselines::{self, linear_probe::{LogReg, LogRegCfg}};
+use crate::data::tasks::{generate, GenOpts, Task, TaskData, TaskType};
+use crate::eval::Evaluator;
+use crate::model::params::ParamStore;
+use crate::optim::ft::{FtConfig, FtFlavor, FtOptimizer};
+use crate::optim::mezo::{Flavor, MezoConfig, MezoSgd};
+use crate::optim::MezoStepper;
+use crate::runtime::{vec_f32, Runtime};
+use crate::tokenizer::Vocab;
+use crate::train::pretrain::{self, PretrainCfg};
+use crate::train::{train_ft, train_zo, TrainCfg};
+use crate::util::json::{obj, Json};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+pub struct Ctx {
+    pub rt: Runtime,
+    pub vocab: Vocab,
+    pub quick: bool,
+    pub out_dir: PathBuf,
+    pub pretrain_steps: usize,
+}
+
+impl Ctx {
+    pub fn new(quick: bool) -> Result<Ctx> {
+        let rt = Runtime::from_env()?;
+        let out_dir = PathBuf::from(
+            std::env::var("MEZO_RUNS").unwrap_or_else(|_| "runs".to_string()),
+        )
+        .join("results");
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Ctx { rt, vocab: Vocab::standard(), quick, out_dir, pretrain_steps: 3000 })
+    }
+
+    pub fn scale(&self, full: usize, quick: usize) -> usize {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+
+    pub fn art(&self, family: &str, size: &str, mode: &str, tuning: &str) -> String {
+        pretrain::artifact_name(family, size, mode, tuning)
+    }
+
+    /// Ensure the pre-trained checkpoint for (family, size) exists.
+    pub fn ensure_pretrained(&self, family: &str, size: &str) -> Result<()> {
+        pretrain::pretrained(
+            &self.rt,
+            family,
+            size,
+            &PretrainCfg { steps: self.pretrain_steps, ..Default::default() },
+        )?;
+        Ok(())
+    }
+
+    pub fn evaluator(&self, family: &str, size: &str, tuning: &str) -> Result<Evaluator> {
+        let loss = self.rt.load(&self.art(family, size, "loss", tuning))?;
+        let logits_name = self.art(family, size, "logits", tuning);
+        let logits = if self.rt.artifact_exists(&logits_name) {
+            Some(self.rt.load(&logits_name)?)
+        } else {
+            None
+        };
+        Ok(Evaluator::new(loss, logits, family == "mlm"))
+    }
+
+    /// Pre-trained params shaped for `tuning`'s artifact ABI. Prefix params
+    /// are initialised from real activations (paper Appendix E.5) unless
+    /// `random_prefix`.
+    pub fn params(&self, family: &str, size: &str, tuning: &str, seed: u64,
+                  random_prefix: bool) -> Result<ParamStore> {
+        self.ensure_pretrained(family, size)?;
+        let name = self.art(family, size, "loss", tuning);
+        let mut params = pretrain::params_for(&self.rt, &name, family, size, seed)?;
+        if tuning == "prefix" && !random_prefix {
+            self.init_prefix_from_activations(family, size, &mut params, seed)?;
+        }
+        Ok(params)
+    }
+
+    /// Paper's prefix init: pass random real tokens through the model and
+    /// copy their per-layer key/value activations into the prefix tensors.
+    pub fn init_prefix_from_activations(
+        &self,
+        family: &str,
+        size: &str,
+        params: &mut ParamStore,
+        seed: u64,
+    ) -> Result<()> {
+        let kv_name = format!("{}_{}_prefix_kv_b1_s8", family, size);
+        if !self.rt.artifact_exists(&kv_name) {
+            return Ok(()); // fall back to random init
+        }
+        let art = self.rt.load(&kv_name)?;
+        let m = art.meta.prefix_len;
+        // random non-special tokens
+        let mut rng = crate::rng::Pcg::new(seed ^ 0x9A7);
+        let mut batch = crate::data::batch::Batch::zeros(1, m);
+        for t in 0..m {
+            batch.input_ids[t] = rng.range(5, self.vocab.used as usize) as i32;
+            batch.attn_mask[t] = 1.0;
+        }
+        // base params only (kv artifact is tuning=prefix, same ABI as params)
+        let out = art.run(params, Some(&batch), &[])?;
+        let n_layers = art.meta.dims.n_layers;
+        for i in 0..n_layers {
+            let k = vec_f32(&out[2 * i])?;
+            let v = vec_f32(&out[2 * i + 1])?;
+            params.get_mut(&format!("layer{}.prefix.k", i)).copy_from_slice(&k);
+            params.get_mut(&format!("layer{}.prefix.v", i)).copy_from_slice(&v);
+        }
+        Ok(())
+    }
+
+    pub fn task_data(&self, task: Task, n_train: usize, seed: u64) -> TaskData {
+        let n_test = self.scale(192, 96);
+        generate(
+            task,
+            &self.vocab,
+            GenOpts { seed, n_train, n_val: 64, n_test, prompt: true },
+        )
+    }
+
+    pub fn write_json(&self, name: &str, value: &Json) -> Result<()> {
+        let path = self.out_dir.join(format!("{}.json", name));
+        std::fs::write(&path, value.to_string())?;
+        Ok(())
+    }
+}
+
+/// One method cell in a results table.
+#[derive(Debug, Clone)]
+pub enum Method {
+    ZeroShot,
+    Icl { demos: usize },
+    LinearProbe,
+    Mezo { tuning: &'static str, flavor: Flavor, cfg: Option<MezoConfig> },
+    Ft { tuning: &'static str, flavor: FtFlavor, lr: Option<f32> },
+    LpMezo,
+}
+
+impl Method {
+    pub fn mezo(tuning: &'static str) -> Method {
+        Method::Mezo { tuning, flavor: Flavor::Sgd, cfg: None }
+    }
+    pub fn name(&self) -> String {
+        match self {
+            Method::ZeroShot => "Zero-shot".into(),
+            Method::Icl { .. } => "ICL".into(),
+            Method::LinearProbe => "LP".into(),
+            Method::LpMezo => "LP-MeZO".into(),
+            Method::Mezo { tuning, flavor, .. } => match (flavor, *tuning) {
+                (Flavor::Adam, _) => "MeZO-Adam".into(),
+                (_, "full") => "MeZO".into(),
+                (_, t) => format!("MeZO ({})", t),
+            },
+            Method::Ft { tuning, flavor, .. } => match (flavor, *tuning) {
+                (FtFlavor::Sgd, "full") => "FT (SGD)".into(),
+                (_, "full") => "FT".into(),
+                (_, t) => format!("FT ({})", t),
+            },
+        }
+    }
+}
+
+/// Default MeZO hyperparameters per tuning mode (Appendix E.3 grids,
+/// re-centred for this model scale by the sweep recorded in EXPERIMENTS.md).
+pub fn default_mezo_cfg(tuning: &str, steps: usize) -> MezoConfig {
+    let (lr, eps) = match tuning {
+        "prefix" => (1e-2, 1e-1),
+        "lora" => (3e-3, 1e-2),
+        _ => (1e-4, 1e-3),
+    };
+    MezoConfig { lr, eps, total_steps: steps, ..Default::default() }
+}
+
+pub fn default_ft_lr(tuning: &str) -> f32 {
+    match tuning {
+        "prefix" | "lora" => 1e-3,
+        _ => 1e-4,
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunOut {
+    pub score: f64,
+    pub em: f64,
+    pub best_val: f64,
+    pub forward_passes: usize,
+    pub val_curve: Vec<(usize, f64)>,
+    pub train_curve: Vec<(usize, f32)>,
+}
+
+/// Execute one (family, size, task, method) cell.
+pub fn run_method(
+    ctx: &Ctx,
+    family: &str,
+    size: &str,
+    task: Task,
+    data: &TaskData,
+    method: &Method,
+    seed: u64,
+) -> Result<RunOut> {
+    let mezo_steps = ctx.scale(3000, 600);
+    let ft_steps = ctx.scale(300, 80);
+    match method {
+        Method::ZeroShot => {
+            let ev = ctx.evaluator(family, size, "full")?;
+            let params = ctx.params(family, size, "full", seed, true)?;
+            let r = ev.evaluate(&params, task, &data.test)?;
+            Ok(RunOut { score: r.score, em: r.em, ..Default::default() })
+        }
+        Method::Icl { demos } => {
+            let ev = ctx.evaluator(family, size, "full")?;
+            let params = ctx.params(family, size, "full", seed, true)?;
+            let score = baselines::icl(&ev, &params, task, &data.train, &data.test, *demos)?;
+            Ok(RunOut { score, ..Default::default() })
+        }
+        Method::LinearProbe => {
+            if task.task_type() != TaskType::Classification {
+                return Err(anyhow!("LP supports classification tasks only"));
+            }
+            let ev = ctx.evaluator(family, size, "full")?;
+            let params = ctx.params(family, size, "full", seed, true)?;
+            let (lp, _) = fit_linear_probe(&ev, &params, data)?;
+            let test_refs: Vec<&_> = data.test.iter().collect();
+            let feats = ev.features(&params, &test_refs)?;
+            let golds: Vec<usize> = data.test.iter().map(|e| e.label).collect();
+            Ok(RunOut { score: lp.accuracy(&feats, &golds), ..Default::default() })
+        }
+        Method::Mezo { tuning, flavor, cfg } => {
+            let ev = ctx.evaluator(family, size, tuning)?;
+            let mut params = ctx.params(family, size, tuning, seed, false)?;
+            let loss_art = ev.loss_art.clone();
+            let trainable = params.indices_of(&loss_art.meta.trainable);
+            let mut mcfg = cfg.clone().unwrap_or_else(|| default_mezo_cfg(tuning, mezo_steps));
+            mcfg.flavor = *flavor;
+            if *flavor == Flavor::Adam && cfg.is_none() {
+                mcfg.lr = 1e-4;
+            }
+            let steps = mcfg.total_steps;
+            let mut opt = MezoStepper::new(MezoSgd::new(mcfg, trainable, seed ^ 0x2E20));
+            let tcfg = TrainCfg { steps, eval_every: (steps / 5).max(1), seed, ..Default::default() };
+            let tr = train_zo(&mut opt, &mut params, &loss_art, &ev, task,
+                              &data.train, &data.val, &tcfg)?;
+            let r = ev.evaluate(&params, task, &data.test)?;
+            Ok(RunOut {
+                score: r.score,
+                em: r.em,
+                best_val: tr.best_val,
+                forward_passes: tr.forward_passes,
+                val_curve: tr.val_curve,
+                train_curve: tr.curve,
+            })
+        }
+        Method::Ft { tuning, flavor, lr } => {
+            let ev = ctx.evaluator(family, size, tuning)?;
+            let mut params = ctx.params(family, size, tuning, seed, false)?;
+            let grad_art = ctx.rt.load(&ctx.art(family, size, "grad", tuning))?;
+            let trainable = params.indices_of(&grad_art.meta.trainable);
+            let fcfg = FtConfig {
+                lr: lr.unwrap_or_else(|| default_ft_lr(tuning)),
+                flavor: *flavor,
+                total_steps: ft_steps,
+                ..Default::default()
+            };
+            let mut opt = FtOptimizer::new(fcfg, trainable, &params);
+            let tcfg = TrainCfg { steps: ft_steps, eval_every: (ft_steps / 4).max(1), seed,
+                                  ..Default::default() };
+            let tr = train_ft(&mut opt, &mut params, &grad_art, &ev, task,
+                              &data.train, &data.val, &tcfg)?;
+            let r = ev.evaluate(&params, task, &data.test)?;
+            Ok(RunOut {
+                score: r.score,
+                em: r.em,
+                best_val: tr.best_val,
+                forward_passes: tr.forward_passes,
+                val_curve: tr.val_curve,
+                train_curve: tr.curve,
+            })
+        }
+        Method::LpMezo => {
+            // Table 19: linear-probe-then-MeZO. The tied LM head makes the
+            // label-word embedding rows an exact linear head over features,
+            // so we write the fitted LP weights into those rows, then MeZO.
+            let ev = ctx.evaluator(family, size, "full")?;
+            let mut params = ctx.params(family, size, "full", seed, true)?;
+            let (lp, label_tokens) = fit_linear_probe(&ev, &params, data)?;
+            inject_lp_head(&mut params, &lp, &label_tokens);
+            let loss_art = ev.loss_art.clone();
+            let trainable = params.indices_of(&loss_art.meta.trainable);
+            let mcfg = default_mezo_cfg("full", mezo_steps);
+            let steps = mcfg.total_steps;
+            let mut opt = MezoStepper::new(MezoSgd::new(mcfg, trainable, seed ^ 0x17));
+            let tcfg = TrainCfg { steps, eval_every: (steps / 5).max(1), seed, ..Default::default() };
+            let tr = train_zo(&mut opt, &mut params, &loss_art, &ev, task,
+                              &data.train, &data.val, &tcfg)?;
+            let r = ev.evaluate(&params, task, &data.test)?;
+            Ok(RunOut { score: r.score, best_val: tr.best_val,
+                        forward_passes: tr.forward_passes, ..Default::default() })
+        }
+    }
+}
+
+/// Fit the LP classifier on train features; returns it plus the label-word
+/// token ids (single-token candidates assumed for classification tasks).
+fn fit_linear_probe(
+    ev: &Evaluator,
+    params: &ParamStore,
+    data: &TaskData,
+) -> Result<(LogReg, Vec<u32>)> {
+    let train_refs: Vec<&_> = data.train.iter().collect();
+    let feats = ev.features(params, &train_refs)?;
+    let labels: Vec<usize> = data.train.iter().map(|e| e.label).collect();
+    let n_classes = data.task.n_classes();
+    let lp = LogReg::fit(&feats, &labels, n_classes, &LogRegCfg::default())?;
+    let label_tokens: Vec<u32> = data.train[0]
+        .candidates
+        .iter()
+        .map(|c| c[0])
+        .collect();
+    Ok((lp, label_tokens))
+}
+
+/// Write LP class weights into the label-word embedding rows (tied head).
+fn inject_lp_head(params: &mut ParamStore, lp: &LogReg, label_tokens: &[u32]) {
+    let d = lp.d;
+    let emb = params.get_mut("embed.tok");
+    for (c, &tok) in label_tokens.iter().enumerate() {
+        let row = tok as usize * d;
+        // blend: keep the pre-trained direction, add the LP direction
+        for j in 0..d {
+            emb[row + j] = 0.5 * emb[row + j] + 0.5 * lp.w[c][j] as f32;
+        }
+    }
+}
+
+/// Format a fraction as the paper's "90.5"-style percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+/// Fixed-width table printer.
+pub fn print_table(title: &str, header: &[String], rows: &[Vec<String>]) {
+    println!("\n=== {} ===", title);
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(header));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// JSON record for a table: {title, header, rows}.
+pub fn table_json(title: &str, header: &[String], rows: &[Vec<String>]) -> Json {
+    obj(vec![
+        ("title", Json::from(title)),
+        ("header", Json::Arr(header.iter().map(|h| Json::from(h.as_str())).collect())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::from(c.as_str())).collect()))
+                    .collect(),
+            ),
+        ),
+    ])
+}

@@ -1,0 +1,750 @@
+//! One driver per paper exhibit. Each prints the paper-shaped rows and
+//! persists a JSON record under runs/results/ (consumed by EXPERIMENTS.md).
+
+use super::{default_mezo_cfg, pct, print_table, run_method, table_json, Ctx, Method};
+use crate::data::tasks::{generate, GenOpts, Task, TaskType, OPT_TASKS, ROBERTA_TASKS};
+use crate::memory::{self, Method as MemMethod, PROFILED_METHODS, SIZES};
+use crate::optim::ft::FtFlavor;
+use crate::optim::mezo::{Flavor, MezoConfig, MezoSgd};
+use crate::optim::variance::{DSource, Mode, ModifiedSpsa, ModifiedSpsaConfig};
+use crate::optim::MezoStepper;
+use crate::train::{train_zo, Objective, TrainCfg};
+use crate::util::json::{obj, Json};
+use crate::util::stats::Timer;
+use anyhow::Result;
+
+fn na() -> String {
+    "-".into()
+}
+
+fn cell(r: Result<super::RunOut>) -> String {
+    match r {
+        Ok(o) => pct(o.score),
+        Err(_) => na(),
+    }
+}
+
+/// Table 1 / Figure 1: the 11-task suite on the AR family.
+pub fn table1(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
+    let methods = vec![
+        Method::ZeroShot,
+        Method::Icl { demos: 3 },
+        Method::LinearProbe,
+        Method::mezo("full"),
+        Method::mezo("lora"),
+        Method::mezo("prefix"),
+        Method::Ft { tuning: "full", flavor: FtFlavor::Adam, lr: None },
+    ];
+    let n_train = ctx.scale(256, 128);
+    let mut header = vec!["Method".to_string()];
+    header.extend(OPT_TASKS.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+    for m in &methods {
+        let mut row = vec![m.name()];
+        for &task in OPT_TASKS.iter() {
+            let data = ctx.task_data(task, n_train, 0);
+            row.push(cell(run_method(ctx, family, size, task, &data, m, 0)));
+            eprint!(".");
+        }
+        eprintln!(" {}", m.name());
+        rows.push(row);
+    }
+    let title = format!("Table 1 / Figure 1 — {}-{} on the 11-task suite", family, size);
+    print_table(&title, &header, &rows);
+    ctx.write_json("table1", &table_json(&title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 18 / Figure 2: masked-LM family, k-shot (16 / 512).
+pub fn table18(ctx: &Ctx, size: &str) -> Result<()> {
+    let family = "mlm";
+    let ks = [16usize, 512];
+    let methods: Vec<Method> = if ctx.quick {
+        vec![
+            Method::ZeroShot,
+            Method::LinearProbe,
+            Method::mezo("full"),
+            Method::Mezo { tuning: "full", flavor: Flavor::Adam, cfg: None },
+            Method::Ft { tuning: "full", flavor: FtFlavor::Adam, lr: None },
+        ]
+    } else {
+        vec![
+            Method::ZeroShot,
+            Method::LinearProbe,
+            Method::mezo("full"),
+            Method::mezo("lora"),
+            Method::mezo("prefix"),
+            Method::Mezo { tuning: "full", flavor: Flavor::Adam, cfg: None },
+            Method::Ft { tuning: "full", flavor: FtFlavor::Adam, lr: None },
+            Method::Ft { tuning: "lora", flavor: FtFlavor::Adam, lr: None },
+            Method::Ft { tuning: "prefix", flavor: FtFlavor::Adam, lr: None },
+        ]
+    };
+    let mut header = vec!["k".to_string(), "Method".to_string()];
+    header.extend(ROBERTA_TASKS.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+    for &k in &ks {
+        for m in &methods {
+            let mut row = vec![format!("{}", k), m.name()];
+            for &task in ROBERTA_TASKS.iter() {
+                let n = k * task.n_classes();
+                let data = ctx.task_data(task, n, 0);
+                row.push(cell(run_method(ctx, family, size, task, &data, m, 0)));
+                eprint!(".");
+            }
+            eprintln!(" k={} {}", k, m.name());
+            rows.push(row);
+        }
+    }
+    let title = format!("Table 18 / Figure 2 — {}-{} k-shot suite", family, size);
+    print_table(&title, &header, &rows);
+    ctx.write_json("table18", &table_json(&title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 2 / Table 20: scaling the AR family up the size ladder.
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    let sizes: Vec<&str> = if ctx.quick { vec!["small"] } else { vec!["small", "base"] };
+    let tasks: Vec<Task> = if ctx.quick {
+        vec![Task::Sst2, Task::BoolQ]
+    } else {
+        vec![Task::Sst2, Task::Rte, Task::BoolQ, Task::Wsc, Task::Wic, Task::Squad]
+    };
+    let methods = vec![Method::ZeroShot, Method::Icl { demos: 3 }, Method::mezo("full")];
+    let mut header = vec!["Size".to_string(), "Method".to_string()];
+    header.extend(tasks.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+    for size in &sizes {
+        for m in &methods {
+            let mut row = vec![size.to_string(), m.name()];
+            for &task in &tasks {
+                let data = ctx.task_data(task, ctx.scale(256, 128), 0);
+                row.push(cell(run_method(ctx, "ar", size, task, &data, m, 0)));
+                eprint!(".");
+            }
+            eprintln!(" {} {}", size, m.name());
+            rows.push(row);
+        }
+    }
+    let title = "Table 2 / 20 — scaling MeZO up the size ladder (ar family)";
+    print_table(title, &header, &rows);
+    ctx.write_json("table2", &table_json(title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 3: non-differentiable objectives (accuracy / F1).
+pub fn table3(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
+    let cls_tasks = [Task::Sst2, Task::Sst5, Task::Snli, Task::Trec];
+    let mut header = vec!["Objective".to_string()];
+    header.extend(cls_tasks.iter().map(|t| t.name().to_string()));
+    header.push("squad".into());
+
+    let steps = ctx.scale(1500, 400);
+    let mut rows = Vec::new();
+    // zero-shot row
+    {
+        let mut row = vec!["Zero-shot".to_string()];
+        for &task in cls_tasks.iter() {
+            let data = ctx.task_data(task, 64, 0);
+            row.push(cell(run_method(ctx, family, size, task, &data, &Method::ZeroShot, 0)));
+        }
+        let data = ctx.task_data(Task::Squad, 64, 0);
+        row.push(cell(run_method(ctx, family, size, Task::Squad, &data, &Method::ZeroShot, 0)));
+        rows.push(row);
+    }
+    // cross-entropy rows (FT + MeZO)
+    for m in [
+        Method::Ft { tuning: "full", flavor: FtFlavor::Adam, lr: None },
+        Method::mezo("full"),
+    ] {
+        let mut row = vec![format!("Cross entropy ({})", m.name())];
+        for &task in cls_tasks.iter() {
+            let data = ctx.task_data(task, ctx.scale(256, 128), 0);
+            row.push(cell(run_method(ctx, family, size, task, &data, &m, 0)));
+            eprint!(".");
+        }
+        let data = ctx.task_data(Task::Squad, ctx.scale(256, 128), 0);
+        row.push(cell(run_method(ctx, family, size, Task::Squad, &data, &m, 0)));
+        eprintln!(" {}", m.name());
+        rows.push(row);
+    }
+    // non-differentiable objective row: accuracy for cls, F1 for squad
+    {
+        let mut row = vec!["Accuracy/F1 (MeZO)".to_string()];
+        for &task in cls_tasks.iter().chain([Task::Squad].iter()) {
+            let data = ctx.task_data(task, ctx.scale(256, 128), 0);
+            let ev = ctx.evaluator(family, size, "full")?;
+            let mut params = ctx.params(family, size, "full", 0, true)?;
+            let loss_art = ev.loss_art.clone();
+            let trainable = params.indices_of(&loss_art.meta.trainable);
+            let mut cfg = default_mezo_cfg("full", steps);
+            cfg.eps = 1e-2; // accuracy steps are flat at tiny eps
+            let mut opt = MezoStepper::new(MezoSgd::new(cfg, trainable, 5));
+            let objective = if task.task_type() == TaskType::Generation {
+                Objective::NegF1
+            } else {
+                Objective::NegAccuracy
+            };
+            let tcfg = TrainCfg {
+                steps,
+                eval_every: (steps / 4).max(1),
+                seed: 0,
+                objective,
+                nondiff_batch: 16,
+            };
+            let r = train_zo(&mut opt, &mut params, &loss_art, &ev, task,
+                             &data.train, &data.val, &tcfg);
+            match r {
+                Ok(_) => {
+                    let s = ev.evaluate(&params, task, &data.test)?.score;
+                    row.push(pct(s));
+                }
+                Err(_) => row.push(na()),
+            }
+            eprint!(".");
+        }
+        eprintln!(" nondiff");
+        rows.push(row);
+    }
+    let title = format!("Table 3 — non-differentiable objectives ({}-{})", family, size);
+    print_table(&title, &header, &rows);
+    ctx.write_json("table3", &table_json(&title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 5: MeZO with vs without the prompt template.
+pub fn table5(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
+    let tasks = [Task::Sst2, Task::Snli, Task::Trec];
+    let mut header = vec!["Setting".to_string()];
+    header.extend(tasks.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+    for (label, prompt) in [("Prompt", true), ("No Prompt", false)] {
+        let mut row = vec![label.to_string()];
+        for &task in &tasks {
+            let data = generate(task, &ctx.vocab, GenOpts {
+                seed: 0,
+                n_train: 16 * task.n_classes(),
+                n_val: 64,
+                n_test: ctx.scale(192, 96),
+                prompt,
+            });
+            row.push(cell(run_method(ctx, family, size, task, &data,
+                                     &Method::mezo("full"), 0)));
+            eprint!(".");
+        }
+        eprintln!(" {}", label);
+        rows.push(row);
+    }
+    let title = "Table 5 — prompt vs no-prompt (MeZO, k=16)";
+    print_table(title, &header, &rows);
+    ctx.write_json("table5", &table_json(title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 6: n-SPSA sample schedules at a fixed forward-pass budget.
+pub fn table6(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
+    let tasks = [Task::Sst2, Task::Snli, Task::Trec];
+    let budget = ctx.scale(6000, 1600); // total forward passes
+    let settings: Vec<(String, usize, bool)> = vec![
+        ("n=1 const".into(), 1, false),
+        ("n=4 const".into(), 4, false),
+        ("n=4 linear".into(), 4, true),
+        ("n=16 const".into(), 16, false),
+        ("n=16 linear".into(), 16, true),
+    ];
+    let mut header = vec!["Schedule".to_string()];
+    header.extend(tasks.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+    for (label, n, linear) in &settings {
+        let mut row = vec![label.clone()];
+        for &task in &tasks {
+            // steps so that total ≈ budget forward passes (avg n for linear)
+            let avg_n = if *linear { (1 + n) / 2 } else { *n };
+            let steps = (budget / (2 * avg_n.max(1))).max(1);
+            let mut cfg = default_mezo_cfg("full", steps);
+            cfg.n = *n;
+            cfg.linear_n_schedule = *linear;
+            // linear-scaling rule: lr grows with n (Appendix A.2)
+            cfg.lr *= *n as f32;
+            let data = ctx.task_data(task, 16 * task.n_classes(), 0);
+            let m = Method::Mezo { tuning: "full", flavor: Flavor::Sgd, cfg: Some(cfg) };
+            row.push(cell(run_method(ctx, family, size, task, &data, &m, 0)));
+            eprint!(".");
+        }
+        eprintln!(" {}", label);
+        rows.push(row);
+    }
+    let title = format!("Table 6 — n-SPSA schedules at {} forward passes", budget);
+    print_table(&title, &header, &rows);
+    ctx.write_json("table6", &table_json(&title, &header, &rows))?;
+    Ok(())
+}
+
+/// Tables 8/9/10: variance- and expectation-modified SPSA.
+pub fn table8910(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
+    let tasks = [Task::Sst2, Task::Snli, Task::Trec];
+    let steps = ctx.scale(2000, 500);
+    let settings: Vec<(String, Option<(Mode, DSource, usize)>)> = vec![
+        ("Baseline MeZO".into(), None),
+        ("Var: param norm (T9)".into(), Some((Mode::Variance, DSource::ParamNorm, 0))),
+        ("Var: param norm, refresh (T9)".into(), Some((Mode::Variance, DSource::ParamNorm, 200))),
+        ("Var: ZO grad norm (T8)".into(), Some((Mode::Variance, DSource::GradNormZo, 0))),
+        ("Var: ZO grad norm, refresh (T8)".into(), Some((Mode::Variance, DSource::GradNormZo, 200))),
+        ("Expect: normalized grad (T10)".into(), Some((Mode::Expectation, DSource::GradNormZo, 0))),
+    ];
+    let mut header = vec!["Variant".to_string()];
+    header.extend(tasks.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+    for (label, setting) in &settings {
+        let mut row = vec![label.clone()];
+        for &task in &tasks {
+            let data = ctx.task_data(task, 16 * task.n_classes(), 0);
+            let score: Result<f64> = (|| {
+                let ev = ctx.evaluator(family, size, "full")?;
+                let mut params = ctx.params(family, size, "full", 0, true)?;
+                let loss_art = ev.loss_art.clone();
+                let trainable = params.indices_of(&loss_art.meta.trainable);
+                let tcfg = TrainCfg { steps, eval_every: (steps / 4).max(1),
+                                      ..Default::default() };
+                match setting {
+                    None => {
+                        let cfg = default_mezo_cfg("full", steps);
+                        let mut opt = MezoStepper::new(MezoSgd::new(cfg, trainable, 3));
+                        train_zo(&mut opt, &mut params, &loss_art, &ev, task,
+                                 &data.train, &data.val, &tcfg)?;
+                    }
+                    Some((mode, src, refresh)) => {
+                        let cfg = ModifiedSpsaConfig {
+                            lr: 1e-4,
+                            eps: 1e-3,
+                            mode: *mode,
+                            d_source: *src,
+                            refresh_every: *refresh,
+                        };
+                        let mut opt = ModifiedSpsa::new(cfg, trainable, 3);
+                        train_zo(&mut opt, &mut params, &loss_art, &ev, task,
+                                 &data.train, &data.val, &tcfg)?;
+                    }
+                }
+                Ok(ev.evaluate(&params, task, &data.test)?.score)
+            })();
+            row.push(score.map(pct).unwrap_or_else(|_| na()));
+            eprint!(".");
+        }
+        eprintln!(" {}", label);
+        rows.push(row);
+    }
+    let title = "Tables 8/9/10 — variance/expectation-modified SPSA (k=16)";
+    print_table(title, &header, &rows);
+    ctx.write_json("table8910", &table_json(title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 11: two-point SPSA vs the one-point estimator at equal forwards.
+pub fn table11(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
+    let tasks = [Task::Sst2, Task::Snli, Task::Trec];
+    let base_steps = ctx.scale(2000, 500);
+    let settings = vec![
+        ("SPSA (2-point)".to_string(), false, base_steps),
+        ("One-point, same steps".to_string(), true, base_steps),
+        ("One-point, 2x steps (equal fwd)".to_string(), true, 2 * base_steps),
+    ];
+    let mut header = vec!["Estimator".to_string()];
+    header.extend(tasks.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+    for (label, one_point, steps) in &settings {
+        let mut row = vec![label.clone()];
+        for &task in &tasks {
+            let mut cfg = default_mezo_cfg("full", *steps);
+            cfg.one_point = *one_point;
+            if *one_point {
+                cfg.lr *= 0.3; // one-point is noisier; see Appendix B.5
+            }
+            let data = ctx.task_data(task, 16 * task.n_classes(), 0);
+            let m = Method::Mezo { tuning: "full", flavor: Flavor::Sgd, cfg: Some(cfg) };
+            row.push(cell(run_method(ctx, family, size, task, &data, &m, 0)));
+            eprint!(".");
+        }
+        eprintln!(" {}", label);
+        rows.push(row);
+    }
+    let title = "Table 11 — SPSA vs one-point estimator";
+    print_table(title, &header, &rows);
+    ctx.write_json("table11", &table_json(title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 12 + Fig. 3 + Table 22: analytic memory accounting per method.
+pub fn table22(ctx: &Ctx) -> Result<()> {
+    let (b, s) = (8u64, 64u64);
+    let mut header = vec!["Size".to_string(), "params".to_string()];
+    header.extend(PROFILED_METHODS.iter().map(|m| m.name().to_string()));
+    let mut rows = Vec::new();
+    for spec in SIZES {
+        let mut row = vec![spec.name.to_string(),
+                           format!("{:.2}M", memory::n_params(spec) as f64 / 1e6)];
+        for m in PROFILED_METHODS {
+            row.push(format!("{:.1}MB", memory::live_bytes(spec, m, b, s) as f64 / 1e6));
+        }
+        rows.push(row);
+    }
+    // ratio row (the paper's 12x headline)
+    let mut ratio_row = vec!["FT/inference ratio @xl".to_string(), "".to_string()];
+    let xl = SIZES[4];
+    let inf = memory::live_bytes(xl, MemMethod::Inference, b, s) as f64;
+    for m in PROFILED_METHODS {
+        ratio_row.push(format!("{:.1}x", memory::live_bytes(xl, m, b, s) as f64 / inf));
+    }
+    rows.push(ratio_row);
+    let title = "Table 22 / Fig. 3 / Table 12 — analytic memory by method x size (B=8, S=64)";
+    print_table(title, &header, &rows);
+    ctx.write_json("table22", &table_json(title, &header, &rows))?;
+
+    // measured cross-check: peak RSS growth when loading+running artifacts
+    let mut mrows = Vec::new();
+    for size in ["tiny", "small", "base", "large"] {
+        let before = memory::current_rss().unwrap_or(0);
+        let art = ctx.rt.load(&ctx.art("ar", size, "loss", "full"))?;
+        let mut params = crate::model::params::ParamStore::from_meta(&art.meta);
+        params.init(0);
+        let batch = crate::data::batch::Batch::zeros(8, 64);
+        let _ = art.run(&params, Some(&batch), &[])?;
+        let after = memory::current_rss().unwrap_or(0);
+        mrows.push(vec![
+            size.to_string(),
+            format!("{:.1}MB", (after.saturating_sub(before)) as f64 / 1e6),
+        ]);
+    }
+    print_table(
+        "Fig. 3 (measured) — process RSS growth per loaded+run loss artifact",
+        &["Size".to_string(), "RSS delta".to_string()],
+        &mrows,
+    );
+    ctx.write_json("figure3_measured",
+                   &table_json("measured RSS", &["Size".into(), "RSS delta".into()], &mrows))?;
+    Ok(())
+}
+
+/// Figure 4: largest model that fits a memory budget, per method.
+pub fn figure4(ctx: &Ctx) -> Result<()> {
+    let budgets_mb: [u64; 4] = [24, 64, 192, 512];
+    let methods = [MemMethod::FtAdam, MemMethod::FtPrefix, MemMethod::Inference];
+    let mut header = vec!["Budget".to_string()];
+    header.extend(methods.iter().map(|m| m.name().to_string()));
+    let mut rows = Vec::new();
+    for mb in budgets_mb {
+        let mut row = vec![format!("{}MB", mb)];
+        for m in methods {
+            row.push(
+                memory::largest_fitting(m, mb << 20, 8, 64)
+                    .unwrap_or("-")
+                    .to_string(),
+            );
+        }
+        rows.push(row);
+    }
+    let title = "Figure 4 — largest model per memory budget (analytic)";
+    print_table(title, &header, &rows);
+    ctx.write_json("figure4", &table_json(title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 17: prefix init — random vs real activations (FT-prefix).
+pub fn table17(ctx: &Ctx) -> Result<()> {
+    let (family, size) = ("mlm", "small");
+    let tasks = [Task::Sst2, Task::Snli];
+    let mut header = vec!["Init".to_string()];
+    header.extend(tasks.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+    for (label, random) in [("random init", true), ("real act init", false)] {
+        let mut row = vec![label.to_string()];
+        for &task in &tasks {
+            let data = ctx.task_data(task, 16 * task.n_classes(), 0);
+            let score: Result<f64> = (|| {
+                let ev = ctx.evaluator(family, size, "prefix")?;
+                let mut params = ctx.params(family, size, "prefix", 0, random)?;
+                let grad_art = ctx.rt.load(&ctx.art(family, size, "grad", "prefix"))?;
+                let trainable = params.indices_of(&grad_art.meta.trainable);
+                let steps = ctx.scale(150, 60);
+                let fcfg = crate::optim::ft::FtConfig {
+                    lr: 1e-3,
+                    total_steps: steps,
+                    ..Default::default()
+                };
+                let mut opt = crate::optim::ft::FtOptimizer::new(fcfg, trainable, &params);
+                let tcfg = TrainCfg { steps, eval_every: (steps / 3).max(1), ..Default::default() };
+                crate::train::train_ft(&mut opt, &mut params, &grad_art, &ev, task,
+                                       &data.train, &data.val, &tcfg)?;
+                Ok(ev.evaluate(&params, task, &data.test)?.score)
+            })();
+            row.push(score.map(pct).unwrap_or_else(|_| na()));
+            eprint!(".");
+        }
+        eprintln!(" {}", label);
+        rows.push(row);
+    }
+    let title = "Table 17 — prefix-tuning init ablation (FT-prefix, mlm-small)";
+    print_table(title, &header, &rows);
+    ctx.write_json("table17", &table_json(title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 19: LP, MeZO, LP-then-MeZO.
+pub fn table19(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
+    let tasks = [Task::Sst2, Task::Snli, Task::Trec];
+    let methods = vec![Method::LinearProbe, Method::mezo("full"), Method::LpMezo];
+    let mut header = vec!["Method".to_string()];
+    header.extend(tasks.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+    for m in &methods {
+        let mut row = vec![m.name()];
+        for &task in &tasks {
+            let data = ctx.task_data(task, 16 * task.n_classes(), 0);
+            row.push(cell(run_method(ctx, family, size, task, &data, m, 0)));
+            eprint!(".");
+        }
+        eprintln!(" {}", m.name());
+        rows.push(row);
+    }
+    let title = "Table 19 — LP, MeZO, LP-then-MeZO (k=16)";
+    print_table(title, &header, &rows);
+    ctx.write_json("table19", &table_json(title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 21: MeZO family vs the BBTv2-style ES baseline.
+pub fn table21(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
+    let tasks = [Task::Sst2, Task::Snli, Task::Rte];
+    let mut header = vec!["Method".to_string()];
+    header.extend(tasks.iter().map(|t| t.name().to_string()));
+    let mut rows = Vec::new();
+
+    // BBTv2-like: ES over a low-dim projection of the prefix tensors
+    {
+        let mut row = vec!["BBTv2-like (ES prefix)".to_string()];
+        for &task in &tasks {
+            let data = ctx.task_data(task, 16 * task.n_classes(), 0);
+            let score: Result<f64> = (|| {
+                let ev = ctx.evaluator(family, size, "prefix")?;
+                let mut params = ctx.params(family, size, "prefix", 0, false)?;
+                let loss_art = ev.loss_art.clone();
+                let prefix_tensors: Vec<usize> =
+                    params.indices_of(&loss_art.meta.trainable);
+                let gens = ctx.scale(120, 40);
+                let cfg = crate::baselines::bbt::BbtCfg {
+                    d_low: 32,
+                    lambda: 10,
+                    mu: 3,
+                    sigma: 0.3,
+                    iters: gens,
+                    seed: 0,
+                };
+                let mut bbt = crate::baselines::bbt::Bbt::new(cfg, prefix_tensors, &params);
+                let mut rng = crate::rng::Pcg::new(0x88);
+                let (b, s) = (loss_art.meta.batch, loss_art.meta.seq);
+                for _ in 0..gens {
+                    let batch = crate::data::batch::sample_batch(
+                        &data.train, &mut rng, b, s, family == "mlm");
+                    bbt.step(&mut params, |p| {
+                        crate::train::batch_loss(&loss_art, p, &batch)
+                    })?;
+                }
+                Ok(ev.evaluate(&params, task, &data.test)?.score)
+            })();
+            row.push(score.map(pct).unwrap_or_else(|_| na()));
+            eprint!(".");
+        }
+        eprintln!(" BBT");
+        rows.push(row);
+    }
+    for m in [Method::mezo("full"), Method::mezo("lora"), Method::mezo("prefix")] {
+        let mut row = vec![m.name()];
+        for &task in &tasks {
+            let data = ctx.task_data(task, 16 * task.n_classes(), 0);
+            row.push(cell(run_method(ctx, family, size, task, &data, &m, 0)));
+            eprint!(".");
+        }
+        eprintln!(" {}", m.name());
+        rows.push(row);
+    }
+    let title = "Table 21 — MeZO vs BBTv2-style baseline (k=16)";
+    print_table(title, &header, &rows);
+    ctx.write_json("table21", &table_json(title, &header, &rows))?;
+    Ok(())
+}
+
+/// Table 23: wall-clock per optimization step, MeZO vs FT, per size.
+pub fn table23(ctx: &Ctx) -> Result<()> {
+    let sizes = ["tiny", "small", "base", "large"];
+    let mut header: Vec<String> =
+        vec!["Method".into()];
+    header.extend(sizes.iter().map(|s| s.to_string()));
+    let reps = ctx.scale(10, 4);
+    let mut mezo_row = vec!["MeZO step (2 fwd + in-place)".to_string()];
+    let mut fast_row = vec!["MeZO fast step (fused upload)".to_string()];
+    let mut fused_row = vec!["MeZO fused-step artifact".to_string()];
+    let mut ft_row = vec!["FT step (fwd+bwd+Adam)".to_string()];
+    let mut ratio_row = vec!["FT/MeZO(fast) per-step ratio".to_string()];
+    for size in sizes {
+        let loss_art = ctx.rt.load(&ctx.art("ar", size, "loss", "full"))?;
+        let grad_art = ctx.rt.load(&ctx.art("ar", size, "grad", "full"))?;
+        let mut params = crate::model::params::ParamStore::from_meta(&loss_art.meta);
+        params.init(0);
+        let trainable: Vec<usize> = (0..params.specs.len()).collect();
+        let mut batch = crate::data::batch::Batch::zeros(8, 64);
+        for row in 0..8 {
+            let seq: Vec<u32> = (0..60).map(|t| ((t * 13 + row * 7) % 500 + 5) as u32).collect();
+            batch.set_row(row, &seq, 1..seq.len(), false);
+        }
+        // MeZO step timing
+        let cfg = MezoConfig { lr: 1e-4, eps: 1e-3, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, trainable.clone(), 1);
+        opt.step(&mut params, |p| crate::train::batch_loss(&loss_art, p, &batch))?; // warmup
+        let t = Timer::start();
+        for _ in 0..reps {
+            opt.step(&mut params, |p| crate::train::batch_loss(&loss_art, p, &batch))?;
+        }
+        let mezo_ms = t.ms() / reps as f64;
+        // fast path: perturbation fused into the literal upload
+        let mut scratch = Vec::new();
+        opt.step_artifact(&mut params, &loss_art, &batch, &mut scratch)?; // warmup
+        let t = Timer::start();
+        for _ in 0..reps {
+            opt.step_artifact(&mut params, &loss_art, &batch, &mut scratch)?;
+        }
+        let fast_ms = t.ms() / reps as f64;
+        // fused-step artifact (where lowered)
+        let fused_name = ctx.art("ar", size, "fused", "full");
+        let fused_ms = if ctx.rt.artifact_exists(&fused_name) {
+            let fused = ctx.rt.load(&fused_name)?;
+            let extras = [
+                crate::runtime::i32_literal(&[1], &[7])?,
+                crate::runtime::f32_literal(&[1], &[1e-3])?,
+                crate::runtime::f32_literal(&[1], &[1e-4])?,
+            ];
+            let _ = fused.run(&params, Some(&batch), &extras)?; // warmup
+            let t = Timer::start();
+            for _ in 0..reps {
+                let _ = fused.run(&params, Some(&batch), &extras)?;
+            }
+            Some(t.ms() / reps as f64)
+        } else {
+            None
+        };
+        // FT step timing
+        let fcfg = crate::optim::ft::FtConfig { lr: 1e-4, ..Default::default() };
+        let mut ft = crate::optim::ft::FtOptimizer::new(fcfg, trainable, &params);
+        let step_ft = |ft: &mut crate::optim::ft::FtOptimizer,
+                       params: &mut crate::model::params::ParamStore|
+         -> Result<()> {
+            let out = grad_art.run(params, Some(&batch), &[])?;
+            let grads: Vec<Vec<f32>> =
+                out[1..].iter().map(crate::runtime::vec_f32).collect::<Result<Vec<_>>>()?;
+            ft.apply(params, &grads)?;
+            Ok(())
+        };
+        step_ft(&mut ft, &mut params)?; // warmup
+        let t = Timer::start();
+        for _ in 0..reps {
+            step_ft(&mut ft, &mut params)?;
+        }
+        let ft_ms = t.ms() / reps as f64;
+        mezo_row.push(format!("{:.1}ms", mezo_ms));
+        fast_row.push(format!("{:.1}ms", fast_ms));
+        fused_row.push(fused_ms.map(|x| format!("{:.1}ms", x)).unwrap_or_else(na));
+        ft_row.push(format!("{:.1}ms", ft_ms));
+        ratio_row.push(format!("{:.2}x", ft_ms / fast_ms));
+        eprint!(".");
+    }
+    eprintln!(" table23");
+    let rows = vec![mezo_row, fast_row, fused_row, ft_row, ratio_row];
+    let title = "Table 23 — wall-clock per step (B=8, S=64, 1 CPU core)";
+    print_table(title, &header, &rows);
+    ctx.write_json("table23", &table_json(title, &header, &rows))?;
+    Ok(())
+}
+
+/// Figure 5: convergence of MeZO full vs LoRA vs prefix (val curves).
+pub fn figure5(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
+    let task = Task::Sst2;
+    let data = ctx.task_data(task, 256, 0);
+    let steps = ctx.scale(2000, 600);
+    let mut series: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+    for tuning in ["full", "lora", "prefix"] {
+        let mut cfg = default_mezo_cfg(tuning, steps);
+        cfg.total_steps = steps;
+        let m = Method::Mezo { tuning: match tuning {
+            "full" => "full", "lora" => "lora", _ => "prefix" },
+            flavor: Flavor::Sgd, cfg: Some(cfg) };
+        let out = run_method(ctx, family, size, task, &data, &m, 0)?;
+        eprintln!("figure5: {} final {:.3}", tuning, out.score);
+        series.push((tuning.to_string(), out.val_curve));
+    }
+    println!("\n=== Figure 5 — MeZO convergence, full vs LoRA vs prefix ({}) ===", task.name());
+    for (name, curve) in &series {
+        let pts: Vec<String> =
+            curve.iter().map(|(s, v)| format!("({}, {:.3})", s, v)).collect();
+        println!("{:>7}: {}", name, pts.join(" "));
+    }
+    let j = Json::Arr(
+        series
+            .iter()
+            .map(|(n, c)| {
+                obj(vec![
+                    ("tuning", Json::from(n.as_str())),
+                    (
+                        "curve",
+                        Json::Arr(
+                            c.iter()
+                                .map(|(s, v)| {
+                                    Json::Arr(vec![Json::from(*s), Json::from(*v)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    ctx.write_json("figure5", &j)?;
+    Ok(())
+}
+
+/// Dispatch by experiment id.
+pub fn run(ctx: &Ctx, id: &str, family: &str, size: &str) -> Result<()> {
+    match id {
+        "table1" | "figure1" => table1(ctx, family, size),
+        "table18" | "figure2" => table18(ctx, size),
+        "table2" | "table20" => table2(ctx),
+        "table3" => table3(ctx, family, size),
+        "table5" => table5(ctx, family, size),
+        "table6" => table6(ctx, family, size),
+        "table8" | "table9" | "table10" | "table8910" => table8910(ctx, family, size),
+        "table11" => table11(ctx, family, size),
+        "table12" | "table22" | "figure3" => table22(ctx),
+        "figure4" => figure4(ctx),
+        "table17" => table17(ctx),
+        "table19" => table19(ctx, family, size),
+        "table21" => table21(ctx, family, size),
+        "table23" => table23(ctx),
+        "figure5" => figure5(ctx, family, size),
+        "all" => {
+            for id in ["table22", "figure4", "table23", "table5", "table19",
+                       "table21", "table6", "table8910", "table11", "table3",
+                       "figure5", "table1", "table18", "table2", "table17"] {
+                println!("\n########## {} ##########", id);
+                if let Err(e) = run(ctx, id, family, size) {
+                    eprintln!("[exp {}] failed: {:#}", id, e);
+                }
+            }
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown experiment id '{}'", other)),
+    }
+}
+
+pub const EXPERIMENT_IDS: [&str; 16] = [
+    "table1", "table18", "table2", "table3", "table5", "table6", "table8910",
+    "table11", "table17", "table19", "table21", "table22", "table23",
+    "figure4", "figure5", "all",
+];

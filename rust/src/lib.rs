@@ -1,0 +1,23 @@
+//! MeZO: full-system reproduction of "Fine-Tuning Language Models with Just
+//! Forward Passes" (Malladi et al., NeurIPS 2023).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!  - L1/L2 (build-time python): Pallas kernels + JAX transformer, AOT-lowered
+//!    to HLO text artifacts under `artifacts/`.
+//!  - L3 (this crate): the MeZO optimizer family operating **in place** on
+//!    rust-owned parameter buffers via a counter-based Gaussian stream, plus
+//!    the training / evaluation / baseline / experiment system. Python never
+//!    runs at runtime.
+pub mod baselines;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod memory;
+pub mod model;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod storage;
+pub mod tokenizer;
+pub mod train;
+pub mod util;

@@ -1,0 +1,84 @@
+//! `mezo` — the CLI launcher for the MeZO reproduction.
+//!
+//! Subcommands:
+//!   pretrain  --family ar|mlm --size tiny|small [--steps N]
+//!   finetune  --task sst2 [--method mezo|ft|...] [--size S]
+//!   eval      --task sst2 --size S          (zero-shot)
+//!   exp <id>  [--quick] [--family ar] [--size tiny]   (table1..table23, figure4/5, all)
+//!   memory                                   (analytic memory report)
+//!   replay    --task sst2                    (trajectory storage demo)
+//!   list                                     (experiment ids + artifacts)
+
+use anyhow::Result;
+use mezo::data::tasks::Task;
+use mezo::exp::{self, tables};
+use mezo::train::pretrain::{pretrained, PretrainCfg};
+use mezo::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let family = args.str("family", "ar");
+    let size = args.str("size", "tiny");
+    match cmd {
+        "pretrain" => {
+            let rt = mezo::runtime::Runtime::from_env()?;
+            let cfg = PretrainCfg { steps: args.usize("steps", 3000), ..Default::default() };
+            let (_p, curve) = pretrained(&rt, &family, &size, &cfg)?;
+            match curve.last() {
+                Some(l) => println!("pretrained {}/{}: loss {:.3} -> {:.3}",
+                                    family, size, curve[0].1, l.1),
+                None => println!("pretrained {}/{}: cached checkpoint loaded", family, size),
+            }
+        }
+        "exp" => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let ctx = exp::Ctx::new(args.bool("quick", false))?;
+            tables::run(&ctx, id, &family, &size)?;
+        }
+        "eval" => {
+            let ctx = exp::Ctx::new(true)?;
+            let task = Task::from_name(&args.str("task", "sst2")).expect("unknown task");
+            let data = ctx.task_data(task, 64, args.u64("seed", 0));
+            let out = exp::run_method(&ctx, &family, &size, task, &data,
+                                      &exp::Method::ZeroShot, 0)?;
+            println!("zero-shot {} ({}-{}): {:.3}", task.name(), family, size, out.score);
+        }
+        "finetune" => {
+            let ctx = exp::Ctx::new(args.bool("quick", false))?;
+            let task = Task::from_name(&args.str("task", "sst2")).expect("unknown task");
+            let data = ctx.task_data(task, args.usize("n-train", 256), args.u64("seed", 0));
+            let method = match args.str("method", "mezo").as_str() {
+                "mezo" => exp::Method::mezo("full"),
+                "mezo-lora" => exp::Method::mezo("lora"),
+                "mezo-prefix" => exp::Method::mezo("prefix"),
+                "ft" => exp::Method::Ft { tuning: "full",
+                    flavor: mezo::optim::ft::FtFlavor::Adam, lr: None },
+                "lp" => exp::Method::LinearProbe,
+                "icl" => exp::Method::Icl { demos: 3 },
+                other => anyhow::bail!("unknown method {}", other),
+            };
+            let out = exp::run_method(&ctx, &family, &size, task, &data, &method, 0)?;
+            println!("{} on {} ({}-{}): test {:.3} (best val {:.3}, fwd {})",
+                     method.name(), task.name(), family, size,
+                     out.score, out.best_val, out.forward_passes);
+        }
+        "memory" => {
+            let ctx = exp::Ctx::new(true)?;
+            tables::table22(&ctx)?;
+            tables::figure4(&ctx)?;
+        }
+        "replay" => {
+            println!("see: cargo run --release --example storage_replay");
+        }
+        "list" => {
+            println!("experiments: {}", tables::EXPERIMENT_IDS.join(" "));
+        }
+        _ => {
+            println!("mezo — MeZO (NeurIPS 2023) reproduction");
+            println!("usage: mezo <pretrain|exp|eval|finetune|memory|replay|list> [--flags]");
+            println!("       mezo exp table1 --quick --family ar --size tiny");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,245 @@
+//! Memory accounting (Fig. 3, Fig. 4, Tables 12 & 22).
+//!
+//! The paper profiles peak GPU memory on A100s; our testbed is one CPU, so
+//! we reproduce the *structure* of those exhibits two ways:
+//!  1. an analytic live-bytes model per (method, model size) derived from
+//!     the artifact dims — the same accounting the paper's §3.4 analysis
+//!     does (weights + activations + grads + optimizer state + caches);
+//!  2. measured process peak-RSS around real artifact executions
+//!     (memory::peak_rss), cross-checking the model's ordering.
+
+use crate::util::json::{obj, Json};
+
+/// Model size ladder (matches python/compile/model.py::SIZES).
+#[derive(Debug, Clone, Copy)]
+pub struct SizeSpec {
+    pub name: &'static str,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub d_ff: u64,
+}
+
+pub const SIZES: [SizeSpec; 5] = [
+    SizeSpec { name: "tiny", d_model: 64, n_layers: 2, n_heads: 2, d_ff: 256 },
+    SizeSpec { name: "small", d_model: 128, n_layers: 4, n_heads: 4, d_ff: 512 },
+    SizeSpec { name: "base", d_model: 256, n_layers: 6, n_heads: 8, d_ff: 1024 },
+    SizeSpec { name: "large", d_model: 512, n_layers: 8, n_heads: 8, d_ff: 2048 },
+    SizeSpec { name: "xl", d_model: 1024, n_layers: 12, n_heads: 16, d_ff: 4096 },
+];
+
+pub const VOCAB: u64 = 512;
+pub const MAX_SEQ: u64 = 64;
+
+pub fn size_by_name(name: &str) -> Option<SizeSpec> {
+    SIZES.iter().copied().find(|s| s.name == name)
+}
+
+/// Parameter count (mirrors model.param_specs for tuning=full).
+pub fn n_params(s: SizeSpec) -> u64 {
+    let d = s.d_model;
+    let per_layer = 2 * d // ln1
+        + 4 * d * d + 4 * d // attn w+b
+        + 2 * d // ln2
+        + d * s.d_ff + s.d_ff + s.d_ff * d + d; // mlp
+    VOCAB * d + MAX_SEQ * d + s.n_layers * per_layer + 2 * d
+}
+
+/// Largest single weight matrix (the token embedding here) — the extra
+/// buffer MeZO needs if it perturbs whole matrices at once (§2.1).
+pub fn largest_matrix(s: SizeSpec) -> u64 {
+    (VOCAB * s.d_model).max(s.d_model * s.d_ff)
+}
+
+/// Tuning/evaluation methods profiled in Fig. 3 / Table 22.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// zero-shot / MeZO — the paper's headline identity
+    Inference,
+    /// MeZO perturbing whole matrices (one extra matrix buffer)
+    MezoMatrix,
+    /// in-context learning (inference with longer context)
+    Icl,
+    /// forward-mode JVP (Appendix D / Table 12): weights + z + activations
+    Jvp,
+    /// prefix/LoRA FT: weights + full activation cache, tiny grads/state
+    FtPrefix,
+    /// full FT with SGD: weights + grads + cache
+    FtSgd,
+    /// full FT with Adam: weights + grads + 2 moments + cache
+    FtAdam,
+    /// full FT with Adam + gradient checkpointing (sqrt cache)
+    FtAdamCkpt,
+}
+
+pub const PROFILED_METHODS: [Method; 8] = [
+    Method::Inference, Method::MezoMatrix, Method::Icl, Method::Jvp,
+    Method::FtPrefix, Method::FtSgd, Method::FtAdam, Method::FtAdamCkpt,
+];
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Inference => "zero-shot/MeZO",
+            Method::MezoMatrix => "MeZO(matrix)",
+            Method::Icl => "ICL",
+            Method::Jvp => "JVP fwd-AD",
+            Method::FtPrefix => "FT(prefix)",
+            Method::FtSgd => "FT(SGD)",
+            Method::FtAdam => "FT(Adam)",
+            Method::FtAdamCkpt => "FT(Adam)+ckpt",
+        }
+    }
+}
+
+/// Per-layer live activation set during a forward pass (bytes), for batch
+/// B and sequence S: q,k,v,attn-out,mlp-hidden tiles + attention scores.
+fn act_layer_bytes(s: SizeSpec, b: u64, seq: u64) -> u64 {
+    4 * (b * seq * (4 * s.d_model + s.d_ff) + b * s.n_heads * seq * seq)
+}
+
+/// Full backprop activation cache: every layer's intermediates are held.
+fn cache_bytes(s: SizeSpec, b: u64, seq: u64) -> u64 {
+    s.n_layers * act_layer_bytes(s, b, seq) + logits_bytes(b, seq)
+}
+
+fn logits_bytes(b: u64, seq: u64) -> u64 {
+    4 * b * seq * VOCAB
+}
+
+/// Analytic peak live bytes for one step of `method`.
+pub fn live_bytes(s: SizeSpec, method: Method, b: u64, seq: u64) -> u64 {
+    let w = 4 * n_params(s);
+    let act = 2 * act_layer_bytes(s, b, seq) + logits_bytes(b, seq); // double-buffered fwd
+    match method {
+        Method::Inference => w + act,
+        Method::MezoMatrix => w + act + 4 * largest_matrix(s),
+        // ICL: same memory, longer effective context (2x here)
+        Method::Icl => w + 2 * act_layer_bytes(s, b, 2 * seq) + logits_bytes(b, 2 * seq),
+        // JVP: weights + tangent copy of weights (z) + dual activations
+        Method::Jvp => 2 * w + 2 * act,
+        Method::FtPrefix => w + cache_bytes(s, b, seq) + act,
+        Method::FtSgd => 2 * w + cache_bytes(s, b, seq) + act,
+        Method::FtAdam => 4 * w + cache_bytes(s, b, seq) + act,
+        Method::FtAdamCkpt => {
+            // sqrt(L) checkpoint segments
+            let segs = (s.n_layers as f64).sqrt().ceil() as u64;
+            4 * w + segs * act_layer_bytes(s, b, seq) + logits_bytes(b, seq) + act
+        }
+    }
+}
+
+/// Fig. 4: the largest size whose `method` footprint fits `budget` bytes.
+pub fn largest_fitting(method: Method, budget: u64, b: u64, seq: u64) -> Option<&'static str> {
+    let mut best = None;
+    for s in SIZES {
+        if live_bytes(s, method, b, seq) <= budget {
+            best = Some(s.name);
+        }
+    }
+    best
+}
+
+/// Measured peak RSS (VmHWM) of this process, bytes. Linux-only.
+pub fn peak_rss() -> Option<u64> {
+    let txt = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in txt.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Current RSS (VmRSS), bytes.
+pub fn current_rss() -> Option<u64> {
+    let txt = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in txt.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Table-22-style JSON report across methods × sizes.
+pub fn report(b: u64, seq: u64) -> Json {
+    let rows: Vec<Json> = SIZES
+        .iter()
+        .map(|&s| {
+            let methods: Vec<(&str, Json)> = PROFILED_METHODS
+                .iter()
+                .map(|&m| (m.name(), Json::from(live_bytes(s, m, b, seq) as f64)))
+                .collect();
+            let mut o = vec![
+                ("size", Json::from(s.name)),
+                ("n_params", Json::from(n_params(s) as f64)),
+            ];
+            o.extend(methods);
+            obj(o)
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_plausible() {
+        let tiny = n_params(size_by_name("tiny").unwrap());
+        let small = n_params(size_by_name("small").unwrap());
+        let large = n_params(size_by_name("large").unwrap());
+        assert!(tiny > 100_000 && tiny < 250_000, "{}", tiny);
+        assert!(small > 700_000 && small < 2_000_000, "{}", small);
+        assert!(large > 20_000_000 && large < 40_000_000, "{}", large);
+    }
+
+    #[test]
+    fn method_ordering_matches_paper() {
+        // FT(Adam) >> FT(prefix) > MeZO == inference, at every size
+        for s in SIZES {
+            let inf = live_bytes(s, Method::Inference, 8, 64);
+            let prefix = live_bytes(s, Method::FtPrefix, 8, 64);
+            let adam = live_bytes(s, Method::FtAdam, 8, 64);
+            let jvp = live_bytes(s, Method::Jvp, 8, 64);
+            assert!(adam > prefix, "{}", s.name);
+            assert!(prefix > inf, "{}", s.name);
+            assert!(jvp > inf && jvp < adam, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn ft_to_inference_ratio_grows_into_paper_range() {
+        // the paper reports ~12x for OPT-13B; the ratio must grow with size
+        let r = |s: SizeSpec| {
+            live_bytes(s, Method::FtAdam, 8, 64) as f64
+                / live_bytes(s, Method::Inference, 8, 64) as f64
+        };
+        let r_tiny = r(size_by_name("tiny").unwrap());
+        let r_xl = r(size_by_name("xl").unwrap());
+        assert!(r_xl > r_tiny);
+        assert!(r_xl > 3.0, "ratio {}", r_xl);
+    }
+
+    #[test]
+    fn fit_table_is_monotone_in_budget() {
+        let b1 = largest_fitting(Method::FtAdam, 32 << 20, 8, 64);
+        let b2 = largest_fitting(Method::FtAdam, 512 << 20, 8, 64);
+        let i2 = largest_fitting(Method::Inference, 512 << 20, 8, 64);
+        // inference fits at least as large a model as FT at equal budget
+        let rank = |n: Option<&str>| SIZES.iter().position(|s| Some(s.name) == n);
+        assert!(rank(b2) >= rank(b1));
+        assert!(rank(i2) >= rank(b2));
+    }
+
+    #[test]
+    fn rss_readers_work_on_linux() {
+        assert!(peak_rss().unwrap() > 0);
+        assert!(current_rss().unwrap() > 0);
+        assert!(peak_rss().unwrap() >= current_rss().unwrap());
+    }
+}

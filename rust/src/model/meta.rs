@@ -1,0 +1,163 @@
+//! Artifact metadata: the `.meta.json` sidecar emitted by `python/compile/aot.py`.
+//!
+//! This is the ABI contract between the build-time python layer and the
+//! runtime rust layer: parameter order/shapes, batch tensor layout, output
+//! layout, model dims and cost estimates.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorDesc {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Dims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub head_dim: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub family: String,
+    pub size: String,
+    pub tuning: String,
+    pub mode: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub dims: Dims,
+    pub lora_r: usize,
+    pub lora_alpha: f64,
+    pub prefix_len: usize,
+    pub params: Vec<TensorDesc>,
+    pub trainable: Vec<String>,
+    pub batch_inputs: Vec<TensorDesc>,
+    pub outputs: Vec<TensorDesc>,
+    pub flops_forward: f64,
+    pub n_params: usize,
+}
+
+fn tensor_list(j: &Json, default_dtype: &str) -> Result<Vec<TensorDesc>, String> {
+    let arr = j.as_arr().ok_or("expected array of tensors")?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorDesc {
+                name: t.get("name").as_str().ok_or("tensor missing name")?.to_string(),
+                shape: t
+                    .get("shape")
+                    .as_arr()
+                    .ok_or("tensor missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                    .collect::<Result<Vec<_>, _>>()?,
+                dtype: t
+                    .get("dtype")
+                    .as_str()
+                    .unwrap_or(default_dtype)
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta, String> {
+        let j = Json::parse(text)?;
+        let d = j.get("dims");
+        Ok(ArtifactMeta {
+            name: j.get("name").as_str().ok_or("missing name")?.to_string(),
+            family: j.get("family").as_str().unwrap_or("").to_string(),
+            size: j.get("size").as_str().unwrap_or("").to_string(),
+            tuning: j.get("tuning").as_str().unwrap_or("full").to_string(),
+            mode: j.get("mode").as_str().unwrap_or("").to_string(),
+            batch: j.get("batch").as_usize().ok_or("missing batch")?,
+            seq: j.get("seq").as_usize().ok_or("missing seq")?,
+            vocab: j.get("vocab").as_usize().unwrap_or(512),
+            max_seq: j.get("max_seq").as_usize().unwrap_or(64),
+            dims: Dims {
+                d_model: d.get("d_model").as_usize().ok_or("missing d_model")?,
+                n_layers: d.get("n_layers").as_usize().ok_or("missing n_layers")?,
+                n_heads: d.get("n_heads").as_usize().unwrap_or(1),
+                d_ff: d.get("d_ff").as_usize().unwrap_or(0),
+                head_dim: d.get("head_dim").as_usize().unwrap_or(0),
+            },
+            lora_r: j.get("lora_r").as_usize().unwrap_or(8),
+            lora_alpha: j.get("lora_alpha").as_f64().unwrap_or(16.0),
+            prefix_len: j.get("prefix_len").as_usize().unwrap_or(8),
+            params: tensor_list(j.get("params"), "float32")?,
+            trainable: j
+                .get("trainable")
+                .as_arr()
+                .ok_or("missing trainable")?
+                .iter()
+                .map(|t| t.as_str().unwrap_or("").to_string())
+                .collect(),
+            batch_inputs: tensor_list(j.get("batch_inputs"), "f32")?,
+            outputs: tensor_list(j.get("outputs"), "float32")?,
+            flops_forward: j.get("flops_forward").as_f64().unwrap_or(0.0),
+            n_params: j.get("n_params").as_usize().unwrap_or(0),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ArtifactMeta, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {}", path.display(), e))?;
+        ArtifactMeta::parse(&text)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|o| o.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "ar_tiny_full_loss_b8_s64", "family": "ar", "size": "tiny",
+      "tuning": "full", "mode": "loss", "batch": 8, "seq": 64,
+      "vocab": 512, "max_seq": 64,
+      "dims": {"d_model": 64, "n_layers": 2, "n_heads": 2, "d_ff": 256, "head_dim": 32},
+      "lora_r": 8, "lora_alpha": 16, "prefix_len": 8,
+      "params": [{"name": "embed.tok", "shape": [512, 64]}],
+      "trainable": ["embed.tok"],
+      "batch_inputs": [{"name": "input_ids", "shape": [8, 64], "dtype": "i32"}],
+      "outputs": [{"name": "mean_loss", "shape": [], "dtype": "float32"},
+                  {"name": "per_example_loss", "shape": [8], "dtype": "float32"}],
+      "flops_forward": 1.0, "n_params": 32768
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "ar_tiny_full_loss_b8_s64");
+        assert_eq!(m.dims.d_model, 64);
+        assert_eq!(m.params[0].len(), 512 * 64);
+        assert_eq!(m.batch_inputs[0].dtype, "i32");
+        assert_eq!(m.output_index("per_example_loss"), Some(1));
+        assert_eq!(m.output_index("nope"), None);
+        // scalar output has len 1
+        assert_eq!(m.outputs[0].len(), 1);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(ArtifactMeta::parse("{}").is_err());
+    }
+}

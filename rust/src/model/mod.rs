@@ -1,0 +1,4 @@
+//! Model-side state owned by the rust coordinator: artifact ABI metadata
+//! and the in-place parameter store MeZO operates on.
+pub mod meta;
+pub mod params;

@@ -1,0 +1,287 @@
+//! ParamStore: the rust-owned parameter buffers MeZO operates on in place.
+//!
+//! The store holds one contiguous f32 buffer per named tensor, in the exact
+//! artifact ABI order. Each tensor also records its *global flat offset*:
+//! the counter-based Gaussian stream (rng::GaussianStream) indexes z by
+//! global coordinate, so perturb / restore / update passes regenerate
+//! exactly the same z regardless of which tensors they touch or in what
+//! order — the in-place trick at the heart of Algorithm 1.
+
+use crate::model::meta::{ArtifactMeta, TensorDesc};
+use crate::rng::Pcg;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub specs: Vec<TensorDesc>,
+    /// global flat offset of each tensor (for counter-based z indexing)
+    pub offsets: Vec<u64>,
+    pub data: Vec<Vec<f32>>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn from_specs(specs: Vec<TensorDesc>) -> ParamStore {
+        let mut offsets = Vec::with_capacity(specs.len());
+        let mut off = 0u64;
+        for s in &specs {
+            offsets.push(off);
+            off += s.len() as u64;
+        }
+        let data = specs.iter().map(|s| vec![0.0f32; s.len()]).collect();
+        let index = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect();
+        ParamStore { specs, offsets, data, index }
+    }
+
+    pub fn from_meta(meta: &ArtifactMeta) -> ParamStore {
+        ParamStore::from_specs(meta.params.clone())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.data.iter().map(|d| d.len()).sum()
+    }
+
+    pub fn idx(&self, name: &str) -> usize {
+        *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("no parameter named '{}'", name))
+    }
+
+    pub fn get(&self, name: &str) -> &[f32] {
+        &self.data[self.idx(name)]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Vec<f32> {
+        let i = self.idx(name);
+        &mut self.data[i]
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    /// Standard transformer init (matches python/tests/test_model.py):
+    /// LN gains = 1, all biases & LoRA `.b` = 0, everything else N(0, 0.02).
+    pub fn init(&mut self, seed: u64) {
+        let mut rng = Pcg::new(seed);
+        for (spec, buf) in self.specs.iter().zip(self.data.iter_mut()) {
+            let n = &spec.name;
+            if n.ends_with(".g") {
+                buf.iter_mut().for_each(|x| *x = 1.0);
+            } else if is_bias(n) || (n.contains(".lora_") && n.ends_with(".b")) {
+                buf.iter_mut().for_each(|x| *x = 0.0);
+            } else {
+                buf.iter_mut().for_each(|x| *x = rng.normal_f32(0.0, 0.02));
+            }
+        }
+    }
+
+    /// Indices of the tensors in `names`, in `names` order.
+    pub fn indices_of(&self, names: &[String]) -> Vec<usize> {
+        names.iter().map(|n| self.idx(n)).collect()
+    }
+
+    /// Total scalar count across the given tensor indices.
+    pub fn len_of(&self, idxs: &[usize]) -> u64 {
+        idxs.iter().map(|&i| self.data[i].len() as u64).sum()
+    }
+
+    /// L2 norm of a tensor.
+    pub fn tensor_norm(&self, i: usize) -> f32 {
+        self.data[i].iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Copy all buffers from another store with identical specs.
+    pub fn copy_from(&mut self, other: &ParamStore) {
+        assert_eq!(self.specs.len(), other.specs.len());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            a.copy_from_slice(b);
+        }
+    }
+
+    // ---------------- binary checkpoints --------------------------------
+    // format: magic "MZCK" u32, n_tensors u32, then per tensor:
+    //   name_len u32 | name bytes | ndim u32 | dims u64... | f32 data
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"MZCK")?;
+        f.write_all(&(self.specs.len() as u32).to_le_bytes())?;
+        for (spec, buf) in self.specs.iter().zip(&self.data) {
+            let nb = spec.name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(spec.shape.len() as u32).to_le_bytes())?;
+            for &d in &spec.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // SAFETY: f32 slice reinterpreted as bytes (little-endian host)
+            let bytes = unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint into a store with matching tensor names/shapes.
+    /// Tensors present in the file but not in `self` are ignored; tensors
+    /// missing from the file keep their current values (so a `full`
+    /// checkpoint can seed a `lora`/`prefix` store).
+    pub fn load_into(&mut self, path: &Path) -> std::io::Result<usize> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"MZCK" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad checkpoint magic",
+            ));
+        }
+        let mut u32b = [0u8; 4];
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u32b)?;
+        let n_tensors = u32::from_le_bytes(u32b) as usize;
+        let mut loaded = 0;
+        for _ in 0..n_tensors {
+            f.read_exact(&mut u32b)?;
+            let name_len = u32::from_le_bytes(u32b) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8_lossy(&name).to_string();
+            f.read_exact(&mut u32b)?;
+            let ndim = u32::from_le_bytes(u32b) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                f.read_exact(&mut u64b)?;
+                shape.push(u64::from_le_bytes(u64b) as usize);
+            }
+            let len: usize = shape.iter().product::<usize>().max(1);
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)?;
+            if let Some(&i) = self.index.get(&name) {
+                if self.specs[i].shape != shape {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("shape mismatch for {}", name),
+                    ));
+                }
+                let dst = &mut self.data[i];
+                for (j, chunk) in bytes.chunks_exact(4).enumerate() {
+                    dst[j] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                }
+                loaded += 1;
+            }
+        }
+        Ok(loaded)
+    }
+}
+
+fn is_bias(name: &str) -> bool {
+    name.ends_with(".b")
+        || name.ends_with(".bq")
+        || name.ends_with(".bk")
+        || name.ends_with(".bv")
+        || name.ends_with(".bo")
+        || name.ends_with(".b1")
+        || name.ends_with(".b2")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_specs() -> Vec<TensorDesc> {
+        vec![
+            TensorDesc { name: "embed.tok".into(), shape: vec![16, 4], dtype: "f32".into() },
+            TensorDesc { name: "layer0.ln1.g".into(), shape: vec![4], dtype: "f32".into() },
+            TensorDesc { name: "layer0.attn.bq".into(), shape: vec![4], dtype: "f32".into() },
+            TensorDesc { name: "layer0.attn.wq".into(), shape: vec![4, 4], dtype: "f32".into() },
+        ]
+    }
+
+    #[test]
+    fn init_patterns() {
+        let mut p = ParamStore::from_specs(toy_specs());
+        p.init(0);
+        assert!(p.get("layer0.ln1.g").iter().all(|&x| x == 1.0));
+        assert!(p.get("layer0.attn.bq").iter().all(|&x| x == 0.0));
+        assert!(p.get("embed.tok").iter().any(|&x| x != 0.0));
+        let std = {
+            let d = p.get("embed.tok");
+            (d.iter().map(|x| x * x).sum::<f32>() / d.len() as f32).sqrt()
+        };
+        assert!((std - 0.02).abs() < 0.01, "std {}", std);
+    }
+
+    #[test]
+    fn offsets_are_cumulative() {
+        let p = ParamStore::from_specs(toy_specs());
+        assert_eq!(p.offsets, vec![0, 64, 68, 72]);
+        assert_eq!(p.n_params(), 88);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("mezo_test_ckpt");
+        let path = dir.join("toy.ckpt");
+        let mut p = ParamStore::from_specs(toy_specs());
+        p.init(3);
+        p.save(&path).unwrap();
+        let mut q = ParamStore::from_specs(toy_specs());
+        let n = q.load_into(&path).unwrap();
+        assert_eq!(n, 4);
+        for (a, b) in p.data.iter().zip(&q.data) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn partial_load_for_peft() {
+        let dir = std::env::temp_dir().join("mezo_test_ckpt2");
+        let path = dir.join("base.ckpt");
+        let mut base = ParamStore::from_specs(toy_specs());
+        base.init(5);
+        base.save(&path).unwrap();
+        // a store with one extra (PEFT) tensor
+        let mut specs = toy_specs();
+        specs.push(TensorDesc {
+            name: "layer0.lora_q.a".into(),
+            shape: vec![4, 2],
+            dtype: "f32".into(),
+        });
+        let mut peft = ParamStore::from_specs(specs);
+        peft.init(6);
+        let lora_before = peft.get("layer0.lora_q.a").to_vec();
+        let n = peft.load_into(&path).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(peft.get("embed.tok"), base.get("embed.tok"));
+        assert_eq!(peft.get("layer0.lora_q.a"), &lora_before[..]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("mezo_test_ckpt3");
+        let path = dir.join("bad.ckpt");
+        let mut p = ParamStore::from_specs(toy_specs());
+        p.init(0);
+        p.save(&path).unwrap();
+        let mut specs = toy_specs();
+        specs[0].shape = vec![8, 4];
+        let mut q = ParamStore::from_specs(specs);
+        assert!(q.load_into(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

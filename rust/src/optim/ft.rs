@@ -1,0 +1,174 @@
+//! FT baselines: fine-tuning with backpropagation (SGD / Adam), consuming
+//! the gradients computed by the AOT `grad` artifact.
+//!
+//! This is the paper's "FT" comparator (12× memory in their profile): the
+//! backward pass runs inside XLA; rust applies the optimizer update to the
+//! same ParamStore MeZO uses, so both paths share evaluation and
+//! checkpointing.
+
+use crate::model::params::ParamStore;
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FtFlavor {
+    Sgd,
+    Adam,
+}
+
+#[derive(Debug, Clone)]
+pub struct FtConfig {
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub flavor: FtFlavor,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+    /// linear decay to zero over total_steps (paper's FT schedule)
+    pub linear_decay: bool,
+    pub total_steps: usize,
+}
+
+impl Default for FtConfig {
+    fn default() -> Self {
+        FtConfig {
+            lr: 1e-3,
+            weight_decay: 0.0,
+            flavor: FtFlavor::Adam,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+            linear_decay: true,
+            total_steps: 1000,
+        }
+    }
+}
+
+pub struct FtOptimizer {
+    pub cfg: FtConfig,
+    pub trainable: Vec<usize>,
+    pub step: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl FtOptimizer {
+    pub fn new(cfg: FtConfig, trainable: Vec<usize>, params: &ParamStore) -> FtOptimizer {
+        let m = trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect();
+        let v = trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect();
+        FtOptimizer { cfg, trainable, step: 0, m, v }
+    }
+
+    pub fn lr_now(&self) -> f32 {
+        if self.cfg.linear_decay {
+            let frac = 1.0 - self.step as f32 / self.cfg.total_steps.max(1) as f32;
+            self.cfg.lr * frac.max(0.0)
+        } else {
+            self.cfg.lr
+        }
+    }
+
+    /// Apply one update. `grads[k]` is the gradient of trainable tensor k
+    /// (same order as `self.trainable`), as returned by the grad artifact.
+    pub fn apply(&mut self, params: &mut ParamStore, grads: &[Vec<f32>]) -> Result<()> {
+        assert_eq!(grads.len(), self.trainable.len());
+        let lr = self.lr_now();
+        let t = (self.step + 1) as f32;
+        let cfg = &self.cfg;
+        for (k, &ti) in self.trainable.iter().enumerate() {
+            let buf = &mut params.data[ti];
+            let g_in = &grads[k];
+            assert_eq!(g_in.len(), buf.len(), "grad shape mismatch");
+            match cfg.flavor {
+                FtFlavor::Sgd => {
+                    for j in 0..buf.len() {
+                        let g = g_in[j] + cfg.weight_decay * buf[j];
+                        buf[j] -= lr * g;
+                    }
+                }
+                FtFlavor::Adam => {
+                    let mk = &mut self.m[k];
+                    let vk = &mut self.v[k];
+                    for j in 0..buf.len() {
+                        let g = g_in[j] + cfg.weight_decay * buf[j];
+                        mk[j] = cfg.beta1 * mk[j] + (1.0 - cfg.beta1) * g;
+                        vk[j] = cfg.beta2 * vk[j] + (1.0 - cfg.beta2) * g * g;
+                        let mhat = mk[j] / (1.0 - cfg.beta1.powf(t));
+                        let vhat = vk[j] / (1.0 - cfg.beta2.powf(t));
+                        buf[j] -= lr * mhat / (vhat.sqrt() + cfg.adam_eps);
+                    }
+                }
+            }
+        }
+        self.step += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+
+    fn toy() -> ParamStore {
+        let mut p = ParamStore::from_specs(vec![TensorDesc {
+            name: "w".into(),
+            shape: vec![8],
+            dtype: "f32".into(),
+        }]);
+        p.init(0);
+        p
+    }
+
+    fn quad_grad(p: &ParamStore) -> Vec<Vec<f32>> {
+        vec![p.data[0].iter().map(|&x| 2.0 * (x - 1.0)).collect()]
+    }
+
+    fn quad_loss(p: &ParamStore) -> f32 {
+        p.data[0].iter().map(|&x| (x - 1.0) * (x - 1.0)).sum()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut p = toy();
+        let cfg = FtConfig { lr: 0.1, flavor: FtFlavor::Sgd, linear_decay: false, ..Default::default() };
+        let mut opt = FtOptimizer::new(cfg, vec![0], &p);
+        for _ in 0..100 {
+            let g = quad_grad(&p);
+            opt.apply(&mut p, &g).unwrap();
+        }
+        assert!(quad_loss(&p) < 1e-6);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut p = toy();
+        let cfg = FtConfig { lr: 0.05, flavor: FtFlavor::Adam, linear_decay: false, ..Default::default() };
+        let mut opt = FtOptimizer::new(cfg, vec![0], &p);
+        for _ in 0..400 {
+            let g = quad_grad(&p);
+            opt.apply(&mut p, &g).unwrap();
+        }
+        assert!(quad_loss(&p) < 1e-3, "{}", quad_loss(&p));
+    }
+
+    #[test]
+    fn linear_decay_reaches_zero() {
+        let p = toy();
+        let cfg = FtConfig { lr: 1.0, linear_decay: true, total_steps: 10, ..Default::default() };
+        let mut opt = FtOptimizer::new(cfg, vec![0], &p);
+        assert!((opt.lr_now() - 1.0).abs() < 1e-6);
+        opt.step = 5;
+        assert!((opt.lr_now() - 0.5).abs() < 1e-6);
+        opt.step = 10;
+        assert_eq!(opt.lr_now(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn grad_shape_mismatch_panics() {
+        let mut p = toy();
+        let cfg = FtConfig::default();
+        let mut opt = FtOptimizer::new(cfg, vec![0], &p);
+        opt.apply(&mut p, &[vec![0.0; 3]]).unwrap();
+    }
+}

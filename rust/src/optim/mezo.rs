@@ -1,0 +1,499 @@
+//! MeZO — Algorithm 1, in place, in rust (the paper's core contribution).
+//!
+//! The perturbation z ~ N(0, I_d) is never materialised: each of its uses
+//! (perturb +ε, perturb −2ε, restore +ε, update) regenerates the same
+//! coordinates from the step's seed via the counter-based
+//! [`GaussianStream`]. Memory overhead over inference is O(1): a seed and
+//! two scalars per step — which is also exactly what gets *persisted* for
+//! checkpoint reconstruction (§2.1 "Storage Efficiency", storage::trajectory).
+//!
+//! Implemented variants (Appendix A/B):
+//!  * n-SPSA averaging (Algorithm 2) with constant or linear schedules,
+//!  * the one-point estimator (Definition 8, Zhang et al. 2022),
+//!  * MeZO-momentum and MeZO-Adam (B.2) — moment state is *recomputable*
+//!    from the (seed, projected_grad) history; we keep dense moments for
+//!    speed and verify the recomputation equivalence in tests.
+
+use crate::model::params::ParamStore;
+use crate::rng::{GaussianStream, Pcg};
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    /// plain ZO-SGD (Definition 2)
+    Sgd,
+    /// SGD + momentum on the SPSA estimate
+    Momentum,
+    /// Adam on the SPSA estimate
+    Adam,
+}
+
+#[derive(Debug, Clone)]
+pub struct MezoConfig {
+    pub lr: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// number of z samples per step (n-SPSA); 1 is the paper default
+    pub n: usize,
+    /// if true, n grows linearly from 1 to `n` over the run (Table 6)
+    pub linear_n_schedule: bool,
+    pub flavor: Flavor,
+    pub momentum: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+    /// one-point estimator (Definition 8) instead of two-point SPSA
+    pub one_point: bool,
+    /// total planned steps (for schedules)
+    pub total_steps: usize,
+}
+
+impl Default for MezoConfig {
+    fn default() -> Self {
+        MezoConfig {
+            lr: 1e-3,
+            eps: 1e-3,
+            weight_decay: 0.0,
+            n: 1,
+            linear_n_schedule: false,
+            flavor: Flavor::Sgd,
+            momentum: 0.9,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+            one_point: false,
+            total_steps: 1000,
+        }
+    }
+}
+
+/// One history record — all that is needed to replay the trajectory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRecord {
+    pub seed: u64,
+    pub pgrad: f32,
+    pub lr: f32,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepInfo {
+    pub loss: f32,
+    pub pgrad: f32,
+    pub seed: u64,
+    pub forward_passes: usize,
+}
+
+pub struct MezoSgd {
+    pub cfg: MezoConfig,
+    /// indices (into ParamStore) of the trainable tensors
+    pub trainable: Vec<usize>,
+    pub step: u64,
+    seed_rng: Pcg,
+    /// (seed, projected_grad, lr) per applied z — the full trajectory
+    pub history: Vec<StepRecord>,
+    /// dense first/second moments (momentum / adam flavors only)
+    m: Option<Vec<Vec<f32>>>,
+    v: Option<Vec<Vec<f32>>>,
+    /// one-point state: previous perturbed loss
+    prev_loss: Option<f32>,
+}
+
+impl MezoSgd {
+    pub fn new(cfg: MezoConfig, trainable: Vec<usize>, master_seed: u64) -> MezoSgd {
+        MezoSgd {
+            cfg,
+            trainable,
+            step: 0,
+            seed_rng: Pcg::new(master_seed),
+            history: Vec::new(),
+            m: None,
+            v: None,
+            prev_loss: None,
+        }
+    }
+
+    /// In-place perturbation: θ += scale · z(seed), walking only trainable
+    /// tensors but indexing z by each tensor's *global* offset so every
+    /// pass regenerates identical coordinates.
+    pub fn perturb(&self, params: &mut ParamStore, seed: u64, scale: f32) {
+        perturb_tensors(params, &self.trainable, seed, scale);
+    }
+
+    /// current n per the sample schedule
+    fn n_now(&self) -> usize {
+        if !self.cfg.linear_n_schedule || self.cfg.n <= 1 {
+            return self.cfg.n.max(1);
+        }
+        let frac = (self.step as f64 / self.cfg.total_steps.max(1) as f64).min(1.0);
+        (1.0 + frac * (self.cfg.n as f64 - 1.0)).round() as usize
+    }
+
+    /// One optimization step. `loss` evaluates L(θ; B) for the *current*
+    /// in-place parameters (two calls per z for SPSA, one for one-point).
+    pub fn step<F>(&mut self, params: &mut ParamStore, mut loss: F) -> Result<StepInfo>
+    where
+        F: FnMut(&ParamStore) -> Result<f32>,
+    {
+        let n = self.n_now();
+        let eps = self.cfg.eps;
+        let lr = self.cfg.lr;
+        let mut records: Vec<StepRecord> = Vec::with_capacity(n);
+        let mut mean_loss = 0.0f32;
+        let mut fwd = 0usize;
+
+        for _ in 0..n {
+            let seed = self.seed_rng.next_u64();
+            let pgrad = if self.cfg.one_point {
+                // Definition 8: g = (L(θ_t + εz_t) − L(θ_{t−1} + εz_{t−1}))/ε
+                self.perturb(params, seed, eps);
+                let lp = loss(params)?;
+                fwd += 1;
+                self.perturb(params, seed, -eps); // restore
+                let g = match self.prev_loss {
+                    Some(prev) => (lp - prev) / eps,
+                    None => 0.0,
+                };
+                self.prev_loss = Some(lp);
+                mean_loss += lp;
+                g
+            } else {
+                // Algorithm 1: θ+εz, θ−εz, restore
+                self.perturb(params, seed, eps);
+                let lp = loss(params)?;
+                self.perturb(params, seed, -2.0 * eps);
+                let lm = loss(params)?;
+                self.perturb(params, seed, eps);
+                fwd += 2;
+                mean_loss += 0.5 * (lp + lm);
+                (lp - lm) / (2.0 * eps)
+            };
+            records.push(StepRecord { seed, pgrad, lr });
+        }
+        mean_loss /= n as f32;
+
+        // apply the update(s)
+        match self.cfg.flavor {
+            Flavor::Sgd => {
+                for r in &records {
+                    self.apply_sgd(params, r.seed, r.pgrad / n as f32);
+                }
+            }
+            Flavor::Momentum | Flavor::Adam => {
+                self.apply_with_moments(params, &records);
+            }
+        }
+        self.history.extend(records.iter().copied());
+        self.step += 1;
+        let last = records.last().unwrap();
+        Ok(StepInfo { loss: mean_loss, pgrad: last.pgrad, seed: last.seed, forward_passes: fwd })
+    }
+
+    /// §Perf L3 fast path: one MeZO step against a loss artifact with the
+    /// perturbation fused into the literal upload (runtime::run_perturbed).
+    /// Semantically identical to `step` for the SGD flavor with n = 1 —
+    /// same seed stream, same z, same update — but 3 z-passes instead of 4
+    /// and no in-place perturb/restore writes (no float drift either).
+    pub fn step_artifact(
+        &mut self,
+        params: &mut ParamStore,
+        art: &crate::runtime::Artifact,
+        batch: &crate::data::batch::Batch,
+        scratch: &mut Vec<f32>,
+    ) -> Result<StepInfo> {
+        assert!(self.cfg.flavor == Flavor::Sgd && !self.cfg.one_point && self.n_now() == 1,
+                "fast path covers plain 2-point MeZO-SGD; use step() for variants");
+        let eps = self.cfg.eps;
+        let lr = self.cfg.lr;
+        let seed = self.seed_rng.next_u64();
+        let mut mask = vec![false; params.specs.len()];
+        for &ti in &self.trainable {
+            mask[ti] = true;
+        }
+        let lp = crate::runtime::scalar_f32(
+            &art.run_perturbed(params, &mask, seed, eps, Some(batch), scratch)?[0])?;
+        let lm = crate::runtime::scalar_f32(
+            &art.run_perturbed(params, &mask, seed, -eps, Some(batch), scratch)?[0])?;
+        let pgrad = (lp - lm) / (2.0 * eps);
+        self.apply_sgd(params, seed, pgrad);
+        self.history.push(StepRecord { seed, pgrad, lr });
+        self.step += 1;
+        Ok(StepInfo { loss: 0.5 * (lp + lm), pgrad, seed, forward_passes: 2 })
+    }
+
+    /// θ ← θ − lr·(g·z + wd·θ), regenerating z from the seed.
+    fn apply_sgd(&self, params: &mut ParamStore, seed: u64, g: f32) {
+        let stream = GaussianStream::new(seed);
+        let lr = self.cfg.lr;
+        let wd = self.cfg.weight_decay;
+        for &ti in &self.trainable {
+            let off = params.offsets[ti];
+            let buf = &mut params.data[ti];
+            for (j, th) in buf.iter_mut().enumerate() {
+                let z = stream.z(off + j as u64);
+                *th -= lr * (g * z + wd * *th);
+            }
+        }
+    }
+
+    fn ensure_moments(&mut self, params: &ParamStore) {
+        if self.m.is_none() {
+            self.m = Some(
+                self.trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect(),
+            );
+        }
+        if self.cfg.flavor == Flavor::Adam && self.v.is_none() {
+            self.v = Some(
+                self.trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect(),
+            );
+        }
+    }
+
+    fn apply_with_moments(&mut self, params: &mut ParamStore, records: &[StepRecord]) {
+        self.ensure_moments(params);
+        let n = records.len() as f32;
+        let cfg = self.cfg.clone();
+        let t = (self.step + 1) as f32;
+        let streams: Vec<GaussianStream> =
+            records.iter().map(|r| GaussianStream::new(r.seed)).collect();
+        // take the moment buffers out of self to sidestep aliasing with
+        // the trainable-index iteration below
+        let mut m = self.m.take().unwrap();
+        let mut v = self.v.take();
+        for (k, &ti) in self.trainable.iter().enumerate() {
+            let off = params.offsets[ti];
+            let buf = &mut params.data[ti];
+            let mk = &mut m[k];
+            let vk = v.as_mut().map(|v| &mut v[k]);
+            match cfg.flavor {
+                Flavor::Momentum => {
+                    for j in 0..buf.len() {
+                        let mut g = 0.0f32;
+                        for (s, r) in streams.iter().zip(records) {
+                            g += r.pgrad * s.z(off + j as u64);
+                        }
+                        g = g / n + cfg.weight_decay * buf[j];
+                        mk[j] = cfg.momentum * mk[j] + g;
+                        buf[j] -= cfg.lr * mk[j];
+                    }
+                }
+                Flavor::Adam => {
+                    let vk = vk.unwrap();
+                    for j in 0..buf.len() {
+                        let mut g = 0.0f32;
+                        for (s, r) in streams.iter().zip(records) {
+                            g += r.pgrad * s.z(off + j as u64);
+                        }
+                        g = g / n + cfg.weight_decay * buf[j];
+                        mk[j] = cfg.beta1 * mk[j] + (1.0 - cfg.beta1) * g;
+                        vk[j] = cfg.beta2 * vk[j] + (1.0 - cfg.beta2) * g * g;
+                        let mhat = mk[j] / (1.0 - cfg.beta1.powf(t));
+                        let vhat = vk[j] / (1.0 - cfg.beta2.powf(t));
+                        buf[j] -= cfg.lr * mhat / (vhat.sqrt() + cfg.adam_eps);
+                    }
+                }
+                Flavor::Sgd => unreachable!(),
+            }
+        }
+        self.m = Some(m);
+        self.v = v;
+    }
+}
+
+/// θ += scale · z(seed) over the given tensors (shared with variance
+/// variants and trajectory replay).
+pub fn perturb_tensors(params: &mut ParamStore, tensors: &[usize], seed: u64, scale: f32) {
+    let stream = GaussianStream::new(seed);
+    for &ti in tensors {
+        let off = params.offsets[ti];
+        let buf = &mut params.data[ti];
+        for (j, th) in buf.iter_mut().enumerate() {
+            *th += scale * stream.z(off + j as u64);
+        }
+    }
+}
+
+/// Recompute the Adam/momentum first moment at step T directly from the
+/// (seed, pgrad) history — the paper's B.2 memory-saving argument. Used in
+/// tests to prove the dense state equals the recomputed one.
+pub fn recompute_first_moment(
+    params: &ParamStore,
+    trainable: &[usize],
+    history: &[StepRecord],
+    beta_or_momentum: f32,
+    adam_style: bool,
+) -> Vec<Vec<f32>> {
+    let mut m: Vec<Vec<f32>> =
+        trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect();
+    for r in history {
+        let stream = GaussianStream::new(r.seed);
+        for (k, &ti) in trainable.iter().enumerate() {
+            let off = params.offsets[ti];
+            for j in 0..m[k].len() {
+                let g = r.pgrad * stream.z(off + j as u64);
+                m[k][j] = if adam_style {
+                    beta_or_momentum * m[k][j] + (1.0 - beta_or_momentum) * g
+                } else {
+                    beta_or_momentum * m[k][j] + g
+                };
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+
+    fn toy_params() -> ParamStore {
+        let specs = vec![
+            TensorDesc { name: "w1".into(), shape: vec![4, 4], dtype: "f32".into() },
+            TensorDesc { name: "w2".into(), shape: vec![8], dtype: "f32".into() },
+        ];
+        let mut p = ParamStore::from_specs(specs);
+        p.init(0);
+        p
+    }
+
+    /// quadratic loss L(θ) = Σ (θ_i − 1)², evaluated on the store
+    fn quad_loss(p: &ParamStore) -> Result<f32> {
+        Ok(p.data.iter().flatten().map(|&x| (x - 1.0) * (x - 1.0)).sum())
+    }
+
+    #[test]
+    fn perturb_restore_is_exact_roundtrip() {
+        let mut p = toy_params();
+        let before = p.data.clone();
+        let opt = MezoSgd::new(MezoConfig::default(), vec![0, 1], 7);
+        opt.perturb(&mut p, 123, 1e-3);
+        assert_ne!(p.data, before);
+        opt.perturb(&mut p, 123, -2e-3);
+        opt.perturb(&mut p, 123, 1e-3);
+        // float error only
+        for (a, b) in p.data.iter().flatten().zip(before.iter().flatten()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mezo_optimizes_quadratic() {
+        let mut p = toy_params();
+        let cfg = MezoConfig { lr: 2e-2, eps: 1e-3, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, vec![0, 1], 1);
+        let l0 = quad_loss(&p).unwrap();
+        for _ in 0..300 {
+            opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        }
+        let l1 = quad_loss(&p).unwrap();
+        assert!(l1 < l0 * 0.2, "l0={} l1={}", l0, l1);
+        assert_eq!(opt.history.len(), 300);
+    }
+
+    #[test]
+    fn n_spsa_reduces_variance() {
+        // with n=8 the per-step pgrad*z update should track the true
+        // gradient direction better; test that optimization still works and
+        // uses 2n forward passes
+        let mut p = toy_params();
+        let cfg = MezoConfig { lr: 2e-2, eps: 1e-3, n: 4, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, vec![0, 1], 2);
+        let info = opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        assert_eq!(info.forward_passes, 8);
+        assert_eq!(opt.history.len(), 4);
+    }
+
+    #[test]
+    fn linear_n_schedule_grows() {
+        let cfg = MezoConfig {
+            n: 9,
+            linear_n_schedule: true,
+            total_steps: 100,
+            ..Default::default()
+        };
+        let mut opt = MezoSgd::new(cfg, vec![], 3);
+        assert_eq!(opt.n_now(), 1);
+        opt.step = 50;
+        assert_eq!(opt.n_now(), 5);
+        opt.step = 100;
+        assert_eq!(opt.n_now(), 9);
+    }
+
+    #[test]
+    fn one_point_estimator_runs_single_forward() {
+        let mut p = toy_params();
+        let cfg = MezoConfig { one_point: true, lr: 1e-4, eps: 1e-2, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, vec![0, 1], 4);
+        let i1 = opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        assert_eq!(i1.forward_passes, 1);
+        assert_eq!(i1.pgrad, 0.0); // no previous loss yet
+        let i2 = opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        assert_eq!(i2.forward_passes, 1);
+        // optimizes, eventually
+        let l_before = quad_loss(&p).unwrap();
+        for _ in 0..3000 {
+            opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        }
+        // far noisier than SPSA (that's Table 11's point) but it improves
+        let l_after = quad_loss(&p).unwrap();
+        assert!(l_after < l_before, "one-point did not improve: {} -> {}", l_before, l_after);
+    }
+
+    #[test]
+    fn adam_and_momentum_flavors_optimize() {
+        for flavor in [Flavor::Momentum, Flavor::Adam] {
+            let mut p = toy_params();
+            let lr = if flavor == Flavor::Adam { 2e-2 } else { 1e-3 };
+            let cfg = MezoConfig { lr, eps: 1e-3, flavor, ..Default::default() };
+            let mut opt = MezoSgd::new(cfg, vec![0, 1], 6);
+            let l0 = quad_loss(&p).unwrap();
+            for _ in 0..300 {
+                opt.step(&mut p, |p| quad_loss(p)).unwrap();
+            }
+            let l1 = quad_loss(&p).unwrap();
+            assert!(l1 < l0 * 0.6, "{:?}: l0={} l1={}", flavor, l0, l1);
+        }
+    }
+
+    #[test]
+    fn moment_state_is_recomputable_from_history() {
+        // B.2: the dense momentum buffer equals the recomputation from the
+        // (seed, pgrad) log — the memory-efficient MeZO-momentum claim.
+        let mut p = toy_params();
+        let cfg = MezoConfig {
+            lr: 1e-3,
+            eps: 1e-3,
+            flavor: Flavor::Momentum,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            ..Default::default()
+        };
+        let mut opt = MezoSgd::new(cfg, vec![0, 1], 8);
+        for _ in 0..20 {
+            opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        }
+        let recomputed = recompute_first_moment(&p, &[0, 1], &opt.history, 0.9, false);
+        let dense = opt.m.as_ref().unwrap();
+        for (a, b) in dense.iter().flatten().zip(recomputed.iter().flatten()) {
+            assert!((a - b).abs() < 1e-5, "{} vs {}", a, b);
+        }
+    }
+
+    #[test]
+    fn update_uses_same_z_as_perturbation() {
+        // after one step with pgrad g, θ' − θ == −lr·g·z(seed) exactly
+        let mut p = toy_params();
+        let before = p.data.clone();
+        let cfg = MezoConfig { lr: 1e-2, eps: 1e-3, weight_decay: 0.0, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, vec![0, 1], 5);
+        let info = opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        let stream = GaussianStream::new(info.seed);
+        for (k, &ti) in [0usize, 1].iter().enumerate() {
+            let off = p.offsets[ti];
+            for j in 0..p.data[ti].len() {
+                let want = before[k][j] - 1e-2 * info.pgrad * stream.z(off + j as u64);
+                assert!((p.data[ti][j] - want).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Optimizers: the MeZO family (zeroth-order, in-place) and the
+//! backpropagation baselines.
+pub mod ft;
+pub mod mezo;
+pub mod variance;
+
+use crate::model::params::ParamStore;
+use anyhow::Result;
+
+/// Object-safe facade over the ZO optimizers so trainers and experiment
+/// drivers can swap estimator variants (Tables 6, 8-11).
+pub trait ZoStepper {
+    /// One optimization step; returns the (mean) loss observed.
+    fn zo_step(
+        &mut self,
+        params: &mut ParamStore,
+        loss: &mut dyn FnMut(&ParamStore) -> Result<f32>,
+    ) -> Result<f32>;
+    /// Forward passes consumed so far.
+    fn forward_passes(&self) -> usize;
+    fn records(&self) -> &[mezo::StepRecord];
+    /// Optional fast path: a whole step against a loss artifact with the
+    /// perturbation fused into the upload (see MezoSgd::step_artifact).
+    /// Returns None when the variant has no fast path.
+    fn zo_step_artifact(
+        &mut self,
+        _params: &mut ParamStore,
+        _art: &crate::runtime::Artifact,
+        _batch: &crate::data::batch::Batch,
+    ) -> Option<Result<f32>> {
+        None
+    }
+}
+
+pub struct MezoStepper {
+    pub inner: mezo::MezoSgd,
+    fwd: usize,
+    scratch: Vec<f32>,
+    /// set false to force the reference in-place path (used by benches)
+    pub use_fast_path: bool,
+}
+
+impl MezoStepper {
+    pub fn new(inner: mezo::MezoSgd) -> MezoStepper {
+        MezoStepper { inner, fwd: 0, scratch: Vec::new(), use_fast_path: true }
+    }
+}
+
+impl ZoStepper for MezoStepper {
+    fn zo_step(
+        &mut self,
+        params: &mut ParamStore,
+        loss: &mut dyn FnMut(&ParamStore) -> Result<f32>,
+    ) -> Result<f32> {
+        let info = self.inner.step(params, |p| loss(p))?;
+        self.fwd += info.forward_passes;
+        Ok(info.loss)
+    }
+    fn forward_passes(&self) -> usize {
+        self.fwd
+    }
+    fn records(&self) -> &[mezo::StepRecord] {
+        &self.inner.history
+    }
+    fn zo_step_artifact(
+        &mut self,
+        params: &mut ParamStore,
+        art: &crate::runtime::Artifact,
+        batch: &crate::data::batch::Batch,
+    ) -> Option<Result<f32>> {
+        use mezo::Flavor;
+        let plain = self.use_fast_path
+            && self.inner.cfg.flavor == Flavor::Sgd
+            && !self.inner.cfg.one_point
+            && self.inner.cfg.n <= 1;
+        if !plain {
+            return None;
+        }
+        let r = self
+            .inner
+            .step_artifact(params, art, batch, &mut self.scratch)
+            .map(|info| {
+                self.fwd += info.forward_passes;
+                info.loss
+            });
+        Some(r)
+    }
+}
+
+impl ZoStepper for variance::ModifiedSpsa {
+    fn zo_step(
+        &mut self,
+        params: &mut ParamStore,
+        loss: &mut dyn FnMut(&ParamStore) -> Result<f32>,
+    ) -> Result<f32> {
+        self.step(params, |p| loss(p))
+    }
+    fn forward_passes(&self) -> usize {
+        2 * self.step as usize
+    }
+    fn records(&self) -> &[mezo::StepRecord] {
+        &self.history
+    }
+}

@@ -1,0 +1,229 @@
+//! Variance- and expectation-modified SPSA (Appendix B.3/B.4).
+//!
+//! Definition 6: perturb with d⁻¹⊙z, update with d⊙z — unbiased, rescaled
+//! variance. Definition 7: perturb with d⁻¹⊙z, update with z — a biased
+//! estimator of the *normalized* gradient. `d` is a per-parameter-group
+//! scale (one group per tensor here; the paper groups per layer), set to
+//! either the group's parameter norm or a ZO estimate of its gradient norm
+//! (Proposition 1: perturb only group ℓ and read |ℓ₊−ℓ₋|/2ε).
+
+use crate::model::params::ParamStore;
+use crate::optim::mezo::{perturb_tensors, StepRecord};
+use crate::rng::{GaussianStream, Pcg};
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DSource {
+    /// d_g = ||θ_g|| (parameter norm, Table 9)
+    ParamNorm,
+    /// d_g = ZO estimate of ||∇_g L|| (Prop. 1, Tables 8/10)
+    GradNormZo,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Definition 6 (unbiased, modified variance)
+    Variance,
+    /// Definition 7 (normalized-gradient expectation)
+    Expectation,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModifiedSpsaConfig {
+    pub lr: f32,
+    pub eps: f32,
+    pub mode: Mode,
+    pub d_source: DSource,
+    /// re-estimate d every `refresh_every` steps (0 = only once)
+    pub refresh_every: usize,
+}
+
+pub struct ModifiedSpsa {
+    pub cfg: ModifiedSpsaConfig,
+    pub trainable: Vec<usize>,
+    /// per-trainable-tensor scale d_g (clamped away from zero)
+    pub d: Vec<f32>,
+    seed_rng: Pcg,
+    pub step: u64,
+    pub history: Vec<StepRecord>,
+}
+
+impl ModifiedSpsa {
+    pub fn new(cfg: ModifiedSpsaConfig, trainable: Vec<usize>, seed: u64) -> ModifiedSpsa {
+        let d = vec![1.0; trainable.len()];
+        ModifiedSpsa { cfg, trainable, d, seed_rng: Pcg::new(seed), step: 0, history: Vec::new() }
+    }
+
+    /// Proposition 1: ZO estimate of the gradient norm of group g —
+    /// perturb only that tensor and read |ℓ₊ − ℓ₋| / 2ε. 2·G forward passes.
+    pub fn estimate_grad_norms<F>(
+        &mut self,
+        params: &mut ParamStore,
+        mut loss: F,
+    ) -> Result<Vec<f32>>
+    where
+        F: FnMut(&ParamStore) -> Result<f32>,
+    {
+        let eps = self.cfg.eps;
+        let mut norms = Vec::with_capacity(self.trainable.len());
+        for &ti in &self.trainable.clone() {
+            let seed = self.seed_rng.next_u64();
+            perturb_tensors(params, &[ti], seed, eps);
+            let lp = loss(params)?;
+            perturb_tensors(params, &[ti], seed, -2.0 * eps);
+            let lm = loss(params)?;
+            perturb_tensors(params, &[ti], seed, eps);
+            norms.push(((lp - lm) / (2.0 * eps)).abs());
+        }
+        Ok(norms)
+    }
+
+    pub fn refresh_d<F>(&mut self, params: &mut ParamStore, loss: F) -> Result<()>
+    where
+        F: FnMut(&ParamStore) -> Result<f32>,
+    {
+        let d: Vec<f32> = match self.cfg.d_source {
+            DSource::ParamNorm => self
+                .trainable
+                .iter()
+                .map(|&ti| params.tensor_norm(ti))
+                .collect(),
+            DSource::GradNormZo => self.estimate_grad_norms(params, loss)?,
+        };
+        // normalize scales to mean 1 so the lr keeps its meaning, and clamp
+        let mean = d.iter().sum::<f32>() / d.len().max(1) as f32;
+        let mean = if mean > 1e-12 { mean } else { 1.0 };
+        self.d = d.iter().map(|&x| (x / mean).max(1e-3)).collect();
+        Ok(())
+    }
+
+    /// perturb θ_g += scale · d_mult_g · z
+    fn perturb_scaled(&self, params: &mut ParamStore, seed: u64, scale: f32, inverse: bool) {
+        let stream = GaussianStream::new(seed);
+        for (k, &ti) in self.trainable.iter().enumerate() {
+            let dg = if inverse { 1.0 / self.d[k] } else { self.d[k] };
+            let off = params.offsets[ti];
+            let buf = &mut params.data[ti];
+            for (j, th) in buf.iter_mut().enumerate() {
+                *th += scale * dg * stream.z(off + j as u64);
+            }
+        }
+    }
+
+    pub fn step<F>(&mut self, params: &mut ParamStore, mut loss: F) -> Result<f32>
+    where
+        F: FnMut(&ParamStore) -> Result<f32>,
+    {
+        if self.step == 0
+            || (self.cfg.refresh_every > 0 && self.step % self.cfg.refresh_every as u64 == 0)
+        {
+            if self.step == 0 || self.cfg.refresh_every > 0 {
+                self.refresh_d(params, &mut loss)?;
+            }
+        }
+        let eps = self.cfg.eps;
+        let seed = self.seed_rng.next_u64();
+        // perturb with d^{-1} ⊙ z
+        self.perturb_scaled(params, seed, eps, true);
+        let lp = loss(params)?;
+        self.perturb_scaled(params, seed, -2.0 * eps, true);
+        let lm = loss(params)?;
+        self.perturb_scaled(params, seed, eps, true);
+        let g = (lp - lm) / (2.0 * eps);
+        // update with d ⊙ z (Def. 6) or plain z (Def. 7)
+        let stream = GaussianStream::new(seed);
+        for (k, &ti) in self.trainable.iter().enumerate() {
+            let dg = match self.cfg.mode {
+                Mode::Variance => self.d[k],
+                Mode::Expectation => 1.0,
+            };
+            let off = params.offsets[ti];
+            let buf = &mut params.data[ti];
+            for (j, th) in buf.iter_mut().enumerate() {
+                *th -= self.cfg.lr * g * dg * stream.z(off + j as u64);
+            }
+        }
+        self.history.push(StepRecord { seed, pgrad: g, lr: self.cfg.lr });
+        self.step += 1;
+        Ok(0.5 * (lp + lm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+
+    fn toy() -> ParamStore {
+        let mut p = ParamStore::from_specs(vec![
+            TensorDesc { name: "a".into(), shape: vec![12], dtype: "f32".into() },
+            TensorDesc { name: "b".into(), shape: vec![6], dtype: "f32".into() },
+        ]);
+        p.init(1);
+        p
+    }
+
+    // loss with very different per-group curvature
+    fn loss(p: &ParamStore) -> Result<f32> {
+        let a: f32 = p.data[0].iter().map(|&x| 10.0 * (x - 1.0) * (x - 1.0)).sum();
+        let b: f32 = p.data[1].iter().map(|&x| 0.1 * (x + 1.0) * (x + 1.0)).sum();
+        Ok(a + b)
+    }
+
+    #[test]
+    fn grad_norm_estimate_orders_groups() {
+        let mut p = toy();
+        let cfg = ModifiedSpsaConfig {
+            lr: 1e-3,
+            eps: 1e-3,
+            mode: Mode::Variance,
+            d_source: DSource::GradNormZo,
+            refresh_every: 0,
+        };
+        let mut opt = ModifiedSpsa::new(cfg, vec![0, 1], 2);
+        // average a few estimates: group 0 has ~100x the gradient scale
+        let mut n0 = 0.0;
+        let mut n1 = 0.0;
+        for _ in 0..20 {
+            let est = opt.estimate_grad_norms(&mut p, loss).unwrap();
+            n0 += est[0];
+            n1 += est[1];
+        }
+        assert!(n0 > n1 * 3.0, "n0={} n1={}", n0, n1);
+    }
+
+    #[test]
+    fn variance_mode_still_optimizes() {
+        let mut p = toy();
+        let l0 = loss(&p).unwrap();
+        let cfg = ModifiedSpsaConfig {
+            lr: 2e-3,
+            eps: 1e-3,
+            mode: Mode::Variance,
+            d_source: DSource::ParamNorm,
+            refresh_every: 50,
+        };
+        let mut opt = ModifiedSpsa::new(cfg, vec![0, 1], 3);
+        for _ in 0..400 {
+            opt.step(&mut p, loss).unwrap();
+        }
+        assert!(loss(&p).unwrap() < l0 * 0.5);
+    }
+
+    #[test]
+    fn expectation_mode_runs() {
+        let mut p = toy();
+        let cfg = ModifiedSpsaConfig {
+            lr: 1e-3,
+            eps: 1e-3,
+            mode: Mode::Expectation,
+            d_source: DSource::GradNormZo,
+            refresh_every: 0,
+        };
+        let mut opt = ModifiedSpsa::new(cfg, vec![0, 1], 4);
+        for _ in 0..50 {
+            opt.step(&mut p, loss).unwrap();
+        }
+        assert_eq!(opt.history.len(), 50);
+    }
+}

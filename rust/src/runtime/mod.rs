@@ -1,0 +1,227 @@
+//! Runtime: load AOT artifacts (HLO text) and execute them via PJRT.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. One compiled executable per artifact, cached for the process
+//! lifetime. Python never runs here — the artifacts are self-contained.
+
+use crate::data::batch::Batch;
+use crate::model::meta::ArtifactMeta;
+use crate::model::params::ParamStore;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A compiled artifact plus its ABI description.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: PjRtLoadedExecutable,
+    /// execution counter (perf accounting)
+    pub execs: std::cell::Cell<u64>,
+}
+
+/// The process-wide runtime: one PJRT CPU client + executable cache.
+pub struct Runtime {
+    pub client: PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let client = PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact directory: $MEZO_ARTIFACTS or ./artifacts.
+    pub fn from_env() -> Result<Runtime> {
+        let dir = std::env::var("MEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::new(Path::new(&dir))
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn artifact_exists(&self, name: &str) -> bool {
+        self.dir.join(format!("{}.hlo.txt", name)).exists()
+    }
+
+    /// Load + compile (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let hlo = self.dir.join(format!("{}.hlo.txt", name));
+        let meta_path = self.dir.join(format!("{}.meta.json", name));
+        let meta = ArtifactMeta::load(&meta_path)
+            .map_err(|e| anyhow!("artifact meta {}: {} (run `make artifacts`)", name, e))?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo)
+            .with_context(|| format!("loading HLO text {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", name))?;
+        let art = Rc::new(Artifact { meta, exe, execs: std::cell::Cell::new(0) });
+        self.cache.borrow_mut().insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+}
+
+pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len().max(1));
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)?)
+}
+
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)?)
+}
+
+impl Artifact {
+    /// Execute with `params` + `batch` (+ extra literals for fused modes).
+    /// Returns the output tuple as a Vec<Literal> in meta.outputs order.
+    pub fn run(
+        &self,
+        params: &ParamStore,
+        batch: Option<&Batch>,
+        extras: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        let m = &self.meta;
+        if params.specs.len() != m.params.len() {
+            bail!(
+                "artifact {} expects {} param tensors, store has {}",
+                m.name,
+                m.params.len(),
+                params.specs.len()
+            );
+        }
+        let mut inputs: Vec<Literal> =
+            Vec::with_capacity(m.params.len() + m.batch_inputs.len());
+        for (spec, buf) in params.specs.iter().zip(&params.data) {
+            inputs.push(f32_literal(&spec.shape, buf)?);
+        }
+        let mut extras_it = extras.iter();
+        for bi in &m.batch_inputs {
+            match bi.name.as_str() {
+                "input_ids" | "targets" | "loss_mask" | "attn_mask" => {
+                    let b = batch.ok_or_else(|| anyhow!("artifact needs a batch"))?;
+                    if b.b != m.batch || b.s != m.seq {
+                        bail!(
+                            "batch shape ({},{}) != artifact ({},{})",
+                            b.b, b.s, m.batch, m.seq
+                        );
+                    }
+                    let lit = match bi.name.as_str() {
+                        "input_ids" => i32_literal(&bi.shape, &b.input_ids)?,
+                        "targets" => i32_literal(&bi.shape, &b.targets)?,
+                        "loss_mask" => f32_literal(&bi.shape, &b.loss_mask)?,
+                        _ => f32_literal(&bi.shape, &b.attn_mask)?,
+                    };
+                    inputs.push(lit);
+                }
+                _ => {
+                    let lit = extras_it
+                        .next()
+                        .ok_or_else(|| anyhow!("missing extra input '{}'", bi.name))?;
+                    inputs.push(clone_literal(lit)?);
+                }
+            }
+        }
+        let result = self.exe.execute::<Literal>(&inputs)?;
+        self.execs.set(self.execs.get() + 1);
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+impl Artifact {
+    /// §Perf L3 iteration 2: execute with the SPSA perturbation applied
+    /// **during literal upload** instead of in-place on the ParamStore.
+    /// The upload already copies every tensor, so writing θ + scale·z(seed)
+    /// into the staging buffer makes the perturbed forward pass cost ONE
+    /// extra fused multiply-add per parameter and eliminates Algorithm 1's
+    /// separate perturb and restore passes (and their float-rounding drift)
+    /// while computing the *identical* loss values.
+    pub fn run_perturbed(
+        &self,
+        params: &ParamStore,
+        trainable: &[bool],
+        seed: u64,
+        scale: f32,
+        batch: Option<&Batch>,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<Literal>> {
+        let m = &self.meta;
+        let stream = crate::rng::GaussianStream::new(seed);
+        let mut inputs: Vec<Literal> =
+            Vec::with_capacity(m.params.len() + m.batch_inputs.len());
+        for (ti, (spec, buf)) in params.specs.iter().zip(&params.data).enumerate() {
+            if trainable.get(ti).copied().unwrap_or(false) {
+                scratch.clear();
+                scratch.reserve(buf.len());
+                let off = params.offsets[ti];
+                for (j, &th) in buf.iter().enumerate() {
+                    scratch.push(th + scale * stream.z(off + j as u64));
+                }
+                inputs.push(f32_literal(&spec.shape, scratch)?);
+            } else {
+                inputs.push(f32_literal(&spec.shape, buf)?);
+            }
+        }
+        for bi in &m.batch_inputs {
+            let b = batch.ok_or_else(|| anyhow!("artifact needs a batch"))?;
+            let lit = match bi.name.as_str() {
+                "input_ids" => i32_literal(&bi.shape, &b.input_ids)?,
+                "targets" => i32_literal(&bi.shape, &b.targets)?,
+                "loss_mask" => f32_literal(&bi.shape, &b.loss_mask)?,
+                "attn_mask" => f32_literal(&bi.shape, &b.attn_mask)?,
+                other => bail!("run_perturbed: unsupported extra input {}", other),
+            };
+            inputs.push(lit);
+        }
+        let result = self.exe.execute::<Literal>(&inputs)?;
+        self.execs.set(self.execs.get() + 1);
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// Literal is not Clone in xla 0.1.6; rebuild from raw data.
+fn clone_literal(l: &Literal) -> Result<Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match l.ty()? {
+        ElementType::F32 => {
+            let v: Vec<f32> = l.to_vec()?;
+            f32_literal(&dims, &v)
+        }
+        ElementType::S32 => {
+            let v: Vec<i32> = l.to_vec()?;
+            i32_literal(&dims, &v)
+        }
+        t => bail!("clone_literal: unsupported type {:?}", t),
+    }
+}
+
+/// Scalar f32 from an output literal.
+pub fn scalar_f32(l: &Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+/// Vec<f32> from an output literal.
+pub fn vec_f32(l: &Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}

@@ -1,0 +1,261 @@
+//! Closed-vocabulary word-level tokenizer over the synthetic world.
+//!
+//! The vocabulary is *structured*: every content word carries latent
+//! attributes (topic, polarity, entity type) that both the pre-training
+//! corpus generator and the downstream task generators draw from — this is
+//! what makes prompt-based fine-tuning work here for the same reason it
+//! works in the paper (the prompt maps the task into patterns the model has
+//! already seen in pre-training; DESIGN.md §2.1).
+//!
+//! Vocab layout (512 ids, matching the AOT artifacts' vocab dim):
+//!   specials, function/template words, label words, topic nouns (6×30),
+//!   polarity adjectives (40+40+20), persons (30), places (30), verbs (20),
+//!   digit words (10), then reserved/unused padding ids.
+
+pub const VOCAB_SIZE: usize = 512;
+
+pub const PAD: u32 = 0;
+pub const MASK: u32 = 1;
+pub const BOS: u32 = 2;
+pub const EOS: u32 = 3;
+pub const SEP: u32 = 4;
+
+pub const TOPICS: [&str; 6] = ["sports", "science", "politics", "music", "food", "travel"];
+pub const NOUNS_PER_TOPIC: usize = 30;
+pub const N_POS_ADJ: usize = 40;
+pub const N_NEG_ADJ: usize = 40;
+pub const N_NEU_ADJ: usize = 20;
+pub const N_PERSON: usize = 30;
+pub const N_PLACE: usize = 30;
+pub const N_VERB: usize = 20;
+pub const N_DIGIT: usize = 10;
+
+/// Function / template words every prompt is built from.
+pub const FUNCTION_WORDS: [&str; 28] = [
+    "the", "a", "it", "was", "is", "and", "or", "not", ".", ",", "?", ":",
+    "about", "so", "because", "question", "answer", "passage", "review",
+    "went", "to", "scored", "same", "correct", "does", "did", "refer", "in",
+];
+
+/// Label words (verbalizers) — single tokens, as the paper's prompts require.
+pub const LABEL_WORDS: [&str; 11] = [
+    "great", "good", "okay", "bad", "terrible", // sentiment scale
+    "Yes", "No", "Maybe",                        // NLI / boolean
+    "he", "she", "they",                         // coref fillers
+];
+
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    words: Vec<String>,
+    index: std::collections::HashMap<String, u32>,
+    // category ranges [start, end)
+    pub fn_start: u32,
+    pub label_start: u32,
+    pub noun_start: u32,
+    pub pos_adj_start: u32,
+    pub neg_adj_start: u32,
+    pub neu_adj_start: u32,
+    pub person_start: u32,
+    pub place_start: u32,
+    pub verb_start: u32,
+    pub digit_start: u32,
+    pub used: u32,
+}
+
+impl Vocab {
+    /// The one standard vocabulary every model artifact was compiled against.
+    pub fn standard() -> Vocab {
+        let mut words: Vec<String> =
+            ["[PAD]", "[MASK]", "[BOS]", "[EOS]", "[SEP]"].iter().map(|s| s.to_string()).collect();
+        let fn_start = words.len() as u32;
+        words.extend(FUNCTION_WORDS.iter().map(|s| s.to_string()));
+        let label_start = words.len() as u32;
+        words.extend(LABEL_WORDS.iter().map(|s| s.to_string()));
+        words.extend(TOPICS.iter().map(|s| s.to_string())); // topic labels
+        let noun_start = words.len() as u32;
+        for t in TOPICS.iter() {
+            for i in 0..NOUNS_PER_TOPIC {
+                words.push(format!("{}_n{}", t, i));
+            }
+        }
+        let pos_adj_start = words.len() as u32;
+        for i in 0..N_POS_ADJ {
+            words.push(format!("pos_a{}", i));
+        }
+        let neg_adj_start = words.len() as u32;
+        for i in 0..N_NEG_ADJ {
+            words.push(format!("neg_a{}", i));
+        }
+        let neu_adj_start = words.len() as u32;
+        for i in 0..N_NEU_ADJ {
+            words.push(format!("neu_a{}", i));
+        }
+        let person_start = words.len() as u32;
+        for i in 0..N_PERSON {
+            words.push(format!("person{}", i));
+        }
+        let place_start = words.len() as u32;
+        for i in 0..N_PLACE {
+            words.push(format!("place{}", i));
+        }
+        let verb_start = words.len() as u32;
+        for i in 0..N_VERB {
+            words.push(format!("verb{}", i));
+        }
+        let digit_start = words.len() as u32;
+        for i in 0..N_DIGIT {
+            words.push(format!("num{}", i));
+        }
+        let used = words.len() as u32;
+        assert!(
+            (used as usize) <= VOCAB_SIZE,
+            "lexicon {} exceeds vocab {}",
+            used,
+            VOCAB_SIZE
+        );
+        while words.len() < VOCAB_SIZE {
+            words.push(format!("[UNUSED{}]", words.len()));
+        }
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Vocab {
+            words,
+            index,
+            fn_start,
+            label_start,
+            noun_start,
+            pos_adj_start,
+            neg_adj_start,
+            neu_adj_start,
+            person_start,
+            place_start,
+            verb_start,
+            digit_start,
+            used,
+        }
+    }
+
+    pub fn id(&self, word: &str) -> u32 {
+        *self
+            .index
+            .get(word)
+            .unwrap_or_else(|| panic!("unknown word '{}'", word))
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        &self.words[id as usize]
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    // ----- category accessors ------------------------------------------
+    pub fn topic_label(&self, topic: usize) -> u32 {
+        // topic labels sit right after LABEL_WORDS
+        self.label_start + LABEL_WORDS.len() as u32 + topic as u32
+    }
+    pub fn noun(&self, topic: usize, i: usize) -> u32 {
+        self.noun_start + (topic * NOUNS_PER_TOPIC + i) as u32
+    }
+    pub fn topic_of_noun(&self, id: u32) -> Option<usize> {
+        if id >= self.noun_start && id < self.pos_adj_start {
+            Some(((id - self.noun_start) as usize) / NOUNS_PER_TOPIC)
+        } else {
+            None
+        }
+    }
+    pub fn pos_adj(&self, i: usize) -> u32 {
+        self.pos_adj_start + i as u32
+    }
+    pub fn neg_adj(&self, i: usize) -> u32 {
+        self.neg_adj_start + i as u32
+    }
+    pub fn neu_adj(&self, i: usize) -> u32 {
+        self.neu_adj_start + i as u32
+    }
+    /// polarity of an adjective id: +1 / -1 / 0; None if not an adjective.
+    pub fn polarity(&self, id: u32) -> Option<i32> {
+        if id >= self.pos_adj_start && id < self.neg_adj_start {
+            Some(1)
+        } else if id >= self.neg_adj_start && id < self.neu_adj_start {
+            Some(-1)
+        } else if id >= self.neu_adj_start && id < self.person_start {
+            Some(0)
+        } else {
+            None
+        }
+    }
+    pub fn person(&self, i: usize) -> u32 {
+        self.person_start + i as u32
+    }
+    pub fn place(&self, i: usize) -> u32 {
+        self.place_start + i as u32
+    }
+    pub fn verb(&self, i: usize) -> u32 {
+        self.verb_start + i as u32
+    }
+    pub fn digit(&self, i: usize) -> u32 {
+        self.digit_start + i as u32
+    }
+    pub fn digit_value(&self, id: u32) -> Option<usize> {
+        if id >= self.digit_start && id < self.digit_start + N_DIGIT as u32 {
+            Some((id - self.digit_start) as usize)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_vocab_fits_and_roundtrips() {
+        let v = Vocab::standard();
+        assert_eq!(v.words.len(), VOCAB_SIZE);
+        assert!(v.used <= VOCAB_SIZE as u32);
+        assert_eq!(v.id("[PAD]"), PAD);
+        assert_eq!(v.id("[MASK]"), MASK);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = Vocab::standard();
+        let text = "the sports_n3 was pos_a7 . it was great";
+        let ids = v.encode(text);
+        assert_eq!(v.decode(&ids), text);
+    }
+
+    #[test]
+    fn category_attributes() {
+        let v = Vocab::standard();
+        assert_eq!(v.polarity(v.pos_adj(0)), Some(1));
+        assert_eq!(v.polarity(v.neg_adj(39)), Some(-1));
+        assert_eq!(v.polarity(v.neu_adj(5)), Some(0));
+        assert_eq!(v.polarity(v.person(0)), None);
+        assert_eq!(v.topic_of_noun(v.noun(2, 29)), Some(2));
+        assert_eq!(v.topic_of_noun(v.pos_adj(0)), None);
+        assert_eq!(v.digit_value(v.digit(7)), Some(7));
+        for (t, name) in TOPICS.iter().enumerate() {
+            assert_eq!(v.word(v.topic_label(t)), *name);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_word_panics() {
+        Vocab::standard().id("definitely_not_a_word");
+    }
+}

@@ -1,0 +1,203 @@
+//! Training orchestration (the L3 coordinator loop).
+//!
+//! `train_zo` drives any [`ZoStepper`] (MeZO and all its variants) against
+//! an objective evaluated *only through forward passes*; `train_ft` drives
+//! the backprop baseline through the AOT grad artifact. Both share batch
+//! sampling, periodic validation, and best-checkpoint tracking, matching
+//! the paper's protocol (Appendix E.3: constant LR + best-val checkpoint
+//! for MeZO; linear-decay LR for FT).
+
+pub mod pretrain;
+
+use crate::data::batch::{sample_batch, Batch};
+use crate::data::tasks::{Example, Task};
+use crate::eval::Evaluator;
+use crate::model::params::ParamStore;
+use crate::optim::ft::FtOptimizer;
+use crate::optim::ZoStepper;
+use crate::rng::Pcg;
+use crate::runtime::{scalar_f32, vec_f32, Artifact};
+use anyhow::Result;
+use std::rc::Rc;
+
+/// What MeZO minimizes. CrossEntropy is the standard objective; the other
+/// two are the paper's §3.3 *non-differentiable* objectives, computable
+/// only because MeZO never needs a gradient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    CrossEntropy,
+    /// 1 − accuracy on the sampled minibatch (classification)
+    NegAccuracy,
+    /// 1 − token-F1 on the sampled minibatch (generation)
+    NegF1,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub objective: Objective,
+    /// examples per accuracy/F1 objective evaluation
+    pub nondiff_batch: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 400,
+            eval_every: 100,
+            seed: 0,
+            objective: Objective::CrossEntropy,
+            nondiff_batch: 16,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainResult {
+    /// (step, train loss) curve
+    pub curve: Vec<(usize, f32)>,
+    /// (step, val score) curve
+    pub val_curve: Vec<(usize, f64)>,
+    pub best_val: f64,
+    pub forward_passes: usize,
+}
+
+/// Loss of the current parameters on one batch via the loss artifact.
+pub fn batch_loss(art: &Artifact, params: &ParamStore, batch: &Batch) -> Result<f32> {
+    let out = art.run(params, Some(batch), &[])?;
+    scalar_f32(&out[0])
+}
+
+/// Train with a zeroth-order optimizer. Restores the best-validation
+/// parameters into `params` before returning (paper's early-stop protocol).
+#[allow(clippy::too_many_arguments)]
+pub fn train_zo(
+    opt: &mut dyn ZoStepper,
+    params: &mut ParamStore,
+    loss_art: &Rc<Artifact>,
+    evaluator: &Evaluator,
+    task: Task,
+    train: &[Example],
+    val: &[Example],
+    cfg: &TrainCfg,
+) -> Result<TrainResult> {
+    let mlm = evaluator.mlm;
+    let (b, s) = (loss_art.meta.batch, loss_art.meta.seq);
+    let mut rng = Pcg::new(cfg.seed ^ 0xBEEF);
+    let mut res = TrainResult { best_val: f64::NEG_INFINITY, ..Default::default() };
+    let mut best_params: Option<ParamStore> = None;
+
+    for step in 0..cfg.steps {
+        let loss = match cfg.objective {
+            Objective::CrossEntropy => {
+                let batch = sample_batch(train, &mut rng, b, s, mlm);
+                // prefer the fused perturb-on-upload fast path (§Perf L3)
+                match opt.zo_step_artifact(params, loss_art, &batch) {
+                    Some(r) => r?,
+                    None => {
+                        let mut f = |p: &ParamStore| batch_loss(loss_art, p, &batch);
+                        opt.zo_step(params, &mut f)?
+                    }
+                }
+            }
+            Objective::NegAccuracy | Objective::NegF1 => {
+                // sample a fixed minibatch of examples for this step
+                let idxs = rng.sample_indices(train.len(), cfg.nondiff_batch.min(train.len()));
+                let exs: Vec<Example> = idxs.iter().map(|&i| train[i].clone()).collect();
+                let objective = cfg.objective;
+                let mut f = |p: &ParamStore| -> Result<f32> {
+                    let r = evaluate_subset(evaluator, p, task, &exs, objective)?;
+                    Ok(1.0 - r as f32)
+                };
+                opt.zo_step(params, &mut f)?
+            }
+        };
+        if step % 20 == 0 || step + 1 == cfg.steps {
+            res.curve.push((step, loss));
+        }
+        if (cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0) || step + 1 == cfg.steps {
+            let v = evaluator.evaluate(params, task, val)?.score;
+            res.val_curve.push((step + 1, v));
+            if v > res.best_val {
+                res.best_val = v;
+                let mut copy = ParamStore::from_specs(params.specs.clone());
+                copy.copy_from(params);
+                best_params = Some(copy);
+            }
+        }
+    }
+    if let Some(bp) = best_params {
+        params.copy_from(&bp);
+    }
+    res.forward_passes = opt.forward_passes();
+    Ok(res)
+}
+
+fn evaluate_subset(
+    evaluator: &Evaluator,
+    params: &ParamStore,
+    task: Task,
+    exs: &[Example],
+    objective: Objective,
+) -> Result<f64> {
+    match objective {
+        Objective::NegF1 => {
+            let r = evaluator.evaluate(params, task, exs)?;
+            Ok(r.score)
+        }
+        _ => {
+            let refs: Vec<&Example> = exs.iter().collect();
+            let preds = evaluator.predict(params, &refs)?;
+            let golds: Vec<usize> = exs.iter().map(|e| e.label).collect();
+            Ok(crate::eval::metrics::accuracy(&preds, &golds))
+        }
+    }
+}
+
+/// Train with backpropagation via the grad artifact (the FT baseline).
+#[allow(clippy::too_many_arguments)]
+pub fn train_ft(
+    opt: &mut FtOptimizer,
+    params: &mut ParamStore,
+    grad_art: &Rc<Artifact>,
+    evaluator: &Evaluator,
+    task: Task,
+    train: &[Example],
+    val: &[Example],
+    cfg: &TrainCfg,
+) -> Result<TrainResult> {
+    let mlm = evaluator.mlm;
+    let (b, s) = (grad_art.meta.batch, grad_art.meta.seq);
+    let mut rng = Pcg::new(cfg.seed ^ 0xFEED);
+    let mut res = TrainResult { best_val: f64::NEG_INFINITY, ..Default::default() };
+    let mut best_params: Option<ParamStore> = None;
+
+    for step in 0..cfg.steps {
+        let batch = sample_batch(train, &mut rng, b, s, mlm);
+        let out = grad_art.run(params, Some(&batch), &[])?;
+        let loss = scalar_f32(&out[0])?;
+        let grads: Vec<Vec<f32>> =
+            out[1..].iter().map(vec_f32).collect::<Result<Vec<_>>>()?;
+        opt.apply(params, &grads)?;
+        if step % 20 == 0 || step + 1 == cfg.steps {
+            res.curve.push((step, loss));
+        }
+        if (cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0) || step + 1 == cfg.steps {
+            let v = evaluator.evaluate(params, task, val)?.score;
+            res.val_curve.push((step + 1, v));
+            if v > res.best_val {
+                res.best_val = v;
+                let mut copy = ParamStore::from_specs(params.specs.clone());
+                copy.copy_from(params);
+                best_params = Some(copy);
+            }
+        }
+    }
+    if let Some(bp) = best_params {
+        params.copy_from(&bp);
+    }
+    res.forward_passes = cfg.steps; // each grad step ≈ fwd+bwd
+    Ok(res)
+}

@@ -1,0 +1,127 @@
+//! Pre-training on the synthetic corpus (DESIGN.md §2.1).
+//!
+//! The paper fine-tunes LMs that were already pre-trained at web scale; we
+//! reproduce the *mechanism* by pre-training each model family on the
+//! structured corpus with backprop Adam (via the AOT grad artifact), then
+//! caching the checkpoint. Every downstream experiment starts from this
+//! checkpoint — including the prompt/no-prompt ablation that shows why
+//! pre-training + prompts is what makes MeZO work.
+
+use crate::data::batch::lm_batch;
+use crate::data::corpus::pack_sequences;
+use crate::model::params::ParamStore;
+use crate::optim::ft::{FtConfig, FtFlavor, FtOptimizer};
+use crate::rng::Pcg;
+use crate::runtime::{scalar_f32, vec_f32, Runtime};
+use crate::tokenizer::Vocab;
+use anyhow::Result;
+use std::path::PathBuf;
+
+#[derive(Debug, Clone)]
+pub struct PretrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub corpus_seqs: usize,
+    pub seed: u64,
+}
+
+impl Default for PretrainCfg {
+    fn default() -> Self {
+        PretrainCfg { steps: 1200, lr: 3e-3, corpus_seqs: 2048, seed: 42 }
+    }
+}
+
+pub fn artifact_name(family: &str, size: &str, mode: &str, tuning: &str) -> String {
+    format!("{}_{}_{}_{}_b8_s64", family, size, tuning, mode)
+}
+
+pub fn checkpoint_path(family: &str, size: &str) -> PathBuf {
+    let dir = std::env::var("MEZO_RUNS").unwrap_or_else(|_| "runs".to_string());
+    PathBuf::from(dir).join(format!("pretrained_{}_{}.ckpt", family, size))
+}
+
+/// Pre-train (or load the cached checkpoint for) `family`/`size`.
+/// Returns (params-of-the-full-model, final LM loss curve if trained).
+pub fn pretrained(
+    rt: &Runtime,
+    family: &str,
+    size: &str,
+    cfg: &PretrainCfg,
+) -> Result<(ParamStore, Vec<(usize, f32)>)> {
+    let grad_name = artifact_name(family, size, "grad", "full");
+    let art = rt.load(&grad_name)?;
+    let mut params = ParamStore::from_meta(&art.meta);
+    params.init(cfg.seed);
+
+    let ckpt = checkpoint_path(family, size);
+    if ckpt.exists() {
+        params.load_into(&ckpt)?;
+        return Ok((params, Vec::new()));
+    }
+
+    let curve = pretrain_into(rt, family, size, &mut params, cfg)?;
+    params.save(&ckpt)?;
+    Ok((params, curve))
+}
+
+/// Run the pre-training loop into an existing store (used by train_lm
+/// example with custom sizes and by tests).
+pub fn pretrain_into(
+    rt: &Runtime,
+    family: &str,
+    size: &str,
+    params: &mut ParamStore,
+    cfg: &PretrainCfg,
+) -> Result<Vec<(usize, f32)>> {
+    let grad_name = artifact_name(family, size, "grad", "full");
+    let art = rt.load(&grad_name)?;
+    let (b, s) = (art.meta.batch, art.meta.seq);
+    let mlm = family == "mlm";
+    let vocab = Vocab::standard();
+    let mut corpus_rng = Pcg::new(cfg.seed ^ 0xC0FFEE);
+    let seqs = pack_sequences(&mut corpus_rng, &vocab, cfg.corpus_seqs, s);
+
+    let trainable = params.indices_of(&art.meta.trainable);
+    let ft_cfg = FtConfig {
+        lr: cfg.lr,
+        flavor: FtFlavor::Adam,
+        linear_decay: true,
+        total_steps: cfg.steps,
+        weight_decay: 0.0,
+        ..Default::default()
+    };
+    let mut opt = FtOptimizer::new(ft_cfg, trainable, params);
+    let mut batch_rng = Pcg::new(cfg.seed ^ 0xBA7C4);
+    let mut curve = Vec::new();
+    for step in 0..cfg.steps {
+        let batch = lm_batch(&seqs, &mut batch_rng, b, s, mlm);
+        let out = art.run(params, Some(&batch), &[])?;
+        let loss = scalar_f32(&out[0])?;
+        let grads: Vec<Vec<f32>> =
+            out[1..].iter().map(vec_f32).collect::<Result<Vec<_>>>()?;
+        opt.apply(params, &grads)?;
+        if step % 25 == 0 || step + 1 == cfg.steps {
+            curve.push((step, loss));
+        }
+    }
+    Ok(curve)
+}
+
+/// Copy a pretrained full-model checkpoint into a (possibly PEFT-extended)
+/// store built from another artifact's meta, initialising any extra tensors.
+pub fn params_for(
+    rt: &Runtime,
+    art_name: &str,
+    family: &str,
+    size: &str,
+    seed: u64,
+) -> Result<ParamStore> {
+    let art = rt.load(art_name)?;
+    let mut params = ParamStore::from_meta(&art.meta);
+    params.init(seed);
+    let ckpt = checkpoint_path(family, size);
+    if ckpt.exists() {
+        params.load_into(&ckpt)?;
+    }
+    Ok(params)
+}

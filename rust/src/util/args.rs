@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser (substrate: no clap in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let t = &argv[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(&sv(&[
+            "exp", "table1", "--steps", "500", "--lr=1e-3", "--quick",
+        ]));
+        assert_eq!(a.positional, sv(&["exp", "table1"]));
+        assert_eq!(a.usize("steps", 0), 500);
+        assert!((a.f32("lr", 0.0) - 1e-3).abs() < 1e-9);
+        assert!(a.bool("quick", false));
+        assert!(!a.bool("missing", false));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]));
+        assert_eq!(a.str("task", "sst2"), "sst2");
+        assert_eq!(a.usize("k", 16), 16);
+    }
+}

@@ -1,0 +1,6 @@
+//! Shared substrates built in-repo (the offline crate set has no serde /
+//! clap / criterion): JSON, CLI args, stats/benchmarking.
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod stats;

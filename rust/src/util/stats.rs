@@ -1,0 +1,98 @@
+//! Timing + summary statistics helpers (substrate: no criterion offline).
+
+use std::time::Instant;
+
+/// Simple wall-clock timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: pct(0.5),
+        p90: pct(0.9),
+    }
+}
+
+/// Measure a closure `iters` times after `warmup` runs; returns per-iter
+/// seconds.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        times.push(t.secs());
+    }
+    summarize(&times)
+}
+
+/// mean ± std formatted like the paper's tables: "90.5 (1.2)".
+pub fn fmt_mean_std(vals: &[f64]) -> String {
+    let s = summarize(vals);
+    format!("{:.1} ({:.1})", s.mean, s.std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn fmt_matches_paper_style() {
+        assert_eq!(fmt_mean_std(&[90.0, 91.0, 92.0]), "91.0 (0.8)");
+    }
+}

@@ -1,0 +1,150 @@
+//! End-to-end pipeline integration: pre-train -> zero-shot -> MeZO
+//! fine-tune -> storage replay, all through real AOT artifacts. Uses a
+//! scratch MEZO_RUNS dir so cached checkpoints elsewhere are untouched.
+//! (Run serially: `cargo test --test pipeline -- --test-threads=1`.)
+
+use mezo::data::batch::sample_batch;
+use mezo::data::tasks::{generate, GenOpts, Task};
+use mezo::eval::Evaluator;
+use mezo::model::params::ParamStore;
+use mezo::optim::ft::{FtConfig, FtFlavor, FtOptimizer};
+use mezo::optim::mezo::{MezoConfig, MezoSgd};
+use mezo::rng::Pcg;
+use mezo::runtime::{scalar_f32, vec_f32, Runtime};
+use mezo::tokenizer::Vocab;
+use mezo::train::batch_loss;
+use mezo::train::pretrain::{artifact_name, pretrain_into, PretrainCfg};
+use std::path::Path;
+
+fn runtime() -> Runtime {
+    Runtime::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path()).unwrap()
+}
+
+#[test]
+fn pretrain_reduces_lm_loss_and_mezo_reduces_task_loss() {
+    let rt = runtime();
+    let vocab = Vocab::standard();
+    let grad = rt.load(&artifact_name("ar", "tiny", "grad", "full")).unwrap();
+    let mut params = ParamStore::from_meta(&grad.meta);
+    params.init(0);
+    // short pre-training: loss must drop substantially from ln(512)=6.24
+    let cfg = PretrainCfg { steps: 250, corpus_seqs: 512, ..Default::default() };
+    let curve = pretrain_into(&rt, "ar", "tiny", &mut params, &cfg).unwrap();
+    let (first, last) = (curve[0].1, curve.last().unwrap().1);
+    assert!(first > 5.0, "init loss {}", first);
+    assert!(last < first - 1.5, "pretraining barely moved: {} -> {}", first, last);
+
+    // MeZO on sst2: train loss must drop without any backprop
+    let loss_art = rt.load(&artifact_name("ar", "tiny", "loss", "full")).unwrap();
+    let data = generate(Task::Sst2, &vocab, GenOpts { n_train: 64, ..Default::default() });
+    let trainable = params.indices_of(&loss_art.meta.trainable);
+    let mcfg = MezoConfig { lr: 1e-4, eps: 1e-3, ..Default::default() };
+    let mut opt = MezoSgd::new(mcfg, trainable, 5);
+    let mut rng = Pcg::new(1);
+    let probe = sample_batch(&data.train, &mut rng, 8, 64, false);
+    let l0 = batch_loss(&loss_art, &params, &probe).unwrap();
+    for _ in 0..120 {
+        let batch = sample_batch(&data.train, &mut rng, 8, 64, false);
+        opt.step(&mut params, |p| batch_loss(&loss_art, p, &batch)).unwrap();
+    }
+    let l1 = batch_loss(&loss_art, &params, &probe).unwrap();
+    assert!(l1 < l0, "MeZO did not reduce task loss: {} -> {}", l0, l1);
+    assert_eq!(opt.history.len(), 120);
+}
+
+#[test]
+fn ft_beats_zero_shot_on_sst2() {
+    let rt = runtime();
+    let vocab = Vocab::standard();
+    let grad = rt.load(&artifact_name("ar", "tiny", "grad", "full")).unwrap();
+    let loss_art = rt.load(&artifact_name("ar", "tiny", "loss", "full")).unwrap();
+    let mut params = ParamStore::from_meta(&grad.meta);
+    params.init(3);
+    let cfg = PretrainCfg { steps: 1500, corpus_seqs: 1024, ..Default::default() };
+    pretrain_into(&rt, "ar", "tiny", &mut params, &cfg).unwrap();
+
+    let ev = Evaluator::new(loss_art, None, false);
+    let data = generate(Task::Sst2, &vocab,
+                        GenOpts { n_train: 128, n_test: 96, ..Default::default() });
+    let zs = ev.evaluate(&params, Task::Sst2, &data.test).unwrap().score;
+
+    let trainable = params.indices_of(&grad.meta.trainable);
+    let fcfg = FtConfig { lr: 3e-4, flavor: FtFlavor::Adam, total_steps: 200, ..Default::default() };
+    let mut opt = FtOptimizer::new(fcfg, trainable, &params);
+    let mut rng = Pcg::new(2);
+    for _ in 0..200 {
+        let batch = sample_batch(&data.train, &mut rng, 8, 64, false);
+        let out = grad.run(&params, Some(&batch), &[]).unwrap();
+        let grads: Vec<Vec<f32>> = out[1..].iter().map(|l| vec_f32(l).unwrap()).collect();
+        opt.apply(&mut params, &grads).unwrap();
+    }
+    let ft = ev.evaluate(&params, Task::Sst2, &data.test).unwrap().score;
+    assert!(ft > zs + 0.05, "FT {} should beat zero-shot {}", ft, zs);
+}
+
+#[test]
+fn lora_and_prefix_artifacts_train_only_their_parameters() {
+    let rt = runtime();
+    for tuning in ["lora", "prefix"] {
+        let name = artifact_name("ar", "tiny", "loss", tuning);
+        let art = rt.load(&name).unwrap();
+        let mut params = ParamStore::from_meta(&art.meta);
+        params.init(7);
+        // trainables must be exactly the PEFT tensors
+        for t in &art.meta.trainable {
+            assert!(t.contains(".lora_") || t.contains(".prefix."), "{}", t);
+        }
+        let mut batch = mezo::data::batch::Batch::zeros(8, 64);
+        for row in 0..8 {
+            let seq: Vec<u32> = (0..24).map(|t| ((t * 3 + row) % 500 + 5) as u32).collect();
+            batch.set_row(row, &seq, 1..seq.len(), false);
+        }
+        let l0 = scalar_f32(&art.run(&params, Some(&batch), &[]).unwrap()[0]).unwrap();
+        // a MeZO step touching only PEFT params changes the loss
+        let trainable = params.indices_of(&art.meta.trainable);
+        let cfg = MezoConfig { lr: 1e-2, eps: 1e-2, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, trainable, 9);
+        for _ in 0..5 {
+            opt.step(&mut params, |p| batch_loss(&art, p, &batch)).unwrap();
+        }
+        let l1 = scalar_f32(&art.run(&params, Some(&batch), &[]).unwrap()[0]).unwrap();
+        assert!((l0 - l1).abs() > 1e-7, "{}: loss unchanged", tuning);
+        // frozen base tensors are bit-identical
+        let mut fresh = ParamStore::from_meta(&art.meta);
+        fresh.init(7);
+        for (spec, (a, b)) in params.specs.iter().zip(params.data.iter().zip(&fresh.data)) {
+            if !art.meta.trainable.contains(&spec.name) {
+                assert_eq!(a, b, "{} drifted", spec.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_step_artifact_matches_semantics() {
+    let rt = runtime();
+    let fused = rt.load("ar_tiny_full_fused_b8_s64").unwrap();
+    let mut params = ParamStore::from_meta(&fused.meta);
+    params.init(11);
+    let mut batch = mezo::data::batch::Batch::zeros(8, 64);
+    for row in 0..8 {
+        let seq: Vec<u32> = (0..30).map(|t| ((t * 7 + row * 3) % 500 + 5) as u32).collect();
+        batch.set_row(row, &seq, 1..seq.len(), false);
+    }
+    let extras = [
+        mezo::runtime::i32_literal(&[1], &[13]).unwrap(),
+        mezo::runtime::f32_literal(&[1], &[1e-3]).unwrap(),
+        mezo::runtime::f32_literal(&[1], &[1e-4]).unwrap(),
+    ];
+    let out = fused.run(&params, Some(&batch), &extras).unwrap();
+    let n = fused.meta.trainable.len();
+    assert_eq!(out.len(), n + 3);
+    let lp = scalar_f32(&out[n]).unwrap();
+    let lm = scalar_f32(&out[n + 1]).unwrap();
+    let pg = scalar_f32(&out[n + 2]).unwrap();
+    assert!((pg - (lp - lm) / 2e-3).abs() < 2e-2 * pg.abs().max(1.0), "pgrad identity");
+    // updated params differ and are finite
+    let new0 = vec_f32(&out[0]).unwrap();
+    assert!(new0.iter().all(|x| x.is_finite()));
+    assert_ne!(new0, params.data[0]);
+}

@@ -1,0 +1,247 @@
+//! Property-based tests over the coordinator's invariants (routing of
+//! loss masks, in-place state management, serialization, metrics).
+
+use mezo::data::batch::Batch;
+use mezo::data::tasks::{generate, GenOpts, TaskType, ALL_TASKS};
+use mezo::eval::metrics;
+use mezo::model::meta::TensorDesc;
+use mezo::model::params::ParamStore;
+use mezo::optim::mezo::{perturb_tensors, StepRecord};
+use mezo::rng::{GaussianStream, Pcg};
+use mezo::storage::Trajectory;
+use mezo::tokenizer::Vocab;
+use mezo::util::json::Json;
+use mezo::util::prop::{ensure, forall};
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(rng: &mut Pcg, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.next_f64() * 2e6).round() / 1e3 - 1000.0),
+            3 => {
+                let len = rng.below(8);
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            *rng.choice(&['a', 'Z', '9', ' ', '"', '\\', '\n', 'é'])
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{}", i), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        200,
+        10,
+        |rng| gen_json(rng, 3),
+        |j| {
+            let s = j.to_string();
+            let back = Json::parse(&s).map_err(|e| format!("parse: {}", e))?;
+            ensure(&back == j, format!("roundtrip mismatch: {}", s))
+        },
+    );
+}
+
+#[test]
+fn prop_gaussian_stream_random_access_equals_sequential() {
+    forall(
+        100,
+        11,
+        |rng| (rng.next_u64(), rng.below(1000) as u64, rng.below(64) + 1),
+        |&(seed, offset, len)| {
+            let g = GaussianStream::new(seed);
+            let mut buf = vec![0.0f32; len];
+            g.fill(&mut buf, offset);
+            for (j, &v) in buf.iter().enumerate() {
+                if v != g.z(offset + j as u64) {
+                    return Err("fill != z".into());
+                }
+                if !v.is_finite() {
+                    return Err("non-finite z".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_perturb_restore_roundtrip_any_shape() {
+    forall(
+        60,
+        12,
+        |rng| {
+            let n_tensors = rng.below(4) + 1;
+            let shapes: Vec<usize> = (0..n_tensors).map(|_| rng.below(200) + 1).collect();
+            (rng.next_u64(), shapes, (rng.next_f32() * 0.1).max(1e-5))
+        },
+        |(seed, shapes, eps)| {
+            let specs: Vec<TensorDesc> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| TensorDesc {
+                    name: format!("t{}", i),
+                    shape: vec![n],
+                    dtype: "f32".into(),
+                })
+                .collect();
+            let mut p = ParamStore::from_specs(specs);
+            p.init(*seed);
+            let before = p.data.clone();
+            let all: Vec<usize> = (0..p.specs.len()).collect();
+            perturb_tensors(&mut p, &all, *seed ^ 7, *eps);
+            perturb_tensors(&mut p, &all, *seed ^ 7, -2.0 * eps);
+            perturb_tensors(&mut p, &all, *seed ^ 7, *eps);
+            for (a, b) in p.data.iter().flatten().zip(before.iter().flatten()) {
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("not restored: {} vs {}", a, b));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batch_masks_are_consistent_across_tasks() {
+    // loss positions must always be attended; padding never supervised;
+    // AR targets are the left-shifted input on supervised positions.
+    let vocab = Vocab::standard();
+    forall(
+        60,
+        13,
+        |rng| {
+            let task = *rng.choice(&ALL_TASKS);
+            (task, rng.next_u64() % 1000)
+        },
+        |&(task, seed)| {
+            let data = generate(task, &vocab, GenOpts { seed, n_train: 6, n_val: 1, n_test: 1, ..Default::default() });
+            for mlm in [false, true] {
+                if mlm && task.task_type() != TaskType::Classification {
+                    continue; // MLM path is classification-only (single-token)
+                }
+                for ex in &data.train {
+                    let (seq, range) = ex.filled();
+                    if mlm && range.len() != 1 {
+                        continue;
+                    }
+                    let mut b = Batch::zeros(1, 64);
+                    b.set_row(0, &seq, range.clone(), mlm);
+                    for t in 0..64 {
+                        if b.loss_mask[t] > 0.0 && b.attn_mask[t] == 0.0 {
+                            return Err(format!("{}: loss on padding at {}", task.name(), t));
+                        }
+                        if !mlm && b.loss_mask[t] > 0.0 {
+                            let predicted = b.targets[t] as u32;
+                            if seq.get(t + 1) != Some(&predicted) {
+                                return Err(format!("{}: AR target misaligned", task.name()));
+                            }
+                        }
+                    }
+                    let n_loss: f32 = b.loss_mask.iter().sum();
+                    if n_loss < 1.0 {
+                        return Err(format!("{}: empty loss mask", task.name()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trajectory_roundtrip_and_replay_determinism() {
+    forall(
+        30,
+        14,
+        |rng| {
+            let n = rng.below(40) + 1;
+            let records: Vec<StepRecord> = (0..n)
+                .map(|_| StepRecord {
+                    seed: rng.next_u64(),
+                    pgrad: rng.normal() as f32,
+                    lr: rng.next_f32() * 1e-2,
+                })
+                .collect();
+            (records, rng.next_u64())
+        },
+        |(records, seed)| {
+            let path = std::env::temp_dir().join(format!("mezo_prop_traj_{}.bin", seed));
+            let traj = Trajectory::from_run(vec!["w".into()], records);
+            traj.save(&path).map_err(|e| e.to_string())?;
+            let back = Trajectory::load(&path).map_err(|e| e.to_string())?;
+            std::fs::remove_file(&path).ok();
+            ensure(back == traj, "trajectory roundtrip")?;
+            // replay twice from the same init => identical params
+            let specs = vec![TensorDesc { name: "w".into(), shape: vec![32], dtype: "f32".into() }];
+            let mut a = ParamStore::from_specs(specs.clone());
+            a.init(*seed);
+            let mut b = ParamStore::from_specs(specs);
+            b.init(*seed);
+            traj.replay(&mut a);
+            traj.replay(&mut b);
+            ensure(a.data == b.data, "replay determinism")
+        },
+    );
+}
+
+#[test]
+fn prop_metrics_bounds_and_symmetry() {
+    forall(
+        200,
+        15,
+        |rng| {
+            let n = rng.below(12) + 1;
+            let pred: Vec<u32> = (0..n).map(|_| rng.below(8) as u32).collect();
+            let m = rng.below(12) + 1;
+            let gold: Vec<u32> = (0..m).map(|_| rng.below(8) as u32).collect();
+            (pred, gold)
+        },
+        |(pred, gold)| {
+            let f = metrics::token_f1(pred, gold);
+            ensure((0.0..=1.0).contains(&f), "f1 in [0,1]")?;
+            // token-F1 is symmetric in (pred, gold)
+            let g = metrics::token_f1(gold, pred);
+            ensure((f - g).abs() < 1e-12, "f1 symmetry")?;
+            ensure(
+                metrics::exact_match(pred, gold) <= 1.0
+                    && (metrics::exact_match(pred, pred) - 1.0).abs() < 1e-12,
+                "em identity",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_examples_fit_budget_for_every_task_and_seed() {
+    let vocab = Vocab::standard();
+    forall(
+        45,
+        16,
+        |rng| (*rng.choice(&ALL_TASKS), rng.next_u64() % 5000),
+        |&(task, seed)| {
+            let data = generate(task, &vocab, GenOpts { seed, n_train: 12, n_val: 4, n_test: 4, ..Default::default() });
+            for ex in data.train.iter().chain(&data.val).chain(&data.test) {
+                let worst = ex
+                    .candidates
+                    .iter()
+                    .map(|c| c.len())
+                    .max()
+                    .unwrap_or(ex.answer.len());
+                let total = ex.context.len() + worst + ex.suffix.len();
+                if total + 1 > 64 {
+                    return Err(format!("{} seq {} > 64", task.name(), total));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,68 @@
+//! Integration: AOT artifact round-trip — rust loads the HLO text the
+//! python layer lowered, executes it via PJRT, and the numbers make sense.
+use mezo::data::batch::Batch;
+use mezo::model::params::ParamStore;
+use mezo::runtime::{scalar_f32, vec_f32, Runtime};
+use std::path::Path;
+
+fn runtime() -> Runtime {
+    Runtime::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path()).unwrap()
+}
+
+#[test]
+fn loss_artifact_executes_and_matches_init_entropy() {
+    let rt = runtime();
+    let art = rt.load("ar_tiny_full_loss_b8_s64").unwrap();
+    let mut params = ParamStore::from_meta(&art.meta);
+    params.init(0);
+    let mut batch = Batch::zeros(8, 64);
+    for row in 0..8 {
+        let seq: Vec<u32> = (0..40).map(|t| ((row * 40 + t) % 500 + 5) as u32).collect();
+        batch.set_row(row, &seq, 1..seq.len(), false);
+    }
+    let out = art.run(&params, Some(&batch), &[]).unwrap();
+    assert_eq!(out.len(), 2);
+    let loss = scalar_f32(&out[0]).unwrap();
+    let per_ex = vec_f32(&out[1]).unwrap();
+    assert_eq!(per_ex.len(), 8);
+    // fresh init => loss ~ ln(512) = 6.24
+    assert!((loss - 6.24).abs() < 0.8, "loss {}", loss);
+    let mean: f32 = per_ex.iter().sum::<f32>() / 8.0;
+    assert!((mean - loss).abs() < 1e-3);
+}
+
+#[test]
+fn pallas_and_ref_artifacts_agree() {
+    let rt = runtime();
+    let a = rt.load("ar_tiny_full_loss_b8_s64").unwrap();
+    let b = rt.load("ar_tiny_full_loss_pallas_b8_s64").unwrap();
+    let mut params = ParamStore::from_meta(&a.meta);
+    params.init(1);
+    let mut batch = Batch::zeros(8, 64);
+    for row in 0..8 {
+        let seq: Vec<u32> = (0..30).map(|t| ((row * 7 + t * 3) % 500 + 5) as u32).collect();
+        batch.set_row(row, &seq, 1..seq.len(), false);
+    }
+    let la = scalar_f32(&a.run(&params, Some(&batch), &[]).unwrap()[0]).unwrap();
+    let lb = scalar_f32(&b.run(&params, Some(&batch), &[]).unwrap()[0]).unwrap();
+    assert!((la - lb).abs() < 1e-4, "ref {} vs pallas {}", la, lb);
+}
+
+#[test]
+fn grad_artifact_output_count_matches_trainables() {
+    let rt = runtime();
+    let art = rt.load("ar_tiny_full_grad_b8_s64").unwrap();
+    let mut params = ParamStore::from_meta(&art.meta);
+    params.init(2);
+    let mut batch = Batch::zeros(8, 64);
+    for row in 0..8 {
+        let seq: Vec<u32> = (0..20).map(|t| ((t * 11 + row) % 500 + 5) as u32).collect();
+        batch.set_row(row, &seq, 1..seq.len(), false);
+    }
+    let out = art.run(&params, Some(&batch), &[]).unwrap();
+    assert_eq!(out.len(), 1 + art.meta.trainable.len());
+    // gradient of embed.tok has same length as the tensor
+    let g0 = vec_f32(&out[1]).unwrap();
+    assert_eq!(g0.len(), params.get("embed.tok").len());
+    assert!(g0.iter().any(|&x| x != 0.0));
+}
