@@ -1,11 +1,165 @@
-//! Bench: per-step wall-clock, MeZO vs fused-step vs FT, across the size
-//! ladder (regenerates Table 23; `harness = false` — no criterion offline).
+//! Bench: zkernel microbench (always) + per-step wall-clock table
+//! (pjrt builds; regenerates Table 23). `harness = false` — no criterion
+//! offline.
 //!
-//!     cargo bench --bench step_time
-use mezo::exp::{tables, Ctx};
+//!     cargo bench --bench step_time            # zkernel microbench
+//!     cargo bench --bench step_time --features pjrt -- --full
+//!
+//! The microbench measures coords/sec for the blocked/threaded kernels
+//! (fill, axpy_z, sgd_update, and the perturb+update composite a MeZO
+//! step's parameter traffic reduces to) against the scalar per-coordinate
+//! `z()` path the seed implementation used, at d ∈ {1e5, 1e6, 1e7} and
+//! thread counts {1, 2, 4, 8}. Results land in BENCH_zkernel.json so the
+//! perf trajectory is tracked across PRs.
+
+use mezo::rng::GaussianStream;
+use mezo::util::json::{obj, Json};
+use mezo::zkernel::ZEngine;
+use std::time::Instant;
+
+/// Median-of-reps seconds for one invocation of `f`.
+fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// The seed implementation's scalar loops, kept as the baseline.
+mod scalar {
+    use super::GaussianStream;
+
+    pub fn fill(stream: GaussianStream, theta: &mut [f32]) {
+        for (j, o) in theta.iter_mut().enumerate() {
+            *o = stream.z(j as u64);
+        }
+    }
+    pub fn axpy(stream: GaussianStream, theta: &mut [f32], s: f32) {
+        for (j, th) in theta.iter_mut().enumerate() {
+            *th += s * stream.z(j as u64);
+        }
+    }
+    pub fn sgd(stream: GaussianStream, theta: &mut [f32], lr: f32, g: f32, wd: f32) {
+        for (j, th) in theta.iter_mut().enumerate() {
+            let z = stream.z(j as u64);
+            *th -= lr * (g * z + wd * *th);
+        }
+    }
+}
+
+struct Row {
+    kernel: &'static str,
+    d: usize,
+    threads: usize,
+    scalar_s: f64,
+    kernel_s: f64,
+}
+
+impl Row {
+    fn json(&self) -> Json {
+        let per = |s: f64| if s > 0.0 { self.d as f64 / s } else { 0.0 };
+        obj(vec![
+            ("kernel", Json::from(self.kernel)),
+            ("d", Json::from(self.d as f64)),
+            ("threads", Json::from(self.threads as f64)),
+            ("scalar_ns_per_coord", Json::from(self.scalar_s * 1e9 / self.d as f64)),
+            ("kernel_ns_per_coord", Json::from(self.kernel_s * 1e9 / self.d as f64)),
+            ("scalar_coords_per_sec", Json::from(per(self.scalar_s))),
+            ("kernel_coords_per_sec", Json::from(per(self.kernel_s))),
+            ("speedup", Json::from(self.scalar_s / self.kernel_s)),
+        ])
+    }
+}
+
+fn zkernel_bench() -> Vec<Row> {
+    let stream = GaussianStream::new(0xBE7C);
+    let (lr, g, wd, eps) = (1e-4f32, 0.37f32, 1e-5f32, 1e-3f32);
+    let mut rows = Vec::new();
+    for &d in &[100_000usize, 1_000_000, 10_000_000] {
+        let reps = match d {
+            100_000 => 9,
+            1_000_000 => 5,
+            _ => 3,
+        };
+        let mut theta = vec![0.01f32; d];
+        // scalar baselines (single-threaded per-coordinate z(), pre-refactor)
+        let sc_fill = time(reps, || scalar::fill(stream, &mut theta));
+        let sc_axpy = time(reps, || scalar::axpy(stream, &mut theta, eps));
+        let sc_sgd = time(reps, || scalar::sgd(stream, &mut theta, lr, g, wd));
+        // perturb(+ε) + perturb(−2ε) + restore(+ε) + update: the 4 z-passes
+        // of one in-place MeZO step
+        let sc_step = time(reps, || {
+            scalar::axpy(stream, &mut theta, eps);
+            scalar::axpy(stream, &mut theta, -2.0 * eps);
+            scalar::axpy(stream, &mut theta, eps);
+            scalar::sgd(stream, &mut theta, lr, g, wd);
+        });
+        for &t in &[1usize, 2, 4, 8] {
+            let eng = ZEngine::with_threads(t);
+            let k_fill = time(reps, || eng.fill_z(stream, 0, &mut theta));
+            rows.push(Row { kernel: "fill", d, threads: t, scalar_s: sc_fill, kernel_s: k_fill });
+            let k_axpy = time(reps, || eng.axpy_z(stream, 0, &mut theta, eps));
+            rows.push(Row { kernel: "axpy_z", d, threads: t, scalar_s: sc_axpy, kernel_s: k_axpy });
+            let k_sgd = time(reps, || eng.sgd_update(stream, 0, &mut theta, lr, g, wd));
+            rows.push(Row {
+                kernel: "sgd_update",
+                d,
+                threads: t,
+                scalar_s: sc_sgd,
+                kernel_s: k_sgd,
+            });
+            let k_step = time(reps, || {
+                eng.axpy_z(stream, 0, &mut theta, eps);
+                eng.axpy_z(stream, 0, &mut theta, -2.0 * eps);
+                eng.axpy_z(stream, 0, &mut theta, eps);
+                eng.sgd_update(stream, 0, &mut theta, lr, g, wd);
+            });
+            rows.push(Row {
+                kernel: "perturb+update",
+                d,
+                threads: t,
+                scalar_s: sc_step,
+                kernel_s: k_step,
+            });
+        }
+        let best = rows
+            .iter()
+            .filter(|r| r.d == d && r.kernel == "perturb+update")
+            .map(|r| r.scalar_s / r.kernel_s)
+            .fold(0.0f64, f64::max);
+        println!(
+            "d={:>9}: scalar step {:>7.1} ms, best kernel speedup {:.2}x",
+            d,
+            sc_step * 1e3,
+            best
+        );
+    }
+    rows
+}
 
 fn main() {
-    let quick = !std::env::args().any(|a| a == "--full");
-    let ctx = Ctx::new(quick).expect("runtime");
-    tables::table23(&ctx).expect("table23");
+    let rows = zkernel_bench();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let report = obj(vec![
+        ("bench", Json::from("zkernel")),
+        ("hardware_threads", Json::from(hw as f64)),
+        ("rows", Json::Arr(rows.iter().map(Row::json).collect())),
+    ]);
+    std::fs::write("BENCH_zkernel.json", report.to_string()).expect("write BENCH_zkernel.json");
+    println!("wrote BENCH_zkernel.json ({} rows)", rows.len());
+
+    #[cfg(feature = "pjrt")]
+    {
+        use mezo::exp::{tables, Ctx};
+        let quick = !std::env::args().any(|a| a == "--full");
+        if std::env::args().any(|a| a == "--zkernel-only") {
+            return;
+        }
+        let ctx = Ctx::new(quick).expect("runtime");
+        tables::table23(&ctx).expect("table23");
+    }
 }

@@ -1,11 +1,47 @@
+//! Profile the z-generation ladder: scalar z() per coordinate, blocked
+//! fill, and the threaded zkernel fill (MEZO_THREADS to override).
 use mezo::rng::GaussianStream;
+use mezo::zkernel::ZEngine;
 use std::time::Instant;
+
 fn main() {
     let g = GaussianStream::new(7);
-    let n = 20_000_000u64;
+    let n = 20_000_000usize;
+
     let t = Instant::now();
     let mut acc = 0.0f32;
-    for i in 0..n { acc += g.z(i); }
+    for i in 0..n as u64 {
+        acc += g.z(i);
+    }
     let dt = t.elapsed().as_secs_f64();
-    println!("z(): {:.1} M/s ({:.1} ns each) acc={}", n as f64/dt/1e6, dt*1e9/n as f64, acc);
+    println!(
+        "scalar z():      {:>7.1} M/s ({:.1} ns each) acc={}",
+        n as f64 / dt / 1e6,
+        dt * 1e9 / n as f64,
+        acc
+    );
+
+    let mut buf = vec![0.0f32; n];
+    let t = Instant::now();
+    g.fill(&mut buf, 0);
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "blocked fill:    {:>7.1} M/s ({:.1} ns each)",
+        n as f64 / dt / 1e6,
+        dt * 1e9 / n as f64
+    );
+
+    for threads in [1, 2, 4, 8] {
+        let eng = ZEngine::with_threads(threads);
+        let t = Instant::now();
+        eng.fill_z(g, 0, &mut buf);
+        let dt = t.elapsed().as_secs_f64();
+        println!(
+            "zkernel fill x{}: {:>7.1} M/s ({:.1} ns each)",
+            threads,
+            n as f64 / dt / 1e6,
+            dt * 1e9 / n as f64
+        );
+    }
+    assert_eq!(buf[12_345], g.z(12_345)); // blocked == scalar, bitwise
 }

@@ -8,6 +8,7 @@
 
 use crate::model::params::ParamStore;
 use crate::rng::{GaussianStream, Pcg};
+use crate::zkernel::ZEngine;
 use anyhow::Result;
 
 #[derive(Debug, Clone)]
@@ -38,6 +39,8 @@ pub struct Bbt {
     proj_seed: u64,
     pub mean: Vec<f32>,
     pub sigma: Vec<f32>,
+    /// blocked/threaded kernel engine for the projection rows
+    pub engine: ZEngine,
     rng: Pcg,
     /// saved originals of the controlled tensors
     base: Vec<Vec<f32>>,
@@ -49,6 +52,7 @@ impl Bbt {
         Bbt {
             mean: vec![0.0; cfg.d_low],
             sigma: vec![cfg.sigma; cfg.d_low],
+            engine: ZEngine::default(),
             rng: Pcg::new(cfg.seed ^ 0xBB7),
             proj_seed: cfg.seed ^ 0x9E37_79B9,
             cfg,
@@ -58,20 +62,21 @@ impl Bbt {
     }
 
     /// prefix_t = base_t + A_t · z, with A_t entries N(0, 1/sqrt(d_low))
-    /// regenerated from (proj_seed, tensor, coordinate) counters.
+    /// regenerated from (proj_seed, tensor, coordinate) counters. Each
+    /// output coordinate is an independent projection row, so the matvec
+    /// parallelizes over rows on the kernel engine.
     pub fn apply(&self, params: &mut ParamStore, z: &[f32]) {
         let scale = 1.0 / (self.cfg.d_low as f32).sqrt();
         for (k, &ti) in self.tensors.iter().enumerate() {
             let stream = GaussianStream::new(self.proj_seed ^ (k as u64) << 32);
-            let buf = &mut params.data[ti];
-            for (j, th) in buf.iter_mut().enumerate() {
-                let mut acc = 0.0f32;
-                let row = j as u64 * self.cfg.d_low as u64;
-                for (i, &zi) in z.iter().enumerate() {
-                    acc += stream.z(row + i as u64) * zi;
-                }
-                *th = self.base[k][j] + scale * acc;
-            }
+            self.engine.project_rows(
+                stream,
+                self.cfg.d_low,
+                z,
+                &self.base[k],
+                scale,
+                &mut params.data[ti],
+            );
         }
     }
 

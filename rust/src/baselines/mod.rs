@@ -5,13 +5,19 @@
 pub mod bbt;
 pub mod linear_probe;
 
+#[cfg(feature = "pjrt")]
 use crate::data::batch::icl_example;
+#[cfg(feature = "pjrt")]
 use crate::data::tasks::{Example, Task};
+#[cfg(feature = "pjrt")]
 use crate::eval::Evaluator;
+#[cfg(feature = "pjrt")]
 use crate::model::params::ParamStore;
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 /// Zero-shot: evaluate the pre-trained model with the prompt, no tuning.
+#[cfg(feature = "pjrt")]
 pub fn zero_shot(
     evaluator: &Evaluator,
     params: &ParamStore,
@@ -23,6 +29,7 @@ pub fn zero_shot(
 
 /// In-context learning: prepend up to `max_demos` gold demonstrations from
 /// the train split to every test prompt (paper Appendix E.4).
+#[cfg(feature = "pjrt")]
 pub fn icl(
     evaluator: &Evaluator,
     params: &ParamStore,

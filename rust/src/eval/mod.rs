@@ -8,231 +8,7 @@
 
 pub mod metrics;
 
-use crate::data::batch::Batch;
-use crate::data::tasks::{Example, Task, TaskType};
-use crate::model::params::ParamStore;
-use crate::runtime::{vec_f32, Artifact};
-use crate::tokenizer::EOS;
-use anyhow::Result;
-use std::rc::Rc;
-
-pub struct Evaluator {
-    /// loss-mode artifact (candidate scoring + train loss)
-    pub loss_art: Rc<Artifact>,
-    /// logits-mode artifact (generation + features); optional
-    pub logits_art: Option<Rc<Artifact>>,
-    pub mlm: bool,
-}
-
-#[derive(Debug, Clone, Default)]
-pub struct EvalResult {
-    /// accuracy for cls/mch; token-F1 for generation
-    pub score: f64,
-    pub em: f64,
-    pub n: usize,
-}
-
-impl Evaluator {
-    pub fn new(loss_art: Rc<Artifact>, logits_art: Option<Rc<Artifact>>, mlm: bool) -> Evaluator {
-        Evaluator { loss_art, logits_art, mlm }
-    }
-
-    fn b(&self) -> usize {
-        self.loss_art.meta.batch
-    }
-    fn s(&self) -> usize {
-        self.loss_art.meta.seq
-    }
-
-    /// Mean NLL of each (example, candidate) pair, batched through the loss
-    /// artifact.
-    pub fn candidate_nlls(
-        &self,
-        params: &ParamStore,
-        examples: &[&Example],
-    ) -> Result<Vec<Vec<f32>>> {
-        let (b, s) = (self.b(), self.s());
-        // flatten all (example, candidate) rows
-        let mut rows: Vec<(usize, usize)> = Vec::new();
-        for (ei, ex) in examples.iter().enumerate() {
-            for ci in 0..ex.candidates.len() {
-                rows.push((ei, ci));
-            }
-        }
-        let mut out: Vec<Vec<f32>> =
-            examples.iter().map(|e| vec![0.0; e.candidates.len()]).collect();
-        let mut i = 0;
-        while i < rows.len() {
-            let mut batch = Batch::zeros(b, s);
-            let chunk = &rows[i..(i + b).min(rows.len())];
-            for (row, &(ei, ci)) in chunk.iter().enumerate() {
-                let (seq, range) = examples[ei].with_candidate(ci);
-                batch.set_row(row, &seq, range, self.mlm);
-            }
-            // duplicate the last row into any padding rows so shapes hold
-            for row in chunk.len()..b {
-                let &(ei, ci) = &chunk[chunk.len() - 1];
-                let (seq, range) = examples[ei].with_candidate(ci);
-                batch.set_row(row, &seq, range, self.mlm);
-            }
-            let res = self.loss_art.run(params, Some(&batch), &[])?;
-            let per_ex = vec_f32(&res[1])?;
-            for (row, &(ei, ci)) in chunk.iter().enumerate() {
-                out[ei][ci] = per_ex[row];
-            }
-            i += b;
-        }
-        Ok(out)
-    }
-
-    /// Predicted candidate index per example (min mean NLL).
-    pub fn predict(&self, params: &ParamStore, examples: &[&Example]) -> Result<Vec<usize>> {
-        let nlls = self.candidate_nlls(params, examples)?;
-        Ok(nlls
-            .iter()
-            .map(|ns| {
-                ns.iter()
-                    .enumerate()
-                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap_or(0)
-            })
-            .collect())
-    }
-
-    /// Greedy decoding: generate up to `max_new` tokens after each context.
-    pub fn generate(
-        &self,
-        params: &ParamStore,
-        examples: &[&Example],
-        max_new: usize,
-    ) -> Result<Vec<Vec<u32>>> {
-        let art = self
-            .logits_art
-            .as_ref()
-            .expect("generation requires a logits artifact");
-        let (b, s) = (art.meta.batch, art.meta.seq);
-        let vocab = art.meta.vocab;
-        let stop = EOS;
-        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); examples.len()];
-        let mut i = 0;
-        while i < examples.len() {
-            let chunk = &examples[i..(i + b).min(examples.len())];
-            let mut seqs: Vec<Vec<u32>> = chunk.iter().map(|e| e.context.clone()).collect();
-            let mut done = vec![false; chunk.len()];
-            for _ in 0..max_new {
-                let mut batch = Batch::zeros(b, s);
-                for (row, seq) in seqs.iter().enumerate() {
-                    for (t, &tok) in seq.iter().enumerate().take(s) {
-                        batch.input_ids[row * s + t] = tok as i32;
-                        batch.attn_mask[row * s + t] = 1.0;
-                    }
-                }
-                let res = art.run(params, Some(&batch), &[])?;
-                let logits = vec_f32(&res[0])?; // (B, S, V)
-                for (row, seq) in seqs.iter_mut().enumerate() {
-                    if done[row] || seq.len() >= s {
-                        continue;
-                    }
-                    let pos = seq.len() - 1;
-                    let base = row * s * vocab + pos * vocab;
-                    let slice = &logits[base..base + vocab];
-                    let mut best = 0usize;
-                    let mut bv = f32::NEG_INFINITY;
-                    for (t, &v) in slice.iter().enumerate() {
-                        if v > bv {
-                            bv = v;
-                            best = t;
-                        }
-                    }
-                    let tok = best as u32;
-                    if tok == stop {
-                        done[row] = true;
-                    } else {
-                        seq.push(tok);
-                    }
-                }
-                if done.iter().all(|&d| d) {
-                    break;
-                }
-            }
-            for (row, ex) in chunk.iter().enumerate() {
-                outputs[i + row] = seqs[row][ex.context.len()..].to_vec();
-            }
-            i += b;
-        }
-        Ok(outputs)
-    }
-
-    /// Evaluate a task split end to end.
-    pub fn evaluate(&self, params: &ParamStore, task: Task, examples: &[Example]) -> Result<EvalResult> {
-        let refs: Vec<&Example> = examples.iter().collect();
-        match task.task_type() {
-            TaskType::Classification | TaskType::MultipleChoice => {
-                let preds = self.predict(params, &refs)?;
-                let golds: Vec<usize> = examples.iter().map(|e| e.label).collect();
-                Ok(EvalResult {
-                    score: metrics::accuracy(&preds, &golds),
-                    em: 0.0,
-                    n: examples.len(),
-                })
-            }
-            TaskType::Generation => {
-                let max_new = examples.iter().map(|e| e.answer.len()).max().unwrap_or(2) + 1;
-                let gens = self.generate(params, &refs, max_new)?;
-                let mut f1 = 0.0;
-                let mut em = 0.0;
-                for (g, ex) in gens.iter().zip(examples) {
-                    // score against the answer without the trailing period
-                    let gold: Vec<u32> = ex.answer.clone();
-                    let pred = g.get(..gold.len().min(g.len())).unwrap_or(&[]).to_vec();
-                    f1 += metrics::token_f1(&pred, &gold);
-                    em += metrics::exact_match(&pred, &gold);
-                }
-                let n = examples.len().max(1);
-                Ok(EvalResult { score: f1 / n as f64, em: em / n as f64, n: examples.len() })
-            }
-        }
-    }
-
-    /// Pooled features for linear probing: the final hidden state at the
-    /// last context token (AR) / the mask position (MLM).
-    pub fn features(&self, params: &ParamStore, examples: &[&Example]) -> Result<Vec<Vec<f32>>> {
-        let art = self
-            .logits_art
-            .as_ref()
-            .expect("features require a logits artifact");
-        let (b, s) = (art.meta.batch, art.meta.seq);
-        let d = art.meta.dims.d_model;
-        let mut out: Vec<Vec<f32>> = Vec::with_capacity(examples.len());
-        let mut i = 0;
-        while i < examples.len() {
-            let chunk = &examples[i..(i + b).min(examples.len())];
-            let mut batch = Batch::zeros(b, s);
-            let mut pos = vec![0usize; chunk.len()];
-            for (row, ex) in chunk.iter().enumerate() {
-                if self.mlm {
-                    // context + [MASK] + suffix; feature at the mask slot
-                    let mut seq = ex.context.clone();
-                    let hole = seq.len();
-                    seq.push(crate::tokenizer::MASK);
-                    seq.extend_from_slice(&ex.suffix);
-                    batch.set_row(row, &seq, hole..hole + 1, true);
-                    pos[row] = hole;
-                } else {
-                    let seq = ex.context.clone();
-                    batch.set_row(row, &seq, 1..seq.len(), false);
-                    pos[row] = seq.len() - 1;
-                }
-            }
-            let res = art.run(params, Some(&batch), &[])?;
-            let hidden = vec_f32(&res[1])?; // (B, S, D)
-            for (row, _) in chunk.iter().enumerate() {
-                let base = row * s * d + pos[row] * d;
-                out.push(hidden[base..base + d].to_vec());
-            }
-            i += b;
-        }
-        Ok(out)
-    }
-}
+#[cfg(feature = "pjrt")]
+mod evaluator;
+#[cfg(feature = "pjrt")]
+pub use evaluator::{EvalResult, Evaluator};

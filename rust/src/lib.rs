@@ -5,19 +5,30 @@
 //!  - L1/L2 (build-time python): Pallas kernels + JAX transformer, AOT-lowered
 //!    to HLO text artifacts under `artifacts/`.
 //!  - L3 (this crate): the MeZO optimizer family operating **in place** on
-//!    rust-owned parameter buffers via a counter-based Gaussian stream, plus
-//!    the training / evaluation / baseline / experiment system. Python never
-//!    runs at runtime.
+//!    rust-owned parameter buffers via a counter-based Gaussian stream and
+//!    the blocked, multi-threaded [`zkernel`] engine, plus the training /
+//!    evaluation / baseline / experiment system. Python never runs at
+//!    runtime.
+//!
+//! Feature `pjrt` gates everything that needs the XLA/PJRT runtime
+//! (artifact execution: [`runtime`], [`train`], [`exp`], the evaluator and
+//! the CLI). The default build is the pure-rust optimizer/kernel substrate
+//! and is what tier-1 `cargo build --release && cargo test -q` verifies
+//! offline.
 pub mod baselines;
 pub mod data;
 pub mod eval;
+#[cfg(feature = "pjrt")]
 pub mod exp;
 pub mod memory;
 pub mod model;
 pub mod optim;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod storage;
 pub mod tokenizer;
+#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;
+pub mod zkernel;

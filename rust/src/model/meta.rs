@@ -123,6 +123,19 @@ impl ArtifactMeta {
     pub fn output_index(&self, name: &str) -> Option<usize> {
         self.outputs.iter().position(|o| o.name == name)
     }
+
+    /// Check a batch's (b, s) against the artifact ABI. Shared by
+    /// `Artifact::run` and `Artifact::run_perturbed` so the fast path
+    /// cannot silently accept a mis-shaped batch.
+    pub fn validate_batch(&self, b: usize, s: usize) -> Result<(), String> {
+        if b != self.batch || s != self.seq {
+            return Err(format!(
+                "batch shape ({},{}) != artifact ({},{})",
+                b, s, self.batch, self.seq
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -159,5 +172,16 @@ mod tests {
     #[test]
     fn rejects_missing_fields() {
         assert!(ArtifactMeta::parse("{}").is_err());
+    }
+
+    #[test]
+    fn validate_batch_accepts_abi_shape_and_rejects_others() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert!(m.validate_batch(8, 64).is_ok());
+        for (b, s) in [(4, 64), (8, 32), (16, 128), (0, 0)] {
+            let err = m.validate_batch(b, s).unwrap_err();
+            assert!(err.contains("batch shape"), "{}", err);
+            assert!(err.contains(&format!("({},{})", b, s)), "{}", err);
+        }
     }
 }

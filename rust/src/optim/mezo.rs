@@ -13,9 +13,23 @@
 //!  * MeZO-momentum and MeZO-Adam (B.2) — moment state is *recomputable*
 //!    from the (seed, projected_grad) history; we keep dense moments for
 //!    speed and verify the recomputation equivalence in tests.
+//!
+//! §Perf L4 — all parameter passes run on the blocked, multi-threaded
+//! [`crate::zkernel`] engine. Two consequences worth calling out:
+//!
+//! * every pass (perturb / restore / update / staging) generates z in
+//!   256-coordinate blocks and is chunked across threads by global offset,
+//!   which the counter-based stream makes bit-identical for any thread
+//!   count — the trajectory tests below pin this down;
+//! * the n-SPSA update is a **single pass** over θ: instead of applying n
+//!   per-seed updates back to back (n reads + n writes of every
+//!   coordinate), [`crate::zkernel::ZEngine::multi_sgd_update`] walks θ
+//!   once, applying all n `(seed, pgrad)` updates per coordinate in record
+//!   order — the same floating-point sequence, n× less parameter traffic.
 
 use crate::model::params::ParamStore;
 use crate::rng::{GaussianStream, Pcg};
+use crate::zkernel::{AdamParams, ZEngine};
 use anyhow::Result;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,6 +102,9 @@ pub struct MezoSgd {
     /// indices (into ParamStore) of the trainable tensors
     pub trainable: Vec<usize>,
     pub step: u64,
+    /// the blocked/threaded kernel engine every parameter pass runs on;
+    /// bit-identical for any `engine.threads` (see zkernel::tests)
+    pub engine: ZEngine,
     seed_rng: Pcg,
     /// (seed, projected_grad, lr) per applied z — the full trajectory
     pub history: Vec<StepRecord>,
@@ -104,6 +121,7 @@ impl MezoSgd {
             cfg,
             trainable,
             step: 0,
+            engine: ZEngine::default(),
             seed_rng: Pcg::new(master_seed),
             history: Vec::new(),
             m: None,
@@ -116,7 +134,7 @@ impl MezoSgd {
     /// tensors but indexing z by each tensor's *global* offset so every
     /// pass regenerates identical coordinates.
     pub fn perturb(&self, params: &mut ParamStore, seed: u64, scale: f32) {
-        perturb_tensors(params, &self.trainable, seed, scale);
+        perturb_tensors_with(&self.engine, params, &self.trainable, seed, scale);
     }
 
     /// current n per the sample schedule
@@ -174,8 +192,21 @@ impl MezoSgd {
         // apply the update(s)
         match self.cfg.flavor {
             Flavor::Sgd => {
-                for r in &records {
-                    self.apply_sgd(params, r.seed, r.pgrad / n as f32);
+                // §Perf L4: all n seeds applied in ONE pass over θ —
+                // per-coordinate update order is still record order, so the
+                // result is bit-identical to n sequential apply_sgd passes.
+                let zs: Vec<(GaussianStream, f32)> = records
+                    .iter()
+                    .map(|r| (GaussianStream::new(r.seed), r.pgrad / n as f32))
+                    .collect();
+                for &ti in &self.trainable {
+                    self.engine.multi_sgd_update(
+                        &zs,
+                        params.offsets[ti],
+                        &mut params.data[ti],
+                        lr,
+                        self.cfg.weight_decay,
+                    );
                 }
             }
             Flavor::Momentum | Flavor::Adam => {
@@ -193,6 +224,8 @@ impl MezoSgd {
     /// Semantically identical to `step` for the SGD flavor with n = 1 —
     /// same seed stream, same z, same update — but 3 z-passes instead of 4
     /// and no in-place perturb/restore writes (no float drift either).
+    /// pjrt builds only: needs the compiled artifact runtime.
+    #[cfg(feature = "pjrt")]
     pub fn step_artifact(
         &mut self,
         params: &mut ParamStore,
@@ -221,17 +254,18 @@ impl MezoSgd {
     }
 
     /// θ ← θ − lr·(g·z + wd·θ), regenerating z from the seed.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     fn apply_sgd(&self, params: &mut ParamStore, seed: u64, g: f32) {
         let stream = GaussianStream::new(seed);
-        let lr = self.cfg.lr;
-        let wd = self.cfg.weight_decay;
         for &ti in &self.trainable {
-            let off = params.offsets[ti];
-            let buf = &mut params.data[ti];
-            for (j, th) in buf.iter_mut().enumerate() {
-                let z = stream.z(off + j as u64);
-                *th -= lr * (g * z + wd * *th);
-            }
+            self.engine.sgd_update(
+                stream,
+                params.offsets[ti],
+                &mut params.data[ti],
+                self.cfg.lr,
+                g,
+                self.cfg.weight_decay,
+            );
         }
     }
 
@@ -253,8 +287,8 @@ impl MezoSgd {
         let n = records.len() as f32;
         let cfg = self.cfg.clone();
         let t = (self.step + 1) as f32;
-        let streams: Vec<GaussianStream> =
-            records.iter().map(|r| GaussianStream::new(r.seed)).collect();
+        let zs: Vec<(GaussianStream, f32)> =
+            records.iter().map(|r| (GaussianStream::new(r.seed), r.pgrad)).collect();
         // take the moment buffers out of self to sidestep aliasing with
         // the trainable-index iteration below
         let mut m = self.m.take().unwrap();
@@ -263,33 +297,30 @@ impl MezoSgd {
             let off = params.offsets[ti];
             let buf = &mut params.data[ti];
             let mk = &mut m[k];
-            let vk = v.as_mut().map(|v| &mut v[k]);
             match cfg.flavor {
                 Flavor::Momentum => {
-                    for j in 0..buf.len() {
-                        let mut g = 0.0f32;
-                        for (s, r) in streams.iter().zip(records) {
-                            g += r.pgrad * s.z(off + j as u64);
-                        }
-                        g = g / n + cfg.weight_decay * buf[j];
-                        mk[j] = cfg.momentum * mk[j] + g;
-                        buf[j] -= cfg.lr * mk[j];
-                    }
+                    self.engine.momentum_update(
+                        &zs, off, buf, mk, cfg.lr, cfg.weight_decay, cfg.momentum, n,
+                    );
                 }
                 Flavor::Adam => {
-                    let vk = vk.unwrap();
-                    for j in 0..buf.len() {
-                        let mut g = 0.0f32;
-                        for (s, r) in streams.iter().zip(records) {
-                            g += r.pgrad * s.z(off + j as u64);
-                        }
-                        g = g / n + cfg.weight_decay * buf[j];
-                        mk[j] = cfg.beta1 * mk[j] + (1.0 - cfg.beta1) * g;
-                        vk[j] = cfg.beta2 * vk[j] + (1.0 - cfg.beta2) * g * g;
-                        let mhat = mk[j] / (1.0 - cfg.beta1.powf(t));
-                        let vhat = vk[j] / (1.0 - cfg.beta2.powf(t));
-                        buf[j] -= cfg.lr * mhat / (vhat.sqrt() + cfg.adam_eps);
-                    }
+                    let vk = &mut v.as_mut().unwrap()[k];
+                    self.engine.adam_update(
+                        &zs,
+                        off,
+                        buf,
+                        mk,
+                        vk,
+                        AdamParams {
+                            lr: cfg.lr,
+                            wd: cfg.weight_decay,
+                            beta1: cfg.beta1,
+                            beta2: cfg.beta2,
+                            eps: cfg.adam_eps,
+                            t,
+                            n,
+                        },
+                    );
                 }
                 Flavor::Sgd => unreachable!(),
             }
@@ -300,15 +331,22 @@ impl MezoSgd {
 }
 
 /// θ += scale · z(seed) over the given tensors (shared with variance
-/// variants and trajectory replay).
+/// variants and trajectory replay), on the default kernel engine.
 pub fn perturb_tensors(params: &mut ParamStore, tensors: &[usize], seed: u64, scale: f32) {
+    perturb_tensors_with(&ZEngine::default(), params, tensors, seed, scale);
+}
+
+/// As [`perturb_tensors`], on an explicit engine (thread-count control).
+pub fn perturb_tensors_with(
+    engine: &ZEngine,
+    params: &mut ParamStore,
+    tensors: &[usize],
+    seed: u64,
+    scale: f32,
+) {
     let stream = GaussianStream::new(seed);
     for &ti in tensors {
-        let off = params.offsets[ti];
-        let buf = &mut params.data[ti];
-        for (j, th) in buf.iter_mut().enumerate() {
-            *th += scale * stream.z(off + j as u64);
-        }
+        engine.axpy_z(stream, params.offsets[ti], &mut params.data[ti], scale);
     }
 }
 
@@ -322,20 +360,22 @@ pub fn recompute_first_moment(
     beta_or_momentum: f32,
     adam_style: bool,
 ) -> Vec<Vec<f32>> {
+    let engine = ZEngine::default();
     let mut m: Vec<Vec<f32>> =
         trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect();
+    // records stay sequential (the EMA across steps doesn't commute);
+    // within a record each tensor runs on the blocked/threaded kernel
     for r in history {
         let stream = GaussianStream::new(r.seed);
         for (k, &ti) in trainable.iter().enumerate() {
-            let off = params.offsets[ti];
-            for j in 0..m[k].len() {
-                let g = r.pgrad * stream.z(off + j as u64);
-                m[k][j] = if adam_style {
-                    beta_or_momentum * m[k][j] + (1.0 - beta_or_momentum) * g
-                } else {
-                    beta_or_momentum * m[k][j] + g
-                };
-            }
+            engine.ema_z(
+                stream,
+                params.offsets[ti],
+                &mut m[k],
+                r.pgrad,
+                beta_or_momentum,
+                adam_style,
+            );
         }
     }
     m
@@ -476,6 +516,202 @@ mod tests {
         let dense = opt.m.as_ref().unwrap();
         for (a, b) in dense.iter().flatten().zip(recomputed.iter().flatten()) {
             assert!((a - b).abs() < 1e-5, "{} vs {}", a, b);
+        }
+    }
+
+    /// The seed implementation's step(), kept verbatim as a scalar
+    /// reference: per-element z() loops, n sequential SGD applications,
+    /// scalar moment updates. The kernel-based optimizer must reproduce
+    /// its trajectory bit for bit.
+    struct ScalarRef {
+        cfg: MezoConfig,
+        trainable: Vec<usize>,
+        step: u64,
+        seed_rng: Pcg,
+        history: Vec<StepRecord>,
+        m: Option<Vec<Vec<f32>>>,
+        v: Option<Vec<Vec<f32>>>,
+    }
+
+    impl ScalarRef {
+        fn new(cfg: MezoConfig, trainable: Vec<usize>, master_seed: u64) -> ScalarRef {
+            ScalarRef {
+                cfg,
+                trainable,
+                step: 0,
+                seed_rng: Pcg::new(master_seed),
+                history: Vec::new(),
+                m: None,
+                v: None,
+            }
+        }
+
+        fn perturb(&self, params: &mut ParamStore, seed: u64, scale: f32) {
+            let stream = GaussianStream::new(seed);
+            for &ti in &self.trainable {
+                let off = params.offsets[ti];
+                for (j, th) in params.data[ti].iter_mut().enumerate() {
+                    *th += scale * stream.z(off + j as u64);
+                }
+            }
+        }
+
+        fn apply_sgd(&self, params: &mut ParamStore, seed: u64, g: f32) {
+            let stream = GaussianStream::new(seed);
+            let (lr, wd) = (self.cfg.lr, self.cfg.weight_decay);
+            for &ti in &self.trainable {
+                let off = params.offsets[ti];
+                for (j, th) in params.data[ti].iter_mut().enumerate() {
+                    let z = stream.z(off + j as u64);
+                    *th -= lr * (g * z + wd * *th);
+                }
+            }
+        }
+
+        fn step<F>(&mut self, params: &mut ParamStore, mut loss: F) -> Result<()>
+        where
+            F: FnMut(&ParamStore) -> Result<f32>,
+        {
+            let n = self.cfg.n.max(1);
+            let eps = self.cfg.eps;
+            let lr = self.cfg.lr;
+            let mut records = Vec::with_capacity(n);
+            for _ in 0..n {
+                let seed = self.seed_rng.next_u64();
+                self.perturb(params, seed, eps);
+                let lp = loss(params)?;
+                self.perturb(params, seed, -2.0 * eps);
+                let lm = loss(params)?;
+                self.perturb(params, seed, eps);
+                let pgrad = (lp - lm) / (2.0 * eps);
+                records.push(StepRecord { seed, pgrad, lr });
+            }
+            match self.cfg.flavor {
+                Flavor::Sgd => {
+                    for r in &records {
+                        self.apply_sgd(params, r.seed, r.pgrad / n as f32);
+                    }
+                }
+                Flavor::Momentum | Flavor::Adam => self.apply_moments(params, &records),
+            }
+            self.history.extend(records);
+            self.step += 1;
+            Ok(())
+        }
+
+        fn apply_moments(&mut self, params: &mut ParamStore, records: &[StepRecord]) {
+            let cfg = self.cfg.clone();
+            if self.m.is_none() {
+                self.m = Some(
+                    self.trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect(),
+                );
+            }
+            if cfg.flavor == Flavor::Adam && self.v.is_none() {
+                self.v = Some(
+                    self.trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect(),
+                );
+            }
+            let n = records.len() as f32;
+            let t = (self.step + 1) as f32;
+            let streams: Vec<GaussianStream> =
+                records.iter().map(|r| GaussianStream::new(r.seed)).collect();
+            let mut m = self.m.take().unwrap();
+            let mut v = self.v.take();
+            for (k, &ti) in self.trainable.iter().enumerate() {
+                let off = params.offsets[ti];
+                let buf = &mut params.data[ti];
+                let mk = &mut m[k];
+                match cfg.flavor {
+                    Flavor::Momentum => {
+                        for j in 0..buf.len() {
+                            let mut g = 0.0f32;
+                            for (s, r) in streams.iter().zip(records) {
+                                g += r.pgrad * s.z(off + j as u64);
+                            }
+                            g = g / n + cfg.weight_decay * buf[j];
+                            mk[j] = cfg.momentum * mk[j] + g;
+                            buf[j] -= cfg.lr * mk[j];
+                        }
+                    }
+                    Flavor::Adam => {
+                        let vk = &mut v.as_mut().unwrap()[k];
+                        for j in 0..buf.len() {
+                            let mut g = 0.0f32;
+                            for (s, r) in streams.iter().zip(records) {
+                                g += r.pgrad * s.z(off + j as u64);
+                            }
+                            g = g / n + cfg.weight_decay * buf[j];
+                            mk[j] = cfg.beta1 * mk[j] + (1.0 - cfg.beta1) * g;
+                            vk[j] = cfg.beta2 * vk[j] + (1.0 - cfg.beta2) * g * g;
+                            let mhat = mk[j] / (1.0 - cfg.beta1.powf(t));
+                            let vhat = vk[j] / (1.0 - cfg.beta2.powf(t));
+                            buf[j] -= cfg.lr * mhat / (vhat.sqrt() + cfg.adam_eps);
+                        }
+                    }
+                    Flavor::Sgd => unreachable!(),
+                }
+            }
+            self.m = Some(m);
+            self.v = v;
+        }
+    }
+
+    /// larger-than-one-block tensors so the blocked path really blocks
+    fn big_params() -> ParamStore {
+        let specs = vec![
+            TensorDesc { name: "w1".into(), shape: vec![40, 20], dtype: "f32".into() },
+            TensorDesc { name: "w2".into(), shape: vec![300], dtype: "f32".into() },
+        ];
+        let mut p = ParamStore::from_specs(specs);
+        p.init(0);
+        p
+    }
+
+    #[test]
+    fn kernel_trajectory_is_bit_identical_to_scalar_reference() {
+        // the tentpole acceptance: same master seed => same StepRecord
+        // history (bitwise) and same final parameters (bitwise), for every
+        // flavor, n > 1, weight decay on, and across thread counts
+        for flavor in [Flavor::Sgd, Flavor::Momentum, Flavor::Adam] {
+            for threads in [1usize, 2, 8] {
+                let cfg = MezoConfig {
+                    lr: 1e-2,
+                    eps: 1e-3,
+                    weight_decay: 1e-4,
+                    n: 3,
+                    flavor,
+                    ..Default::default()
+                };
+                let master = 0xC0FFEE;
+                let mut p_ref = big_params();
+                let mut sref = ScalarRef::new(cfg.clone(), vec![0, 1], master);
+                let mut p_ker = big_params();
+                let mut opt = MezoSgd::new(cfg, vec![0, 1], master);
+                opt.engine = ZEngine::with_threads(threads);
+                for _ in 0..5 {
+                    sref.step(&mut p_ref, |p| quad_loss(p)).unwrap();
+                    opt.step(&mut p_ker, |p| quad_loss(p)).unwrap();
+                }
+                assert_eq!(sref.history.len(), opt.history.len());
+                for (a, b) in sref.history.iter().zip(&opt.history) {
+                    assert_eq!(a.seed, b.seed, "{:?} t={}", flavor, threads);
+                    assert_eq!(
+                        a.pgrad.to_bits(),
+                        b.pgrad.to_bits(),
+                        "{:?} t={}: pgrad {} vs {}",
+                        flavor, threads, a.pgrad, b.pgrad
+                    );
+                    assert_eq!(a.lr.to_bits(), b.lr.to_bits());
+                }
+                for (x, y) in p_ref.data.iter().flatten().zip(p_ker.data.iter().flatten()) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{:?} t={}: param {} vs {}",
+                        flavor, threads, x, y
+                    );
+                }
+            }
         }
     }
 

@@ -21,7 +21,8 @@ pub trait ZoStepper {
     fn records(&self) -> &[mezo::StepRecord];
     /// Optional fast path: a whole step against a loss artifact with the
     /// perturbation fused into the upload (see MezoSgd::step_artifact).
-    /// Returns None when the variant has no fast path.
+    /// Returns None when the variant has no fast path. pjrt builds only.
+    #[cfg(feature = "pjrt")]
     fn zo_step_artifact(
         &mut self,
         _params: &mut ParamStore,
@@ -35,6 +36,7 @@ pub trait ZoStepper {
 pub struct MezoStepper {
     pub inner: mezo::MezoSgd,
     fwd: usize,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     scratch: Vec<f32>,
     /// set false to force the reference in-place path (used by benches)
     pub use_fast_path: bool,
@@ -62,6 +64,7 @@ impl ZoStepper for MezoStepper {
     fn records(&self) -> &[mezo::StepRecord] {
         &self.inner.history
     }
+    #[cfg(feature = "pjrt")]
     fn zo_step_artifact(
         &mut self,
         params: &mut ParamStore,

@@ -8,8 +8,9 @@
 //! (Proposition 1: perturb only group ℓ and read |ℓ₊−ℓ₋|/2ε).
 
 use crate::model::params::ParamStore;
-use crate::optim::mezo::{perturb_tensors, StepRecord};
+use crate::optim::mezo::{perturb_tensors_with, StepRecord};
 use crate::rng::{GaussianStream, Pcg};
+use crate::zkernel::ZEngine;
 use anyhow::Result;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,6 +44,8 @@ pub struct ModifiedSpsa {
     pub trainable: Vec<usize>,
     /// per-trainable-tensor scale d_g (clamped away from zero)
     pub d: Vec<f32>,
+    /// blocked/threaded kernel engine for all z passes
+    pub engine: ZEngine,
     seed_rng: Pcg,
     pub step: u64,
     pub history: Vec<StepRecord>,
@@ -51,7 +54,15 @@ pub struct ModifiedSpsa {
 impl ModifiedSpsa {
     pub fn new(cfg: ModifiedSpsaConfig, trainable: Vec<usize>, seed: u64) -> ModifiedSpsa {
         let d = vec![1.0; trainable.len()];
-        ModifiedSpsa { cfg, trainable, d, seed_rng: Pcg::new(seed), step: 0, history: Vec::new() }
+        ModifiedSpsa {
+            cfg,
+            trainable,
+            d,
+            engine: ZEngine::default(),
+            seed_rng: Pcg::new(seed),
+            step: 0,
+            history: Vec::new(),
+        }
     }
 
     /// Proposition 1: ZO estimate of the gradient norm of group g —
@@ -68,11 +79,11 @@ impl ModifiedSpsa {
         let mut norms = Vec::with_capacity(self.trainable.len());
         for &ti in &self.trainable.clone() {
             let seed = self.seed_rng.next_u64();
-            perturb_tensors(params, &[ti], seed, eps);
+            perturb_tensors_with(&self.engine, params, &[ti], seed, eps);
             let lp = loss(params)?;
-            perturb_tensors(params, &[ti], seed, -2.0 * eps);
+            perturb_tensors_with(&self.engine, params, &[ti], seed, -2.0 * eps);
             let lm = loss(params)?;
-            perturb_tensors(params, &[ti], seed, eps);
+            perturb_tensors_with(&self.engine, params, &[ti], seed, eps);
             norms.push(((lp - lm) / (2.0 * eps)).abs());
         }
         Ok(norms)
@@ -97,16 +108,14 @@ impl ModifiedSpsa {
         Ok(())
     }
 
-    /// perturb θ_g += scale · d_mult_g · z
+    /// perturb θ_g += scale · d_mult_g · z — a per-tensor axpy on the
+    /// kernel engine, with the group scale folded into the coefficient
+    /// (same multiplication order as the scalar loop it replaced).
     fn perturb_scaled(&self, params: &mut ParamStore, seed: u64, scale: f32, inverse: bool) {
         let stream = GaussianStream::new(seed);
         for (k, &ti) in self.trainable.iter().enumerate() {
             let dg = if inverse { 1.0 / self.d[k] } else { self.d[k] };
-            let off = params.offsets[ti];
-            let buf = &mut params.data[ti];
-            for (j, th) in buf.iter_mut().enumerate() {
-                *th += scale * dg * stream.z(off + j as u64);
-            }
+            self.engine.axpy_z(stream, params.offsets[ti], &mut params.data[ti], scale * dg);
         }
     }
 
@@ -130,18 +139,20 @@ impl ModifiedSpsa {
         let lm = loss(params)?;
         self.perturb_scaled(params, seed, eps, true);
         let g = (lp - lm) / (2.0 * eps);
-        // update with d ⊙ z (Def. 6) or plain z (Def. 7)
+        // update with d ⊙ z (Def. 6) or plain z (Def. 7): θ −= (lr·g·dg)·z
+        // is an axpy with a negated coefficient (IEEE negation is exact)
         let stream = GaussianStream::new(seed);
         for (k, &ti) in self.trainable.iter().enumerate() {
             let dg = match self.cfg.mode {
                 Mode::Variance => self.d[k],
                 Mode::Expectation => 1.0,
             };
-            let off = params.offsets[ti];
-            let buf = &mut params.data[ti];
-            for (j, th) in buf.iter_mut().enumerate() {
-                *th -= self.cfg.lr * g * dg * stream.z(off + j as u64);
-            }
+            self.engine.axpy_z(
+                stream,
+                params.offsets[ti],
+                &mut params.data[ti],
+                -(self.cfg.lr * g * dg),
+            );
         }
         self.history.push(StepRecord { seed, pgrad: g, lr: self.cfg.lr });
         self.step += 1;

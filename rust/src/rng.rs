@@ -53,11 +53,21 @@ impl Pcg {
         self.next_f64() as f32
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n), bias-free: `next_u64() % n` alone favors
+    /// small residues once n doesn't divide 2^64, so draws outside the
+    /// largest multiple of n are rejected and redrawn (expected < 2 draws
+    /// for any n; exactly 1 for powers of two up to a 2^-63 sliver).
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
         debug_assert!(n > 0);
-        (self.next_u64() % n as u64) as usize
+        let n = n as u64;
+        let zone = u64::MAX - u64::MAX % n; // largest multiple of n <= 2^64
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
     }
 
     /// Uniform in [lo, hi).
@@ -168,48 +178,74 @@ impl GaussianStream {
     /// i-th standard normal coordinate of z.
     #[inline]
     pub fn z(&self, i: u64) -> f32 {
-        let t = zig_tables();
-        let mut e = splitmix64(self.seed ^ i.wrapping_mul(0x8CB92BA72F3D8DD7));
-        loop {
-            let v = e;
-            let layer = (v & 0x7F) as usize;
-            let u = signed_unit(v);
-            // fast path: strictly inside the layer rectangle
-            if u.abs() < t.r[layer] {
-                return (u * t.x[layer]) as f32;
-            }
-            e = splitmix64(e ^ 0x2545F4914F6CDD1D);
-            if layer == 0 {
-                // tail beyond R
-                let neg = u < 0.0;
-                loop {
-                    let a = unit_open(e);
-                    e = splitmix64(e ^ 0x9E3779B97F4A7C15);
-                    let b = unit_open(e);
-                    e = splitmix64(e ^ 0x9E3779B97F4A7C15);
-                    let x = a.ln() / ZIG_R;
-                    let y = b.ln();
-                    if -2.0 * y >= x * x {
-                        return if neg { (x - ZIG_R) as f32 } else { (ZIG_R - x) as f32 };
-                    }
-                }
-            }
-            // wedge: accept with the exact density
-            let x = u * t.x[layer];
-            let f0 = (-0.5 * (t.x[layer] * t.x[layer] - x * x)).exp();
-            let f1 = (-0.5 * (t.x[layer + 1] * t.x[layer + 1] - x * x)).exp();
-            let y = unit_open(e);
-            e = splitmix64(e ^ 0x2545F4914F6CDD1D);
-            if f1 + y * (f0 - f1) < 1.0 {
-                return x as f32;
-            }
-        }
+        z_at(zig_tables(), self.seed, i)
     }
 
-    /// Fill `out` with coordinates [offset, offset+len) of z.
+    /// Fill `out` with coordinates [offset, offset+len) of z — the blocked
+    /// primitive under `zkernel`. The ziggurat tables are resolved ONCE per
+    /// call instead of once per coordinate (the per-`z()` `OnceLock` load
+    /// is the dispatch overhead the block amortizes), and the slow paths
+    /// are kept out of the hot loop so it vectorizes.
     pub fn fill(&self, out: &mut [f32], offset: u64) {
+        let t = zig_tables();
+        let seed = self.seed;
         for (j, o) in out.iter_mut().enumerate() {
-            *o = self.z(offset + j as u64);
+            *o = z_at(t, seed, offset + j as u64);
+        }
+    }
+}
+
+/// Ziggurat sample for counter `i` of `seed`, with the tables hoisted by
+/// the caller. Bit-for-bit the historical `GaussianStream::z`: same mixing,
+/// same rejection chain, so blocked and scalar paths are interchangeable.
+#[inline(always)]
+fn z_at(t: &ZigTables, seed: u64, i: u64) -> f32 {
+    let e = splitmix64(seed ^ i.wrapping_mul(0x8CB92BA72F3D8DD7));
+    let v = e;
+    let layer = (v & 0x7F) as usize;
+    let u = signed_unit(v);
+    // fast path (~98.5%): strictly inside the layer rectangle
+    if u.abs() < t.r[layer] {
+        return (u * t.x[layer]) as f32;
+    }
+    z_slow(t, e, layer, u)
+}
+
+/// Tail + wedge rejection chain, out of line to keep `z_at` small.
+#[cold]
+fn z_slow(t: &ZigTables, mut e: u64, mut layer: usize, mut u: f64) -> f32 {
+    loop {
+        e = splitmix64(e ^ 0x2545F4914F6CDD1D);
+        if layer == 0 {
+            // tail beyond R
+            let neg = u < 0.0;
+            loop {
+                let a = unit_open(e);
+                e = splitmix64(e ^ 0x9E3779B97F4A7C15);
+                let b = unit_open(e);
+                e = splitmix64(e ^ 0x9E3779B97F4A7C15);
+                let x = a.ln() / ZIG_R;
+                let y = b.ln();
+                if -2.0 * y >= x * x {
+                    return if neg { (x - ZIG_R) as f32 } else { (ZIG_R - x) as f32 };
+                }
+            }
+        }
+        // wedge: accept with the exact density
+        let x = u * t.x[layer];
+        let f0 = (-0.5 * (t.x[layer] * t.x[layer] - x * x)).exp();
+        let f1 = (-0.5 * (t.x[layer + 1] * t.x[layer + 1] - x * x)).exp();
+        let y = unit_open(e);
+        e = splitmix64(e ^ 0x2545F4914F6CDD1D);
+        if f1 + y * (f0 - f1) < 1.0 {
+            return x as f32;
+        }
+        // retry: re-derive a fresh candidate from the advanced chain
+        let v = e;
+        layer = (v & 0x7F) as usize;
+        u = signed_unit(v);
+        if u.abs() < t.r[layer] {
+            return (u * t.x[layer]) as f32;
         }
     }
 }
@@ -290,6 +326,79 @@ mod tests {
         assert!(mean.abs() < 0.01, "mean {}", mean);
         assert!((var - 1.0).abs() < 0.02, "var {}", var);
         assert!(corr.abs() < 0.02, "lag-1 corr {}", corr);
+    }
+
+    #[test]
+    fn below_is_uniform_and_in_range() {
+        // rejection sampling: every residue class equally likely, including
+        // for n that don't divide 2^64 (the old `% n` path was biased)
+        let mut r = Pcg::new(11);
+        for n in [1usize, 2, 3, 6, 7, 100, 1000] {
+            let draws = 6000 * n.min(10);
+            let mut counts = vec![0usize; n];
+            for _ in 0..draws {
+                let v = r.below(n);
+                assert!(v < n);
+                counts[v] += 1;
+            }
+            if n <= 10 {
+                let expect = draws as f64 / n as f64;
+                for (v, &c) in counts.iter().enumerate() {
+                    let dev = (c as f64 - expect).abs() / expect;
+                    assert!(dev < 0.08, "n={} v={} count={} expect={}", n, v, c, expect);
+                }
+            }
+        }
+        // n = 1 never consumes more than it must and is always 0
+        assert_eq!(Pcg::new(1).below(1), 0);
+    }
+
+    #[test]
+    fn stream_matches_golden_values() {
+        // Pin the historical stream against an INDEPENDENT reference (a
+        // u64-exact simulation of the pre-refactor algorithm), so a future
+        // rewrite of z_at/z_slow can't silently change the sequence while
+        // the self-referential bit-equality tests keep passing.
+        // The splitmix64 chain is pure integer — exact on every platform.
+        assert_eq!(splitmix64(0), 0xE220A8397B1DCDAF);
+        assert_eq!(splitmix64(1), 0x910A2DEC89025CC1);
+        assert_eq!(splitmix64(0xDEADBEEF), 0x4ADFB90F68C9EB9B);
+        // z values cross exp/ln (libm), which is not bit-standardized
+        // across platforms — a loose tolerance still catches any
+        // structural change (reordered advances redraw entirely different
+        // values), while tolerating sub-ULP libm variance. Coordinates
+        // cover all three sampling paths: fast (0-3), wedge (202),
+        // tail (635).
+        let g = GaussianStream::new(42);
+        for (i, want) in [
+            (0u64, -0.17022095620632172f32),
+            (1, 0.22029227018356323),
+            (2, 1.6747004985809326),
+            (3, -1.1382853984832764),
+            (202, -0.004617972299456596), // wedge path
+            (635, 3.5719919204711914),    // tail path
+        ] {
+            let got = g.z(i);
+            assert!(
+                (got - want).abs() < 1e-5,
+                "z({}) = {} drifted from golden {}",
+                i, got, want
+            );
+        }
+    }
+
+    #[test]
+    fn fill_matches_scalar_z_exactly() {
+        // the blocked fill (hoisted tables + out-of-line slow path) must be
+        // bit-identical to per-coordinate z(), slow paths included
+        let g = GaussianStream::new(99);
+        let n = 100_000usize;
+        let mut buf = vec![0.0f32; n];
+        g.fill(&mut buf, 5);
+        for (j, &v) in buf.iter().enumerate() {
+            let want = g.z(5 + j as u64);
+            assert_eq!(v.to_bits(), want.to_bits(), "coord {}", j);
+        }
     }
 
     #[test]

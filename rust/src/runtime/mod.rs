@@ -118,12 +118,7 @@ impl Artifact {
             match bi.name.as_str() {
                 "input_ids" | "targets" | "loss_mask" | "attn_mask" => {
                     let b = batch.ok_or_else(|| anyhow!("artifact needs a batch"))?;
-                    if b.b != m.batch || b.s != m.seq {
-                        bail!(
-                            "batch shape ({},{}) != artifact ({},{})",
-                            b.b, b.s, m.batch, m.seq
-                        );
-                    }
+                    m.validate_batch(b.b, b.s).map_err(|e| anyhow!("{}", e))?;
                     let lit = match bi.name.as_str() {
                         "input_ids" => i32_literal(&bi.shape, &b.input_ids)?,
                         "targets" => i32_literal(&bi.shape, &b.targets)?,
@@ -166,31 +161,40 @@ impl Artifact {
     ) -> Result<Vec<Literal>> {
         let m = &self.meta;
         let stream = crate::rng::GaussianStream::new(seed);
+        let engine = crate::zkernel::ZEngine::default();
         let mut inputs: Vec<Literal> =
             Vec::with_capacity(m.params.len() + m.batch_inputs.len());
         for (ti, (spec, buf)) in params.specs.iter().zip(&params.data).enumerate() {
             if trainable.get(ti).copied().unwrap_or(false) {
-                scratch.clear();
-                scratch.reserve(buf.len());
-                let off = params.offsets[ti];
-                for (j, &th) in buf.iter().enumerate() {
-                    scratch.push(th + scale * stream.z(off + j as u64));
+                // §Perf L4: θ + scale·z written straight into the staging
+                // buffer by the blocked/threaded perturb_into kernel
+                // (grow-only resize: the kernel overwrites every element,
+                // so no per-call zero-fill of the reused buffer)
+                if scratch.len() < buf.len() {
+                    scratch.resize(buf.len(), 0.0);
                 }
-                inputs.push(f32_literal(&spec.shape, scratch)?);
+                let dst = &mut scratch[..buf.len()];
+                engine.perturb_into(stream, params.offsets[ti], buf, scale, dst);
+                inputs.push(f32_literal(&spec.shape, dst)?);
             } else {
                 inputs.push(f32_literal(&spec.shape, buf)?);
             }
         }
-        for bi in &m.batch_inputs {
+        if !m.batch_inputs.is_empty() {
             let b = batch.ok_or_else(|| anyhow!("artifact needs a batch"))?;
-            let lit = match bi.name.as_str() {
-                "input_ids" => i32_literal(&bi.shape, &b.input_ids)?,
-                "targets" => i32_literal(&bi.shape, &b.targets)?,
-                "loss_mask" => f32_literal(&bi.shape, &b.loss_mask)?,
-                "attn_mask" => f32_literal(&bi.shape, &b.attn_mask)?,
-                other => bail!("run_perturbed: unsupported extra input {}", other),
-            };
-            inputs.push(lit);
+            // same ABI guard as Artifact::run — the fast path must reject
+            // mis-shaped batches instead of uploading garbage
+            m.validate_batch(b.b, b.s).map_err(|e| anyhow!("{}", e))?;
+            for bi in &m.batch_inputs {
+                let lit = match bi.name.as_str() {
+                    "input_ids" => i32_literal(&bi.shape, &b.input_ids)?,
+                    "targets" => i32_literal(&bi.shape, &b.targets)?,
+                    "loss_mask" => f32_literal(&bi.shape, &b.loss_mask)?,
+                    "attn_mask" => f32_literal(&bi.shape, &b.attn_mask)?,
+                    other => bail!("run_perturbed: unsupported extra input {}", other),
+                };
+                inputs.push(lit);
+            }
         }
         let result = self.exe.execute::<Literal>(&inputs)?;
         self.execs.set(self.execs.get() + 1);

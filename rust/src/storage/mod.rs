@@ -9,6 +9,7 @@
 use crate::model::params::ParamStore;
 use crate::optim::mezo::StepRecord;
 use crate::rng::GaussianStream;
+use crate::zkernel::ZEngine;
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -39,17 +40,25 @@ impl Trajectory {
     }
 
     /// Re-apply every recorded update in order: θ ← θ − lr·g·z(seed).
-    /// No forward passes, no data — just the log.
+    /// No forward passes, no data — just the log. Records stay sequential
+    /// (each z regenerates from its own seed); within a record every
+    /// tensor runs as one blocked/threaded axpy with coefficient −lr·g.
     pub fn replay(&self, params: &mut ParamStore) {
+        self.replay_with(&ZEngine::default(), params)
+    }
+
+    /// As [`Trajectory::replay`], on an explicit kernel engine.
+    pub fn replay_with(&self, engine: &ZEngine, params: &mut ParamStore) {
         let idxs = params.indices_of(&self.trainable);
         for r in &self.records {
             let stream = GaussianStream::new(r.seed);
             for &ti in &idxs {
-                let off = params.offsets[ti];
-                let buf = &mut params.data[ti];
-                for (j, th) in buf.iter_mut().enumerate() {
-                    *th -= r.lr * r.pgrad * stream.z(off + j as u64);
-                }
+                engine.axpy_z(
+                    stream,
+                    params.offsets[ti],
+                    &mut params.data[ti],
+                    -(r.lr * r.pgrad),
+                );
             }
         }
     }

@@ -1,0 +1,221 @@
+//! Serial (per-chunk) bodies of the fused z-kernels.
+//!
+//! Every function here processes one contiguous chunk whose first
+//! coordinate has global z-index `offset`. The pattern is uniform: fill a
+//! [`BLOCK`]-sized stack buffer from the counter-based stream (one
+//! ziggurat-table resolve per block instead of per coordinate), then run
+//! the fused arithmetic over the block in a tight loop the compiler can
+//! vectorize.
+//!
+//! BIT-EXACTNESS CONTRACT: each kernel performs, per coordinate, exactly
+//! the floating-point operations (same order, same associativity) as the
+//! scalar seed loops it replaced. That is what makes blocked/threaded
+//! execution interchangeable with the historical code and with itself at
+//! any thread count — see `zkernel::tests`.
+
+use super::{AdamParams, BLOCK};
+use crate::rng::GaussianStream;
+
+/// θ[j] += s · z(offset + j)
+pub(super) fn axpy_serial(stream: GaussianStream, offset: u64, theta: &mut [f32], s: f32) {
+    let mut zb = [0.0f32; BLOCK];
+    let mut i = 0;
+    while i < theta.len() {
+        let n = BLOCK.min(theta.len() - i);
+        stream.fill(&mut zb[..n], offset + i as u64);
+        for (th, &z) in theta[i..i + n].iter_mut().zip(&zb[..n]) {
+            *th += s * z;
+        }
+        i += n;
+    }
+}
+
+/// out[j] = θ[j] + s · z(offset + j)
+pub(super) fn perturb_into_serial(
+    stream: GaussianStream,
+    offset: u64,
+    theta: &[f32],
+    s: f32,
+    out: &mut [f32],
+) {
+    let mut zb = [0.0f32; BLOCK];
+    let mut i = 0;
+    while i < out.len() {
+        let n = BLOCK.min(out.len() - i);
+        stream.fill(&mut zb[..n], offset + i as u64);
+        for ((o, &th), &z) in out[i..i + n].iter_mut().zip(&theta[i..i + n]).zip(&zb[..n]) {
+            *o = th + s * z;
+        }
+        i += n;
+    }
+}
+
+/// θ[j] −= lr · (g · z(offset + j) + wd · θ[j])
+pub(super) fn sgd_serial(
+    stream: GaussianStream,
+    offset: u64,
+    theta: &mut [f32],
+    lr: f32,
+    g: f32,
+    wd: f32,
+) {
+    let mut zb = [0.0f32; BLOCK];
+    let mut i = 0;
+    while i < theta.len() {
+        let n = BLOCK.min(theta.len() - i);
+        stream.fill(&mut zb[..n], offset + i as u64);
+        for (th, &z) in theta[i..i + n].iter_mut().zip(&zb[..n]) {
+            *th -= lr * (g * z + wd * *th);
+        }
+        i += n;
+    }
+}
+
+/// All n-SPSA updates in one pass: per coordinate, the (stream, g) updates
+/// apply in slice order — the same operation sequence as n separate
+/// `sgd_serial` passes, with θ read and written once.
+pub(super) fn multi_sgd_serial(
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    theta: &mut [f32],
+    lr: f32,
+    wd: f32,
+) {
+    let k = zs.len();
+    let mut zb = vec![0.0f32; k * BLOCK];
+    let mut i = 0;
+    while i < theta.len() {
+        let n = BLOCK.min(theta.len() - i);
+        for (kk, &(stream, _)) in zs.iter().enumerate() {
+            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+        }
+        for (j, th) in theta[i..i + n].iter_mut().enumerate() {
+            for (kk, &(_, g)) in zs.iter().enumerate() {
+                let z = zb[kk * BLOCK + j];
+                *th -= lr * (g * z + wd * *th);
+            }
+        }
+        i += n;
+    }
+}
+
+/// Fused momentum update over a record batch:
+/// g = (Σᵢ gᵢ·zᵢ)/n + wd·θ;  m = μ·m + g;  θ −= lr·m
+#[allow(clippy::too_many_arguments)]
+pub(super) fn momentum_serial(
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    theta: &mut [f32],
+    m: &mut [f32],
+    lr: f32,
+    wd: f32,
+    momentum: f32,
+    n_records: f32,
+) {
+    let k = zs.len();
+    let mut zb = vec![0.0f32; k * BLOCK];
+    let mut i = 0;
+    while i < theta.len() {
+        let n = BLOCK.min(theta.len() - i);
+        for (kk, &(stream, _)) in zs.iter().enumerate() {
+            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+        }
+        for j in 0..n {
+            let th = &mut theta[i + j];
+            let mk = &mut m[i + j];
+            let mut g = 0.0f32;
+            for (kk, &(_, pg)) in zs.iter().enumerate() {
+                g += pg * zb[kk * BLOCK + j];
+            }
+            g = g / n_records + wd * *th;
+            *mk = momentum * *mk + g;
+            *th -= lr * *mk;
+        }
+        i += n;
+    }
+}
+
+/// Fused Adam update over a record batch (bias-corrected).
+pub(super) fn adam_serial(
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    p: AdamParams,
+) {
+    let k = zs.len();
+    let mut zb = vec![0.0f32; k * BLOCK];
+    // same value per coordinate in the seed loop; hoisted here
+    let bc1 = 1.0 - p.beta1.powf(p.t);
+    let bc2 = 1.0 - p.beta2.powf(p.t);
+    let mut i = 0;
+    while i < theta.len() {
+        let n = BLOCK.min(theta.len() - i);
+        for (kk, &(stream, _)) in zs.iter().enumerate() {
+            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+        }
+        for j in 0..n {
+            let th = &mut theta[i + j];
+            let mk = &mut m[i + j];
+            let vk = &mut v[i + j];
+            let mut g = 0.0f32;
+            for (kk, &(_, pg)) in zs.iter().enumerate() {
+                g += pg * zb[kk * BLOCK + j];
+            }
+            g = g / p.n + p.wd * *th;
+            *mk = p.beta1 * *mk + (1.0 - p.beta1) * g;
+            *vk = p.beta2 * *vk + (1.0 - p.beta2) * g * g;
+            let mhat = *mk / bc1;
+            let vhat = *vk / bc2;
+            *th -= p.lr * mhat / (vhat.sqrt() + p.eps);
+        }
+        i += n;
+    }
+}
+
+/// m = β·m + (1−β)·(pgrad·z) (Adam-style) or m = β·m + pgrad·z.
+pub(super) fn ema_serial(
+    stream: GaussianStream,
+    offset: u64,
+    m: &mut [f32],
+    pgrad: f32,
+    beta: f32,
+    adam_style: bool,
+) {
+    let mut zb = [0.0f32; BLOCK];
+    let mut i = 0;
+    while i < m.len() {
+        let n = BLOCK.min(m.len() - i);
+        stream.fill(&mut zb[..n], offset + i as u64);
+        for (mk, &z) in m[i..i + n].iter_mut().zip(&zb[..n]) {
+            let g = pgrad * z;
+            *mk = if adam_style { beta * *mk + (1.0 - beta) * g } else { beta * *mk + g };
+        }
+        i += n;
+    }
+}
+
+/// out[jj] = base[jj] + scale · Σᵢ z((start+jj)·d_low + i)·v[i]
+/// (`start` = chunk offset in rows; each row's z-range is contiguous, so
+/// the row fills through the blocked path.)
+pub(super) fn project_rows_serial(
+    stream: GaussianStream,
+    d_low: usize,
+    v: &[f32],
+    base: &[f32],
+    scale: f32,
+    out: &mut [f32],
+    start: usize,
+) {
+    let mut zrow = vec![0.0f32; d_low];
+    for (jj, (o, &b)) in out.iter_mut().zip(base).enumerate() {
+        let row = (start + jj) as u64 * d_low as u64;
+        stream.fill(&mut zrow, row);
+        let mut acc = 0.0f32;
+        for (&zr, &vi) in zrow.iter().zip(v) {
+            acc += zr * vi;
+        }
+        *o = b + scale * acc;
+    }
+}

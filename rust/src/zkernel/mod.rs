@@ -1,0 +1,376 @@
+//! zkernel — blocked, multi-threaded kernels for every MeZO parameter pass.
+//!
+//! Each MeZO step walks the full parameter vector several times (perturb
+//! +ε, perturb −2ε, restore, update), and every coordinate needs the same
+//! `z(i)` regenerated from the counter-based [`GaussianStream`]. The seed
+//! implementation paid a per-element `z()` call inside single-threaded
+//! loops copy-pasted across the optimizers, the runtime staging path, the
+//! baselines and trajectory replay. This module is the single home for
+//! those passes, organised around two ideas:
+//!
+//! 1. **Blocked generation** — z is produced [`BLOCK`] coordinates at a
+//!    time into a stack buffer ([`GaussianStream::fill`] hoists the
+//!    ziggurat table lookup out of the per-coordinate path and keeps the
+//!    rejection slow path out of line), and the consuming arithmetic runs
+//!    over the block as a tight, vectorizable loop.
+//! 2. **Deterministic parallelism** — the stream is counter-based (pure in
+//!    `(seed, index)`), so a tensor can be chunked by *global offset* and
+//!    the chunks processed by any number of threads with bit-identical
+//!    results: every coordinate's value and update arithmetic depend only
+//!    on its own index. [`ZEngine`] carves buffers into block-aligned
+//!    ranges and fans them out with `std::thread::scope`; thread count 1
+//!    and thread count N produce the same bits (covered by tests).
+//!
+//! The fused kernels (see [`ZEngine`]'s methods, bodies in `kernels.rs`):
+//!
+//! * [`ZEngine::fill_z`] — z into a buffer (bench/reference primitive)
+//! * [`ZEngine::axpy_z`] — θ += s·z (perturb / restore, variance-scaled
+//!   perturbations, trajectory replay with s = −lr·g)
+//! * [`ZEngine::perturb_into`] — out = θ + s·z (runtime literal staging
+//!   without touching θ)
+//! * [`ZEngine::sgd_update`] — θ −= lr·(g·z + wd·θ) in one pass
+//! * [`ZEngine::multi_sgd_update`] — the n-SPSA update Σᵢ over seeds in
+//!   ONE pass over θ instead of n (§Perf L4 in optim::mezo)
+//! * [`ZEngine::momentum_update`] / [`ZEngine::adam_update`] — fused
+//!   moment + parameter updates over the step's record batch
+//! * [`ZEngine::ema_z`] — moment recomputation from a (seed, pgrad) log
+//! * [`ZEngine::project_rows`] — out = base + scale·(Z·v) for the BBT
+//!   random-projection baseline
+//!
+//! Every kernel is bit-for-bit equivalent to the scalar per-coordinate
+//! reference (same per-coordinate operation order as the seed code); the
+//! tests in this module enforce that across thread counts 1/2/8 and across
+//! block-boundary lengths and offsets.
+
+mod kernels;
+
+use crate::rng::GaussianStream;
+use std::sync::OnceLock;
+
+/// Coordinates generated per ziggurat dispatch; one 1 KiB stack buffer.
+pub const BLOCK: usize = 256;
+
+/// Below this many coordinates per thread, spawning is pure overhead.
+const PAR_MIN: usize = 16 * 1024;
+
+/// Process default thread count: `MEZO_THREADS` or the hardware's.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("MEZO_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// The kernel engine: a thread budget plus the dispatch scaffolding. Copy,
+/// cheap, stateless — optimizers embed one and tests vary `threads` to
+/// prove bit-stability.
+#[derive(Debug, Clone, Copy)]
+pub struct ZEngine {
+    pub threads: usize,
+}
+
+impl Default for ZEngine {
+    fn default() -> ZEngine {
+        ZEngine { threads: default_threads() }
+    }
+}
+
+impl ZEngine {
+    pub fn with_threads(threads: usize) -> ZEngine {
+        ZEngine { threads: threads.max(1) }
+    }
+
+    /// Block-aligned contiguous ranges covering [0, len), at most
+    /// `self.threads` of them and at least `min_per_thread` coordinates
+    /// each (so small tensors stay single-threaded).
+    fn ranges(&self, len: usize, min_per_thread: usize) -> Vec<(usize, usize)> {
+        let cap = if min_per_thread == 0 {
+            self.threads
+        } else {
+            (len / min_per_thread).max(1).min(self.threads)
+        };
+        if cap <= 1 || len == 0 {
+            return vec![(0, len)];
+        }
+        let blocks = (len + BLOCK - 1) / BLOCK;
+        let per = ((blocks + cap - 1) / cap) * BLOCK;
+        let mut out = Vec::with_capacity(cap);
+        let mut start = 0;
+        while start < len {
+            let end = (start + per).min(len);
+            out.push((start, end));
+            start = end;
+        }
+        out
+    }
+
+    /// Run `f(start, chunk)` over disjoint chunks of `data` in parallel.
+    /// `start` is the chunk's offset within `data`, so kernels index z by
+    /// `global_offset + start + j` and stay chunking-invariant.
+    fn run<F>(&self, data: &mut [f32], min_per_thread: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let ranges = self.ranges(data.len(), min_per_thread);
+        if ranges.len() <= 1 {
+            f(0, data);
+            return;
+        }
+        let fr = &f;
+        let mut rest = data;
+        std::thread::scope(|sc| {
+            for &(start, end) in &ranges {
+                // mem::take keeps the carved chunk at the outer lifetime
+                // (a plain reborrow would not outlive the loop body)
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                rest = tail;
+                sc.spawn(move || fr(start, chunk));
+            }
+        });
+    }
+
+    /// As `run`, but with a read-only source carved in lockstep
+    /// (perturb-into-staging shape: src θ, dst literal buffer).
+    fn run_src<F>(&self, src: &[f32], dst: &mut [f32], min_per_thread: usize, f: F)
+    where
+        F: Fn(usize, &[f32], &mut [f32]) + Sync,
+    {
+        assert_eq!(src.len(), dst.len(), "zkernel: src/dst length mismatch");
+        let ranges = self.ranges(dst.len(), min_per_thread);
+        if ranges.len() <= 1 {
+            f(0, src, dst);
+            return;
+        }
+        let fr = &f;
+        let mut rest = dst;
+        std::thread::scope(|sc| {
+            for &(start, end) in &ranges {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                rest = tail;
+                let s = &src[start..end];
+                sc.spawn(move || fr(start, s, chunk));
+            }
+        });
+    }
+
+    /// As `run`, over two mutable buffers carved in lockstep (θ + moment).
+    fn run2<F>(&self, a: &mut [f32], b: &mut [f32], min_per_thread: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "zkernel: buffer length mismatch");
+        let ranges = self.ranges(a.len(), min_per_thread);
+        if ranges.len() <= 1 {
+            f(0, a, b);
+            return;
+        }
+        let fr = &f;
+        let mut rest_a = a;
+        let mut rest_b = b;
+        std::thread::scope(|sc| {
+            for &(start, end) in &ranges {
+                let (ca, ta) = std::mem::take(&mut rest_a).split_at_mut(end - start);
+                let (cb, tb) = std::mem::take(&mut rest_b).split_at_mut(end - start);
+                rest_a = ta;
+                rest_b = tb;
+                sc.spawn(move || fr(start, ca, cb));
+            }
+        });
+    }
+
+    /// As `run`, over three mutable buffers (θ + first + second moment).
+    fn run3<F>(&self, a: &mut [f32], b: &mut [f32], c: &mut [f32], min_per_thread: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "zkernel: buffer length mismatch");
+        assert_eq!(a.len(), c.len(), "zkernel: buffer length mismatch");
+        let ranges = self.ranges(a.len(), min_per_thread);
+        if ranges.len() <= 1 {
+            f(0, a, b, c);
+            return;
+        }
+        let fr = &f;
+        let mut rest_a = a;
+        let mut rest_b = b;
+        let mut rest_c = c;
+        std::thread::scope(|sc| {
+            for &(start, end) in &ranges {
+                let (ca, ta) = std::mem::take(&mut rest_a).split_at_mut(end - start);
+                let (cb, tb) = std::mem::take(&mut rest_b).split_at_mut(end - start);
+                let (cc, tc) = std::mem::take(&mut rest_c).split_at_mut(end - start);
+                rest_a = ta;
+                rest_b = tb;
+                rest_c = tc;
+                sc.spawn(move || fr(start, ca, cb, cc));
+            }
+        });
+    }
+
+    // ---------------- public kernels (serial bodies in kernels.rs) -------
+
+    /// out[j] = z(offset + j).
+    pub fn fill_z(&self, stream: GaussianStream, offset: u64, out: &mut [f32]) {
+        self.run(out, PAR_MIN, |start, chunk| {
+            stream.fill(chunk, offset + start as u64);
+        });
+    }
+
+    /// θ[j] += s · z(offset + j) — perturb, restore, replay.
+    pub fn axpy_z(&self, stream: GaussianStream, offset: u64, theta: &mut [f32], s: f32) {
+        self.run(theta, PAR_MIN, |start, chunk| {
+            kernels::axpy_serial(stream, offset + start as u64, chunk, s);
+        });
+    }
+
+    /// out[j] = θ[j] + s · z(offset + j) — staging write for
+    /// `Artifact::run_perturbed`, θ untouched.
+    pub fn perturb_into(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        theta: &[f32],
+        s: f32,
+        out: &mut [f32],
+    ) {
+        self.run_src(theta, out, PAR_MIN, |start, src, chunk| {
+            kernels::perturb_into_serial(stream, offset + start as u64, src, s, chunk);
+        });
+    }
+
+    /// θ[j] −= lr · (g · z(offset + j) + wd · θ[j]) — the MeZO-SGD update.
+    pub fn sgd_update(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        theta: &mut [f32],
+        lr: f32,
+        g: f32,
+        wd: f32,
+    ) {
+        self.run(theta, PAR_MIN, |start, chunk| {
+            kernels::sgd_serial(stream, offset + start as u64, chunk, lr, g, wd);
+        });
+    }
+
+    /// n-SPSA: apply every `(stream, g)` update in ONE pass over θ.
+    /// Per coordinate the updates are applied in slice order, exactly as a
+    /// sequence of `sgd_update` calls would — but θ is traversed once.
+    pub fn multi_sgd_update(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        theta: &mut [f32],
+        lr: f32,
+        wd: f32,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run(theta, min, |start, chunk| {
+            kernels::multi_sgd_serial(zs, offset + start as u64, chunk, lr, wd);
+        });
+    }
+
+    /// Fused MeZO-momentum update over one step's record batch:
+    /// g = (Σᵢ gᵢ·zᵢ)/n + wd·θ;  m = μ·m + g;  θ −= lr·m.
+    #[allow(clippy::too_many_arguments)]
+    pub fn momentum_update(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        theta: &mut [f32],
+        m: &mut [f32],
+        lr: f32,
+        wd: f32,
+        momentum: f32,
+        n: f32,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run2(theta, m, min, |start, th, mk| {
+            kernels::momentum_serial(zs, offset + start as u64, th, mk, lr, wd, momentum, n);
+        });
+    }
+
+    /// Fused MeZO-Adam update over one step's record batch.
+    pub fn adam_update(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        theta: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        p: AdamParams,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run3(theta, m, v, min, |start, th, mk, vk| {
+            kernels::adam_serial(zs, offset + start as u64, th, mk, vk, p);
+        });
+    }
+
+    /// One EMA step of a moment buffer from a single (seed, pgrad) record:
+    /// m = β·m + (1−β)·(g·z) (Adam-style) or m = β·m + g·z (momentum).
+    /// Records must still be applied in history order — the EMA across
+    /// records is sequential; only the coordinate axis parallelizes.
+    pub fn ema_z(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        m: &mut [f32],
+        pgrad: f32,
+        beta: f32,
+        adam_style: bool,
+    ) {
+        self.run(m, PAR_MIN, |start, chunk| {
+            kernels::ema_serial(stream, offset + start as u64, chunk, pgrad, beta, adam_style);
+        });
+    }
+
+    /// Random-projection rows (BBT baseline):
+    /// out[j] = base[j] + scale · Σᵢ z(j·d_low + i)·v[i].
+    pub fn project_rows(
+        &self,
+        stream: GaussianStream,
+        d_low: usize,
+        v: &[f32],
+        base: &[f32],
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        assert_eq!(v.len(), d_low, "zkernel: projection input length != d_low");
+        let min = (PAR_MIN / d_low.max(1)).max(1);
+        self.run_src(base, out, min, |start, b, chunk| {
+            kernels::project_rows_serial(stream, d_low, v, b, scale, chunk, start);
+        });
+    }
+}
+
+/// Scalar knobs of the fused Adam kernel (one step's worth).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamParams {
+    pub lr: f32,
+    pub wd: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// 1-based step count for bias correction
+    pub t: f32,
+    /// record-batch size (the n in g/n)
+    pub n: f32,
+}
+
+#[cfg(test)]
+mod tests;

@@ -2,6 +2,8 @@
 //! fine-tune -> storage replay, all through real AOT artifacts. Uses a
 //! scratch MEZO_RUNS dir so cached checkpoints elsewhere are untouched.
 //! (Run serially: `cargo test --test pipeline -- --test-threads=1`.)
+//! pjrt builds only — needs the compiled artifact runtime.
+#![cfg(feature = "pjrt")]
 
 use mezo::data::batch::sample_batch;
 use mezo::data::tasks::{generate, GenOpts, Task};
@@ -118,6 +120,61 @@ fn lora_and_prefix_artifacts_train_only_their_parameters() {
             }
         }
     }
+}
+
+#[test]
+fn step_artifact_records_match_in_place_step_for_same_master_seed() {
+    // the §Perf L3 fast path consumes the same master seed stream and must
+    // produce the identical StepRecord trajectory as the in-place step()
+    // (pgrads agree to float tolerance: run_perturbed computes θ+εz in the
+    // staging buffer, step() perturbs in place — same z, same math, modulo
+    // the in-place path's ±ε restore rounding)
+    let rt = runtime();
+    let loss_art = rt.load(&artifact_name("ar", "tiny", "loss", "full")).unwrap();
+    let mut pa = ParamStore::from_meta(&loss_art.meta);
+    pa.init(21);
+    let mut pb = pa.clone();
+    let trainable = pa.indices_of(&loss_art.meta.trainable);
+    let cfg = MezoConfig { lr: 1e-4, eps: 1e-3, ..Default::default() };
+    let mut opt_step = MezoSgd::new(cfg.clone(), trainable.clone(), 77);
+    let mut opt_fast = MezoSgd::new(cfg, trainable, 77);
+    let mut batch = mezo::data::batch::Batch::zeros(8, 64);
+    for row in 0..8 {
+        let seq: Vec<u32> = (0..28).map(|t| ((t * 5 + row * 2) % 500 + 5) as u32).collect();
+        batch.set_row(row, &seq, 1..seq.len(), false);
+    }
+    let mut scratch = Vec::new();
+    for _ in 0..5 {
+        opt_step.step(&mut pa, |p| batch_loss(&loss_art, p, &batch)).unwrap();
+        opt_fast.step_artifact(&mut pb, &loss_art, &batch, &mut scratch).unwrap();
+    }
+    assert_eq!(opt_step.history.len(), opt_fast.history.len());
+    for (a, b) in opt_step.history.iter().zip(&opt_fast.history) {
+        assert_eq!(a.seed, b.seed, "same master seed stream");
+        assert_eq!(a.lr, b.lr);
+        assert!(
+            (a.pgrad - b.pgrad).abs() <= 1e-3 * a.pgrad.abs().max(1.0),
+            "pgrad diverged: {} vs {}",
+            a.pgrad,
+            b.pgrad
+        );
+    }
+}
+
+#[test]
+fn run_perturbed_rejects_mis_shaped_batch() {
+    // satellite: run_perturbed skipped the (b, s) ABI check run() performs
+    let rt = runtime();
+    let loss_art = rt.load(&artifact_name("ar", "tiny", "loss", "full")).unwrap();
+    let mut params = ParamStore::from_meta(&loss_art.meta);
+    params.init(2);
+    let mask = vec![true; params.specs.len()];
+    let mut scratch = Vec::new();
+    let bad = mezo::data::batch::Batch::zeros(4, 32); // artifact is (8, 64)
+    let err = loss_art
+        .run_perturbed(&params, &mask, 1, 1e-3, Some(&bad), &mut scratch)
+        .unwrap_err();
+    assert!(err.to_string().contains("batch shape"), "{}", err);
 }
 
 #[test]

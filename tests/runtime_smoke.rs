@@ -1,5 +1,7 @@
 //! Integration: AOT artifact round-trip — rust loads the HLO text the
 //! python layer lowered, executes it via PJRT, and the numbers make sense.
+//! pjrt builds only — needs the compiled artifact runtime.
+#![cfg(feature = "pjrt")]
 use mezo::data::batch::Batch;
 use mezo::model::params::ParamStore;
 use mezo::runtime::{scalar_f32, vec_f32, Runtime};

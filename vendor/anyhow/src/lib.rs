@@ -1,0 +1,216 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The container image has no crates.io registry, so this vendored crate
+//! provides exactly the API surface the workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros and the
+//! [`Context`] extension trait. Like the real crate, `Error` wraps any
+//! `std::error::Error + Send + Sync + 'static` (so `?` converts
+//! automatically) and deliberately does not implement `std::error::Error`
+//! itself, which is what makes the blanket `From` impl legal.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamically typed error with an optional chain of causes.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// A plain-message error (what `anyhow!("...")` produces).
+struct MessageError(String);
+
+impl Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.0, f)
+    }
+}
+impl Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.0, f)
+    }
+}
+impl StdError for MessageError {}
+
+/// A context layer wrapped around a lower-level cause.
+struct ContextError {
+    context: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.context, f)
+    }
+}
+impl Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.context, f)
+    }
+}
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        let s: &(dyn StdError + 'static) = self.source.as_ref();
+        Some(s)
+    }
+}
+
+impl Error {
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Wrap this error in an additional context message.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error {
+            inner: Box::new(ContextError {
+                context: context.to_string(),
+                source: self.inner,
+            }),
+        }
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.inner, f)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {}", cause)?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options, mirroring the real crate.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_chains_and_debug_prints_causes() {
+        let e = io_fail().with_context(|| format!("reading {}", "x.bin")).unwrap_err();
+        assert_eq!(e.to_string(), "reading x.bin");
+        let dbg = format!("{:?}", e);
+        assert!(dbg.contains("Caused by"), "{}", dbg);
+        assert!(dbg.contains("disk on fire"), "{}", dbg);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {}", flag);
+            bail!("unreachable {}", 1);
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(f(true).unwrap_err().to_string(), "unreachable 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+}

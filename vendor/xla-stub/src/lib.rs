@@ -1,0 +1,256 @@
+//! Compile-time stub of the `xla` crate (PJRT bindings).
+//!
+//! The offline image has neither the crates.io registry nor the XLA/PJRT
+//! shared libraries, so this path crate stands in for `xla 0.1.6` when the
+//! `pjrt` feature of the main crate is enabled. It keeps the whole
+//! `runtime` layer type-checking and lets host-side helpers ([`Literal`]
+//! construction, byte reinterpretation, shape queries) behave for real;
+//! only the device entry point [`PjRtClient::cpu`] reports that no backend
+//! is available. Deploying against real XLA means pointing the `xla`
+//! dependency in the workspace `Cargo.toml` at the real bindings — the API
+//! here is signature-compatible with every call site in `src/runtime`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type, `std::error::Error` so `?` converts into `anyhow`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla-stub: {}", self.0)
+    }
+}
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{} requires the real XLA/PJRT runtime; this build uses the offline \
+         stub (swap the `xla` path dependency for the real bindings and \
+         rebuild with --features pjrt)",
+        what
+    )))
+}
+
+/// Element dtypes of the artifacts we exchange (subset of XLA's set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Marker trait mapping rust scalars onto [`ElementType`]s.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+}
+
+/// Dense array shape (dims in elements, i64 like the real bindings).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side literal: dtype + dims + packed little-endian bytes.
+/// Fully functional in the stub (the runtime's staging helpers and their
+/// tests use it); only device transfer needs real PJRT.
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        if n * ty.byte_size() != data.len() {
+            return Err(Error(format!(
+                "literal byte length {} != shape {:?} x {:?}",
+                data.len(),
+                dims,
+                ty
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.iter().map(|&d| d as i64).collect() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!("to_vec: literal is {:?}", self.ty)));
+        }
+        let n = self.data.len() / std::mem::size_of::<T>();
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        // SAFETY: length checked at construction; T is a plain scalar.
+        // Copy as bytes into the T-aligned destination — the u8 source
+        // carries no alignment guarantee for T, so the typed direction
+        // of this copy would be UB.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                n * std::mem::size_of::<T>(),
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    /// Tuple literals only come back from device execution, which the stub
+    /// cannot perform.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple on a device result")
+    }
+}
+
+/// Parsed HLO module (opaque in the stub; parsing needs XLA).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        unavailable(&format!(
+            "parsing HLO text {}",
+            path.as_ref().display()
+        ))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu()")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32_bytes() {
+        let v: Vec<f32> = vec![1.0, -2.5, 3.25];
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), v);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert_eq!(l.array_shape().unwrap().dims(), &[3i64]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[4],
+            &[0u8; 8],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn device_paths_report_stub() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline stub"), "{}", e);
+    }
+}
