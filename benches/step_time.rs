@@ -9,8 +9,10 @@
 //! (fill, axpy_z, sgd_update, and the perturb+update composite a MeZO
 //! step's parameter traffic reduces to) against the scalar per-coordinate
 //! `z()` path the seed implementation used, at d ∈ {1e5, 1e6, 1e7} and
-//! thread counts {1, 2, 4, 8}. Results land in BENCH_zkernel.json so the
-//! perf trajectory is tracked across PRs.
+//! thread counts {1, 2, 4, 8}. A second group compares whole FZOO steps
+//! against MezoSgd n-SPSA steps at matched forward-pass budgets (see
+//! `fzoo_vs_mezo_bench`). Results land in BENCH_zkernel.json so the perf
+//! trajectory is tracked across PRs.
 
 use mezo::rng::GaussianStream;
 use mezo::util::json::{obj, Json};
@@ -141,13 +143,77 @@ fn zkernel_bench() -> Vec<Row> {
     rows
 }
 
+/// FZOO vs MeZO n-SPSA at matched forward-pass budgets B. One FZOO step
+/// runs B − 1 one-sided seeds (plus the unperturbed anchor); one MezoSgd
+/// step runs B/2 two-point seeds — the same number of loss evaluations.
+/// The loss closure is free (one array read), so what's measured is the
+/// parameter traffic: FZOO's per-seed `perturb_into` staging + ONE fused
+/// batched update, against MeZO's 3 in-place passes per seed + one fused
+/// n-SPSA update. Results land in BENCH_zkernel.json under "fzoo_vs_mezo".
+fn fzoo_vs_mezo_bench() -> Vec<Json> {
+    use mezo::model::meta::TensorDesc;
+    use mezo::model::params::ParamStore;
+    use mezo::optim::fzoo::{Fzoo, FzooConfig};
+    use mezo::optim::mezo::{MezoConfig, MezoSgd};
+
+    let mut out = Vec::new();
+    for &d in &[100_000usize, 1_000_000, 10_000_000] {
+        let reps = match d {
+            100_000 => 7,
+            1_000_000 => 5,
+            _ => 3,
+        };
+        let specs =
+            vec![TensorDesc { name: "w".into(), shape: vec![d], dtype: "f32".into() }];
+        for &budget in &[8usize, 16] {
+            let mut best = 0.0f64;
+            for &t in &[1usize, 2, 4, 8] {
+                let mut p = ParamStore::from_specs(specs.clone());
+                let cfg = MezoConfig { lr: 1e-4, eps: 1e-3, n: budget / 2, ..Default::default() };
+                let mut mz = MezoSgd::new(cfg, vec![0], 1);
+                mz.engine = ZEngine::with_threads(t);
+                let mezo_s = time(reps, || {
+                    mz.step(&mut p, |p| Ok(p.data[0][0])).unwrap();
+                });
+
+                let mut p = ParamStore::from_specs(specs.clone());
+                let cfg = FzooConfig { lr: 1e-4, eps: 1e-3, n: budget - 1, ..Default::default() };
+                let mut fz = Fzoo::new(cfg, vec![0], 1);
+                fz.engine = ZEngine::with_threads(t);
+                let fzoo_s = time(reps, || {
+                    fz.step(&mut p, |p| Ok(p.data[0][0])).unwrap();
+                });
+
+                best = best.max(mezo_s / fzoo_s);
+                out.push(obj(vec![
+                    ("d", Json::from(d as f64)),
+                    ("threads", Json::from(t as f64)),
+                    ("budget_fwd", Json::from(budget as f64)),
+                    ("mezo_seeds", Json::from((budget / 2) as f64)),
+                    ("fzoo_seeds", Json::from((budget - 1) as f64)),
+                    ("mezo_step_s", Json::from(mezo_s)),
+                    ("fzoo_step_s", Json::from(fzoo_s)),
+                    ("fzoo_speedup", Json::from(mezo_s / fzoo_s)),
+                ]));
+            }
+            println!(
+                "d={:>9} B={:>2}: FZOO vs MeZO n-SPSA best step speedup {:.2}x",
+                d, budget, best
+            );
+        }
+    }
+    out
+}
+
 fn main() {
     let rows = zkernel_bench();
+    let fzoo_rows = fzoo_vs_mezo_bench();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let report = obj(vec![
         ("bench", Json::from("zkernel")),
         ("hardware_threads", Json::from(hw as f64)),
         ("rows", Json::Arr(rows.iter().map(Row::json).collect())),
+        ("fzoo_vs_mezo", Json::Arr(fzoo_rows)),
     ]);
     std::fs::write("BENCH_zkernel.json", report.to_string()).expect("write BENCH_zkernel.json");
     println!("wrote BENCH_zkernel.json ({} rows)", rows.len());

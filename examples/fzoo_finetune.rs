@@ -1,0 +1,152 @@
+//! FZOO vs MeZO at a matched forward-pass budget, on a synthetic
+//! logistic-regression "fine-tune" — runs fully offline (no pjrt feature,
+//! no artifacts).
+//!
+//!     cargo run --release --example fzoo_finetune
+//!     cargo run --release --example fzoo_finetune -- --budget 8192 --fzoo-n 15
+//!
+//! Both optimizers draw from the same forward-pass budget B: MeZO (n = 1,
+//! two-point) takes B/2 steps at 2 forwards each; FZOO takes B/(n+1) steps
+//! at n + 1 forwards each (one unperturbed anchor + n one-sided seeds) and
+//! normalizes each step by the loss-difference std. The run ends with the
+//! storage story: the FZOO history replays batched onto fresh parameters,
+//! and a non-dividing seed-batch size is shown to error (the integrity
+//! guard against truncated or mislabeled logs).
+
+use anyhow::Result;
+use mezo::model::meta::TensorDesc;
+use mezo::model::params::ParamStore;
+use mezo::optim::fzoo::{Fzoo, FzooConfig};
+use mezo::optim::mezo::{MezoConfig, MezoSgd};
+use mezo::rng::Pcg;
+use mezo::storage::Trajectory;
+use mezo::util::args::Args;
+
+const DIM: usize = 64;
+
+fn fresh_params() -> ParamStore {
+    let mut p = ParamStore::from_specs(vec![
+        TensorDesc { name: "lin.w".into(), shape: vec![DIM], dtype: "f32".into() },
+        TensorDesc { name: "lin.b".into(), shape: vec![1], dtype: "f32".into() },
+    ]);
+    p.init(0);
+    p
+}
+
+/// mean binary cross-entropy, numerically stable form
+fn bce(p: &ParamStore, xs: &[Vec<f32>], ys: &[f32]) -> f32 {
+    let w = p.get("lin.w");
+    let b = p.get("lin.b")[0];
+    let mut acc = 0.0f32;
+    for (x, &y) in xs.iter().zip(ys) {
+        let z = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() + b;
+        acc += z.max(0.0) - z * y + (1.0 + (-z.abs()).exp()).ln();
+    }
+    acc / xs.len() as f32
+}
+
+fn accuracy(p: &ParamStore, xs: &[Vec<f32>], ys: &[f32]) -> f32 {
+    let w = p.get("lin.w");
+    let b = p.get("lin.b")[0];
+    let hits = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, &y)| {
+            let z = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() + b;
+            (z > 0.0) == (y > 0.5)
+        })
+        .count();
+    hits as f32 / xs.len() as f32
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let budget = args.usize("budget", 4096);
+    let fzoo_n = args.usize("fzoo-n", 7).max(1);
+    let lr = args.f32("lr", 0.05);
+    let eps = args.f32("eps", 1e-3);
+    let seed = args.u64("seed", 17);
+
+    // synthetic task: y = [x · w* > 0] on gaussian features
+    let mut rng = Pcg::new(seed);
+    let w_true: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let n_train = 256;
+    let mut xs = Vec::with_capacity(n_train);
+    let mut ys = Vec::with_capacity(n_train);
+    for _ in 0..n_train {
+        let x: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let dot: f32 = x.iter().zip(&w_true).map(|(a, b)| a * b).sum();
+        xs.push(x);
+        ys.push(if dot > 0.0 { 1.0 } else { 0.0 });
+    }
+
+    let l0 = bce(&fresh_params(), &xs, &ys);
+    println!("budget: {} forward passes   initial loss {:.4}", budget, l0);
+
+    // --- MeZO two-point, n = 1: 2 forwards per step -----------------------
+    let mut p_mezo = fresh_params();
+    let cfg = MezoConfig { lr, eps, ..Default::default() };
+    let mut mezo = MezoSgd::new(cfg, vec![0, 1], seed);
+    let mut fwd = 0usize;
+    let mut steps = 0usize;
+    while fwd + 2 <= budget {
+        let info = mezo.step(&mut p_mezo, |p| Ok(bce(p, &xs, &ys)))?;
+        fwd += info.forward_passes;
+        steps += 1;
+    }
+    println!(
+        "MeZO  (n=1, 2-point): {:>5} steps, {:>5} fwd -> loss {:.4}, acc {:.3}",
+        steps,
+        fwd,
+        bce(&p_mezo, &xs, &ys),
+        accuracy(&p_mezo, &xs, &ys)
+    );
+
+    // --- FZOO batched one-sided, n seeds: n + 1 forwards per step ---------
+    let mut p_fzoo = fresh_params();
+    let cfg = FzooConfig { lr, eps, n: fzoo_n, ..Default::default() };
+    let mut fzoo = Fzoo::new(cfg, vec![0, 1], seed);
+    let mut fwd = 0usize;
+    let mut steps = 0usize;
+    while fwd + fzoo_n + 1 <= budget {
+        let info = fzoo.step(&mut p_fzoo, |p| Ok(bce(p, &xs, &ys)))?;
+        fwd += info.forward_passes;
+        steps += 1;
+    }
+    assert!(steps > 0, "--budget {} too small for one FZOO step (needs n+1 = {})", budget, fzoo_n + 1);
+    println!(
+        "FZOO  (n={}, 1-sided): {:>5} steps, {:>5} fwd -> loss {:.4}, acc {:.3}",
+        fzoo_n,
+        steps,
+        fwd,
+        bce(&p_fzoo, &xs, &ys),
+        accuracy(&p_fzoo, &xs, &ys)
+    );
+
+    // --- storage: the run is reconstructible from the (seed, g, lr) log ---
+    let traj = Trajectory::from_run(vec!["lin.w".into(), "lin.b".into()], &fzoo.history);
+    println!(
+        "trajectory: {} records ({} bytes f32, {} bytes quantized)",
+        traj.records.len(),
+        traj.bytes_f32(),
+        traj.bytes_quantized()
+    );
+    let mut replayed = fresh_params();
+    traj.replay_batched(&mut replayed, fzoo_n)?;
+    let max_dev = p_fzoo
+        .data
+        .iter()
+        .flatten()
+        .zip(replayed.data.iter().flatten())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("replay_batched(n={}) max |Δθ| vs trained: {:.2e}", fzoo_n, max_dev);
+    assert!(max_dev < 1e-4, "batched replay diverged: {}", max_dev);
+    // a non-dividing seed-batch size flags a truncated/mislabeled log
+    // (records.len() + 1 never divides a non-empty record count)
+    let err = traj
+        .replay_batched(&mut fresh_params(), traj.records.len() + 1)
+        .expect_err("mismatched seed-batch size must error");
+    println!("mismatched batch size errors as expected: {}", err);
+    Ok(())
+}

@@ -9,22 +9,33 @@
 use crate::model::params::ParamStore;
 use anyhow::Result;
 
+/// First-order update rule for the backprop baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FtFlavor {
+    /// plain SGD
     Sgd,
+    /// Adam (the paper's FT default)
     Adam,
 }
 
+/// Configuration of the [`FtOptimizer`] backprop baseline.
 #[derive(Debug, Clone)]
 pub struct FtConfig {
+    /// learning rate
     pub lr: f32,
+    /// decoupled weight decay
     pub weight_decay: f32,
+    /// update rule
     pub flavor: FtFlavor,
+    /// first-moment EMA coefficient (Adam)
     pub beta1: f32,
+    /// second-moment EMA coefficient (Adam)
     pub beta2: f32,
+    /// Adam denominator stabilizer
     pub adam_eps: f32,
     /// linear decay to zero over total_steps (paper's FT schedule)
     pub linear_decay: bool,
+    /// total planned steps (for the decay schedule)
     pub total_steps: usize,
 }
 
@@ -43,21 +54,28 @@ impl Default for FtConfig {
     }
 }
 
+/// The backprop fine-tuning baseline: consumes externally computed
+/// gradients (the AOT `grad` artifact) and applies SGD/Adam updates.
 pub struct FtOptimizer {
+    /// configuration (mutable between steps)
     pub cfg: FtConfig,
+    /// indices (into ParamStore) of the trainable tensors
     pub trainable: Vec<usize>,
+    /// steps taken so far
     pub step: u64,
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
 }
 
 impl FtOptimizer {
+    /// New optimizer with zeroed moment buffers sized to the trainables.
     pub fn new(cfg: FtConfig, trainable: Vec<usize>, params: &ParamStore) -> FtOptimizer {
         let m = trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect();
         let v = trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect();
         FtOptimizer { cfg, trainable, step: 0, m, v }
     }
 
+    /// Learning rate at the current step (after any linear decay).
     pub fn lr_now(&self) -> f32 {
         if self.cfg.linear_decay {
             let frac = 1.0 - self.step as f32 / self.cfg.total_steps.max(1) as f32;

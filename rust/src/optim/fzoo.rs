@@ -1,0 +1,433 @@
+//! FZOO — batched-seed one-sided zeroth-order steps with a
+//! variance-adaptive step size (Dang et al., 2025, arXiv:2506.09034), the
+//! first post-MeZO workload on the [`crate::zkernel`] engine.
+//!
+//! MeZO (Algorithm 1) spends two forward passes per seed and walks θ four
+//! times per seed (perturb +ε, perturb −2ε, restore, update). FZOO
+//! restructures the step around a *batch* of one-sided perturbations:
+//!
+//!  1. one forward at the unperturbed θ gives the anchor loss L₀;
+//!  2. each of n seeds costs ONE forward at θ + ε·zᵢ — staged through
+//!     [`crate::zkernel::ZEngine::perturb_into`] into a scratch store, so θ
+//!     is never touched and never accumulates perturb/restore rounding;
+//!  3. the per-seed projected gradients gᵢ = (Lᵢ − L₀)/ε are averaged and
+//!     applied in ONE fused pass over θ
+//!     ([`crate::zkernel::ZEngine::fzoo_update`]);
+//!  4. the step size is normalized by the empirical standard deviation of
+//!     the loss differences Δᵢ = Lᵢ − L₀ (FZOO's variance-adaptive rule):
+//!     a sharp, consistent loss landscape yields small σ and a confident
+//!     large step, a noisy batch yields a cautious one. We express the rule
+//!     on the gradient scale, σ_g = σ_Δ/ε, so `lr_eff = lr / σ_g`.
+//!
+//! Per forward pass, parameter traffic drops from MeZO's 2 z-passes
+//! (amortized) to ~1, and the n-seed update costs one pass over θ instead
+//! of n. At a matched forward-pass budget B, FZOO takes one step with
+//! n = B − 1 seeds where MeZO n-SPSA takes one step with B/2 seeds — the
+//! `benches/step_time.rs` group `fzoo_vs_mezo` tracks exactly this.
+//!
+//! The trajectory contract: every step appends n [`StepRecord`]s, one per
+//! seed, carrying the *mean-normalized* projected gradient gᵢ/n and the
+//! step's effective learning rate. `Trajectory::replay` (sequential) and
+//! `Trajectory::replay_batched` (fused, one pass per step) therefore
+//! reconstruct the run from the log alone, and
+//! [`crate::optim::mezo::recompute_first_moment`] sees each seed's true
+//! contribution to the step.
+
+use crate::model::params::ParamStore;
+use crate::optim::mezo::{StepInfo, StepRecord};
+use crate::rng::{GaussianStream, Pcg};
+use crate::zkernel::ZEngine;
+use anyhow::Result;
+
+/// Configuration of the [`Fzoo`] optimizer.
+#[derive(Debug, Clone)]
+pub struct FzooConfig {
+    /// base learning rate η
+    pub lr: f32,
+    /// one-sided perturbation scale ε
+    pub eps: f32,
+    /// decoupled weight decay (one term per step, not per seed)
+    pub weight_decay: f32,
+    /// seeds per step — the batch of one-sided perturbations (n + 1
+    /// forward passes per step)
+    pub n: usize,
+    /// variance-adaptive step size: divide lr by the empirical std of the
+    /// per-seed projected gradients (σ_Δ/ε). Off, or with n == 1 (no
+    /// variance to estimate), the raw lr applies and the step reduces to
+    /// the one-sided MeZO/SPSA update — see tests/properties.rs.
+    pub variance_norm: bool,
+    /// below this σ_g the normalization is skipped (degenerate batches
+    /// where every seed saw the same loss must not explode the step)
+    pub sigma_floor: f32,
+}
+
+impl Default for FzooConfig {
+    fn default() -> Self {
+        FzooConfig {
+            lr: 1e-3,
+            eps: 1e-3,
+            weight_decay: 0.0,
+            n: 8,
+            variance_norm: true,
+            sigma_floor: 1e-6,
+        }
+    }
+}
+
+/// The FZOO optimizer: batched one-sided seed perturbations, staged
+/// evaluation (θ untouched between updates), variance-adaptive step size,
+/// single-pass n-seed updates on the [`ZEngine`].
+pub struct Fzoo {
+    /// configuration (mutable between steps; `n` may be rescheduled)
+    pub cfg: FzooConfig,
+    /// indices (into ParamStore) of the trainable tensors
+    pub trainable: Vec<usize>,
+    /// steps taken so far
+    pub step: u64,
+    /// the blocked/threaded kernel engine every parameter pass runs on;
+    /// bit-identical for any `engine.threads` (see zkernel::tests)
+    pub engine: ZEngine,
+    /// (seed, gᵢ/n, lr_eff) per applied seed — the full trajectory, in the
+    /// shape `Trajectory::replay`/`replay_batched` reconstruct from
+    pub history: Vec<StepRecord>,
+    seed_rng: Pcg,
+    /// staging clone of the parameter store: trainable tensors are
+    /// rewritten per seed via `perturb_into`; non-trainable tensors are
+    /// copied when the clone is (re)built and NOT re-mirrored per step —
+    /// the optimizer is bound to one store whose frozen tensors stay
+    /// fixed between steps (see [`Fzoo::invalidate_scratch`] for the
+    /// escape hatch); rebuilt automatically on shape mismatch
+    scratch: Option<ParamStore>,
+}
+
+impl Fzoo {
+    /// New optimizer; `master_seed` drives the per-step seed stream.
+    pub fn new(cfg: FzooConfig, trainable: Vec<usize>, master_seed: u64) -> Fzoo {
+        Fzoo {
+            cfg,
+            trainable,
+            step: 0,
+            engine: ZEngine::default(),
+            history: Vec::new(),
+            seed_rng: Pcg::new(master_seed),
+            scratch: None,
+        }
+    }
+
+    /// (Re)build the staging store when absent or shape-mismatched.
+    ///
+    /// The reuse check is shape-only: a *different* store with identical
+    /// tensor shapes would be accepted with the previous store's frozen
+    /// tensors still in the staging copy. The optimizer is therefore
+    /// bound to one logical store per run — call
+    /// [`Fzoo::invalidate_scratch`] when that assumption breaks.
+    fn take_scratch(&mut self, params: &ParamStore) -> ParamStore {
+        match self.scratch.take() {
+            Some(s)
+                if s.data.len() == params.data.len()
+                    && s.data.iter().zip(&params.data).all(|(a, b)| a.len() == b.len()) =>
+            {
+                s
+            }
+            _ => params.clone(),
+        }
+    }
+
+    /// Drop the cached staging store so the next [`Fzoo::step`] rebuilds
+    /// it from the parameters it is given. Required after swapping to a
+    /// different (same-shaped) `ParamStore` or mutating *non-trainable*
+    /// tensors outside the optimizer — the staging copy only refreshes
+    /// trainable tensors per seed, so stale frozen tensors would
+    /// otherwise silently skew every per-seed loss.
+    pub fn invalidate_scratch(&mut self) {
+        self.scratch = None;
+    }
+
+    /// FZOO's variance-adaptive rule: lr / max over the floor of the
+    /// sample std of the per-seed projected gradients (σ_Δ/ε). Identity
+    /// when `variance_norm` is off, fewer than two seeds, or σ_g at or
+    /// below `sigma_floor`.
+    fn effective_lr(&self, diffs: &[f32]) -> f32 {
+        if !self.cfg.variance_norm || diffs.len() < 2 {
+            return self.cfg.lr;
+        }
+        let n = diffs.len() as f32;
+        let mean = diffs.iter().sum::<f32>() / n;
+        let var = diffs.iter().map(|&d| (d - mean) * (d - mean)).sum::<f32>() / (n - 1.0);
+        let sigma_g = var.sqrt() / self.cfg.eps;
+        if sigma_g <= self.cfg.sigma_floor {
+            self.cfg.lr
+        } else {
+            self.cfg.lr / sigma_g
+        }
+    }
+
+    /// One FZOO step: n + 1 forward passes (`loss` is called once on the
+    /// unperturbed `params` and once per staged θ + ε·zᵢ), then the whole
+    /// n-seed update in a single fused pass over every trainable tensor.
+    ///
+    /// ```
+    /// use mezo::model::meta::TensorDesc;
+    /// use mezo::model::params::ParamStore;
+    /// use mezo::optim::fzoo::{Fzoo, FzooConfig};
+    /// let mut p = ParamStore::from_specs(vec![
+    ///     TensorDesc { name: "w".into(), shape: vec![16], dtype: "f32".into() },
+    /// ]);
+    /// p.init(0);
+    /// let cfg = FzooConfig { n: 4, ..Default::default() };
+    /// let mut opt = Fzoo::new(cfg, vec![0], 42);
+    /// let info = opt
+    ///     .step(&mut p, |p| Ok(p.data[0].iter().map(|&x| (x - 1.0) * (x - 1.0)).sum()))
+    ///     .unwrap();
+    /// assert_eq!(info.forward_passes, 5); // anchor + one per seed
+    /// assert_eq!(opt.history.len(), 4);   // one record per seed
+    /// ```
+    pub fn step<F>(&mut self, params: &mut ParamStore, mut loss: F) -> Result<StepInfo>
+    where
+        F: FnMut(&ParamStore) -> Result<f32>,
+    {
+        let n = self.cfg.n.max(1);
+        let eps = self.cfg.eps;
+        // anchor: one forward at the unperturbed θ
+        let l0 = loss(params)?;
+        let mut scratch = self.take_scratch(params);
+        let mut zs: Vec<(GaussianStream, f32)> = Vec::with_capacity(n);
+        let mut seeds: Vec<u64> = Vec::with_capacity(n);
+        let mut diffs: Vec<f32> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let seed = self.seed_rng.next_u64();
+            let stream = GaussianStream::new(seed);
+            // stage θ + ε·z without touching θ (no restore pass, no drift)
+            for &ti in &self.trainable {
+                self.engine.perturb_into(
+                    stream,
+                    params.offsets[ti],
+                    &params.data[ti],
+                    eps,
+                    &mut scratch.data[ti],
+                );
+            }
+            let li = loss(&scratch)?;
+            diffs.push(li - l0);
+            seeds.push(seed);
+            zs.push((stream, (li - l0) / eps));
+        }
+        self.scratch = Some(scratch);
+
+        let lr_eff = self.effective_lr(&diffs);
+        // the whole n-seed batch in one fused pass per tensor
+        for &ti in &self.trainable {
+            self.engine.fzoo_update(
+                &zs,
+                params.offsets[ti],
+                &mut params.data[ti],
+                lr_eff,
+                self.cfg.weight_decay,
+            );
+        }
+        // one record per seed, gradient mean-normalized so that replay's
+        // θ −= lr·pgrad·z reconstructs this step's update (wd aside)
+        let n_f = n as f32;
+        for (&seed, &(_, g)) in seeds.iter().zip(&zs) {
+            self.history.push(StepRecord { seed, pgrad: g / n_f, lr: lr_eff });
+        }
+        self.step += 1;
+        let last = self.history.last().unwrap();
+        Ok(StepInfo {
+            loss: l0,
+            pgrad: last.pgrad,
+            seed: last.seed,
+            forward_passes: n + 1,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+    use crate::storage::Trajectory;
+
+    fn toy_params() -> ParamStore {
+        let specs = vec![
+            TensorDesc { name: "w1".into(), shape: vec![4, 4], dtype: "f32".into() },
+            TensorDesc { name: "w2".into(), shape: vec![8], dtype: "f32".into() },
+        ];
+        let mut p = ParamStore::from_specs(specs);
+        p.init(0);
+        p
+    }
+
+    /// larger-than-one-block tensors so the blocked path really blocks
+    fn big_params() -> ParamStore {
+        let specs = vec![
+            TensorDesc { name: "w1".into(), shape: vec![40, 20], dtype: "f32".into() },
+            TensorDesc { name: "w2".into(), shape: vec![300], dtype: "f32".into() },
+        ];
+        let mut p = ParamStore::from_specs(specs);
+        p.init(0);
+        p
+    }
+
+    fn quad_loss(p: &ParamStore) -> Result<f32> {
+        Ok(p.data.iter().flatten().map(|&x| (x - 1.0) * (x - 1.0)).sum())
+    }
+
+    #[test]
+    fn fzoo_optimizes_quadratic() {
+        let mut p = toy_params();
+        let cfg = FzooConfig { lr: 2e-2, eps: 1e-3, n: 8, ..Default::default() };
+        let mut opt = Fzoo::new(cfg, vec![0, 1], 1);
+        let l0 = quad_loss(&p).unwrap();
+        for _ in 0..200 {
+            opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        }
+        let l1 = quad_loss(&p).unwrap();
+        assert!(l1 < l0 * 0.2, "l0={} l1={}", l0, l1);
+        assert_eq!(opt.history.len(), 200 * 8);
+        assert_eq!(opt.step, 200);
+    }
+
+    #[test]
+    fn step_counts_forward_passes_and_anchor_loss() {
+        let mut p = toy_params();
+        let cfg = FzooConfig { n: 4, ..Default::default() };
+        let mut opt = Fzoo::new(cfg, vec![0, 1], 2);
+        let l_before = quad_loss(&p).unwrap();
+        let info = opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        assert_eq!(info.forward_passes, 5);
+        // the reported loss is the anchor L(θ) before the update
+        assert_eq!(info.loss.to_bits(), l_before.to_bits());
+    }
+
+    #[test]
+    fn theta_is_untouched_between_updates() {
+        // staging through perturb_into means the only write to θ is the
+        // final fused update: a loss that records the params it sees must
+        // observe the SAME unperturbed θ at the anchor as before the step
+        let mut p = toy_params();
+        let before = p.data.clone();
+        let cfg = FzooConfig { lr: 0.0, n: 3, ..Default::default() };
+        let mut opt = Fzoo::new(cfg, vec![0, 1], 3);
+        opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        // lr = 0: the update is θ −= 0·(…) which can only flip -0.0 signs;
+        // numeric equality is exact
+        for (a, b) in p.data.iter().flatten().zip(before.iter().flatten()) {
+            assert_eq!(*a, *b, "{} vs {}", a, b);
+        }
+    }
+
+    #[test]
+    fn variance_norm_shrinks_steps_on_noisy_batches() {
+        // same trajectory of seeds; the normalized run must use a smaller
+        // effective lr than the raw one when σ_g > 1
+        let mut p1 = big_params();
+        let mut p2 = big_params();
+        let cfg_raw = FzooConfig { lr: 1e-2, n: 6, variance_norm: false, ..Default::default() };
+        let cfg_norm = FzooConfig { lr: 1e-2, n: 6, variance_norm: true, ..Default::default() };
+        let mut raw = Fzoo::new(cfg_raw, vec![0, 1], 7);
+        let mut norm = Fzoo::new(cfg_norm, vec![0, 1], 7);
+        raw.step(&mut p1, |p| quad_loss(p)).unwrap();
+        norm.step(&mut p2, |p| quad_loss(p)).unwrap();
+        // identical seeds and anchor => identical pgrad records up to the
+        // lr column
+        for (a, b) in raw.history.iter().zip(&norm.history) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits());
+        }
+        let lr_raw = raw.history[0].lr;
+        let lr_norm = norm.history[0].lr;
+        assert_eq!(lr_raw, 1e-2);
+        assert_ne!(lr_norm.to_bits(), lr_raw.to_bits());
+        // the quadratic's gradient norm is ~10 here, so σ_g >> 1 and the
+        // adaptive lr must be smaller
+        assert!(lr_norm < lr_raw, "lr_norm={} lr_raw={}", lr_norm, lr_raw);
+    }
+
+    #[test]
+    fn trajectory_is_bit_identical_across_thread_counts() {
+        // the determinism contract extended to FZOO: same master seed =>
+        // same history (bitwise) and same final θ (bitwise) at 1/2/8
+        // threads, variance normalization and weight decay on
+        let mut reference: Option<(Vec<StepRecord>, Vec<Vec<f32>>)> = None;
+        for threads in [1usize, 2, 8] {
+            let mut p = big_params();
+            let cfg = FzooConfig {
+                lr: 5e-3,
+                eps: 1e-3,
+                weight_decay: 1e-4,
+                n: 5,
+                variance_norm: true,
+                ..Default::default()
+            };
+            let mut opt = Fzoo::new(cfg, vec![0, 1], 0xF00);
+            opt.engine = ZEngine::with_threads(threads);
+            for _ in 0..5 {
+                opt.step(&mut p, |p| quad_loss(p)).unwrap();
+            }
+            if reference.is_none() {
+                reference = Some((opt.history.clone(), p.data.clone()));
+            } else {
+                let (hist, data) = reference.as_ref().unwrap();
+                assert_eq!(hist.len(), opt.history.len());
+                for (a, b) in hist.iter().zip(&opt.history) {
+                    assert_eq!(a.seed, b.seed, "t={}", threads);
+                    assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "t={}", threads);
+                    assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "t={}", threads);
+                }
+                for (x, y) in data.iter().flatten().zip(p.data.iter().flatten()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "t={}: {} vs {}", threads, x, y);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recompute_first_moment_understands_fzoo_history() {
+        // with β = 1 the momentum-style recomputation is Σᵢ pgradᵢ·zᵢ over
+        // the whole log; for a constant-lr FZOO run (variance_norm off,
+        // wd = 0) the net parameter change is exactly −lr · that sum —
+        // i.e. the B.2 moment-from-log machinery reads FZOO records as-is
+        let mut p = toy_params();
+        let p0 = p.clone();
+        let lr = 5e-3f32;
+        let cfg =
+            FzooConfig { lr, eps: 1e-3, n: 3, variance_norm: false, ..Default::default() };
+        let mut opt = Fzoo::new(cfg, vec![0, 1], 11);
+        for _ in 0..10 {
+            opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        }
+        let m = crate::optim::mezo::recompute_first_moment(&p, &[0, 1], &opt.history, 1.0, false);
+        for (k, &ti) in [0usize, 1].iter().enumerate() {
+            for j in 0..p.data[ti].len() {
+                let want = p0.data[ti][j] - lr * m[k][j];
+                assert!(
+                    (p.data[ti][j] - want).abs() < 1e-5,
+                    "{} vs {}",
+                    p.data[ti][j],
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replay_batched_reconstructs_fzoo_run() {
+        // wd = 0: the log is the whole update, so batched replay lands on
+        // the trained parameters (up to f32 re-association, no perturb
+        // rounding at all — θ was never perturbed in place)
+        let mut trained = toy_params();
+        let n = 4usize;
+        let cfg = FzooConfig { lr: 1e-2, eps: 1e-3, n, ..Default::default() };
+        let mut opt = Fzoo::new(cfg, vec![0, 1], 9);
+        for _ in 0..30 {
+            opt.step(&mut trained, |p| quad_loss(p)).unwrap();
+        }
+        let traj = Trajectory::from_run(vec!["w1".into(), "w2".into()], &opt.history);
+        let mut replayed = toy_params();
+        traj.replay_batched(&mut replayed, n).unwrap();
+        for (a, b) in trained.data.iter().flatten().zip(replayed.data.iter().flatten()) {
+            assert!((a - b).abs() < 1e-5, "{} vs {}", a, b);
+        }
+    }
+}

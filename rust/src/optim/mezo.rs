@@ -32,6 +32,7 @@ use crate::rng::{GaussianStream, Pcg};
 use crate::zkernel::{AdamParams, ZEngine};
 use anyhow::Result;
 
+/// Which update rule consumes the SPSA gradient estimate (Appendix B.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Flavor {
     /// plain ZO-SGD (Definition 2)
@@ -42,19 +43,28 @@ pub enum Flavor {
     Adam,
 }
 
+/// Configuration of the [`MezoSgd`] optimizer family.
 #[derive(Debug, Clone)]
 pub struct MezoConfig {
+    /// learning rate η
     pub lr: f32,
+    /// perturbation scale ε
     pub eps: f32,
+    /// decoupled weight decay
     pub weight_decay: f32,
     /// number of z samples per step (n-SPSA); 1 is the paper default
     pub n: usize,
     /// if true, n grows linearly from 1 to `n` over the run (Table 6)
     pub linear_n_schedule: bool,
+    /// update rule on the SPSA estimate
     pub flavor: Flavor,
+    /// momentum coefficient (Momentum flavor)
     pub momentum: f32,
+    /// first-moment EMA coefficient (Adam flavor)
     pub beta1: f32,
+    /// second-moment EMA coefficient (Adam flavor)
     pub beta2: f32,
+    /// Adam denominator stabilizer
     pub adam_eps: f32,
     /// one-point estimator (Definition 8) instead of two-point SPSA
     pub one_point: bool,
@@ -84,23 +94,38 @@ impl Default for MezoConfig {
 /// One history record — all that is needed to replay the trajectory.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StepRecord {
+    /// the z seed this update regenerated from
     pub seed: u64,
+    /// projected gradient applied with this seed (mean-normalized when the
+    /// step batched several seeds)
     pub pgrad: f32,
+    /// learning rate the update used (FZOO stores its variance-adapted lr)
     pub lr: f32,
 }
 
+/// What one optimization step observed and consumed.
 #[derive(Debug, Clone, Copy)]
 pub struct StepInfo {
+    /// loss observed this step (mean of the perturbed losses for MeZO,
+    /// the unperturbed anchor for FZOO)
     pub loss: f32,
+    /// last seed's recorded projected gradient — exactly as it entered the
+    /// history, so mean-normalized (gₙ/n) for FZOO's batched steps
     pub pgrad: f32,
+    /// last seed drawn
     pub seed: u64,
+    /// forward passes this step consumed
     pub forward_passes: usize,
 }
 
+/// The MeZO optimizer (Algorithm 1) and its n-SPSA / one-point / momentum /
+/// Adam variants, all parameter passes on the [`ZEngine`].
 pub struct MezoSgd {
+    /// configuration (mutable between steps)
     pub cfg: MezoConfig,
     /// indices (into ParamStore) of the trainable tensors
     pub trainable: Vec<usize>,
+    /// steps taken so far
     pub step: u64,
     /// the blocked/threaded kernel engine every parameter pass runs on;
     /// bit-identical for any `engine.threads` (see zkernel::tests)
@@ -116,6 +141,7 @@ pub struct MezoSgd {
 }
 
 impl MezoSgd {
+    /// New optimizer; `master_seed` drives the per-step seed stream.
     pub fn new(cfg: MezoConfig, trainable: Vec<usize>, master_seed: u64) -> MezoSgd {
         MezoSgd {
             cfg,
@@ -148,6 +174,22 @@ impl MezoSgd {
 
     /// One optimization step. `loss` evaluates L(θ; B) for the *current*
     /// in-place parameters (two calls per z for SPSA, one for one-point).
+    ///
+    /// ```
+    /// use mezo::model::meta::TensorDesc;
+    /// use mezo::model::params::ParamStore;
+    /// use mezo::optim::mezo::{MezoConfig, MezoSgd};
+    /// let mut p = ParamStore::from_specs(vec![
+    ///     TensorDesc { name: "w".into(), shape: vec![8], dtype: "f32".into() },
+    /// ]);
+    /// p.init(0);
+    /// let mut opt = MezoSgd::new(MezoConfig::default(), vec![0], 42);
+    /// let info = opt
+    ///     .step(&mut p, |p| Ok(p.data[0].iter().map(|&x| x * x).sum()))
+    ///     .unwrap();
+    /// assert_eq!(info.forward_passes, 2); // Algorithm 1: +ε and −ε
+    /// assert_eq!(opt.history.len(), 1);   // replayable (seed, g, lr) log
+    /// ```
     pub fn step<F>(&mut self, params: &mut ParamStore, mut loss: F) -> Result<StepInfo>
     where
         F: FnMut(&ParamStore) -> Result<f32>,

@@ -1,6 +1,7 @@
-//! Optimizers: the MeZO family (zeroth-order, in-place) and the
-//! backpropagation baselines.
+//! Optimizers: the MeZO family (zeroth-order, in-place), the FZOO
+//! batched-seed variant, and the backpropagation baselines.
 pub mod ft;
+pub mod fzoo;
 pub mod mezo;
 pub mod variance;
 
@@ -18,6 +19,7 @@ pub trait ZoStepper {
     ) -> Result<f32>;
     /// Forward passes consumed so far.
     fn forward_passes(&self) -> usize;
+    /// The full (seed, projected-grad, lr) trajectory so far.
     fn records(&self) -> &[mezo::StepRecord];
     /// Optional fast path: a whole step against a loss artifact with the
     /// perturbation fused into the upload (see MezoSgd::step_artifact).
@@ -33,7 +35,9 @@ pub trait ZoStepper {
     }
 }
 
+/// [`ZoStepper`] adapter over [`mezo::MezoSgd`] (all MeZO flavors).
 pub struct MezoStepper {
+    /// the wrapped optimizer
     pub inner: mezo::MezoSgd,
     fwd: usize,
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
@@ -43,8 +47,42 @@ pub struct MezoStepper {
 }
 
 impl MezoStepper {
+    /// Wrap a [`mezo::MezoSgd`] for trainers/experiment drivers.
     pub fn new(inner: mezo::MezoSgd) -> MezoStepper {
         MezoStepper { inner, fwd: 0, scratch: Vec::new(), use_fast_path: true }
+    }
+}
+
+/// [`ZoStepper`] adapter over [`fzoo::Fzoo`], so trainers and experiment
+/// drivers can swap FZOO in wherever a MeZO variant runs.
+pub struct FzooStepper {
+    /// the wrapped optimizer
+    pub inner: fzoo::Fzoo,
+    fwd: usize,
+}
+
+impl FzooStepper {
+    /// Wrap an [`fzoo::Fzoo`] for trainers/experiment drivers.
+    pub fn new(inner: fzoo::Fzoo) -> FzooStepper {
+        FzooStepper { inner, fwd: 0 }
+    }
+}
+
+impl ZoStepper for FzooStepper {
+    fn zo_step(
+        &mut self,
+        params: &mut ParamStore,
+        loss: &mut dyn FnMut(&ParamStore) -> Result<f32>,
+    ) -> Result<f32> {
+        let info = self.inner.step(params, |p| loss(p))?;
+        self.fwd += info.forward_passes;
+        Ok(info.loss)
+    }
+    fn forward_passes(&self) -> usize {
+        self.fwd
+    }
+    fn records(&self) -> &[mezo::StepRecord] {
+        &self.inner.history
     }
 }
 

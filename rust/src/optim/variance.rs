@@ -13,6 +13,7 @@ use crate::rng::{GaussianStream, Pcg};
 use crate::zkernel::ZEngine;
 use anyhow::Result;
 
+/// Where the per-parameter-group scale d comes from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DSource {
     /// d_g = ||θ_g|| (parameter norm, Table 9)
@@ -21,6 +22,7 @@ pub enum DSource {
     GradNormZo,
 }
 
+/// Which modified estimator the update uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     /// Definition 6 (unbiased, modified variance)
@@ -29,29 +31,40 @@ pub enum Mode {
     Expectation,
 }
 
+/// Configuration of the [`ModifiedSpsa`] estimator variants.
 #[derive(Debug, Clone)]
 pub struct ModifiedSpsaConfig {
+    /// learning rate
     pub lr: f32,
+    /// perturbation scale ε
     pub eps: f32,
+    /// which modified estimator (Definition 6 or 7)
     pub mode: Mode,
+    /// where the per-group scale d comes from
     pub d_source: DSource,
     /// re-estimate d every `refresh_every` steps (0 = only once)
     pub refresh_every: usize,
 }
 
+/// Variance/expectation-modified SPSA optimizer (Appendix B.3/B.4).
 pub struct ModifiedSpsa {
+    /// configuration (mutable between steps)
     pub cfg: ModifiedSpsaConfig,
+    /// indices (into ParamStore) of the trainable tensors
     pub trainable: Vec<usize>,
     /// per-trainable-tensor scale d_g (clamped away from zero)
     pub d: Vec<f32>,
     /// blocked/threaded kernel engine for all z passes
     pub engine: ZEngine,
     seed_rng: Pcg,
+    /// steps taken so far
     pub step: u64,
+    /// (seed, projected-grad, lr) per step — the replayable trajectory
     pub history: Vec<StepRecord>,
 }
 
 impl ModifiedSpsa {
+    /// New optimizer; `seed` drives the per-step seed stream.
     pub fn new(cfg: ModifiedSpsaConfig, trainable: Vec<usize>, seed: u64) -> ModifiedSpsa {
         let d = vec![1.0; trainable.len()];
         ModifiedSpsa {
@@ -89,6 +102,8 @@ impl ModifiedSpsa {
         Ok(norms)
     }
 
+    /// Recompute the per-group scales d_g from the configured source and
+    /// normalize them to mean 1 (so the lr keeps its meaning).
     pub fn refresh_d<F>(&mut self, params: &mut ParamStore, loss: F) -> Result<()>
     where
         F: FnMut(&ParamStore) -> Result<f32>,
@@ -119,6 +134,8 @@ impl ModifiedSpsa {
         }
     }
 
+    /// One modified-SPSA step (two forward passes + any d refresh);
+    /// returns the mean of the two perturbed losses.
     pub fn step<F>(&mut self, params: &mut ParamStore, mut loss: F) -> Result<f32>
     where
         F: FnMut(&ParamStore) -> Result<f32>,

@@ -29,10 +29,12 @@ pub struct Pcg {
 }
 
 impl Pcg {
+    /// New generator; distinct seeds give decorrelated streams.
     pub fn new(seed: u64) -> Pcg {
         Pcg { state: splitmix64(seed ^ 0xD1B54A32D192ED03) }
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
@@ -48,6 +50,7 @@ impl Pcg {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform in [0, 1) at f32 precision.
     #[inline]
     pub fn next_f32(&mut self) -> f32 {
         self.next_f64() as f32
@@ -87,6 +90,7 @@ impl Pcg {
         }
     }
 
+    /// Normal draw with the given mean and standard deviation.
     pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
         mean + std * self.normal() as f32
     }
@@ -107,6 +111,7 @@ impl Pcg {
         idx
     }
 
+    /// Uniformly chosen element of a non-empty slice.
     pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len())]
     }
@@ -171,6 +176,7 @@ pub struct GaussianStream {
 }
 
 impl GaussianStream {
+    /// New stream; the same seed always denotes the same z vector.
     pub fn new(seed: u64) -> GaussianStream {
         GaussianStream { seed: splitmix64(seed ^ 0xA0761D6478BD642F) }
     }

@@ -10,21 +10,27 @@ use crate::model::params::ParamStore;
 use crate::optim::mezo::StepRecord;
 use crate::rng::GaussianStream;
 use crate::zkernel::ZEngine;
+use anyhow::{bail, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
+/// A full training run as a replayable (seed, projected-grad, lr) log.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Trajectory {
     /// names of the tensors the run trained (replay must match)
     pub trainable: Vec<String>,
+    /// one record per applied seed, in application order
     pub records: Vec<StepRecord>,
 }
 
 impl Trajectory {
+    /// Empty trajectory over the given trainable tensor names.
     pub fn new(trainable: Vec<String>) -> Trajectory {
         Trajectory { trainable, records: Vec::new() }
     }
 
+    /// Trajectory from an optimizer's history (e.g. `MezoSgd::history`,
+    /// `Fzoo::history`).
     pub fn from_run(trainable: Vec<String>, records: &[StepRecord]) -> Trajectory {
         Trajectory { trainable, records: records.to_vec() }
     }
@@ -63,8 +69,57 @@ impl Trajectory {
         }
     }
 
-    // binary format: "MZTJ" | n_names u32 | names | n_records u64 |
-    //                (seed u64, pgrad f32, lr f32)*
+    /// Re-apply a seed-batched (FZOO-style) trajectory: records group into
+    /// consecutive batches of `seeds_per_step` (one optimizer step each),
+    /// and every batch applies as ONE fused pass over each tensor
+    /// ([`ZEngine::multi_axpy_z`] with per-seed coefficient −lr·pgrad)
+    /// instead of `seeds_per_step` sequential passes.
+    ///
+    /// Per coordinate the batch applies in record order, so the result is
+    /// bit-identical to [`Trajectory::replay`] for ANY batch size —
+    /// batching changes how many passes are made over θ (one per batch
+    /// instead of one per record), never the arithmetic. The divisibility
+    /// check is an integrity guard, not a numerical requirement: a record
+    /// count that does not split into whole seed-batches means a
+    /// truncated/corrupt log or a wrong belief about the run's batch
+    /// size, and erroring beats quietly replaying such a log.
+    pub fn replay_batched(&self, params: &mut ParamStore, seeds_per_step: usize) -> Result<()> {
+        self.replay_batched_with(&ZEngine::default(), params, seeds_per_step)
+    }
+
+    /// As [`Trajectory::replay_batched`], on an explicit kernel engine.
+    pub fn replay_batched_with(
+        &self,
+        engine: &ZEngine,
+        params: &mut ParamStore,
+        seeds_per_step: usize,
+    ) -> Result<()> {
+        if seeds_per_step == 0 {
+            bail!("replay_batched: seeds_per_step must be > 0");
+        }
+        if self.records.len() % seeds_per_step != 0 {
+            bail!(
+                "replay_batched: {} records do not divide into seed-batches of {}",
+                self.records.len(),
+                seeds_per_step
+            );
+        }
+        let idxs = params.indices_of(&self.trainable);
+        for batch in self.records.chunks(seeds_per_step) {
+            let zs: Vec<(GaussianStream, f32)> = batch
+                .iter()
+                .map(|r| (GaussianStream::new(r.seed), -(r.lr * r.pgrad)))
+                .collect();
+            for &ti in &idxs {
+                engine.multi_axpy_z(&zs, params.offsets[ti], &mut params.data[ti]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Write the log to disk. Binary format:
+    /// `"MZTJ" | n_names u32 | (len u32, bytes)* | n_records u64 |
+    /// (seed u64, pgrad f32, lr f32)*`, all little-endian.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -85,6 +140,7 @@ impl Trajectory {
         Ok(())
     }
 
+    /// Read a trajectory written by [`Trajectory::save`].
     pub fn load(path: &Path) -> std::io::Result<Trajectory> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 4];
@@ -159,6 +215,44 @@ mod tests {
             // equal up to the ±ε perturb/restore rounding of Algorithm 1
             assert!((a - b).abs() < 1e-4, "{} vs {}", a, b);
         }
+    }
+
+    #[test]
+    fn replay_batched_with_unit_batches_is_bitwise_replay() {
+        // seeds_per_step = 1 must be the sequential replay, bit for bit
+        let mut traj = Trajectory::new(vec!["w1".into(), "w2".into()]);
+        for i in 0..7u64 {
+            traj.records.push(StepRecord {
+                seed: 100 + i,
+                pgrad: 0.1 * i as f32 - 0.3,
+                lr: 1e-3,
+            });
+        }
+        let mut a = toy();
+        let mut b = toy();
+        traj.replay(&mut a);
+        traj.replay_batched(&mut b, 1).unwrap();
+        for (x, y) in a.data.iter().flatten().zip(b.data.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{} vs {}", x, y);
+        }
+    }
+
+    #[test]
+    fn replay_batched_rejects_mismatched_seed_batch_sizes() {
+        // 7 records cannot be a run of 4-seed steps; the guard flags a
+        // truncated or mislabeled log instead of quietly accepting it
+        let mut traj = Trajectory::new(vec!["w1".into()]);
+        for i in 0..7u64 {
+            traj.records.push(StepRecord { seed: i, pgrad: 0.1, lr: 1e-3 });
+        }
+        let mut p = toy();
+        let err = traj.replay_batched(&mut p, 4).unwrap_err();
+        let msg = format!("{}", err);
+        assert!(msg.contains("seed-batches"), "unexpected error: {}", msg);
+        // zero-size batches are rejected too
+        assert!(traj.replay_batched(&mut p, 0).is_err());
+        // and a dividing batch size is accepted
+        assert!(traj.replay_batched(&mut p, 7).is_ok());
     }
 
     #[test]

@@ -99,6 +99,63 @@ pub(super) fn multi_sgd_serial(
     }
 }
 
+/// FZOO batched one-sided update: per coordinate the n per-seed projected
+/// gradients are averaged first, then applied as one fused subtraction —
+///   g = (Σᵢ gᵢ·zᵢ)/n;  θ −= lr·(g + wd·θ).
+/// Unlike `multi_sgd_serial` (n sequential SGD updates per coordinate,
+/// matching MeZO's record order) this is a *mean* update: one weight-decay
+/// term per step, not per seed, which is what the one-sided batched
+/// estimator calls for. With n = 1 the computation per coordinate is
+/// `θ −= lr·(g·z + wd·θ)` — exactly `sgd_serial` (see tests/properties.rs).
+pub(super) fn fzoo_serial(
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    theta: &mut [f32],
+    lr: f32,
+    wd: f32,
+) {
+    let k = zs.len();
+    let n_f = k as f32;
+    let mut zb = vec![0.0f32; k * BLOCK];
+    let mut i = 0;
+    while i < theta.len() {
+        let n = BLOCK.min(theta.len() - i);
+        for (kk, &(stream, _)) in zs.iter().enumerate() {
+            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+        }
+        for (j, th) in theta[i..i + n].iter_mut().enumerate() {
+            let mut g = 0.0f32;
+            for (kk, &(_, pg)) in zs.iter().enumerate() {
+                g += pg * zb[kk * BLOCK + j];
+            }
+            *th -= lr * (g / n_f + wd * *th);
+        }
+        i += n;
+    }
+}
+
+/// Batched multi-seed axpy: θ[j] += Σᵢ sᵢ·zᵢ(offset + j), the seeds applied
+/// per coordinate in slice order — the same operation sequence as k
+/// separate `axpy_serial` passes, with θ read and written once. This is the
+/// replay kernel for seed-batched (FZOO) trajectories.
+pub(super) fn multi_axpy_serial(zs: &[(GaussianStream, f32)], offset: u64, theta: &mut [f32]) {
+    let k = zs.len();
+    let mut zb = vec![0.0f32; k * BLOCK];
+    let mut i = 0;
+    while i < theta.len() {
+        let n = BLOCK.min(theta.len() - i);
+        for (kk, &(stream, _)) in zs.iter().enumerate() {
+            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+        }
+        for (j, th) in theta[i..i + n].iter_mut().enumerate() {
+            for (kk, &(_, s)) in zs.iter().enumerate() {
+                *th += s * zb[kk * BLOCK + j];
+            }
+        }
+        i += n;
+    }
+}
+
 /// Fused momentum update over a record batch:
 /// g = (Σᵢ gᵢ·zᵢ)/n + wd·θ;  m = μ·m + g;  θ −= lr·m
 #[allow(clippy::too_many_arguments)]

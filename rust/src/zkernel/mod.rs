@@ -31,6 +31,10 @@
 //! * [`ZEngine::sgd_update`] — θ −= lr·(g·z + wd·θ) in one pass
 //! * [`ZEngine::multi_sgd_update`] — the n-SPSA update Σᵢ over seeds in
 //!   ONE pass over θ instead of n (§Perf L4 in optim::mezo)
+//! * [`ZEngine::fzoo_update`] — the FZOO batched one-sided update: mean of
+//!   n per-seed gradients, one weight-decay term, one pass over θ
+//! * [`ZEngine::multi_axpy_z`] — θ += Σᵢ sᵢ·zᵢ in one pass (seed-batched
+//!   trajectory replay)
 //! * [`ZEngine::momentum_update`] / [`ZEngine::adam_update`] — fused
 //!   moment + parameter updates over the step's record batch
 //! * [`ZEngine::ema_z`] — moment recomputation from a (seed, pgrad) log
@@ -72,6 +76,7 @@ pub fn default_threads() -> usize {
 /// prove bit-stability.
 #[derive(Debug, Clone, Copy)]
 pub struct ZEngine {
+    /// Maximum worker threads a kernel dispatch may fan out to.
     pub threads: usize,
 }
 
@@ -82,6 +87,23 @@ impl Default for ZEngine {
 }
 
 impl ZEngine {
+    /// Engine with an explicit thread budget (clamped to at least 1).
+    ///
+    /// Thread count never changes results — only wall-clock. The
+    /// determinism tests run every kernel at 1/2/8 threads and assert
+    /// `to_bits()` equality.
+    ///
+    /// ```
+    /// use mezo::rng::GaussianStream;
+    /// use mezo::zkernel::ZEngine;
+    /// let stream = GaussianStream::new(7);
+    /// let mut a = vec![0.0f32; 100_000];
+    /// let mut b = vec![0.0f32; 100_000];
+    /// ZEngine::with_threads(1).axpy_z(stream, 0, &mut a, 0.5);
+    /// ZEngine::with_threads(8).axpy_z(stream, 0, &mut b, 0.5);
+    /// assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    /// assert_eq!(a[123], 0.5 * stream.z(123));
+    /// ```
     pub fn with_threads(threads: usize) -> ZEngine {
         ZEngine { threads: threads.max(1) }
     }
@@ -223,6 +245,21 @@ impl ZEngine {
     }
 
     /// θ[j] += s · z(offset + j) — perturb, restore, replay.
+    ///
+    /// `offset` is the tensor's *global* flat offset, so every pass over a
+    /// tensor regenerates identical z coordinates no matter how the work
+    /// is chunked:
+    ///
+    /// ```
+    /// use mezo::rng::GaussianStream;
+    /// use mezo::zkernel::ZEngine;
+    /// let eng = ZEngine::default();
+    /// let stream = GaussianStream::new(42);
+    /// let mut theta = vec![1.0f32; 512];
+    /// eng.axpy_z(stream, 100, &mut theta, 1e-3); // perturb
+    /// eng.axpy_z(stream, 100, &mut theta, -1e-3); // restore: same z
+    /// assert!(theta.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+    /// ```
     pub fn axpy_z(&self, stream: GaussianStream, offset: u64, theta: &mut [f32], s: f32) {
         self.run(theta, PAR_MIN, |start, chunk| {
             kernels::axpy_serial(stream, offset + start as u64, chunk, s);
@@ -276,6 +313,43 @@ impl ZEngine {
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run(theta, min, |start, chunk| {
             kernels::multi_sgd_serial(zs, offset + start as u64, chunk, lr, wd);
+        });
+    }
+
+    /// FZOO batched one-sided update (optim::fzoo): per coordinate,
+    /// g = (Σᵢ gᵢ·zᵢ)/n;  θ −= lr·(g + wd·θ) — the whole n-seed batch in
+    /// ONE pass over θ with a single weight-decay term. `zs` carries the
+    /// *raw* per-seed projected gradients; the mean over `zs.len()` is
+    /// taken inside the kernel. With `zs.len() == 1` this computes exactly
+    /// [`ZEngine::sgd_update`].
+    pub fn fzoo_update(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        theta: &mut [f32],
+        lr: f32,
+        wd: f32,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run(theta, min, |start, chunk| {
+            kernels::fzoo_serial(zs, offset + start as u64, chunk, lr, wd);
+        });
+    }
+
+    /// Batched multi-seed axpy: θ[j] += Σᵢ sᵢ·zᵢ(offset + j) in ONE pass
+    /// over θ. Per coordinate the seeds apply in slice order, exactly as a
+    /// sequence of [`ZEngine::axpy_z`] calls would — the replay primitive
+    /// for seed-batched (FZOO) trajectories.
+    pub fn multi_axpy_z(&self, zs: &[(GaussianStream, f32)], offset: u64, theta: &mut [f32]) {
+        if zs.is_empty() {
+            return;
+        }
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run(theta, min, |start, chunk| {
+            kernels::multi_axpy_serial(zs, offset + start as u64, chunk);
         });
     }
 
@@ -361,10 +435,15 @@ impl ZEngine {
 /// Scalar knobs of the fused Adam kernel (one step's worth).
 #[derive(Debug, Clone, Copy)]
 pub struct AdamParams {
+    /// learning rate
     pub lr: f32,
+    /// weight decay
     pub wd: f32,
+    /// first-moment EMA coefficient
     pub beta1: f32,
+    /// second-moment EMA coefficient
     pub beta2: f32,
+    /// denominator stabilizer
     pub eps: f32,
     /// 1-based step count for bias correction
     pub t: f32,

@@ -129,6 +129,76 @@ fn multi_sgd_equals_sequential_single_seed_updates() {
 }
 
 #[test]
+fn fzoo_kernel_matches_scalar_reference_across_threads() {
+    // the batched one-sided update: per coordinate, mean the per-seed
+    // gradients first, then one fused subtraction with one wd term
+    let zs: Vec<(GaussianStream, f32)> = (0..4)
+        .map(|k| (GaussianStream::new(400 + k), 0.2 * (k as f32 + 1.0) - 0.5))
+        .collect();
+    let (lr, wd) = (2e-3f32, 1e-4f32);
+    let n_f = zs.len() as f32;
+    for &len in &[1usize, BLOCK + 3, 70_003] {
+        let init = randomized(len, 13);
+        let off = 21u64;
+        let mut reference = init.clone();
+        for (j, th) in reference.iter_mut().enumerate() {
+            let mut g = 0.0f32;
+            for &(stream, pg) in &zs {
+                g += pg * stream.z(off + j as u64);
+            }
+            *th -= lr * (g / n_f + wd * *th);
+        }
+        for &t in &THREADS {
+            let eng = ZEngine::with_threads(t);
+            let mut theta = init.clone();
+            eng.fzoo_update(&zs, off, &mut theta, lr, wd);
+            assert_bits_eq(&theta, &reference, &format!("fzoo len={} t={}", len, t));
+        }
+    }
+}
+
+#[test]
+fn fzoo_kernel_with_one_seed_equals_sgd_update() {
+    // the n = 1 degenerate case IS the one-sided SPSA update
+    let stream = GaussianStream::new(500);
+    let (g, lr, wd) = (0.31f32, 1e-2f32, 1e-4f32);
+    for &len in &[BLOCK + 3, 70_003] {
+        let init = randomized(len, 14);
+        let mut want = init.clone();
+        let eng = ZEngine::with_threads(2);
+        eng.sgd_update(stream, 5, &mut want, lr, g, wd);
+        let mut got = init.clone();
+        eng.fzoo_update(&[(stream, g)], 5, &mut got, lr, wd);
+        assert_bits_eq(&got, &want, &format!("fzoo-n1 len={}", len));
+    }
+}
+
+#[test]
+fn multi_axpy_equals_sequential_axpy_across_threads() {
+    // the batched replay kernel must reproduce k sequential axpy passes
+    // bit for bit (per coordinate the seeds apply in slice order)
+    let zs: Vec<(GaussianStream, f32)> = (0..5)
+        .map(|k| (GaussianStream::new(600 + k), 1e-3 * (k as f32 + 1.0) - 2.5e-3))
+        .collect();
+    for &len in &[1usize, BLOCK + 3, 70_003] {
+        let init = randomized(len, 15);
+        let off = 13u64;
+        let mut reference = init.clone();
+        for &(stream, s) in &zs {
+            for (j, th) in reference.iter_mut().enumerate() {
+                *th += s * stream.z(off + j as u64);
+            }
+        }
+        for &t in &THREADS {
+            let eng = ZEngine::with_threads(t);
+            let mut theta = init.clone();
+            eng.multi_axpy_z(&zs, off, &mut theta);
+            assert_bits_eq(&theta, &reference, &format!("multi_axpy len={} t={}", len, t));
+        }
+    }
+}
+
+#[test]
 fn momentum_kernel_matches_scalar_reference() {
     let zs: Vec<(GaussianStream, f32)> =
         (0..3).map(|k| (GaussianStream::new(200 + k), 0.3 - 0.2 * k as f32)).collect();

@@ -245,3 +245,81 @@ fn prop_examples_fit_budget_for_every_task_and_seed() {
         },
     );
 }
+
+#[test]
+fn prop_fzoo_n1_without_variance_norm_is_the_one_sided_spsa_update() {
+    // ISSUE 2 acceptance: with a single seed and variance normalization
+    // off, an FZOO step must be EXACTLY (to_bits) the one-sided MeZO/SPSA
+    // update θ −= lr·(g·z + wd·θ) with g = (L(θ+εz) − L(θ))/ε — the same
+    // seed stream, the same staged evaluation, the same fused kernel
+    // arithmetic.
+    use mezo::optim::fzoo::{Fzoo, FzooConfig};
+    use mezo::zkernel::ZEngine;
+
+    fn quad(p: &ParamStore) -> f32 {
+        p.data.iter().flatten().map(|&x| (x - 1.0) * (x - 1.0)).sum()
+    }
+
+    forall(
+        25,
+        21,
+        |rng| {
+            (
+                rng.next_u64(),
+                rng.below(300) + 1,
+                rng.below(300) + 1,
+                1e-3 + rng.next_f32() * 1e-2,        // lr
+                1e-3 + rng.next_f32() * 9e-3,        // eps
+                rng.next_f32() * 1e-3,               // wd
+            )
+        },
+        |&(master, d1, d2, lr, eps, wd)| {
+            let specs = vec![
+                TensorDesc { name: "a".into(), shape: vec![d1], dtype: "f32".into() },
+                TensorDesc { name: "b".into(), shape: vec![d2], dtype: "f32".into() },
+            ];
+            let mut p = ParamStore::from_specs(specs.clone());
+            p.init(master);
+            let p0 = p.clone();
+
+            let cfg = FzooConfig {
+                lr,
+                eps,
+                weight_decay: wd,
+                n: 1,
+                variance_norm: false,
+                ..Default::default()
+            };
+            let mut opt = Fzoo::new(cfg, vec![0, 1], master ^ 0x5EED);
+            let info = opt.step(&mut p, |p| Ok(quad(p))).unwrap();
+
+            // reference: the one-sided SPSA update, from the public pieces
+            let engine = ZEngine::default();
+            let seed = Pcg::new(master ^ 0x5EED).next_u64();
+            let stream = GaussianStream::new(seed);
+            let mut staged = p0.clone();
+            for ti in [0usize, 1] {
+                engine.perturb_into(stream, p0.offsets[ti], &p0.data[ti], eps, &mut staged.data[ti]);
+            }
+            let g = (quad(&staged) - quad(&p0)) / eps;
+            let mut want = p0.clone();
+            for ti in [0usize, 1] {
+                engine.sgd_update(stream, want.offsets[ti], &mut want.data[ti], lr, g, wd);
+            }
+
+            ensure(info.seed == seed, "seed stream diverged")?;
+            ensure(
+                info.pgrad.to_bits() == g.to_bits(),
+                format!("pgrad {} vs one-sided g {}", info.pgrad, g),
+            )?;
+            ensure(opt.history.len() == 1, "one record per seed")?;
+            ensure(opt.history[0].lr.to_bits() == lr.to_bits(), "raw lr must apply")?;
+            for (x, y) in p.data.iter().flatten().zip(want.data.iter().flatten()) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("param drifted: {} vs {}", x, y));
+                }
+            }
+            Ok(())
+        },
+    );
+}
