@@ -11,8 +11,10 @@
 //! `z()` path the seed implementation used, at d ∈ {1e5, 1e6, 1e7} and
 //! thread counts {1, 2, 4, 8}. A second group compares whole FZOO steps
 //! against MezoSgd n-SPSA steps at matched forward-pass budgets (see
-//! `fzoo_vs_mezo_bench`). Results land in BENCH_zkernel.json so the perf
-//! trajectory is tracked across PRs.
+//! `fzoo_vs_mezo_bench`); a third sweeps sparse SensZOQ mask densities
+//! {1%, 10%, 100%} against the dense composite (`mask_density_bench`).
+//! Results land in BENCH_zkernel.json so the perf trajectory is tracked
+//! across PRs.
 
 use mezo::rng::GaussianStream;
 use mezo::util::json::{obj, Json};
@@ -205,15 +207,77 @@ fn fzoo_vs_mezo_bench() -> Vec<Json> {
     out
 }
 
+/// Sparse SensZOQ mask-density sweep: the masked perturb+update composite
+/// (3 masked axpy passes + 1 masked SGD update — a sparse in-place MeZO
+/// step's parameter traffic) against the dense composite, at density ∈
+/// {1%, 10%, 100%} and d ∈ {1e5, 1e6, 1e7}. Evenly-strided masks model a
+/// scattered sensitive set (the masked kernels' hybrid z path stays on the
+/// per-coordinate side below ~75% block occupancy); density 1.0 is the
+/// full mask, whose cost should track the dense kernel. Results land in
+/// BENCH_zkernel.json under "mask_density".
+fn mask_density_bench() -> Vec<Json> {
+    let stream = GaussianStream::new(0x5EED);
+    let (lr, g, wd, eps) = (1e-4f32, 0.37f32, 1e-5f32, 1e-3f32);
+    let mut out = Vec::new();
+    for &d in &[100_000usize, 1_000_000, 10_000_000] {
+        let reps = match d {
+            100_000 => 9,
+            1_000_000 => 5,
+            _ => 3,
+        };
+        let mut theta = vec![0.01f32; d];
+        for &density in &[0.01f64, 0.1, 1.0] {
+            let stride = (1.0 / density).round() as usize;
+            let idxs: Vec<u32> = (0..d as u32).step_by(stride).collect();
+            let mut best = 0.0f64;
+            for &t in &[1usize, 2, 4, 8] {
+                let eng = ZEngine::with_threads(t);
+                let dense_s = time(reps, || {
+                    eng.axpy_z(stream, 0, &mut theta, eps);
+                    eng.axpy_z(stream, 0, &mut theta, -2.0 * eps);
+                    eng.axpy_z(stream, 0, &mut theta, eps);
+                    eng.sgd_update(stream, 0, &mut theta, lr, g, wd);
+                });
+                let masked_s = time(reps, || {
+                    eng.axpy_z_masked(stream, 0, &idxs, &mut theta, eps);
+                    eng.axpy_z_masked(stream, 0, &idxs, &mut theta, -2.0 * eps);
+                    eng.axpy_z_masked(stream, 0, &idxs, &mut theta, eps);
+                    eng.sgd_update_masked(stream, 0, &idxs, &mut theta, lr, g, wd);
+                });
+                best = best.max(dense_s / masked_s);
+                out.push(obj(vec![
+                    ("kernel", Json::from("masked perturb+update")),
+                    ("d", Json::from(d as f64)),
+                    ("density", Json::from(density)),
+                    ("masked_coords", Json::from(idxs.len() as f64)),
+                    ("threads", Json::from(t as f64)),
+                    ("dense_step_s", Json::from(dense_s)),
+                    ("masked_step_s", Json::from(masked_s)),
+                    ("speedup_vs_dense", Json::from(dense_s / masked_s)),
+                ]));
+            }
+            println!(
+                "d={:>9} density={:>4}%: best masked/dense step speedup {:.2}x",
+                d,
+                (density * 100.0) as u32,
+                best
+            );
+        }
+    }
+    out
+}
+
 fn main() {
     let rows = zkernel_bench();
     let fzoo_rows = fzoo_vs_mezo_bench();
+    let mask_rows = mask_density_bench();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let report = obj(vec![
         ("bench", Json::from("zkernel")),
         ("hardware_threads", Json::from(hw as f64)),
         ("rows", Json::Arr(rows.iter().map(Row::json).collect())),
         ("fzoo_vs_mezo", Json::Arr(fzoo_rows)),
+        ("mask_density", Json::Arr(mask_rows)),
     ]);
     std::fs::write("BENCH_zkernel.json", report.to_string()).expect("write BENCH_zkernel.json");
     println!("wrote BENCH_zkernel.json ({} rows)", rows.len());

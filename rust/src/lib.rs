@@ -7,9 +7,10 @@
 //!  - L3 (this crate): the MeZO optimizer family (and the FZOO batched-seed
 //!    variant, [`optim::fzoo`]) operating **in place** on rust-owned
 //!    parameter buffers via a counter-based Gaussian stream and the
-//!    blocked, multi-threaded [`zkernel`] engine, plus the training /
-//!    evaluation / baseline / experiment system. Python never runs at
-//!    runtime.
+//!    blocked, multi-threaded [`zkernel`] engine — optionally restricted
+//!    to a static sparse sensitive-weight set ([`zkernel::mask`], the
+//!    SensZOQ workload) — plus the training / evaluation / baseline /
+//!    experiment system. Python never runs at runtime.
 //!
 //! Feature `pjrt` gates everything that needs the XLA/PJRT runtime
 //! (artifact execution: `runtime`, `train`, `exp`, the evaluator and
@@ -22,10 +23,11 @@
 //! `docs/ARCHITECTURE.md` for the paper-section → module mapping.
 #![warn(missing_docs)]
 
-// The core subsystems — rng, zkernel, optim, storage — are fully
-// documented and hold the missing_docs line. The remaining modules are
-// grandfathered with module-level allows until their own doc pass;
-// shrinking this list is cheap follow-up work.
+// The core subsystems — rng, zkernel (incl. the sparse mask tier), optim,
+// storage, model — are fully documented and hold the missing_docs line.
+// The remaining modules are grandfathered with module-level allows until
+// their own doc pass; shrinking this list is cheap follow-up work
+// (document-then-remove a marker, never add one).
 #[allow(missing_docs)]
 pub mod baselines;
 #[allow(missing_docs)]
@@ -37,7 +39,6 @@ pub mod eval;
 pub mod exp;
 #[allow(missing_docs)]
 pub mod memory;
-#[allow(missing_docs)]
 pub mod model;
 pub mod optim;
 pub mod rng;

@@ -7,48 +7,82 @@
 use crate::util::json::Json;
 use std::path::Path;
 
+/// One named tensor of the artifact ABI: name, shape and dtype string
+/// (`"f32"`/`"float32"`, `"i32"`, …) exactly as the sidecar declares them.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorDesc {
+    /// dotted tensor name (e.g. `layer0.attn.wq`) — also the
+    /// `ParamStore` lookup key
     pub name: String,
+    /// dimension sizes, row-major; empty = scalar
     pub shape: Vec<usize>,
+    /// element type string as emitted by the compiler sidecar
     pub dtype: String,
 }
 
 impl TensorDesc {
+    /// Scalar count (product of dims; 1 for a scalar).
     pub fn len(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
 }
 
+/// Transformer dimensions of the compiled model.
 #[derive(Debug, Clone)]
 pub struct Dims {
+    /// residual-stream width
     pub d_model: usize,
+    /// transformer block count
     pub n_layers: usize,
+    /// attention heads per block
     pub n_heads: usize,
+    /// feed-forward hidden width
     pub d_ff: usize,
+    /// per-head key/query width
     pub head_dim: usize,
 }
 
+/// The parsed `.meta.json` sidecar of one compiled loss/logits artifact —
+/// everything the runtime needs to feed and read it without recompiling.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// artifact identifier (also its file stem under `artifacts/`)
     pub name: String,
+    /// model family tag (`"ar"`, `"mlm"`, …)
     pub family: String,
+    /// model size tag (`"tiny"`, `"small"`, …)
     pub size: String,
+    /// tuning mode: `"full"`, `"lora"` or `"prefix"`
     pub tuning: String,
+    /// artifact output mode (`"loss"` or `"logits"`)
     pub mode: String,
+    /// compiled batch size (the ABI is shape-static)
     pub batch: usize,
+    /// compiled sequence length
     pub seq: usize,
+    /// vocabulary size
     pub vocab: usize,
+    /// maximum sequence length the position table supports
     pub max_seq: usize,
+    /// transformer dimensions
     pub dims: Dims,
+    /// LoRA rank (when `tuning == "lora"`)
     pub lora_r: usize,
+    /// LoRA scale α
     pub lora_alpha: f64,
+    /// prefix length (when `tuning == "prefix"`)
     pub prefix_len: usize,
+    /// every parameter tensor, in the exact upload (ABI) order
     pub params: Vec<TensorDesc>,
+    /// names of the tensors fine-tuning may update
     pub trainable: Vec<String>,
+    /// non-parameter inputs (token ids, masks, targets), in ABI order
     pub batch_inputs: Vec<TensorDesc>,
+    /// artifact outputs, in ABI order
     pub outputs: Vec<TensorDesc>,
+    /// estimated FLOPs of one forward pass (cost model for tables)
     pub flops_forward: f64,
+    /// total parameter count as computed at compile time
     pub n_params: usize,
 }
 
@@ -76,6 +110,7 @@ fn tensor_list(j: &Json, default_dtype: &str) -> Result<Vec<TensorDesc>, String>
 }
 
 impl ArtifactMeta {
+    /// Parse a `.meta.json` sidecar body; errors name the missing field.
     pub fn parse(text: &str) -> Result<ArtifactMeta, String> {
         let j = Json::parse(text)?;
         let d = j.get("dims");
@@ -114,12 +149,14 @@ impl ArtifactMeta {
         })
     }
 
+    /// Read and parse a sidecar file.
     pub fn load(path: &Path) -> Result<ArtifactMeta, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("read {}: {}", path.display(), e))?;
         ArtifactMeta::parse(&text)
     }
 
+    /// Position of a named output in the artifact's output list.
     pub fn output_index(&self, name: &str) -> Option<usize> {
         self.outputs.iter().position(|o| o.name == name)
     }

@@ -13,16 +13,24 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
+/// The rust-owned parameter buffers MeZO operates on in place: one
+/// contiguous f32 buffer per named tensor, in artifact ABI order, each
+/// with its global flat offset for counter-based z indexing (see the
+/// [module docs](self)).
 #[derive(Debug, Clone)]
 pub struct ParamStore {
+    /// tensor descriptors, in ABI order (parallel to `data`/`offsets`)
     pub specs: Vec<TensorDesc>,
     /// global flat offset of each tensor (for counter-based z indexing)
     pub offsets: Vec<u64>,
+    /// the parameter values, one contiguous buffer per tensor
     pub data: Vec<Vec<f32>>,
     index: HashMap<String, usize>,
 }
 
 impl ParamStore {
+    /// Store with all-zero buffers laid out per `specs` (offsets are the
+    /// running scalar count, in spec order).
     pub fn from_specs(specs: Vec<TensorDesc>) -> ParamStore {
         let mut offsets = Vec::with_capacity(specs.len());
         let mut off = 0u64;
@@ -39,14 +47,18 @@ impl ParamStore {
         ParamStore { specs, offsets, data, index }
     }
 
+    /// Store shaped after an artifact's parameter list.
     pub fn from_meta(meta: &ArtifactMeta) -> ParamStore {
         ParamStore::from_specs(meta.params.clone())
     }
 
+    /// Total scalar count across all tensors.
     pub fn n_params(&self) -> usize {
         self.data.iter().map(|d| d.len()).sum()
     }
 
+    /// Index of a named tensor; panics on an unknown name (the store is
+    /// the ABI — a missing name is a programming error, not input).
     pub fn idx(&self, name: &str) -> usize {
         *self
             .index
@@ -54,15 +66,18 @@ impl ParamStore {
             .unwrap_or_else(|| panic!("no parameter named '{}'", name))
     }
 
+    /// Borrow a tensor's values by name.
     pub fn get(&self, name: &str) -> &[f32] {
         &self.data[self.idx(name)]
     }
 
+    /// Mutably borrow a tensor's buffer by name.
     pub fn get_mut(&mut self, name: &str) -> &mut Vec<f32> {
         let i = self.idx(name);
         &mut self.data[i]
     }
 
+    /// Whether a tensor of this name exists.
     pub fn has(&self, name: &str) -> bool {
         self.index.contains_key(name)
     }
@@ -110,6 +125,7 @@ impl ParamStore {
     // format: magic "MZCK" u32, n_tensors u32, then per tensor:
     //   name_len u32 | name bytes | ndim u32 | dims u64... | f32 data
 
+    /// Write a binary checkpoint (magic `"MZCK"`; see the format comment).
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;

@@ -36,7 +36,7 @@
 use crate::model::params::ParamStore;
 use crate::optim::mezo::{StepInfo, StepRecord};
 use crate::rng::{GaussianStream, Pcg};
-use crate::zkernel::ZEngine;
+use crate::zkernel::{SparseMask, ZEngine};
 use anyhow::Result;
 
 /// Configuration of the [`Fzoo`] optimizer.
@@ -87,17 +87,34 @@ pub struct Fzoo {
     /// the blocked/threaded kernel engine every parameter pass runs on;
     /// bit-identical for any `engine.threads` (see zkernel::tests)
     pub engine: ZEngine,
+    /// optional sparse SensZOQ mask: when set, staging and the fused
+    /// update walk ONLY the masked coordinates (same global z counters as
+    /// dense, so a full mask reproduces dense stepping bit for bit). Log
+    /// [`SparseMask::digest`] next to `history` so replay can verify mask
+    /// identity (`storage::Trajectory::with_mask_digest`).
+    pub mask: Option<SparseMask>,
     /// (seed, gᵢ/n, lr_eff) per applied seed — the full trajectory, in the
     /// shape `Trajectory::replay`/`replay_batched` reconstruct from
     pub history: Vec<StepRecord>,
     seed_rng: Pcg,
-    /// staging clone of the parameter store: trainable tensors are
-    /// rewritten per seed via `perturb_into`; non-trainable tensors are
-    /// copied when the clone is (re)built and NOT re-mirrored per step —
-    /// the optimizer is bound to one store whose frozen tensors stay
-    /// fixed between steps (see [`Fzoo::invalidate_scratch`] for the
-    /// escape hatch); rebuilt automatically on shape mismatch
+    /// staging store, allocated once and reused every step — no per-step
+    /// clone or reallocation (pointer/capacity identity pinned in the
+    /// `scratch_store_is_reused_without_reallocation` test). Dense steps
+    /// rewrite the trainable tensors per seed
+    /// via `perturb_into`; masked steps rewrite only masked coordinates,
+    /// relying on the unmasked ones still mirroring θ (sparse updates
+    /// never move them). Content refreshes happen in place: trainable
+    /// tensors are re-copied when the active mask digest changes, and the
+    /// whole store is re-copied after [`Fzoo::invalidate_scratch`];
+    /// non-trainable tensors are otherwise NOT re-mirrored per step — the
+    /// optimizer is bound to one store whose frozen tensors stay fixed
+    /// between steps. Reallocated only on shape mismatch.
     scratch: Option<ParamStore>,
+    /// digest of the mask the scratch content was staged under (None =
+    /// dense); a change triggers the in-place trainable-tensor refresh
+    scratch_digest: Option<u64>,
+    /// set by [`Fzoo::invalidate_scratch`]: full in-place re-copy next step
+    scratch_stale: bool,
 }
 
 impl Fzoo {
@@ -108,13 +125,30 @@ impl Fzoo {
             trainable,
             step: 0,
             engine: ZEngine::default(),
+            mask: None,
             history: Vec::new(),
             seed_rng: Pcg::new(master_seed),
             scratch: None,
+            scratch_digest: None,
+            scratch_stale: false,
         }
     }
 
-    /// (Re)build the staging store when absent or shape-mismatched.
+    /// Hand out the staging store, refreshing its content *in place* when
+    /// needed (never reallocating unless the tensor shapes changed):
+    ///
+    /// * stale ([`Fzoo::invalidate_scratch`]) → copy every tensor from
+    ///   `params`;
+    /// * active mask digest differs from the one the scratch was staged
+    ///   under (dense→masked, masked→dense, or a different mask) → copy
+    ///   only the trainable tensors: frozen tensors were copied at build
+    ///   and are never written by staging, so they are still exact, while
+    ///   trainable tensors may hold a previous mask's ±εz residue on
+    ///   coordinates the new mask no longer rewrites;
+    /// * otherwise → reuse as-is (dense staging rewrites trainable
+    ///   tensors per seed; masked staging rewrites the masked coordinates
+    ///   and the unmasked ones still mirror θ, which sparse updates never
+    ///   move).
     ///
     /// The reuse check is shape-only: a *different* store with identical
     /// tensor shapes would be accepted with the previous store's frozen
@@ -122,25 +156,39 @@ impl Fzoo {
     /// bound to one logical store per run — call
     /// [`Fzoo::invalidate_scratch`] when that assumption breaks.
     fn take_scratch(&mut self, params: &ParamStore) -> ParamStore {
-        match self.scratch.take() {
-            Some(s)
+        let digest = self.mask.as_ref().map(|m| m.digest());
+        let s = match self.scratch.take() {
+            Some(mut s)
                 if s.data.len() == params.data.len()
                     && s.data.iter().zip(&params.data).all(|(a, b)| a.len() == b.len()) =>
             {
+                if self.scratch_stale {
+                    s.copy_from(params);
+                } else if self.scratch_digest != digest {
+                    for &ti in &self.trainable {
+                        s.data[ti].copy_from_slice(&params.data[ti]);
+                    }
+                }
                 s
             }
             _ => params.clone(),
-        }
+        };
+        self.scratch_stale = false;
+        self.scratch_digest = digest;
+        s
     }
 
-    /// Drop the cached staging store so the next [`Fzoo::step`] rebuilds
-    /// it from the parameters it is given. Required after swapping to a
-    /// different (same-shaped) `ParamStore` or mutating *non-trainable*
-    /// tensors outside the optimizer — the staging copy only refreshes
-    /// trainable tensors per seed, so stale frozen tensors would
-    /// otherwise silently skew every per-seed loss.
+    /// Mark the staging store stale so the next [`Fzoo::step`] re-copies
+    /// every tensor from the parameters it is given (in place — the
+    /// allocation is kept). Required after swapping to a different
+    /// (same-shaped) `ParamStore` or mutating tensors outside the
+    /// optimizer — staging only rewrites what it stages (trainable
+    /// tensors; under a mask, only masked coordinates), so external edits
+    /// would otherwise silently skew every per-seed loss. Mask changes do
+    /// NOT need this: the digest check in `take_scratch` refreshes the
+    /// trainable tensors automatically.
     pub fn invalidate_scratch(&mut self) {
-        self.scratch = None;
+        self.scratch_stale = true;
     }
 
     /// FZOO's variance-adaptive rule: lr / max over the floor of the
@@ -186,6 +234,9 @@ impl Fzoo {
     where
         F: FnMut(&ParamStore) -> Result<f32>,
     {
+        if let Some(m) = &self.mask {
+            m.validate(params)?;
+        }
         let n = self.cfg.n.max(1);
         let eps = self.cfg.eps;
         // anchor: one forward at the unperturbed θ
@@ -197,15 +248,27 @@ impl Fzoo {
         for _ in 0..n {
             let seed = self.seed_rng.next_u64();
             let stream = GaussianStream::new(seed);
-            // stage θ + ε·z without touching θ (no restore pass, no drift)
+            // stage θ + ε·z without touching θ (no restore pass, no
+            // drift); under a mask only the masked coordinates are
+            // rewritten — the rest of scratch already mirrors θ
             for &ti in &self.trainable {
-                self.engine.perturb_into(
-                    stream,
-                    params.offsets[ti],
-                    &params.data[ti],
-                    eps,
-                    &mut scratch.data[ti],
-                );
+                match &self.mask {
+                    None => self.engine.perturb_into(
+                        stream,
+                        params.offsets[ti],
+                        &params.data[ti],
+                        eps,
+                        &mut scratch.data[ti],
+                    ),
+                    Some(m) => self.engine.perturb_into_masked(
+                        stream,
+                        params.offsets[ti],
+                        m.indices(ti),
+                        &params.data[ti],
+                        eps,
+                        &mut scratch.data[ti],
+                    ),
+                }
             }
             let li = loss(&scratch)?;
             diffs.push(li - l0);
@@ -217,13 +280,23 @@ impl Fzoo {
         let lr_eff = self.effective_lr(&diffs);
         // the whole n-seed batch in one fused pass per tensor
         for &ti in &self.trainable {
-            self.engine.fzoo_update(
-                &zs,
-                params.offsets[ti],
-                &mut params.data[ti],
-                lr_eff,
-                self.cfg.weight_decay,
-            );
+            match &self.mask {
+                None => self.engine.fzoo_update(
+                    &zs,
+                    params.offsets[ti],
+                    &mut params.data[ti],
+                    lr_eff,
+                    self.cfg.weight_decay,
+                ),
+                Some(m) => self.engine.fzoo_update_masked(
+                    &zs,
+                    params.offsets[ti],
+                    m.indices(ti),
+                    &mut params.data[ti],
+                    lr_eff,
+                    self.cfg.weight_decay,
+                ),
+            }
         }
         // one record per seed, gradient mean-normalized so that replay's
         // θ −= lr·pgrad·z reconstructs this step's update (wd aside)
@@ -379,6 +452,190 @@ mod tests {
                     assert_eq!(x.to_bits(), y.to_bits(), "t={}: {} vs {}", threads, x, y);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn scratch_store_is_reused_without_reallocation() {
+        // the staging store is allocated once; steps, mask swaps and
+        // invalidation all refresh it in place (pointer/capacity identity)
+        let mut p = big_params();
+        let cfg = FzooConfig { lr: 1e-3, n: 3, ..Default::default() };
+        let mut opt = Fzoo::new(cfg, vec![0, 1], 5);
+        opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        let ids: Vec<(*const f32, usize)> = opt
+            .scratch
+            .as_ref()
+            .unwrap()
+            .data
+            .iter()
+            .map(|v| (v.as_ptr(), v.capacity()))
+            .collect();
+        for _ in 0..10 {
+            opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        }
+        // switching to a sparse mask refreshes content, not allocation
+        opt.mask = Some(
+            crate::zkernel::SparseMask::top_k(
+                &p,
+                &[0, 1],
+                64,
+                crate::zkernel::Sensitivity::Magnitude,
+            )
+            .unwrap(),
+        );
+        for _ in 0..5 {
+            opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        }
+        // explicit invalidation re-copies in place too
+        opt.invalidate_scratch();
+        opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        let after: Vec<(*const f32, usize)> = opt
+            .scratch
+            .as_ref()
+            .unwrap()
+            .data
+            .iter()
+            .map(|v| (v.as_ptr(), v.capacity()))
+            .collect();
+        assert_eq!(ids, after, "staging store was reallocated");
+    }
+
+    #[test]
+    fn full_mask_fzoo_is_bitwise_identical_to_dense() {
+        for threads in [1usize, 2, 8] {
+            let cfg = FzooConfig {
+                lr: 5e-3,
+                eps: 1e-3,
+                weight_decay: 1e-4,
+                n: 4,
+                variance_norm: true,
+                ..Default::default()
+            };
+            let mut p_dense = big_params();
+            let mut dense = Fzoo::new(cfg.clone(), vec![0, 1], 0xFACE);
+            dense.engine = ZEngine::with_threads(threads);
+            let mut p_masked = big_params();
+            let mut masked = Fzoo::new(cfg, vec![0, 1], 0xFACE);
+            masked.engine = ZEngine::with_threads(threads);
+            masked.mask = Some(crate::zkernel::SparseMask::full(&p_masked, &[0, 1]));
+            for _ in 0..4 {
+                dense.step(&mut p_dense, |p| quad_loss(p)).unwrap();
+                masked.step(&mut p_masked, |p| quad_loss(p)).unwrap();
+            }
+            for (a, b) in dense.history.iter().zip(&masked.history) {
+                assert_eq!(a.seed, b.seed, "t={}", threads);
+                assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "t={}", threads);
+                assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "t={}", threads);
+            }
+            for (x, y) in p_dense.data.iter().flatten().zip(p_masked.data.iter().flatten()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "t={}: {} vs {}", threads, x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_masked_fzoo_is_bit_identical_across_threads_and_freezes_rest() {
+        let mut reference: Option<(Vec<StepRecord>, Vec<Vec<f32>>)> = None;
+        for threads in [1usize, 2, 8] {
+            let mut p = big_params();
+            let p0 = p.clone();
+            let mask = crate::zkernel::SparseMask::top_k(
+                &p,
+                &[0, 1],
+                150,
+                crate::zkernel::Sensitivity::Magnitude,
+            )
+            .unwrap();
+            let cfg = FzooConfig {
+                lr: 5e-3,
+                eps: 1e-3,
+                weight_decay: 1e-4,
+                n: 5,
+                variance_norm: true,
+                ..Default::default()
+            };
+            let mut opt = Fzoo::new(cfg, vec![0, 1], 0xD00D);
+            opt.engine = ZEngine::with_threads(threads);
+            opt.mask = Some(mask.clone());
+            for _ in 0..4 {
+                opt.step(&mut p, |p| quad_loss(p)).unwrap();
+            }
+            // unmasked coordinates are exactly frozen
+            for (ti, (now, then)) in p.data.iter().zip(&p0.data).enumerate() {
+                let mut hit = vec![false; now.len()];
+                for &i in mask.indices(ti) {
+                    hit[i as usize] = true;
+                }
+                for (j, (a, b)) in now.iter().zip(then).enumerate() {
+                    if !hit[j] {
+                        assert_eq!(a.to_bits(), b.to_bits(), "t={} coord {}:{}", threads, ti, j);
+                    }
+                }
+            }
+            if let Some((hist, data)) = &reference {
+                assert_eq!(hist.len(), opt.history.len());
+                for (a, b) in hist.iter().zip(&opt.history) {
+                    assert_eq!(a.seed, b.seed, "t={}", threads);
+                    assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "t={}", threads);
+                    assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "t={}", threads);
+                }
+                for (x, y) in data.iter().flatten().zip(p.data.iter().flatten()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "t={}", threads);
+                }
+            } else {
+                reference = Some((opt.history.clone(), p.data.clone()));
+            }
+        }
+    }
+
+    #[test]
+    fn mask_swap_refreshes_scratch_so_losses_stay_honest() {
+        // run masked with mask A (leaves +εz residue on A's coordinates in
+        // scratch), swap to a disjoint mask B, and verify the next step's
+        // staged losses see θ — not A's residue — on every un-B coordinate.
+        // A run with B from scratch must produce the identical trajectory.
+        let build = |warm_mask: Option<&[u32]>| -> (Vec<StepRecord>, Vec<Vec<f32>>) {
+            let mut p = big_params();
+            let cfg =
+                FzooConfig { lr: 1e-3, eps: 1e-3, n: 3, variance_norm: false, ..Default::default() };
+            let mut opt = Fzoo::new(cfg, vec![0, 1], 0xAB);
+            if let Some(idxs) = warm_mask {
+                // warm-up step under mask A — its only lasting effect on
+                // the optimizer should be the scratch store's content
+                let mask_a = crate::zkernel::SparseMask::from_indices(vec![
+                    idxs.to_vec(),
+                    Vec::new(),
+                ])
+                .unwrap();
+                opt.mask = Some(mask_a);
+                opt.step(&mut p, |p| quad_loss(p)).unwrap();
+                // reset θ, history and the seed stream so both runs
+                // compare the B phase only
+                p = big_params();
+                opt.history.clear();
+            }
+            opt.seed_rng = Pcg::new(0xCD);
+            let mask_b = crate::zkernel::SparseMask::from_indices(vec![
+                vec![500, 501, 502, 600],
+                vec![7, 9],
+            ])
+            .unwrap();
+            opt.mask = Some(mask_b);
+            for _ in 0..3 {
+                opt.step(&mut p, |p| quad_loss(p)).unwrap();
+            }
+            (opt.history.clone(), p.data.clone())
+        };
+        let (h_fresh, p_fresh) = build(None);
+        let (h_warm, p_warm) = build(Some(&[0, 1, 2, 3, 90]));
+        assert_eq!(h_fresh.len(), h_warm.len());
+        for (a, b) in h_fresh.iter().zip(&h_warm) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "stale scratch skewed a loss");
+        }
+        for (x, y) in p_fresh.iter().flatten().zip(p_warm.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

@@ -29,8 +29,8 @@
 
 use crate::model::params::ParamStore;
 use crate::rng::{GaussianStream, Pcg};
-use crate::zkernel::{AdamParams, ZEngine};
-use anyhow::Result;
+use crate::zkernel::{AdamParams, SparseMask, ZEngine};
+use anyhow::{bail, Result};
 
 /// Which update rule consumes the SPSA gradient estimate (Appendix B.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -130,6 +130,13 @@ pub struct MezoSgd {
     /// the blocked/threaded kernel engine every parameter pass runs on;
     /// bit-identical for any `engine.threads` (see zkernel::tests)
     pub engine: ZEngine,
+    /// optional sparse SensZOQ mask: when set, perturb and update walk
+    /// ONLY the masked coordinates (same global z counters as dense, so a
+    /// full mask reproduces dense stepping bit for bit). Sgd flavor only —
+    /// `step` errors under Momentum/Adam, whose moment buffers are dense.
+    /// Log [`SparseMask::digest`] next to `history` so replay can verify
+    /// mask identity (`storage::Trajectory::with_mask_digest`).
+    pub mask: Option<SparseMask>,
     seed_rng: Pcg,
     /// (seed, projected_grad, lr) per applied z — the full trajectory
     pub history: Vec<StepRecord>,
@@ -148,6 +155,7 @@ impl MezoSgd {
             trainable,
             step: 0,
             engine: ZEngine::default(),
+            mask: None,
             seed_rng: Pcg::new(master_seed),
             history: Vec::new(),
             m: None,
@@ -158,9 +166,24 @@ impl MezoSgd {
 
     /// In-place perturbation: θ += scale · z(seed), walking only trainable
     /// tensors but indexing z by each tensor's *global* offset so every
-    /// pass regenerates identical coordinates.
+    /// pass regenerates identical coordinates. Under a sparse mask, only
+    /// the masked coordinates are touched (same z per coordinate).
     pub fn perturb(&self, params: &mut ParamStore, seed: u64, scale: f32) {
-        perturb_tensors_with(&self.engine, params, &self.trainable, seed, scale);
+        match &self.mask {
+            None => perturb_tensors_with(&self.engine, params, &self.trainable, seed, scale),
+            Some(m) => {
+                let stream = GaussianStream::new(seed);
+                for &ti in &self.trainable {
+                    self.engine.axpy_z_masked(
+                        stream,
+                        params.offsets[ti],
+                        m.indices(ti),
+                        &mut params.data[ti],
+                        scale,
+                    );
+                }
+            }
+        }
     }
 
     /// current n per the sample schedule
@@ -194,6 +217,15 @@ impl MezoSgd {
     where
         F: FnMut(&ParamStore) -> Result<f32>,
     {
+        if let Some(m) = &self.mask {
+            m.validate(params)?;
+            if self.cfg.flavor != Flavor::Sgd {
+                bail!(
+                    "sparse masks support the Sgd flavor only (SensZOQ perturbs/updates a \
+                     static coordinate set; the Momentum/Adam moment buffers are dense)"
+                );
+            }
+        }
         let n = self.n_now();
         let eps = self.cfg.eps;
         let lr = self.cfg.lr;
@@ -242,13 +274,23 @@ impl MezoSgd {
                     .map(|r| (GaussianStream::new(r.seed), r.pgrad / n as f32))
                     .collect();
                 for &ti in &self.trainable {
-                    self.engine.multi_sgd_update(
-                        &zs,
-                        params.offsets[ti],
-                        &mut params.data[ti],
-                        lr,
-                        self.cfg.weight_decay,
-                    );
+                    match &self.mask {
+                        None => self.engine.multi_sgd_update(
+                            &zs,
+                            params.offsets[ti],
+                            &mut params.data[ti],
+                            lr,
+                            self.cfg.weight_decay,
+                        ),
+                        Some(m) => self.engine.multi_sgd_update_masked(
+                            &zs,
+                            params.offsets[ti],
+                            m.indices(ti),
+                            &mut params.data[ti],
+                            lr,
+                            self.cfg.weight_decay,
+                        ),
+                    }
                 }
             }
             Flavor::Momentum | Flavor::Adam => {
@@ -275,8 +317,9 @@ impl MezoSgd {
         batch: &crate::data::batch::Batch,
         scratch: &mut Vec<f32>,
     ) -> Result<StepInfo> {
-        assert!(self.cfg.flavor == Flavor::Sgd && !self.cfg.one_point && self.n_now() == 1,
-                "fast path covers plain 2-point MeZO-SGD; use step() for variants");
+        assert!(self.cfg.flavor == Flavor::Sgd && !self.cfg.one_point && self.n_now() == 1
+                    && self.mask.is_none(),
+                "fast path covers plain dense 2-point MeZO-SGD; use step() for variants");
         let eps = self.cfg.eps;
         let lr = self.cfg.lr;
         let seed = self.seed_rng.next_u64();
@@ -755,6 +798,132 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn full_mask_step_is_bitwise_identical_to_dense_step() {
+        // the dense-oracle property at the optimizer level: a full mask
+        // changes nothing, bit for bit, for any thread count
+        for threads in [1usize, 2, 8] {
+            let cfg = MezoConfig {
+                lr: 1e-2,
+                eps: 1e-3,
+                weight_decay: 1e-4,
+                n: 2,
+                ..Default::default()
+            };
+            let mut p_dense = big_params();
+            let mut dense = MezoSgd::new(cfg.clone(), vec![0, 1], 0xABCD);
+            dense.engine = ZEngine::with_threads(threads);
+            let mut p_masked = big_params();
+            let mut masked = MezoSgd::new(cfg, vec![0, 1], 0xABCD);
+            masked.engine = ZEngine::with_threads(threads);
+            masked.mask = Some(SparseMask::full(&p_masked, &[0, 1]));
+            for _ in 0..4 {
+                dense.step(&mut p_dense, |p| quad_loss(p)).unwrap();
+                masked.step(&mut p_masked, |p| quad_loss(p)).unwrap();
+            }
+            for (a, b) in dense.history.iter().zip(&masked.history) {
+                assert_eq!(a.seed, b.seed, "t={}", threads);
+                assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "t={}", threads);
+            }
+            for (x, y) in p_dense.data.iter().flatten().zip(p_masked.data.iter().flatten()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "t={}: {} vs {}", threads, x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_mask_freezes_unmasked_coordinates() {
+        let mut p = big_params();
+        let mask = crate::zkernel::SparseMask::top_k(
+            &p,
+            &[0, 1],
+            97,
+            crate::zkernel::Sensitivity::Magnitude,
+        )
+        .unwrap();
+        let before = p.data.clone();
+        let cfg = MezoConfig { lr: 1e-2, eps: 1e-3, n: 2, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, vec![0, 1], 0xFEED);
+        opt.mask = Some(mask.clone());
+        for _ in 0..5 {
+            opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        }
+        let mut changed = 0usize;
+        for (ti, (now, then)) in p.data.iter().zip(&before).enumerate() {
+            let mut hit = vec![false; now.len()];
+            for &i in mask.indices(ti) {
+                hit[i as usize] = true;
+            }
+            for (j, (a, b)) in now.iter().zip(then).enumerate() {
+                if hit[j] {
+                    changed += (a.to_bits() != b.to_bits()) as usize;
+                } else {
+                    assert_eq!(a.to_bits(), b.to_bits(), "unmasked coord {}:{} moved", ti, j);
+                }
+            }
+        }
+        assert!(changed > 0, "masked coordinates never moved");
+    }
+
+    #[test]
+    fn sparse_masked_trajectory_is_bit_identical_across_threads() {
+        let mut reference: Option<(Vec<StepRecord>, Vec<Vec<f32>>)> = None;
+        for threads in [1usize, 2, 8] {
+            let mut p = big_params();
+            let mask = crate::zkernel::SparseMask::top_k(
+                &p,
+                &[0, 1],
+                200,
+                crate::zkernel::Sensitivity::Magnitude,
+            )
+            .unwrap();
+            let cfg = MezoConfig {
+                lr: 1e-2,
+                eps: 1e-3,
+                weight_decay: 1e-4,
+                n: 3,
+                ..Default::default()
+            };
+            let mut opt = MezoSgd::new(cfg, vec![0, 1], 0xB00);
+            opt.engine = ZEngine::with_threads(threads);
+            opt.mask = Some(mask);
+            for _ in 0..4 {
+                opt.step(&mut p, |p| quad_loss(p)).unwrap();
+            }
+            if let Some((hist, data)) = &reference {
+                for (a, b) in hist.iter().zip(&opt.history) {
+                    assert_eq!(a.seed, b.seed, "t={}", threads);
+                    assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "t={}", threads);
+                }
+                for (x, y) in data.iter().flatten().zip(p.data.iter().flatten()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "t={}", threads);
+                }
+            } else {
+                reference = Some((opt.history.clone(), p.data.clone()));
+            }
+        }
+    }
+
+    #[test]
+    fn mask_with_moment_flavor_errors() {
+        let mut p = toy_params();
+        let cfg = MezoConfig { flavor: Flavor::Adam, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, vec![0, 1], 1);
+        opt.mask = Some(SparseMask::full(&p, &[0, 1]));
+        let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+        assert!(format!("{}", err).contains("Sgd flavor"), "{}", err);
+    }
+
+    #[test]
+    fn mask_built_for_another_store_errors() {
+        let mut p = toy_params();
+        let big = big_params();
+        let cfg = MezoConfig::default();
+        let mut opt = MezoSgd::new(cfg, vec![0, 1], 1);
+        opt.mask = Some(SparseMask::full(&big, &[0, 1])); // indices exceed toy tensors
+        assert!(opt.step(&mut p, |p| quad_loss(p)).is_err());
     }
 
     #[test]

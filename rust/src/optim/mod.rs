@@ -21,6 +21,13 @@ pub trait ZoStepper {
     fn forward_passes(&self) -> usize;
     /// The full (seed, projected-grad, lr) trajectory so far.
     fn records(&self) -> &[mezo::StepRecord];
+    /// Digest of the sparse SensZOQ mask the optimizer is stepping under,
+    /// if any — persist it next to [`ZoStepper::records`] (see
+    /// `storage::Trajectory::with_mask_digest`) so replay can verify it
+    /// reconstructs under the same mask. `None` = dense stepping.
+    fn mask_digest(&self) -> Option<u64> {
+        None
+    }
     /// Optional fast path: a whole step against a loss artifact with the
     /// perturbation fused into the upload (see MezoSgd::step_artifact).
     /// Returns None when the variant has no fast path. pjrt builds only.
@@ -84,6 +91,9 @@ impl ZoStepper for FzooStepper {
     fn records(&self) -> &[mezo::StepRecord] {
         &self.inner.history
     }
+    fn mask_digest(&self) -> Option<u64> {
+        self.inner.mask.as_ref().map(|m| m.digest())
+    }
 }
 
 impl ZoStepper for MezoStepper {
@@ -101,6 +111,9 @@ impl ZoStepper for MezoStepper {
     }
     fn records(&self) -> &[mezo::StepRecord] {
         &self.inner.history
+    }
+    fn mask_digest(&self) -> Option<u64> {
+        self.inner.mask.as_ref().map(|m| m.digest())
     }
     #[cfg(feature = "pjrt")]
     fn zo_step_artifact(

@@ -9,7 +9,7 @@
 use crate::model::params::ParamStore;
 use crate::optim::mezo::StepRecord;
 use crate::rng::GaussianStream;
-use crate::zkernel::ZEngine;
+use crate::zkernel::{SparseMask, ZEngine};
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
 use std::path::Path;
@@ -21,18 +21,33 @@ pub struct Trajectory {
     pub trainable: Vec<String>,
     /// one record per applied seed, in application order
     pub records: Vec<StepRecord>,
+    /// [`SparseMask::digest`] of the mask the run stepped under, `None`
+    /// for a dense run. A sparse log is only meaningful together with its
+    /// mask — the masked replay paths verify the digest and fail loudly
+    /// on mismatch, and the dense paths refuse digest-carrying logs.
+    pub mask_digest: Option<u64>,
 }
 
 impl Trajectory {
     /// Empty trajectory over the given trainable tensor names.
     pub fn new(trainable: Vec<String>) -> Trajectory {
-        Trajectory { trainable, records: Vec::new() }
+        Trajectory { trainable, records: Vec::new(), mask_digest: None }
     }
 
     /// Trajectory from an optimizer's history (e.g. `MezoSgd::history`,
-    /// `Fzoo::history`).
+    /// `Fzoo::history`). For a masked run, chain
+    /// [`Trajectory::with_mask_digest`].
     pub fn from_run(trainable: Vec<String>, records: &[StepRecord]) -> Trajectory {
-        Trajectory { trainable, records: records.to_vec() }
+        Trajectory { trainable, records: records.to_vec(), mask_digest: None }
+    }
+
+    /// Tag the log with the digest of the sparse mask the run stepped
+    /// under (`optimizer.mask.digest()`), making it a sparse log: only
+    /// [`Trajectory::replay_masked`]/[`Trajectory::replay_batched_masked`]
+    /// — handed a mask with the same digest — will replay it.
+    pub fn with_mask_digest(mut self, digest: u64) -> Trajectory {
+        self.mask_digest = Some(digest);
+        self
     }
 
     /// bytes needed at f32 grad precision
@@ -49,12 +64,23 @@ impl Trajectory {
     /// No forward passes, no data — just the log. Records stay sequential
     /// (each z regenerates from its own seed); within a record every
     /// tensor runs as one blocked/threaded axpy with coefficient −lr·g.
+    ///
+    /// Dense logs only — panics on a sparse (digest-carrying) log, whose
+    /// updates only ever touched its mask's coordinates: use
+    /// [`Trajectory::replay_masked`] with the run's mask instead.
     pub fn replay(&self, params: &mut ParamStore) {
         self.replay_with(&ZEngine::default(), params)
     }
 
     /// As [`Trajectory::replay`], on an explicit kernel engine.
     pub fn replay_with(&self, engine: &ZEngine, params: &mut ParamStore) {
+        assert!(
+            self.mask_digest.is_none(),
+            "replay: this log was recorded under a sparse mask (digest {:#x}); \
+             dense replay would update coordinates the run never touched — \
+             use replay_masked with the run's mask",
+            self.mask_digest.unwrap()
+        );
         let idxs = params.indices_of(&self.trainable);
         for r in &self.records {
             let stream = GaussianStream::new(r.seed);
@@ -67,6 +93,61 @@ impl Trajectory {
                 );
             }
         }
+    }
+
+    /// Re-apply a sparse (SensZOQ) run: every recorded update walks only
+    /// `mask`'s coordinates, exactly as the run did. The mask's digest
+    /// must equal the logged one — a reconstruction under a different
+    /// sensitive-weight set would silently train different coordinates,
+    /// so mismatch is an error, as is handing a mask to a dense log.
+    pub fn replay_masked(&self, params: &mut ParamStore, mask: &SparseMask) -> Result<()> {
+        self.replay_masked_with(&ZEngine::default(), params, mask)
+    }
+
+    /// As [`Trajectory::replay_masked`], on an explicit kernel engine.
+    pub fn replay_masked_with(
+        &self,
+        engine: &ZEngine,
+        params: &mut ParamStore,
+        mask: &SparseMask,
+    ) -> Result<()> {
+        self.check_mask(params, mask)?;
+        let idxs = params.indices_of(&self.trainable);
+        for r in &self.records {
+            let stream = GaussianStream::new(r.seed);
+            for &ti in &idxs {
+                engine.axpy_z_masked(
+                    stream,
+                    params.offsets[ti],
+                    mask.indices(ti),
+                    &mut params.data[ti],
+                    -(r.lr * r.pgrad),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Shared guard of the masked replay paths: the log must carry a
+    /// digest and the handed mask must hash to it (and fit the store).
+    fn check_mask(&self, params: &ParamStore, mask: &SparseMask) -> Result<()> {
+        let logged = match self.mask_digest {
+            Some(d) => d,
+            None => bail!(
+                "replay_masked: this log was recorded dense (no mask digest); \
+                 use replay/replay_batched"
+            ),
+        };
+        let got = mask.digest();
+        if got != logged {
+            bail!(
+                "replay_masked: mask digest {:#x} does not match the logged {:#x} — \
+                 this is not the mask the run trained under",
+                got,
+                logged
+            );
+        }
+        mask.validate(params)
     }
 
     /// Re-apply a seed-batched (FZOO-style) trajectory: records group into
@@ -94,16 +175,14 @@ impl Trajectory {
         params: &mut ParamStore,
         seeds_per_step: usize,
     ) -> Result<()> {
-        if seeds_per_step == 0 {
-            bail!("replay_batched: seeds_per_step must be > 0");
-        }
-        if self.records.len() % seeds_per_step != 0 {
+        if let Some(d) = self.mask_digest {
             bail!(
-                "replay_batched: {} records do not divide into seed-batches of {}",
-                self.records.len(),
-                seeds_per_step
+                "replay_batched: this log was recorded under a sparse mask (digest {:#x}); \
+                 use replay_batched_masked with the run's mask",
+                d
             );
         }
+        self.check_batches(seeds_per_step)?;
         let idxs = params.indices_of(&self.trainable);
         for batch in self.records.chunks(seeds_per_step) {
             let zs: Vec<(GaussianStream, f32)> = batch
@@ -117,15 +196,80 @@ impl Trajectory {
         Ok(())
     }
 
+    /// Sparse counterpart of [`Trajectory::replay_batched`]: consecutive
+    /// batches of `seeds_per_step` records apply as ONE fused masked pass
+    /// per tensor. Digest and divisibility guards as in the sequential
+    /// and dense variants.
+    pub fn replay_batched_masked(
+        &self,
+        params: &mut ParamStore,
+        mask: &SparseMask,
+        seeds_per_step: usize,
+    ) -> Result<()> {
+        self.replay_batched_masked_with(&ZEngine::default(), params, mask, seeds_per_step)
+    }
+
+    /// As [`Trajectory::replay_batched_masked`], on an explicit engine.
+    pub fn replay_batched_masked_with(
+        &self,
+        engine: &ZEngine,
+        params: &mut ParamStore,
+        mask: &SparseMask,
+        seeds_per_step: usize,
+    ) -> Result<()> {
+        self.check_mask(params, mask)?;
+        self.check_batches(seeds_per_step)?;
+        let idxs = params.indices_of(&self.trainable);
+        for batch in self.records.chunks(seeds_per_step) {
+            let zs: Vec<(GaussianStream, f32)> = batch
+                .iter()
+                .map(|r| (GaussianStream::new(r.seed), -(r.lr * r.pgrad)))
+                .collect();
+            for &ti in &idxs {
+                engine.multi_axpy_z_masked(
+                    &zs,
+                    params.offsets[ti],
+                    mask.indices(ti),
+                    &mut params.data[ti],
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The seed-batch integrity guard shared by the batched replays.
+    fn check_batches(&self, seeds_per_step: usize) -> Result<()> {
+        if seeds_per_step == 0 {
+            bail!("replay_batched: seeds_per_step must be > 0");
+        }
+        if self.records.len() % seeds_per_step != 0 {
+            bail!(
+                "replay_batched: {} records do not divide into seed-batches of {}",
+                self.records.len(),
+                seeds_per_step
+            );
+        }
+        Ok(())
+    }
+
     /// Write the log to disk. Binary format:
     /// `"MZTJ" | n_names u32 | (len u32, bytes)* | n_records u64 |
-    /// (seed u64, pgrad f32, lr f32)*`, all little-endian.
+    /// (seed u64, pgrad f32, lr f32)*`, all little-endian. A sparse log
+    /// (carrying a mask digest) writes magic `"MZT2"` instead, with
+    /// `digest u64` inserted right after the magic — dense logs keep the
+    /// legacy layout so older readers are unaffected.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"MZTJ")?;
+        match self.mask_digest {
+            None => f.write_all(b"MZTJ")?,
+            Some(d) => {
+                f.write_all(b"MZT2")?;
+                f.write_all(&d.to_le_bytes())?;
+            }
+        }
         f.write_all(&(self.trainable.len() as u32).to_le_bytes())?;
         for n in &self.trainable {
             f.write_all(&(n.len() as u32).to_le_bytes())?;
@@ -140,19 +284,26 @@ impl Trajectory {
         Ok(())
     }
 
-    /// Read a trajectory written by [`Trajectory::save`].
+    /// Read a trajectory written by [`Trajectory::save`] (either magic).
     pub fn load(path: &Path) -> std::io::Result<Trajectory> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
-        if &magic != b"MZTJ" {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "bad trajectory magic",
-            ));
-        }
         let mut u32b = [0u8; 4];
         let mut u64b = [0u8; 8];
+        let mask_digest = match &magic {
+            b"MZTJ" => None,
+            b"MZT2" => {
+                f.read_exact(&mut u64b)?;
+                Some(u64::from_le_bytes(u64b))
+            }
+            _ => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "bad trajectory magic",
+                ))
+            }
+        };
         f.read_exact(&mut u32b)?;
         let n_names = u32::from_le_bytes(u32b) as usize;
         let mut trainable = Vec::with_capacity(n_names);
@@ -175,7 +326,7 @@ impl Trajectory {
             let lr = f32::from_le_bytes(u32b);
             records.push(StepRecord { seed, pgrad, lr });
         }
-        Ok(Trajectory { trainable, records })
+        Ok(Trajectory { trainable, records, mask_digest })
     }
 }
 
@@ -268,11 +419,91 @@ mod tests {
     }
 
     #[test]
+    fn masked_replay_reconstructs_sparse_run_and_guards_digest() {
+        use crate::optim::fzoo::{Fzoo, FzooConfig};
+        use crate::zkernel::{Sensitivity, SparseMask};
+        let mut trained = toy();
+        let mask = SparseMask::top_k(&trained, &[0, 1], 9, Sensitivity::Magnitude).unwrap();
+        let n = 3usize;
+        let cfg = FzooConfig { lr: 1e-2, eps: 1e-3, n, ..Default::default() };
+        let mut opt = Fzoo::new(cfg, vec![0, 1], 13);
+        opt.mask = Some(mask.clone());
+        for _ in 0..20 {
+            opt.step(&mut trained, |p| {
+                Ok(p.data.iter().flatten().map(|&x| (x - 0.5) * (x - 0.5)).sum())
+            })
+            .unwrap();
+        }
+        let traj = Trajectory::from_run(vec!["w1".into(), "w2".into()], &opt.history)
+            .with_mask_digest(mask.digest());
+
+        // sequential and batched masked replay land on the trained params
+        // (wd = 0: the log is the whole update)
+        for batched in [false, true] {
+            let mut replayed = toy();
+            if batched {
+                traj.replay_batched_masked(&mut replayed, &mask, n).unwrap();
+            } else {
+                traj.replay_masked(&mut replayed, &mask).unwrap();
+            }
+            for (a, b) in trained.data.iter().flatten().zip(replayed.data.iter().flatten()) {
+                assert!((a - b).abs() < 1e-5, "batched={}: {} vs {}", batched, a, b);
+            }
+        }
+
+        // a different mask fails loudly
+        let other = SparseMask::top_k(&trained, &[0, 1], 5, Sensitivity::Magnitude).unwrap();
+        let err = traj.replay_masked(&mut toy(), &other).unwrap_err();
+        assert!(format!("{}", err).contains("digest"), "{}", err);
+        let err = traj.replay_batched_masked(&mut toy(), &other, n).unwrap_err();
+        assert!(format!("{}", err).contains("digest"), "{}", err);
+        // the dense batched path refuses a sparse log
+        let err = traj.replay_batched(&mut toy(), n).unwrap_err();
+        assert!(format!("{}", err).contains("sparse mask"), "{}", err);
+        // and masked replay refuses a dense log
+        let dense = Trajectory::from_run(vec!["w1".into(), "w2".into()], &opt.history);
+        let err = dense.replay_masked(&mut toy(), &mask).unwrap_err();
+        assert!(format!("{}", err).contains("dense"), "{}", err);
+    }
+
+    #[test]
+    #[should_panic(expected = "sparse mask")]
+    fn dense_replay_panics_on_sparse_log() {
+        let traj = Trajectory::new(vec!["w1".into()]).with_mask_digest(0xDEAD);
+        traj.replay(&mut toy());
+    }
+
+    #[test]
+    fn save_load_roundtrips_sparse_logs_and_stays_legacy_for_dense() {
+        let dir = std::env::temp_dir();
+        // sparse: digest survives the roundtrip under the MZT2 magic
+        let path = dir.join("mezo_traj_sparse_test.bin");
+        let mut traj = Trajectory::new(vec!["w1".into()]).with_mask_digest(0xC0FFEE);
+        traj.records.push(StepRecord { seed: 7, pgrad: 0.25, lr: 1e-3 });
+        traj.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], b"MZT2");
+        let back = Trajectory::load(&path).unwrap();
+        assert_eq!(back, traj);
+        assert_eq!(back.mask_digest, Some(0xC0FFEE));
+        std::fs::remove_file(&path).ok();
+        // dense: byte-identical legacy header
+        let path = dir.join("mezo_traj_dense_test.bin");
+        let dense = Trajectory::from_run(vec!["w1".into()], &traj.records);
+        dense.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], b"MZTJ");
+        assert_eq!(Trajectory::load(&path).unwrap().mask_digest, None);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn storage_is_tiny_versus_checkpoint() {
         // 20k steps (the paper's OPT runs) => ~40KB quantized, < 0.1MB
         let traj = Trajectory {
             trainable: vec!["w".into()],
             records: vec![StepRecord { seed: 0, pgrad: 0.0, lr: 0.0 }; 20_000],
+            mask_digest: None,
         };
         assert!(traj.bytes_quantized() < 100_000);
         assert!(traj.bytes_f32() < 400_000);

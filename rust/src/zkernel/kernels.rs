@@ -156,6 +156,257 @@ pub(super) fn multi_axpy_serial(zs: &[(GaussianStream, f32)], offset: u64, theta
     }
 }
 
+// ---------------- masked (SensZOQ) kernel bodies ------------------------
+//
+// Each masked body walks a sorted, duplicate-free index list instead of
+// the whole chunk, computing z for coordinate `idx` at the SAME global
+// counter the dense kernel uses — `z(offset + idx)` — so a full mask is
+// bit-identical to the dense kernel and sparse results never depend on
+// what the mask excludes. `base` is the chunk's first coordinate within
+// the tensor (0 when unthreaded); indices are tensor-absolute.
+//
+// z generation is hybrid: the sorted list is walked in runs that share one
+// BLOCK-aligned z-block, and a run dense enough to amortize a block fill
+// (>= MASK_FILL_MIN hits) goes through `GaussianStream::fill`; sparser
+// runs pay the per-coordinate `z()` dispatch instead of generating 256
+// coordinates to use a few. Both paths produce identical bits (`fill` is
+// elementwise `z()` — see tests/properties.rs), so the crossover is a pure
+// perf knob.
+
+/// Minimum hits in one z-block before the masked kernels fill the whole
+/// block instead of calling `z()` per coordinate (~the crossover where
+/// 256 blocked generations beat N dispatched ones).
+pub(super) const MASK_FILL_MIN: usize = 192;
+
+/// End of the run of `idxs[i..]` sharing `idxs[i]`'s z-block, plus that
+/// block's first coordinate.
+#[inline]
+fn mask_run(idxs: &[u32], i: usize) -> (usize, u64) {
+    let first = (idxs[i] as u64 / BLOCK as u64) * BLOCK as u64;
+    let end = first + BLOCK as u64;
+    let mut j = i + 1;
+    while j < idxs.len() && (idxs[j] as u64) < end {
+        j += 1;
+    }
+    (j, first)
+}
+
+/// θ[idx] += s · z(offset + idx) over the masked coordinates only.
+pub(super) fn masked_axpy_serial(
+    stream: GaussianStream,
+    offset: u64,
+    idxs: &[u32],
+    base: usize,
+    theta: &mut [f32],
+    s: f32,
+) {
+    let mut zb = [0.0f32; BLOCK];
+    let mut i = 0;
+    while i < idxs.len() {
+        let (j, first) = mask_run(idxs, i);
+        if j - i >= MASK_FILL_MIN {
+            stream.fill(&mut zb, offset + first);
+            for &idx in &idxs[i..j] {
+                theta[idx as usize - base] += s * zb[(idx as u64 - first) as usize];
+            }
+        } else {
+            for &idx in &idxs[i..j] {
+                theta[idx as usize - base] += s * stream.z(offset + idx as u64);
+            }
+        }
+        i = j;
+    }
+}
+
+/// out[idx] = θ[idx] + s · z(offset + idx) over the masked coordinates;
+/// unmasked coordinates of `out` are left untouched.
+pub(super) fn masked_perturb_into_serial(
+    stream: GaussianStream,
+    offset: u64,
+    idxs: &[u32],
+    base: usize,
+    theta: &[f32],
+    s: f32,
+    out: &mut [f32],
+) {
+    let mut zb = [0.0f32; BLOCK];
+    let mut i = 0;
+    while i < idxs.len() {
+        let (j, first) = mask_run(idxs, i);
+        if j - i >= MASK_FILL_MIN {
+            stream.fill(&mut zb, offset + first);
+            for &idx in &idxs[i..j] {
+                let c = idx as usize - base;
+                out[c] = theta[c] + s * zb[(idx as u64 - first) as usize];
+            }
+        } else {
+            for &idx in &idxs[i..j] {
+                let c = idx as usize - base;
+                out[c] = theta[c] + s * stream.z(offset + idx as u64);
+            }
+        }
+        i = j;
+    }
+}
+
+/// θ[idx] −= lr · (g · z(offset + idx) + wd · θ[idx]) over the masked
+/// coordinates only.
+pub(super) fn masked_sgd_serial(
+    stream: GaussianStream,
+    offset: u64,
+    idxs: &[u32],
+    base: usize,
+    theta: &mut [f32],
+    lr: f32,
+    g: f32,
+    wd: f32,
+) {
+    let mut zb = [0.0f32; BLOCK];
+    let mut i = 0;
+    while i < idxs.len() {
+        let (j, first) = mask_run(idxs, i);
+        if j - i >= MASK_FILL_MIN {
+            stream.fill(&mut zb, offset + first);
+            for &idx in &idxs[i..j] {
+                let th = &mut theta[idx as usize - base];
+                let z = zb[(idx as u64 - first) as usize];
+                *th -= lr * (g * z + wd * *th);
+            }
+        } else {
+            for &idx in &idxs[i..j] {
+                let th = &mut theta[idx as usize - base];
+                let z = stream.z(offset + idx as u64);
+                *th -= lr * (g * z + wd * *th);
+            }
+        }
+        i = j;
+    }
+}
+
+/// Masked n-SPSA: per masked coordinate, the (stream, g) updates apply in
+/// slice order — the operation sequence of `masked_sgd_serial` per seed,
+/// with θ read and written once.
+pub(super) fn masked_multi_sgd_serial(
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    idxs: &[u32],
+    base: usize,
+    theta: &mut [f32],
+    lr: f32,
+    wd: f32,
+) {
+    let k = zs.len();
+    let mut zb = vec![0.0f32; k * BLOCK];
+    let mut i = 0;
+    while i < idxs.len() {
+        let (j, first) = mask_run(idxs, i);
+        if j - i >= MASK_FILL_MIN {
+            for (kk, &(stream, _)) in zs.iter().enumerate() {
+                stream.fill(&mut zb[kk * BLOCK..(kk + 1) * BLOCK], offset + first);
+            }
+            for &idx in &idxs[i..j] {
+                let th = &mut theta[idx as usize - base];
+                let jb = (idx as u64 - first) as usize;
+                for (kk, &(_, g)) in zs.iter().enumerate() {
+                    let z = zb[kk * BLOCK + jb];
+                    *th -= lr * (g * z + wd * *th);
+                }
+            }
+        } else {
+            for &idx in &idxs[i..j] {
+                let th = &mut theta[idx as usize - base];
+                for &(stream, g) in zs {
+                    let z = stream.z(offset + idx as u64);
+                    *th -= lr * (g * z + wd * *th);
+                }
+            }
+        }
+        i = j;
+    }
+}
+
+/// Masked FZOO batched one-sided update: per masked coordinate,
+/// g = (Σᵢ gᵢ·zᵢ)/n;  θ −= lr·(g + wd·θ) — `fzoo_serial` restricted to
+/// the mask.
+pub(super) fn masked_fzoo_serial(
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    idxs: &[u32],
+    base: usize,
+    theta: &mut [f32],
+    lr: f32,
+    wd: f32,
+) {
+    let k = zs.len();
+    let n_f = k as f32;
+    let mut zb = vec![0.0f32; k * BLOCK];
+    let mut i = 0;
+    while i < idxs.len() {
+        let (j, first) = mask_run(idxs, i);
+        if j - i >= MASK_FILL_MIN {
+            for (kk, &(stream, _)) in zs.iter().enumerate() {
+                stream.fill(&mut zb[kk * BLOCK..(kk + 1) * BLOCK], offset + first);
+            }
+            for &idx in &idxs[i..j] {
+                let th = &mut theta[idx as usize - base];
+                let jb = (idx as u64 - first) as usize;
+                let mut g = 0.0f32;
+                for (kk, &(_, pg)) in zs.iter().enumerate() {
+                    g += pg * zb[kk * BLOCK + jb];
+                }
+                *th -= lr * (g / n_f + wd * *th);
+            }
+        } else {
+            for &idx in &idxs[i..j] {
+                let th = &mut theta[idx as usize - base];
+                let mut g = 0.0f32;
+                for &(stream, pg) in zs {
+                    g += pg * stream.z(offset + idx as u64);
+                }
+                *th -= lr * (g / n_f + wd * *th);
+            }
+        }
+        i = j;
+    }
+}
+
+/// Masked batched multi-seed axpy: θ[idx] += Σᵢ sᵢ·zᵢ(offset + idx), seeds
+/// in slice order per coordinate — the masked replay kernel.
+pub(super) fn masked_multi_axpy_serial(
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    idxs: &[u32],
+    base: usize,
+    theta: &mut [f32],
+) {
+    let k = zs.len();
+    let mut zb = vec![0.0f32; k * BLOCK];
+    let mut i = 0;
+    while i < idxs.len() {
+        let (j, first) = mask_run(idxs, i);
+        if j - i >= MASK_FILL_MIN {
+            for (kk, &(stream, _)) in zs.iter().enumerate() {
+                stream.fill(&mut zb[kk * BLOCK..(kk + 1) * BLOCK], offset + first);
+            }
+            for &idx in &idxs[i..j] {
+                let th = &mut theta[idx as usize - base];
+                let jb = (idx as u64 - first) as usize;
+                for (kk, &(_, s)) in zs.iter().enumerate() {
+                    *th += s * zb[kk * BLOCK + jb];
+                }
+            }
+        } else {
+            for &idx in &idxs[i..j] {
+                let th = &mut theta[idx as usize - base];
+                for &(stream, s) in zs {
+                    *th += s * stream.z(offset + idx as u64);
+                }
+            }
+        }
+        i = j;
+    }
+}
+
 /// Fused momentum update over a record batch:
 /// g = (Σᵢ gᵢ·zᵢ)/n + wd·θ;  m = μ·m + g;  θ −= lr·m
 #[allow(clippy::too_many_arguments)]

@@ -1,0 +1,395 @@
+//! Sparse SensZOQ-style masks: static sets of "sensitive" coordinates the
+//! zeroth-order step perturbs and updates, everything else frozen.
+//!
+//! SensZOQ (Wang et al., 2024, arXiv:2410.09823) observes that a small,
+//! *static* subset of weights — selected once by a sensitivity score such
+//! as weight magnitude or the empirical-Fisher diagonal — captures almost
+//! all of the fine-tuning signal, so the ZO perturb/update passes only
+//! need to walk that subset. A [`SparseMask`] is the crate's
+//! representation of such a subset: one sorted, duplicate-free list of
+//! coordinate indices per tensor of a
+//! [`ParamStore`](crate::model::params::ParamStore), aligned with the
+//! store's tensor order.
+//!
+//! Two invariants make masks compose with the [`ZEngine`](super::ZEngine)
+//! determinism contract:
+//!
+//! 1. **Global z-indexing is preserved.** A masked kernel reads coordinate
+//!    `i` of a tensor with `z(tensor_offset + i)` — exactly the index the
+//!    dense kernel uses — so a full mask reproduces the dense kernel
+//!    bit for bit, and sparse results are independent of what the mask
+//!    *excludes* (see `tests/properties.rs`).
+//! 2. **Sorted, unique indices.** The engine chunks the index list across
+//!    threads and carves the parameter buffer at chunk-boundary
+//!    coordinates; sortedness is what makes those carve points disjoint.
+//!    [`SparseMask::from_indices`] rejects unsorted or duplicated input,
+//!    so every mask reaching a kernel satisfies the invariant.
+//!
+//! ```
+//! use mezo::model::meta::TensorDesc;
+//! use mezo::model::params::ParamStore;
+//! use mezo::rng::GaussianStream;
+//! use mezo::zkernel::{Sensitivity, SparseMask, ZEngine};
+//! let mut p = ParamStore::from_specs(vec![
+//!     TensorDesc { name: "w".into(), shape: vec![512], dtype: "f32".into() },
+//! ]);
+//! p.init(1);
+//! // keep the 64 largest-magnitude weights (SensZOQ's simplest score)
+//! let mask = SparseMask::top_k(&p, &[0], 64, Sensitivity::Magnitude).unwrap();
+//! assert_eq!(mask.n_selected(), 64);
+//! // a masked perturbation touches ONLY the selected coordinates, and
+//! // gives each one the same z the dense kernel would
+//! let before = p.data[0].clone();
+//! let stream = GaussianStream::new(7);
+//! ZEngine::with_threads(2).axpy_z_masked(stream, 0, mask.indices(0), &mut p.data[0], 1e-2);
+//! for (j, (a, b)) in p.data[0].iter().zip(&before).enumerate() {
+//!     if mask.indices(0).contains(&(j as u32)) {
+//!         assert_eq!(*a, b + 1e-2 * stream.z(j as u64));
+//!     } else {
+//!         assert_eq!(a, b);
+//!     }
+//! }
+//! ```
+
+use crate::model::params::ParamStore;
+use crate::rng::splitmix64;
+use anyhow::{bail, Result};
+
+/// How [`SparseMask::top_k`] scores a coordinate's sensitivity.
+#[derive(Debug, Clone, Copy)]
+pub enum Sensitivity<'a> {
+    /// `|θ_i|` — weight-magnitude selection, computable from the store
+    /// alone.
+    Magnitude,
+    /// External per-coordinate scores, one slice per *selected tensor* in
+    /// the `tensors` argument's order (e.g. accumulated squared projected
+    /// gradients `Σ (g·z_i)²`, the ZO estimate of the empirical-Fisher
+    /// diagonal SensZOQ selects with). Slice lengths must match the
+    /// tensors they score.
+    Scores(&'a [Vec<f32>]),
+}
+
+/// A static sparse coordinate set over a [`ParamStore`]: per tensor, a
+/// sorted duplicate-free list of the coordinates the masked kernels may
+/// touch. See the [module docs](self) for the invariants.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SparseMask {
+    /// `tensors[ti]` = sorted unique coordinate indices of store tensor
+    /// `ti`; empty for tensors the mask excludes entirely.
+    tensors: Vec<Vec<u32>>,
+    /// digest of `tensors`, computed once at construction (masks are
+    /// immutable) so per-step digest reads are O(1)
+    digest: u64,
+}
+
+impl SparseMask {
+    /// Internal constructor: callers guarantee the sorted-unique
+    /// invariant; the digest is computed here, once.
+    fn from_validated(tensors: Vec<Vec<u32>>) -> SparseMask {
+        let digest = compute_digest(&tensors);
+        SparseMask { tensors, digest }
+    }
+
+    /// Mask from explicit per-tensor index lists (aligned with the store's
+    /// tensor order; one entry per tensor, empty = tensor fully frozen).
+    /// Errors on unsorted or duplicated indices — the engine's carving
+    /// depends on the invariant.
+    pub fn from_indices(tensors: Vec<Vec<u32>>) -> Result<SparseMask> {
+        for (ti, idxs) in tensors.iter().enumerate() {
+            for w in idxs.windows(2) {
+                if w[0] >= w[1] {
+                    bail!(
+                        "SparseMask: tensor {} indices not strictly increasing ({} then {})",
+                        ti,
+                        w[0],
+                        w[1]
+                    );
+                }
+            }
+        }
+        Ok(SparseMask::from_validated(tensors))
+    }
+
+    /// The empty mask over a store: every kernel is a no-op under it.
+    pub fn empty(params: &ParamStore) -> SparseMask {
+        SparseMask::from_validated(vec![Vec::new(); params.specs.len()])
+    }
+
+    /// The full mask over the given tensors: every coordinate selected.
+    /// Masked kernels under a full mask are bit-identical to their dense
+    /// counterparts — the oracle the property suite pins. (The index list
+    /// materializes 4 bytes per coordinate; full masks are for testing and
+    /// density sweeps, not production sparsity.)
+    pub fn full(params: &ParamStore, tensors: &[usize]) -> SparseMask {
+        let mut out = vec![Vec::new(); params.specs.len()];
+        for &ti in tensors {
+            out[ti] = (0..params.data[ti].len() as u32).collect();
+        }
+        SparseMask::from_validated(out)
+    }
+
+    /// Select the `k` most sensitive coordinates across the given tensors
+    /// (SensZOQ's static sensitive-weight set). Ordering is a total order
+    /// — score descending, then (tensor, index) ascending — so selection
+    /// is deterministic even under score ties. `k` of zero gives the empty
+    /// mask; `k` at or above the tensors' total size gives the full mask.
+    pub fn top_k(
+        params: &ParamStore,
+        tensors: &[usize],
+        k: usize,
+        how: Sensitivity<'_>,
+    ) -> Result<SparseMask> {
+        let mut seen = vec![false; params.specs.len()];
+        for &ti in tensors {
+            if ti >= params.specs.len() {
+                bail!(
+                    "SparseMask::top_k: tensor index {} out of range (store has {})",
+                    ti,
+                    params.specs.len()
+                );
+            }
+            if seen[ti] {
+                // a duplicated tensor would duplicate its candidates and
+                // could select the same coordinate twice, silently breaking
+                // the sorted-unique invariant the kernels carve by
+                bail!("SparseMask::top_k: tensor {} listed more than once", ti);
+            }
+            seen[ti] = true;
+        }
+        if let Sensitivity::Scores(scores) = how {
+            if scores.len() != tensors.len() {
+                bail!(
+                    "SparseMask::top_k: {} score slices for {} tensors",
+                    scores.len(),
+                    tensors.len()
+                );
+            }
+            for (s, &ti) in scores.iter().zip(tensors) {
+                if s.len() != params.data[ti].len() {
+                    bail!(
+                        "SparseMask::top_k: score slice length {} != tensor {} length {}",
+                        s.len(),
+                        ti,
+                        params.data[ti].len()
+                    );
+                }
+            }
+        }
+        let total: usize = tensors.iter().map(|&ti| params.data[ti].len()).sum();
+        if k >= total {
+            return Ok(SparseMask::full(params, tensors));
+        }
+        let mut out = vec![Vec::new(); params.specs.len()];
+        if k == 0 {
+            return Ok(SparseMask::from_validated(out));
+        }
+        // (score, tensor, index) for every candidate coordinate; a partial
+        // select puts the k best first, then each tensor's survivors sort.
+        let mut all: Vec<(f32, u32, u32)> = Vec::with_capacity(total);
+        for (slot, &ti) in tensors.iter().enumerate() {
+            for (j, &v) in params.data[ti].iter().enumerate() {
+                let score = match how {
+                    Sensitivity::Magnitude => v.abs(),
+                    Sensitivity::Scores(scores) => scores[slot][j],
+                };
+                all.push((score, ti as u32, j as u32));
+            }
+        }
+        let cmp = |a: &(f32, u32, u32), b: &(f32, u32, u32)| {
+            b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+        };
+        all.select_nth_unstable_by(k - 1, cmp);
+        all.truncate(k);
+        for &(_, ti, j) in &all {
+            out[ti as usize].push(j);
+        }
+        for idxs in &mut out {
+            idxs.sort_unstable();
+        }
+        Ok(SparseMask::from_validated(out))
+    }
+
+    /// The sorted coordinate list for store tensor `ti` (empty slice when
+    /// the tensor is fully frozen) — what the masked kernels walk.
+    pub fn indices(&self, ti: usize) -> &[u32] {
+        &self.tensors[ti]
+    }
+
+    /// Number of tensors the mask is defined over (== the store's).
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Total selected coordinates across all tensors.
+    pub fn n_selected(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Selected fraction of the whole store's parameters, in [0, 1].
+    pub fn density(&self, params: &ParamStore) -> f64 {
+        let n = params.n_params();
+        if n == 0 {
+            0.0
+        } else {
+            self.n_selected() as f64 / n as f64
+        }
+    }
+
+    /// Check the mask is applicable to a store: one index list per store
+    /// tensor, every index in range. (Sortedness/uniqueness hold by
+    /// construction.) Optimizers call this before stepping so a mask built
+    /// against the wrong store fails loudly instead of mis-addressing z.
+    pub fn validate(&self, params: &ParamStore) -> Result<()> {
+        if self.tensors.len() != params.specs.len() {
+            bail!(
+                "SparseMask: mask covers {} tensors, store has {}",
+                self.tensors.len(),
+                params.specs.len()
+            );
+        }
+        for (ti, idxs) in self.tensors.iter().enumerate() {
+            if let Some(&last) = idxs.last() {
+                if last as usize >= params.data[ti].len() {
+                    bail!(
+                        "SparseMask: tensor {} index {} out of range (len {})",
+                        ti,
+                        last,
+                        params.data[ti].len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Order-sensitive 64-bit digest of the mask's full structure
+    /// (tensor count, per-tensor counts, every index), via a chained
+    /// splitmix64 walk computed once at construction — masks are
+    /// immutable, so this is an O(1) read. Logged next to a sparse run's
+    /// trajectory so replay can verify it is reconstructing under the
+    /// *same* mask — any added/removed/moved index changes the digest
+    /// (`storage::Trajectory::replay_masked` checks it and fails loudly
+    /// on mismatch).
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+}
+
+/// The chained splitmix64 walk behind [`SparseMask::digest`].
+fn compute_digest(tensors: &[Vec<u32>]) -> u64 {
+    let mut h = splitmix64(0x0005_EA5E_u64 ^ tensors.len() as u64);
+    for idxs in tensors {
+        h = splitmix64(h ^ idxs.len() as u64);
+        for &i in idxs {
+            h = splitmix64(h ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+
+    fn store(lens: &[usize]) -> ParamStore {
+        let specs = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| TensorDesc {
+                name: format!("t{}", i),
+                shape: vec![n],
+                dtype: "f32".into(),
+            })
+            .collect();
+        let mut p = ParamStore::from_specs(specs);
+        p.init(3);
+        p
+    }
+
+    #[test]
+    fn from_indices_rejects_unsorted_and_duplicates() {
+        assert!(SparseMask::from_indices(vec![vec![0, 2, 1]]).is_err());
+        assert!(SparseMask::from_indices(vec![vec![0, 1, 1]]).is_err());
+        assert!(SparseMask::from_indices(vec![vec![0, 1, 5], vec![]]).is_ok());
+    }
+
+    #[test]
+    fn full_and_empty_shapes() {
+        let p = store(&[10, 7]);
+        let full = SparseMask::full(&p, &[0, 1]);
+        assert_eq!(full.n_selected(), 17);
+        assert_eq!(full.indices(1), &[0, 1, 2, 3, 4, 5, 6]);
+        assert!((full.density(&p) - 1.0).abs() < 1e-12);
+        let empty = SparseMask::empty(&p);
+        assert_eq!(empty.n_selected(), 0);
+        assert_eq!(empty.n_tensors(), 2);
+    }
+
+    #[test]
+    fn top_k_magnitude_picks_largest_weights() {
+        let mut p = store(&[6]);
+        p.data[0] = vec![0.1, -5.0, 0.2, 3.0, -0.05, 4.0];
+        let m = SparseMask::top_k(&p, &[0], 3, Sensitivity::Magnitude).unwrap();
+        assert_eq!(m.indices(0), &[1, 3, 5]);
+        // k >= total selects everything; k == 0 selects nothing
+        let all = SparseMask::top_k(&p, &[0], 99, Sensitivity::Magnitude).unwrap();
+        assert_eq!(all.n_selected(), 6);
+        let none = SparseMask::top_k(&p, &[0], 0, Sensitivity::Magnitude).unwrap();
+        assert_eq!(none.n_selected(), 0);
+    }
+
+    #[test]
+    fn top_k_is_deterministic_under_ties() {
+        let mut p = store(&[8]);
+        p.data[0] = vec![1.0; 8]; // all tied: (tensor, index) order breaks ties
+        let m = SparseMask::top_k(&p, &[0], 3, Sensitivity::Magnitude).unwrap();
+        assert_eq!(m.indices(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn top_k_scores_selects_by_external_sensitivity() {
+        let p = store(&[4, 4]);
+        let scores = vec![vec![0.0, 9.0, 0.0, 1.0], vec![5.0, 0.0, 7.0, 0.0]];
+        let m = SparseMask::top_k(&p, &[0, 1], 3, Sensitivity::Scores(&scores)).unwrap();
+        assert_eq!(m.indices(0), &[1]);
+        assert_eq!(m.indices(1), &[0, 2]);
+        // malformed score shapes are rejected
+        assert!(SparseMask::top_k(&p, &[0, 1], 3, Sensitivity::Scores(&scores[..1])).is_err());
+        let bad = vec![vec![0.0; 3], vec![0.0; 4]];
+        assert!(SparseMask::top_k(&p, &[0, 1], 3, Sensitivity::Scores(&bad)).is_err());
+    }
+
+    #[test]
+    fn top_k_rejects_duplicate_and_out_of_range_tensors() {
+        let p = store(&[8, 8]);
+        // a duplicated tensor id could select the same coordinate twice
+        let err = SparseMask::top_k(&p, &[0, 0], 4, Sensitivity::Magnitude).unwrap_err();
+        assert!(format!("{}", err).contains("more than once"), "{}", err);
+        let err = SparseMask::top_k(&p, &[2], 4, Sensitivity::Magnitude).unwrap_err();
+        assert!(format!("{}", err).contains("out of range"), "{}", err);
+    }
+
+    #[test]
+    fn validate_checks_tensor_count_and_range() {
+        let p = store(&[10, 7]);
+        assert!(SparseMask::full(&p, &[0, 1]).validate(&p).is_ok());
+        let wrong_count = SparseMask::from_indices(vec![vec![0]]).unwrap();
+        assert!(wrong_count.validate(&p).is_err());
+        let out_of_range = SparseMask::from_indices(vec![vec![0], vec![7]]).unwrap();
+        assert!(out_of_range.validate(&p).is_err());
+    }
+
+    #[test]
+    fn digest_is_structure_sensitive() {
+        let p = store(&[64, 64]);
+        let a = SparseMask::from_indices(vec![vec![1, 5, 9], vec![2]]).unwrap();
+        let b = SparseMask::from_indices(vec![vec![1, 5, 10], vec![2]]).unwrap();
+        let c = SparseMask::from_indices(vec![vec![1, 5], vec![2, 9]]).unwrap();
+        assert_ne!(a.digest(), b.digest());
+        assert_ne!(a.digest(), c.digest());
+        assert_ne!(b.digest(), c.digest());
+        assert_eq!(a.digest(), a.clone().digest());
+        assert_ne!(SparseMask::empty(&p).digest(), SparseMask::full(&p, &[0]).digest());
+    }
+}

@@ -41,12 +41,27 @@
 //! * [`ZEngine::project_rows`] — out = base + scale·(Z·v) for the BBT
 //!   random-projection baseline
 //!
+//! The sparse (SensZOQ) tier — see [`mask`] — adds `_masked` variants of
+//! the hot kernels ([`ZEngine::axpy_z_masked`],
+//! [`ZEngine::perturb_into_masked`], [`ZEngine::sgd_update_masked`],
+//! [`ZEngine::multi_sgd_update_masked`], [`ZEngine::fzoo_update_masked`],
+//! [`ZEngine::multi_axpy_z_masked`]) that walk only a [`SparseMask`]'s
+//! sorted coordinate list while reading z at the SAME global counters as
+//! the dense kernels, so a full mask is `to_bits()`-identical to the dense
+//! kernel and sparse results never depend on the excluded coordinates.
+//! Masked dispatch chunks the *index list* across threads and carves the
+//! parameter buffer at chunk-boundary coordinates — deterministic at any
+//! thread count for the same reason the dense kernels are.
+//!
 //! Every kernel is bit-for-bit equivalent to the scalar per-coordinate
 //! reference (same per-coordinate operation order as the seed code); the
 //! tests in this module enforce that across thread counts 1/2/8 and across
 //! block-boundary lengths and offsets.
 
 mod kernels;
+pub mod mask;
+
+pub use mask::{Sensitivity, SparseMask};
 
 use crate::rng::GaussianStream;
 use std::sync::OnceLock;
@@ -231,6 +246,86 @@ impl ZEngine {
                 rest_b = tb;
                 rest_c = tc;
                 sc.spawn(move || fr(start, ca, cb, cc));
+            }
+        });
+    }
+
+    /// As `run`, but over a masked index list: the *list* is chunked (not
+    /// the buffer), and `theta` is carved at each chunk's first indexed
+    /// coordinate — sortedness makes the carve points disjoint.
+    /// `f(idxs, base, chunk)` gets tensor-absolute indices and the chunk's
+    /// base coordinate, so bodies address `chunk[idx - base]` and z by
+    /// `offset + idx`, staying chunking-invariant like the dense kernels.
+    fn run_masked<F>(&self, idxs: &[u32], theta: &mut [f32], min_per_thread: usize, f: F)
+    where
+        F: Fn(&[u32], usize, &mut [f32]) + Sync,
+    {
+        if idxs.is_empty() {
+            return;
+        }
+        let bounds = mask_bounds(idxs.len(), self.threads, min_per_thread);
+        if bounds.len() <= 1 {
+            f(idxs, 0, theta);
+            return;
+        }
+        let fr = &f;
+        let mut rest = theta;
+        let mut consumed = 0usize;
+        std::thread::scope(|sc| {
+            for (r, &(a, b)) in bounds.iter().enumerate() {
+                let end_coord = if r + 1 == bounds.len() {
+                    consumed + rest.len()
+                } else {
+                    idxs[b] as usize
+                };
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end_coord - consumed);
+                rest = tail;
+                let ci = &idxs[a..b];
+                let base = consumed;
+                consumed = end_coord;
+                sc.spawn(move || fr(ci, base, chunk));
+            }
+        });
+    }
+
+    /// As `run_masked`, with a read-only source carved in lockstep
+    /// (masked staging shape: src θ, dst literal buffer).
+    fn run_src_masked<F>(
+        &self,
+        idxs: &[u32],
+        src: &[f32],
+        dst: &mut [f32],
+        min_per_thread: usize,
+        f: F,
+    ) where
+        F: Fn(&[u32], usize, &[f32], &mut [f32]) + Sync,
+    {
+        assert_eq!(src.len(), dst.len(), "zkernel: src/dst length mismatch");
+        if idxs.is_empty() {
+            return;
+        }
+        let bounds = mask_bounds(idxs.len(), self.threads, min_per_thread);
+        if bounds.len() <= 1 {
+            f(idxs, 0, src, dst);
+            return;
+        }
+        let fr = &f;
+        let mut rest = dst;
+        let mut consumed = 0usize;
+        std::thread::scope(|sc| {
+            for (r, &(a, b)) in bounds.iter().enumerate() {
+                let end_coord = if r + 1 == bounds.len() {
+                    consumed + rest.len()
+                } else {
+                    idxs[b] as usize
+                };
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end_coord - consumed);
+                rest = tail;
+                let s = &src[consumed..end_coord];
+                let ci = &idxs[a..b];
+                let base = consumed;
+                consumed = end_coord;
+                sc.spawn(move || fr(ci, base, s, chunk));
             }
         });
     }
@@ -429,6 +524,171 @@ impl ZEngine {
         self.run_src(base, out, min, |start, b, chunk| {
             kernels::project_rows_serial(stream, d_low, v, b, scale, chunk, start);
         });
+    }
+
+    // ---------------- masked (SensZOQ) kernels ---------------------------
+    //
+    // Each takes the tensor's sorted coordinate list (a
+    // `SparseMask::indices(ti)` slice) and touches ONLY those
+    // coordinates, reading z at the same global counter the dense kernel
+    // would (`offset + idx`). An empty list is a no-op; a full list is
+    // `to_bits()`-identical to the dense kernel (pinned in
+    // tests/properties.rs). Indices must be strictly increasing and in
+    // range — [`SparseMask`] construction guarantees both.
+
+    /// Masked [`ZEngine::axpy_z`]: θ[idx] += s · z(offset + idx) over the
+    /// masked coordinates only — sparse perturb / restore / replay.
+    pub fn axpy_z_masked(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        idxs: &[u32],
+        theta: &mut [f32],
+        s: f32,
+    ) {
+        check_mask(idxs, theta.len());
+        self.run_masked(idxs, theta, PAR_MIN, |ci, base, chunk| {
+            kernels::masked_axpy_serial(stream, offset, ci, base, chunk, s);
+        });
+    }
+
+    /// Masked [`ZEngine::perturb_into`]: out[idx] = θ[idx] + s · z(offset
+    /// + idx) over the masked coordinates; unmasked coordinates of `out`
+    /// are NOT written (callers keep them mirroring θ, which sparse
+    /// updates never change).
+    pub fn perturb_into_masked(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        idxs: &[u32],
+        theta: &[f32],
+        s: f32,
+        out: &mut [f32],
+    ) {
+        check_mask(idxs, theta.len());
+        self.run_src_masked(idxs, theta, out, PAR_MIN, |ci, base, src, chunk| {
+            kernels::masked_perturb_into_serial(stream, offset, ci, base, src, s, chunk);
+        });
+    }
+
+    /// Masked [`ZEngine::sgd_update`]: θ[idx] −= lr · (g · z(offset + idx)
+    /// + wd · θ[idx]) over the masked coordinates only.
+    pub fn sgd_update_masked(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        idxs: &[u32],
+        theta: &mut [f32],
+        lr: f32,
+        g: f32,
+        wd: f32,
+    ) {
+        check_mask(idxs, theta.len());
+        self.run_masked(idxs, theta, PAR_MIN, |ci, base, chunk| {
+            kernels::masked_sgd_serial(stream, offset, ci, base, chunk, lr, g, wd);
+        });
+    }
+
+    /// Masked [`ZEngine::multi_sgd_update`]: every `(stream, g)` update
+    /// applied per masked coordinate in slice order, one pass.
+    pub fn multi_sgd_update_masked(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        idxs: &[u32],
+        theta: &mut [f32],
+        lr: f32,
+        wd: f32,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        check_mask(idxs, theta.len());
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run_masked(idxs, theta, min, |ci, base, chunk| {
+            kernels::masked_multi_sgd_serial(zs, offset, ci, base, chunk, lr, wd);
+        });
+    }
+
+    /// Masked [`ZEngine::fzoo_update`]: the FZOO batched one-sided mean
+    /// update restricted to the masked coordinates.
+    pub fn fzoo_update_masked(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        idxs: &[u32],
+        theta: &mut [f32],
+        lr: f32,
+        wd: f32,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        check_mask(idxs, theta.len());
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run_masked(idxs, theta, min, |ci, base, chunk| {
+            kernels::masked_fzoo_serial(zs, offset, ci, base, chunk, lr, wd);
+        });
+    }
+
+    /// Masked [`ZEngine::multi_axpy_z`]: θ[idx] += Σᵢ sᵢ·zᵢ(offset + idx)
+    /// over the masked coordinates — the sparse seed-batched replay
+    /// primitive.
+    pub fn multi_axpy_z_masked(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        idxs: &[u32],
+        theta: &mut [f32],
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        check_mask(idxs, theta.len());
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run_masked(idxs, theta, min, |ci, base, chunk| {
+            kernels::masked_multi_axpy_serial(zs, offset, ci, base, chunk);
+        });
+    }
+}
+
+/// Chunk a masked index list into at most `threads` contiguous ranges of
+/// at least `min_per_thread` indices each. No block alignment: each
+/// masked coordinate's arithmetic is pure in its own global index, and
+/// the hybrid z path produces identical bits whichever side of a chunk
+/// boundary a block's run lands on.
+fn mask_bounds(n: usize, threads: usize, min_per_thread: usize) -> Vec<(usize, usize)> {
+    let cap = if min_per_thread == 0 {
+        threads
+    } else {
+        (n / min_per_thread).max(1).min(threads)
+    };
+    if cap <= 1 {
+        return vec![(0, n)];
+    }
+    let per = (n + cap - 1) / cap;
+    let mut out = Vec::with_capacity(cap);
+    let mut a = 0;
+    while a < n {
+        let b = (a + per).min(n);
+        out.push((a, b));
+        a = b;
+    }
+    out
+}
+
+/// Masked kernels index θ directly; an out-of-range index would corrupt
+/// the carve arithmetic, so fail fast with a named error instead.
+#[inline]
+fn check_mask(idxs: &[u32], len: usize) {
+    debug_assert!(idxs.windows(2).all(|w| w[0] < w[1]), "zkernel: mask indices not sorted/unique");
+    if let Some(&last) = idxs.last() {
+        assert!(
+            (last as usize) < len,
+            "zkernel: mask index {} out of range for tensor of length {}",
+            last,
+            len
+        );
     }
 }
 

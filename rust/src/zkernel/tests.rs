@@ -325,6 +325,187 @@ fn project_rows_matches_scalar_reference() {
     }
 }
 
+/// Random sorted mask over [0, len) with roughly `density` selection,
+/// deterministic in `seed`.
+fn random_mask(len: usize, density: f64, seed: u64) -> Vec<u32> {
+    let mut rng = Pcg::new(seed);
+    (0..len as u32).filter(|_| rng.next_f64() < density).collect()
+}
+
+#[test]
+fn masked_axpy_full_mask_is_dense_and_sparse_touches_only_mask() {
+    let stream = GaussianStream::new(91);
+    let s = 2e-3f32;
+    // 70_003 at 8 threads exercises the index-list carving (> PAR_MIN)
+    for &len in &[BLOCK + 3, 70_003] {
+        let init = randomized(len, 21);
+        let off = 19u64;
+        for &t in &THREADS {
+            let eng = ZEngine::with_threads(t);
+            // full mask == dense kernel, bitwise
+            let full: Vec<u32> = (0..len as u32).collect();
+            let mut dense = init.clone();
+            eng.axpy_z(stream, off, &mut dense, s);
+            let mut masked = init.clone();
+            eng.axpy_z_masked(stream, off, &full, &mut masked, s);
+            assert_bits_eq(&masked, &dense, &format!("masked axpy full len={} t={}", len, t));
+            // sparse mask: masked coords get the dense kernel's value for
+            // that coordinate; everything else is untouched
+            let idxs = random_mask(len, 0.13, 77);
+            let mut sparse = init.clone();
+            eng.axpy_z_masked(stream, off, &idxs, &mut sparse, s);
+            let mut hit = vec![false; len];
+            for &i in &idxs {
+                hit[i as usize] = true;
+            }
+            for j in 0..len {
+                let want = if hit[j] { dense[j] } else { init[j] };
+                assert_eq!(
+                    sparse[j].to_bits(),
+                    want.to_bits(),
+                    "masked axpy sparse len={} t={} coord {}",
+                    len, t, j
+                );
+            }
+            // empty mask is a no-op
+            let mut noop = init.clone();
+            eng.axpy_z_masked(stream, off, &[], &mut noop, s);
+            assert_bits_eq(&noop, &init, &format!("masked axpy empty len={} t={}", len, t));
+        }
+    }
+}
+
+#[test]
+fn masked_kernels_cross_the_fill_crossover_consistently() {
+    // a mask with one fully-dense block (>= MASK_FILL_MIN hits -> fill
+    // path) and scattered singles (scalar z() path) must agree with the
+    // scalar reference on every coordinate — the hybrid is a perf knob,
+    // never a values knob
+    let stream = GaussianStream::new(92);
+    let len = 4 * BLOCK + 7;
+    let mut idxs: Vec<u32> = (BLOCK as u32..2 * BLOCK as u32).collect(); // dense block
+    idxs.extend([3u32, 700, 901, len as u32 - 1]); // sparse strays
+    idxs.sort_unstable();
+    assert!(idxs.len() >= super::kernels::MASK_FILL_MIN);
+    let init = randomized(len, 22);
+    let (lr, g, wd, off) = (1e-2f32, 0.4f32, 1e-4f32, 5u64);
+    let mut reference = init.clone();
+    for &i in &idxs {
+        let z = stream.z(off + i as u64);
+        let th = &mut reference[i as usize];
+        *th -= lr * (g * z + wd * *th);
+    }
+    for &t in &THREADS {
+        let eng = ZEngine::with_threads(t);
+        let mut theta = init.clone();
+        eng.sgd_update_masked(stream, off, &idxs, &mut theta, lr, g, wd);
+        assert_bits_eq(&theta, &reference, &format!("masked sgd hybrid t={}", t));
+    }
+}
+
+#[test]
+fn masked_multi_seed_kernels_match_scalar_reference() {
+    let zs: Vec<(GaussianStream, f32)> = (0..3)
+        .map(|k| (GaussianStream::new(700 + k), 0.25 - 0.2 * k as f32))
+        .collect();
+    let (lr, wd, off) = (2e-3f32, 1e-4f32, 31u64);
+    let n_f = zs.len() as f32;
+    for &len in &[BLOCK + 3, 70_003] {
+        let idxs = random_mask(len, 0.2, 55);
+        let init = randomized(len, 23);
+        // multi_sgd: per coord, seeds in slice order
+        let mut ref_msgd = init.clone();
+        for &i in &idxs {
+            let th = &mut ref_msgd[i as usize];
+            for &(stream, g) in &zs {
+                let z = stream.z(off + i as u64);
+                *th -= lr * (g * z + wd * *th);
+            }
+        }
+        // fzoo: per coord, mean first then one fused subtraction
+        let mut ref_fzoo = init.clone();
+        for &i in &idxs {
+            let th = &mut ref_fzoo[i as usize];
+            let mut g = 0.0f32;
+            for &(stream, pg) in &zs {
+                g += pg * stream.z(off + i as u64);
+            }
+            *th -= lr * (g / n_f + wd * *th);
+        }
+        // multi_axpy: per coord, seeds in slice order
+        let mut ref_maxpy = init.clone();
+        for &i in &idxs {
+            let th = &mut ref_maxpy[i as usize];
+            for &(stream, s) in &zs {
+                *th += s * stream.z(off + i as u64);
+            }
+        }
+        for &t in &THREADS {
+            let eng = ZEngine::with_threads(t);
+            let mut a = init.clone();
+            eng.multi_sgd_update_masked(&zs, off, &idxs, &mut a, lr, wd);
+            assert_bits_eq(&a, &ref_msgd, &format!("masked multi_sgd len={} t={}", len, t));
+            let mut b = init.clone();
+            eng.fzoo_update_masked(&zs, off, &idxs, &mut b, lr, wd);
+            assert_bits_eq(&b, &ref_fzoo, &format!("masked fzoo len={} t={}", len, t));
+            let mut c = init.clone();
+            eng.multi_axpy_z_masked(&zs, off, &idxs, &mut c);
+            assert_bits_eq(&c, &ref_maxpy, &format!("masked multi_axpy len={} t={}", len, t));
+        }
+    }
+}
+
+#[test]
+fn masked_perturb_into_writes_only_masked_coords() {
+    let stream = GaussianStream::new(93);
+    let s = 1e-3f32;
+    for &len in &[BLOCK + 3, 70_003] {
+        let theta = randomized(len, 24);
+        let idxs = random_mask(len, 0.1, 66);
+        let off = 47u64;
+        for &t in &THREADS {
+            let eng = ZEngine::with_threads(t);
+            // out primed with a sentinel: unmasked coords must keep it
+            let mut out = vec![f32::NEG_INFINITY; len];
+            eng.perturb_into_masked(stream, off, &idxs, &theta, s, &mut out);
+            let mut hit = vec![false; len];
+            for &i in &idxs {
+                hit[i as usize] = true;
+            }
+            for j in 0..len {
+                if hit[j] {
+                    let want = theta[j] + s * stream.z(off + j as u64);
+                    assert_eq!(out[j].to_bits(), want.to_bits(), "len={} t={} coord {}", len, t, j);
+                } else {
+                    assert_eq!(out[j], f32::NEG_INFINITY, "len={} t={} coord {} written", len, t, j);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "out of range")]
+fn masked_kernel_rejects_out_of_range_index() {
+    let mut theta = vec![0.0f32; 8];
+    ZEngine::with_threads(1).axpy_z_masked(GaussianStream::new(1), 0, &[3, 8], &mut theta, 1.0);
+}
+
+#[test]
+fn mask_bounds_cover_and_respect_caps() {
+    for &n in &[1usize, 5, 1000, 70_003] {
+        for &t in &[1usize, 2, 3, 8] {
+            let bounds = mask_bounds(n, t, 1);
+            assert_eq!(bounds.first().map(|r| r.0), Some(0));
+            assert_eq!(bounds.last().map(|r| r.1), Some(n));
+            for w in bounds.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            assert!(bounds.len() <= t);
+        }
+    }
+}
+
 #[test]
 fn ranges_are_block_aligned_and_cover() {
     for &len in &[0usize, 1, BLOCK, 10 * BLOCK + 5, 70_003] {

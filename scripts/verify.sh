@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verify (ROADMAP.md): build + tests + docs gate, then the kernel
+# bit-identity tests re-run under an explicit thread-count matrix via the
+# engine's MEZO_THREADS knob. The in-test matrix (ZEngine::with_threads at
+# 1/2/8) covers explicitly-constructed engines; this loop additionally
+# pins every ZEngine::default() path (optimizers, replay, staging) at each
+# process-default thread count, so a determinism regression fails the gate
+# rather than only the default configuration.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+for t in 1 2 8; do
+    echo "== determinism matrix: MEZO_THREADS=$t =="
+    MEZO_THREADS=$t cargo test -q --release --lib zkernel
+    MEZO_THREADS=$t cargo test -q --release --test properties
+done
+echo "verify: OK"

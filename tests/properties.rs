@@ -246,6 +246,396 @@ fn prop_examples_fit_budget_for_every_task_and_seed() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Sparse SensZOQ mask properties (ISSUE 3). Every masked kernel has an
+// exact dense oracle: a full mask must reproduce the dense kernel
+// `to_bits()`-identically at any thread count, an empty mask must be a
+// no-op, and a random sparse mask must equal a scalar per-coordinate
+// reference walk that reads z at the same global counters.
+// ---------------------------------------------------------------------
+
+/// Which masked kernel a property case exercises.
+const MASKED_KERNELS: [&str; 6] =
+    ["axpy_z", "perturb_into", "sgd_update", "multi_sgd_update", "fzoo_update", "multi_axpy_z"];
+
+/// Run one masked kernel over `idxs` and its dense counterpart over the
+/// whole buffer, returning (masked_out, dense_out) from the same `init`.
+#[allow(clippy::too_many_arguments)]
+fn run_masked_and_dense(
+    kernel: &str,
+    eng: &mezo::zkernel::ZEngine,
+    init: &[f32],
+    idxs: &[u32],
+    offset: u64,
+    zs: &[(GaussianStream, f32)],
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let (stream, g) = zs[0];
+    let mut masked = init.to_vec();
+    let mut dense = init.to_vec();
+    match kernel {
+        "axpy_z" => {
+            eng.axpy_z_masked(stream, offset, idxs, &mut masked, g);
+            eng.axpy_z(stream, offset, &mut dense, g);
+        }
+        "perturb_into" => {
+            // staging semantics: out starts mirroring θ, masked coords get
+            // θ + s·z; the dense kernel rewrites every coordinate
+            eng.perturb_into_masked(stream, offset, idxs, init, g, &mut masked);
+            eng.perturb_into(stream, offset, init, g, &mut dense);
+        }
+        "sgd_update" => {
+            eng.sgd_update_masked(stream, offset, idxs, &mut masked, lr, g, wd);
+            eng.sgd_update(stream, offset, &mut dense, lr, g, wd);
+        }
+        "multi_sgd_update" => {
+            eng.multi_sgd_update_masked(zs, offset, idxs, &mut masked, lr, wd);
+            eng.multi_sgd_update(zs, offset, &mut dense, lr, wd);
+        }
+        "fzoo_update" => {
+            eng.fzoo_update_masked(zs, offset, idxs, &mut masked, lr, wd);
+            eng.fzoo_update(zs, offset, &mut dense, lr, wd);
+        }
+        "multi_axpy_z" => {
+            eng.multi_axpy_z_masked(zs, offset, idxs, &mut masked);
+            eng.multi_axpy_z(zs, offset, &mut dense);
+        }
+        _ => unreachable!(),
+    }
+    (masked, dense)
+}
+
+#[test]
+fn prop_masked_kernels_with_full_mask_equal_dense_bitwise() {
+    // satellite 1a: full mask == dense kernel, to_bits-identical, threads
+    // 1/2/8, block-unaligned lengths and nonzero offsets
+    forall(
+        40,
+        31,
+        |rng| {
+            let len = match rng.below(4) {
+                0 => rng.below(300) + 1,           // sub-block
+                1 => 256 + rng.below(5),           // straddles one block
+                2 => rng.below(3000) + 257,        // several blocks, unaligned
+                _ => 70_000 + rng.below(7),        // threads actually spawn
+            };
+            let kernel = *rng.choice(&MASKED_KERNELS);
+            let n_seeds = rng.below(3) + 1;
+            (kernel, len, rng.next_u64(), rng.below(1000) as u64, n_seeds)
+        },
+        |&(kernel, len, seed, offset, n_seeds)| {
+            let mut init_rng = Pcg::new(seed ^ 0x11);
+            let init: Vec<f32> = (0..len).map(|_| init_rng.normal_f32(0.0, 1.0)).collect();
+            let zs: Vec<(GaussianStream, f32)> = (0..n_seeds)
+                .map(|k| (GaussianStream::new(seed ^ k as u64), 0.3 - 0.2 * k as f32))
+                .collect();
+            let full: Vec<u32> = (0..len as u32).collect();
+            for threads in [1usize, 2, 8] {
+                let eng = mezo::zkernel::ZEngine::with_threads(threads);
+                let (masked, dense) =
+                    run_masked_and_dense(kernel, &eng, &init, &full, offset, &zs, 1e-2, 1e-4);
+                for (j, (a, b)) in masked.iter().zip(&dense).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{} t={} len={} coord {}: {} vs {}",
+                            kernel, threads, len, j, a, b
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_masked_kernels_with_empty_mask_are_noops() {
+    forall(
+        20,
+        32,
+        |rng| {
+            (*rng.choice(&MASKED_KERNELS), rng.below(2000) + 1, rng.next_u64())
+        },
+        |&(kernel, len, seed)| {
+            let mut init_rng = Pcg::new(seed ^ 0x22);
+            let init: Vec<f32> = (0..len).map(|_| init_rng.normal_f32(0.0, 1.0)).collect();
+            let zs = vec![(GaussianStream::new(seed), 0.7f32)];
+            let eng = mezo::zkernel::ZEngine::with_threads(4);
+            let (masked, _) = run_masked_and_dense(kernel, &eng, &init, &[], 5, &zs, 1e-2, 1e-4);
+            for (j, (a, b)) in masked.iter().zip(&init).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{} len={} coord {} changed: {} vs {}", kernel, len, j, a, b));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_masked_kernels_match_scalar_reference_on_random_masks() {
+    // satellite 1b: a random sparse mask equals a scalar per-coordinate
+    // walk reading z(offset + idx) — and untouched coordinates stay put
+    forall(
+        40,
+        33,
+        |rng| {
+            let len = rng.below(3000) + 10;
+            let density = [0.01, 0.1, 0.5][rng.below(3)];
+            let kernel = *rng.choice(&MASKED_KERNELS);
+            let n_seeds = rng.below(3) + 1;
+            (kernel, len, density, rng.next_u64(), n_seeds)
+        },
+        |&(kernel, len, density, seed, n_seeds)| {
+            let mut rng = Pcg::new(seed ^ 0x33);
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let idxs: Vec<u32> =
+                (0..len as u32).filter(|_| rng.next_f64() < density).collect();
+            let zs: Vec<(GaussianStream, f32)> = (0..n_seeds)
+                .map(|k| (GaussianStream::new(seed ^ (0xA0 + k as u64)), 0.4 - 0.25 * k as f32))
+                .collect();
+            let (lr, wd, offset) = (1e-2f32, 1e-4f32, 17u64);
+            // scalar reference walk over the masked coordinates only
+            let mut reference = init.clone();
+            let n_f = zs.len() as f32;
+            for &i in &idxs {
+                let c = i as usize;
+                let zi = |s: &GaussianStream| s.z(offset + i as u64);
+                match kernel {
+                    "axpy_z" => reference[c] += zs[0].1 * zi(&zs[0].0),
+                    "perturb_into" => reference[c] = init[c] + zs[0].1 * zi(&zs[0].0),
+                    "sgd_update" => {
+                        let z = zi(&zs[0].0);
+                        let cur = reference[c];
+                        reference[c] = cur - lr * (zs[0].1 * z + wd * cur);
+                    }
+                    "multi_sgd_update" => {
+                        for &(s, g) in &zs {
+                            let z = zi(&s);
+                            let cur = reference[c];
+                            reference[c] = cur - lr * (g * z + wd * cur);
+                        }
+                    }
+                    "fzoo_update" => {
+                        let mut g = 0.0f32;
+                        for &(s, pg) in &zs {
+                            g += pg * zi(&s);
+                        }
+                        let cur = reference[c];
+                        reference[c] = cur - lr * (g / n_f + wd * cur);
+                    }
+                    "multi_axpy_z" => {
+                        for &(s, sc) in &zs {
+                            reference[c] += sc * zi(&s);
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            for threads in [1usize, 2, 8] {
+                let eng = mezo::zkernel::ZEngine::with_threads(threads);
+                let (masked, _) =
+                    run_masked_and_dense(kernel, &eng, &init, &idxs, offset, &zs, lr, wd);
+                for (j, (a, b)) in masked.iter().zip(&reference).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{} t={} len={} density={} coord {}: {} vs {}",
+                            kernel, threads, len, density, j, a, b
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_masked_fzoo_n1_full_mask_without_variance_norm_is_one_sided_spsa() {
+    // satellite 2: the PR-2 pin extended to the masked path — FZOO under a
+    // FULL mask with a single seed and no variance normalization is still
+    // EXACTLY the one-sided SPSA update, bit for bit
+    use mezo::optim::fzoo::{Fzoo, FzooConfig};
+    use mezo::zkernel::{SparseMask, ZEngine};
+
+    fn quad(p: &ParamStore) -> f32 {
+        p.data.iter().flatten().map(|&x| (x - 1.0) * (x - 1.0)).sum()
+    }
+
+    forall(
+        15,
+        34,
+        |rng| {
+            (
+                rng.next_u64(),
+                rng.below(300) + 1,
+                rng.below(300) + 1,
+                1e-3 + rng.next_f32() * 1e-2, // lr
+                1e-3 + rng.next_f32() * 9e-3, // eps
+                rng.next_f32() * 1e-3,        // wd
+            )
+        },
+        |&(master, d1, d2, lr, eps, wd)| {
+            let specs = vec![
+                TensorDesc { name: "a".into(), shape: vec![d1], dtype: "f32".into() },
+                TensorDesc { name: "b".into(), shape: vec![d2], dtype: "f32".into() },
+            ];
+            let mut p = ParamStore::from_specs(specs);
+            p.init(master);
+            let p0 = p.clone();
+
+            let cfg = FzooConfig {
+                lr,
+                eps,
+                weight_decay: wd,
+                n: 1,
+                variance_norm: false,
+                ..Default::default()
+            };
+            let mut opt = Fzoo::new(cfg, vec![0, 1], master ^ 0x5EED);
+            opt.mask = Some(SparseMask::full(&p, &[0, 1]));
+            let info = opt.step(&mut p, |p| Ok(quad(p))).unwrap();
+
+            // reference: the one-sided SPSA update, dense kernels
+            let engine = ZEngine::default();
+            let seed = Pcg::new(master ^ 0x5EED).next_u64();
+            let stream = GaussianStream::new(seed);
+            let mut staged = p0.clone();
+            for ti in [0usize, 1] {
+                engine.perturb_into(stream, p0.offsets[ti], &p0.data[ti], eps, &mut staged.data[ti]);
+            }
+            let g = (quad(&staged) - quad(&p0)) / eps;
+            let mut want = p0.clone();
+            for ti in [0usize, 1] {
+                engine.sgd_update(stream, want.offsets[ti], &mut want.data[ti], lr, g, wd);
+            }
+
+            ensure(info.seed == seed, "seed stream diverged")?;
+            ensure(
+                info.pgrad.to_bits() == g.to_bits(),
+                format!("pgrad {} vs one-sided g {}", info.pgrad, g),
+            )?;
+            for (x, y) in p.data.iter().flatten().zip(want.data.iter().flatten()) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("param drifted: {} vs {}", x, y));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_trajectory_replays_bitwise_from_seeds_and_digest() {
+    // acceptance: a sparse FZOO/MeZO run replays from its logged seeds +
+    // mask digest, bit-identically across thread counts and replay
+    // flavors (sequential vs batched both equal a scalar reference walk)
+    use mezo::optim::fzoo::{Fzoo, FzooConfig};
+    use mezo::optim::mezo::{MezoConfig, MezoSgd};
+    use mezo::storage::Trajectory;
+    use mezo::zkernel::{Sensitivity, SparseMask, ZEngine};
+
+    fn quad(p: &ParamStore) -> f32 {
+        p.data.iter().flatten().map(|&x| (x - 0.5) * (x - 0.5)).sum()
+    }
+
+    forall(
+        10,
+        35,
+        |rng| {
+            (
+                rng.next_u64(),
+                rng.below(400) + 50,
+                rng.below(400) + 50,
+                rng.below(2) == 0, // fzoo or mezo
+                rng.below(3) + 1,  // seeds per step
+            )
+        },
+        |&(master, d1, d2, use_fzoo, n)| {
+            let specs = vec![
+                TensorDesc { name: "a".into(), shape: vec![d1], dtype: "f32".into() },
+                TensorDesc { name: "b".into(), shape: vec![d2], dtype: "f32".into() },
+            ];
+            let mk = || {
+                let mut p = ParamStore::from_specs(specs.clone());
+                p.init(master);
+                p
+            };
+            let mut trained = mk();
+            let k = ((d1 + d2) / 5).max(1);
+            let mask = SparseMask::top_k(&trained, &[0, 1], k, Sensitivity::Magnitude)
+                .map_err(|e| e.to_string())?;
+            let names = vec!["a".to_string(), "b".to_string()];
+            let traj = if use_fzoo {
+                let cfg =
+                    FzooConfig { lr: 1e-2, eps: 1e-3, n, variance_norm: false, ..Default::default() };
+                let mut opt = Fzoo::new(cfg, vec![0, 1], master ^ 0xF);
+                opt.mask = Some(mask.clone());
+                for _ in 0..8 {
+                    opt.step(&mut trained, |p| Ok(quad(p))).map_err(|e| e.to_string())?;
+                }
+                Trajectory::from_run(names, &opt.history).with_mask_digest(mask.digest())
+            } else {
+                let cfg = MezoConfig { lr: 1e-2, eps: 1e-3, n, ..Default::default() };
+                let mut opt = MezoSgd::new(cfg, vec![0, 1], master ^ 0xF);
+                opt.mask = Some(mask.clone());
+                for _ in 0..8 {
+                    opt.step(&mut trained, |p| Ok(quad(p))).map_err(|e| e.to_string())?;
+                }
+                Trajectory::from_run(names, &opt.history).with_mask_digest(mask.digest())
+            };
+
+            // scalar reference replay: θ[i] -= lr·pgrad·z(off + i) per
+            // record, masked coordinates only
+            let mut reference = mk();
+            for r in &traj.records {
+                let stream = GaussianStream::new(r.seed);
+                for ti in [0usize, 1] {
+                    let off = reference.offsets[ti];
+                    for &i in mask.indices(ti) {
+                        reference.data[ti][i as usize] +=
+                            -(r.lr * r.pgrad) * stream.z(off + i as u64);
+                    }
+                }
+            }
+            for threads in [1usize, 2, 8] {
+                let eng = ZEngine::with_threads(threads);
+                let mut seq = mk();
+                traj.replay_masked_with(&eng, &mut seq, &mask).map_err(|e| e.to_string())?;
+                for (a, b) in seq.data.iter().flatten().zip(reference.data.iter().flatten()) {
+                    ensure(
+                        a.to_bits() == b.to_bits(),
+                        format!("t={}: sequential replay vs scalar reference: {} vs {}", threads, a, b),
+                    )?;
+                }
+                // the batched replay applies seeds per coordinate in
+                // record order, so ANY batch size equals the sequential
+                // walk bit for bit
+                for batch in [1usize, n] {
+                    let mut bat = mk();
+                    traj.replay_batched_masked_with(&eng, &mut bat, &mask, batch)
+                        .map_err(|e| e.to_string())?;
+                    for (x, y) in bat.data.iter().flatten().zip(seq.data.iter().flatten()) {
+                        ensure(
+                            x.to_bits() == y.to_bits(),
+                            format!("t={} batch={}: batched replay diverged", threads, batch),
+                        )?;
+                    }
+                }
+            }
+            // the sparse log round-trips through disk with its digest
+            let path = std::env::temp_dir().join(format!("mezo_prop_sparse_{}.bin", master));
+            traj.save(&path).map_err(|e| e.to_string())?;
+            let back = Trajectory::load(&path).map_err(|e| e.to_string())?;
+            std::fs::remove_file(&path).ok();
+            ensure(back == traj, "sparse trajectory roundtrip")?;
+            ensure(back.mask_digest == Some(mask.digest()), "digest survived")?;
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_fzoo_n1_without_variance_norm_is_the_one_sided_spsa_update() {
     // ISSUE 2 acceptance: with a single seed and variance normalization
