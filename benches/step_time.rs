@@ -12,14 +12,44 @@
 //! thread counts {1, 2, 4, 8}. A second group compares whole FZOO steps
 //! against MezoSgd n-SPSA steps at matched forward-pass budgets (see
 //! `fzoo_vs_mezo_bench`); a third sweeps sparse SensZOQ mask densities
-//! {1%, 10%, 100%} against the dense composite (`mask_density_bench`).
-//! Results land in BENCH_zkernel.json so the perf trajectory is tracked
-//! across PRs.
+//! {1%, 10%, 100%} against the dense composite (`mask_density_bench`);
+//! a fourth pins the persistent worker pool against per-call
+//! `std::thread::scope` spawns (`pool_vs_spawn_bench`). Results land in
+//! BENCH_zkernel.json so the perf trajectory is tracked across PRs.
+//!
+//! `MEZO_BENCH_QUICK=1` switches every group to a reduced size/rep grid —
+//! the CI bench-smoke mode, which records the trajectory artifact per PR
+//! without burning minutes on the d = 1e7 points.
 
 use mezo::rng::GaussianStream;
 use mezo::util::json::{obj, Json};
 use mezo::zkernel::ZEngine;
 use std::time::Instant;
+
+/// Reduced-size quick mode (CI bench-smoke): `MEZO_BENCH_QUICK=1`.
+fn quick() -> bool {
+    std::env::var("MEZO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The d grid: full sweeps 1e5..1e7, quick mode stops at 1e6.
+fn sizes() -> Vec<usize> {
+    if quick() {
+        vec![100_000, 1_000_000]
+    } else {
+        vec![100_000, 1_000_000, 10_000_000]
+    }
+}
+
+/// Median reps for a given d (halved-ish in quick mode).
+fn reps_for(d: usize) -> usize {
+    match (d, quick()) {
+        (100_000, false) => 9,
+        (100_000, true) => 5,
+        (1_000_000, false) => 5,
+        (1_000_000, true) => 3,
+        _ => 3,
+    }
+}
 
 /// Median-of-reps seconds for one invocation of `f`.
 fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
@@ -83,12 +113,8 @@ fn zkernel_bench() -> Vec<Row> {
     let stream = GaussianStream::new(0xBE7C);
     let (lr, g, wd, eps) = (1e-4f32, 0.37f32, 1e-5f32, 1e-3f32);
     let mut rows = Vec::new();
-    for &d in &[100_000usize, 1_000_000, 10_000_000] {
-        let reps = match d {
-            100_000 => 9,
-            1_000_000 => 5,
-            _ => 3,
-        };
+    for &d in &sizes() {
+        let reps = reps_for(d);
         let mut theta = vec![0.01f32; d];
         // scalar baselines (single-threaded per-coordinate z(), pre-refactor)
         let sc_fill = time(reps, || scalar::fill(stream, &mut theta));
@@ -159,15 +185,12 @@ fn fzoo_vs_mezo_bench() -> Vec<Json> {
     use mezo::optim::mezo::{MezoConfig, MezoSgd};
 
     let mut out = Vec::new();
-    for &d in &[100_000usize, 1_000_000, 10_000_000] {
-        let reps = match d {
-            100_000 => 7,
-            1_000_000 => 5,
-            _ => 3,
-        };
+    for &d in &sizes() {
+        let reps = reps_for(d);
         let specs =
             vec![TensorDesc { name: "w".into(), shape: vec![d], dtype: "f32".into() }];
-        for &budget in &[8usize, 16] {
+        let budgets: &[usize] = if quick() { &[8] } else { &[8, 16] };
+        for &budget in budgets {
             let mut best = 0.0f64;
             for &t in &[1usize, 2, 4, 8] {
                 let mut p = ParamStore::from_specs(specs.clone());
@@ -219,12 +242,8 @@ fn mask_density_bench() -> Vec<Json> {
     let stream = GaussianStream::new(0x5EED);
     let (lr, g, wd, eps) = (1e-4f32, 0.37f32, 1e-5f32, 1e-3f32);
     let mut out = Vec::new();
-    for &d in &[100_000usize, 1_000_000, 10_000_000] {
-        let reps = match d {
-            100_000 => 9,
-            1_000_000 => 5,
-            _ => 3,
-        };
+    for &d in &sizes() {
+        let reps = reps_for(d);
         let mut theta = vec![0.01f32; d];
         for &density in &[0.01f64, 0.1, 1.0] {
             let stride = (1.0 / density).round() as usize;
@@ -267,17 +286,74 @@ fn mask_density_bench() -> Vec<Json> {
     out
 }
 
+/// Persistent-pool vs per-call-spawn dispatch overhead: the same fused
+/// axpy_z kernel (and the 4-pass perturb+update composite) driven once by
+/// the pool dispatcher (`ZEngine::with_threads`) and once by the retained
+/// `std::thread::scope` dispatcher (`ZEngine::with_threads_scoped`). The
+/// arithmetic and chunking are identical — the delta IS the per-dispatch
+/// cost of spawning + joining OS threads, which dominates at small d
+/// (spawn is tens of µs; an axpy over 1e5 coords is comparable) and must
+/// wash out at d = 1e7 where the kernel body dominates. Results land in
+/// BENCH_zkernel.json under "pool_vs_spawn".
+fn pool_vs_spawn_bench() -> Vec<Json> {
+    let stream = GaussianStream::new(0xD15);
+    let (lr, g, wd, eps) = (1e-4f32, 0.37f32, 1e-5f32, 1e-3f32);
+    let mut out = Vec::new();
+    for &d in &sizes() {
+        // dispatch overhead needs more medians at small d, where one
+        // kernel invocation is only ~100µs
+        let reps = reps_for(d) * 2 + 1;
+        let mut theta = vec![0.01f32; d];
+        let mut best = 0.0f64;
+        for &t in &[1usize, 2, 4, 8] {
+            let pool_eng = ZEngine::with_threads(t);
+            let spawn_eng = ZEngine::with_threads_scoped(t);
+            // warm the pool so one-time worker growth stays out of the
+            // measured reps
+            pool_eng.axpy_z(stream, 0, &mut theta, eps);
+            let pool_axpy = time(reps, || pool_eng.axpy_z(stream, 0, &mut theta, eps));
+            let spawn_axpy = time(reps, || spawn_eng.axpy_z(stream, 0, &mut theta, eps));
+            let step = |eng: ZEngine, theta: &mut [f32]| {
+                eng.axpy_z(stream, 0, theta, eps);
+                eng.axpy_z(stream, 0, theta, -2.0 * eps);
+                eng.axpy_z(stream, 0, theta, eps);
+                eng.sgd_update(stream, 0, theta, lr, g, wd);
+            };
+            let pool_step = time(reps, || step(pool_eng, &mut theta));
+            let spawn_step = time(reps, || step(spawn_eng, &mut theta));
+            best = best.max(spawn_step / pool_step);
+            out.push(obj(vec![
+                ("d", Json::from(d as f64)),
+                ("threads", Json::from(t as f64)),
+                ("spawn_axpy_s", Json::from(spawn_axpy)),
+                ("pool_axpy_s", Json::from(pool_axpy)),
+                ("axpy_dispatch_saved_us", Json::from((spawn_axpy - pool_axpy) * 1e6)),
+                ("spawn_step_s", Json::from(spawn_step)),
+                ("pool_step_s", Json::from(pool_step)),
+                // 4 dispatches per perturb+update composite
+                ("step_dispatch_saved_us", Json::from((spawn_step - pool_step) * 1e6)),
+                ("pool_step_speedup", Json::from(spawn_step / pool_step)),
+            ]));
+        }
+        println!("d={:>9}: best pool-vs-spawn step speedup {:.2}x", d, best);
+    }
+    out
+}
+
 fn main() {
     let rows = zkernel_bench();
     let fzoo_rows = fzoo_vs_mezo_bench();
     let mask_rows = mask_density_bench();
+    let pool_rows = pool_vs_spawn_bench();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let report = obj(vec![
         ("bench", Json::from("zkernel")),
         ("hardware_threads", Json::from(hw as f64)),
+        ("quick_mode", Json::from(quick())),
         ("rows", Json::Arr(rows.iter().map(Row::json).collect())),
         ("fzoo_vs_mezo", Json::Arr(fzoo_rows)),
         ("mask_density", Json::Arr(mask_rows)),
+        ("pool_vs_spawn", Json::Arr(pool_rows)),
     ]);
     std::fs::write("BENCH_zkernel.json", report.to_string()).expect("write BENCH_zkernel.json");
     println!("wrote BENCH_zkernel.json ({} rows)", rows.len());

@@ -161,6 +161,30 @@ mod tests {
     }
 
     #[test]
+    fn projection_is_bit_identical_on_pool_and_scope_dispatch() {
+        // project_rows is the BBT hot path; the pool dispatcher must be a
+        // pure scheduling change here too (rows >= 8 chunks at t=8)
+        let mut p = ParamStore::from_specs(vec![TensorDesc {
+            name: "prefix".into(),
+            shape: vec![70_000],
+            dtype: "f32".into(),
+        }]);
+        p.init(3);
+        let cfg = BbtCfg { d_low: 32, ..Default::default() };
+        let mut bbt = Bbt::new(cfg, vec![0], &p);
+        let z: Vec<f32> = (0..32).map(|i| 0.1 * (i as f32) - 1.5).collect();
+        let mut pool = p.clone();
+        bbt.engine = ZEngine::with_threads(8);
+        bbt.apply(&mut pool, &z);
+        let mut scope = p.clone();
+        bbt.engine = ZEngine::with_threads_scoped(8);
+        bbt.apply(&mut scope, &z);
+        for (a, b) in pool.data[0].iter().zip(&scope.data[0]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{} vs {}", a, b);
+        }
+    }
+
+    #[test]
     fn apply_is_deterministic_given_z() {
         let mut p = toy();
         let cfg = BbtCfg { d_low: 4, ..Default::default() };

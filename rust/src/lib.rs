@@ -23,11 +23,11 @@
 //! `docs/ARCHITECTURE.md` for the paper-section → module mapping.
 #![warn(missing_docs)]
 
-// The core subsystems — rng, zkernel (incl. the sparse mask tier), optim,
-// storage, model — are fully documented and hold the missing_docs line.
-// The remaining modules are grandfathered with module-level allows until
-// their own doc pass; shrinking this list is cheap follow-up work
-// (document-then-remove a marker, never add one).
+// The core subsystems — rng, zkernel (incl. the sparse mask tier and the
+// worker pool), optim, storage, model, util — are fully documented and
+// hold the missing_docs line. The remaining modules are grandfathered
+// with module-level allows until their own doc pass; shrinking this list
+// is cheap follow-up work (document-then-remove a marker, never add one).
 #[allow(missing_docs)]
 pub mod baselines;
 #[allow(missing_docs)]
@@ -51,6 +51,5 @@ pub mod tokenizer;
 #[cfg(feature = "pjrt")]
 #[allow(missing_docs)]
 pub mod train;
-#[allow(missing_docs)]
 pub mod util;
 pub mod zkernel;

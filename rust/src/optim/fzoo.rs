@@ -456,6 +456,48 @@ mod tests {
     }
 
     #[test]
+    fn pool_and_scope_dispatch_produce_identical_fzoo_runs() {
+        // the persistent-pool dispatcher is a pure scheduling change: the
+        // whole optimizer loop (staging, anchor, fused update, variance
+        // norm) lands on identical bits vs the retained scope path
+        for threads in [2usize, 8] {
+            let mut runs: Vec<(Vec<StepRecord>, Vec<Vec<f32>>)> = Vec::new();
+            for scoped in [false, true] {
+                let mut p = big_params();
+                let cfg = FzooConfig {
+                    lr: 5e-3,
+                    eps: 1e-3,
+                    weight_decay: 1e-4,
+                    n: 4,
+                    variance_norm: true,
+                    ..Default::default()
+                };
+                let mut opt = Fzoo::new(cfg, vec![0, 1], 0xD00D);
+                opt.engine = if scoped {
+                    ZEngine::with_threads_scoped(threads)
+                } else {
+                    ZEngine::with_threads(threads)
+                };
+                for _ in 0..4 {
+                    opt.step(&mut p, |p| quad_loss(p)).unwrap();
+                }
+                runs.push((opt.history.clone(), p.data.clone()));
+            }
+            let (pool_hist, pool_data) = &runs[0];
+            let (scope_hist, scope_data) = &runs[1];
+            assert_eq!(pool_hist.len(), scope_hist.len());
+            for (a, b) in pool_hist.iter().zip(scope_hist) {
+                assert_eq!(a.seed, b.seed, "t={}", threads);
+                assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "t={}", threads);
+                assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "t={}", threads);
+            }
+            for (x, y) in pool_data.iter().flatten().zip(scope_data.iter().flatten()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "t={}: {} vs {}", threads, x, y);
+            }
+        }
+    }
+
+    #[test]
     fn scratch_store_is_reused_without_reallocation() {
         // the staging store is allocated once; steps, mask swaps and
         // invalidation all refresh it in place (pointer/capacity identity)

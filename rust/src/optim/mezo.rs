@@ -801,6 +801,50 @@ mod tests {
     }
 
     #[test]
+    fn pool_and_scope_dispatch_produce_identical_mezo_runs() {
+        // the persistent-pool dispatcher is a pure scheduling change:
+        // every flavor's full optimizer loop lands on identical bits vs
+        // the retained per-call thread::scope path
+        for flavor in [Flavor::Sgd, Flavor::Momentum, Flavor::Adam] {
+            for threads in [2usize, 8] {
+                let mut runs: Vec<(Vec<StepRecord>, Vec<Vec<f32>>)> = Vec::new();
+                for scoped in [false, true] {
+                    let cfg = MezoConfig {
+                        lr: 1e-2,
+                        eps: 1e-3,
+                        weight_decay: 1e-4,
+                        n: 3,
+                        flavor,
+                        ..Default::default()
+                    };
+                    let mut p = big_params();
+                    let mut opt = MezoSgd::new(cfg, vec![0, 1], 0xD00D);
+                    opt.engine = if scoped {
+                        ZEngine::with_threads_scoped(threads)
+                    } else {
+                        ZEngine::with_threads(threads)
+                    };
+                    for _ in 0..4 {
+                        opt.step(&mut p, |p| quad_loss(p)).unwrap();
+                    }
+                    runs.push((opt.history.clone(), p.data.clone()));
+                }
+                let (pool_hist, pool_data) = &runs[0];
+                let (scope_hist, scope_data) = &runs[1];
+                assert_eq!(pool_hist.len(), scope_hist.len());
+                for (a, b) in pool_hist.iter().zip(scope_hist) {
+                    assert_eq!(a.seed, b.seed, "{:?} t={}", flavor, threads);
+                    assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "{:?} t={}", flavor, threads);
+                    assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "{:?} t={}", flavor, threads);
+                }
+                for (x, y) in pool_data.iter().flatten().zip(scope_data.iter().flatten()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{:?} t={}: {} vs {}", flavor, threads, x, y);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn full_mask_step_is_bitwise_identical_to_dense_step() {
         // the dense-oracle property at the optimizer level: a full mask
         // changes nothing, bit for bit, for any thread count
@@ -913,7 +957,7 @@ mod tests {
         let mut opt = MezoSgd::new(cfg, vec![0, 1], 1);
         opt.mask = Some(SparseMask::full(&p, &[0, 1]));
         let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
-        assert!(format!("{}", err).contains("Sgd flavor"), "{}", err);
+        assert!(err.to_string().contains("Sgd flavor"), "{}", err);
     }
 
     #[test]

@@ -389,6 +389,41 @@ mod tests {
     }
 
     #[test]
+    fn replay_is_bit_identical_on_pool_and_scope_dispatch() {
+        use crate::model::meta::TensorDesc;
+        // a tensor large enough that both dispatchers actually fan out
+        let mut p = ParamStore::from_specs(vec![TensorDesc {
+            name: "w".into(),
+            shape: vec![70_000],
+            dtype: "f32".into(),
+        }]);
+        p.init(11);
+        let mut traj = Trajectory::new(vec!["w".into()]);
+        for i in 0..12u64 {
+            traj.records.push(StepRecord {
+                seed: 40 + i,
+                pgrad: 0.07 * i as f32 - 0.3,
+                lr: 1e-3,
+            });
+        }
+        let mut pool = p.clone();
+        traj.replay_with(&ZEngine::with_threads(8), &mut pool);
+        let mut scope = p.clone();
+        traj.replay_with(&ZEngine::with_threads_scoped(8), &mut scope);
+        for (x, y) in pool.data[0].iter().zip(&scope.data[0]) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{} vs {}", x, y);
+        }
+        // the seed-batched flavor too
+        let mut pool_b = p.clone();
+        traj.replay_batched_with(&ZEngine::with_threads(8), &mut pool_b, 3).unwrap();
+        let mut scope_b = p.clone();
+        traj.replay_batched_with(&ZEngine::with_threads_scoped(8), &mut scope_b, 3).unwrap();
+        for (x, y) in pool_b.data[0].iter().zip(&scope_b.data[0]) {
+            assert_eq!(x.to_bits(), y.to_bits(), "batched: {} vs {}", x, y);
+        }
+    }
+
+    #[test]
     fn replay_batched_rejects_mismatched_seed_batch_sizes() {
         // 7 records cannot be a run of 4-seed steps; the guard flags a
         // truncated or mislabeled log instead of quietly accepting it
@@ -398,7 +433,7 @@ mod tests {
         }
         let mut p = toy();
         let err = traj.replay_batched(&mut p, 4).unwrap_err();
-        let msg = format!("{}", err);
+        let msg = err.to_string();
         assert!(msg.contains("seed-batches"), "unexpected error: {}", msg);
         // zero-size batches are rejected too
         assert!(traj.replay_batched(&mut p, 0).is_err());
@@ -454,16 +489,16 @@ mod tests {
         // a different mask fails loudly
         let other = SparseMask::top_k(&trained, &[0, 1], 5, Sensitivity::Magnitude).unwrap();
         let err = traj.replay_masked(&mut toy(), &other).unwrap_err();
-        assert!(format!("{}", err).contains("digest"), "{}", err);
+        assert!(err.to_string().contains("digest"), "{}", err);
         let err = traj.replay_batched_masked(&mut toy(), &other, n).unwrap_err();
-        assert!(format!("{}", err).contains("digest"), "{}", err);
+        assert!(err.to_string().contains("digest"), "{}", err);
         // the dense batched path refuses a sparse log
         let err = traj.replay_batched(&mut toy(), n).unwrap_err();
-        assert!(format!("{}", err).contains("sparse mask"), "{}", err);
+        assert!(err.to_string().contains("sparse mask"), "{}", err);
         // and masked replay refuses a dense log
         let dense = Trajectory::from_run(vec!["w1".into(), "w2".into()], &opt.history);
         let err = dense.replay_masked(&mut toy(), &mask).unwrap_err();
-        assert!(format!("{}", err).contains("dense"), "{}", err);
+        assert!(err.to_string().contains("dense"), "{}", err);
     }
 
     #[test]

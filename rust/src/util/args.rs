@@ -5,13 +5,19 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: positionals in order plus `--key value` flags.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Non-flag arguments, in the order they appeared.
     pub positional: Vec<String>,
+    /// Flag values keyed by name (bare `--flag` stores `"true"`).
     pub flags: BTreeMap<String, String>,
 }
 
 impl Args {
+    /// Parse an argv slice (without the program name). `--key value`,
+    /// `--key=value` and bare boolean `--flag` forms are accepted;
+    /// anything else is positional.
     pub fn parse(argv: &[String]) -> Args {
         let mut a = Args::default();
         let mut i = 0;
@@ -34,18 +40,22 @@ impl Args {
         a
     }
 
+    /// Parse the process's own arguments (skipping the program name).
     pub fn from_env() -> Args {
         Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())
     }
 
+    /// String flag with a default.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// Flag value if present, `None` otherwise.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// `usize` flag with a default (also on parse failure).
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.flags
             .get(key)
@@ -53,6 +63,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `u64` flag with a default (also on parse failure).
     pub fn u64(&self, key: &str, default: u64) -> u64 {
         self.flags
             .get(key)
@@ -60,6 +71,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `f32` flag with a default (also on parse failure).
     pub fn f32(&self, key: &str, default: f32) -> f32 {
         self.flags
             .get(key)
@@ -67,6 +79,8 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Boolean flag: `true`/`1`/`yes` and `false`/`0`/`no` are
+    /// recognized; anything else (or absence) yields the default.
     pub fn bool(&self, key: &str, default: bool) -> bool {
         match self.flags.get(key).map(|s| s.as_str()) {
             Some("true") | Some("1") | Some("yes") => true,

@@ -11,15 +11,22 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number (always held as f64; see the integer accessors).
     Num(f64),
+    /// A string (escapes already resolved).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; keys sorted (BTreeMap) so serialization is stable.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
@@ -31,36 +38,43 @@ impl Json {
         Ok(v)
     }
 
+    /// The object's map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
         }
     }
+    /// The array's elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Integer view of a number (truncating cast).
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
+    /// `usize` view of a number (truncating cast).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -72,16 +86,10 @@ impl Json {
         static NULL: Json = Json::Null;
         self.as_obj().and_then(|m| m.get(key)).unwrap_or(&NULL)
     }
+    /// `arr[i]` access; returns Null out of bounds (chainable).
     pub fn idx(&self, i: usize) -> &Json {
         static NULL: Json = Json::Null;
         self.as_arr().and_then(|a| a.get(i)).unwrap_or(&NULL)
-    }
-
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
     }
 
     fn write(&self, out: &mut String) {
@@ -119,6 +127,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (no whitespace); `Json::parse` round-trips it.
+/// `.to_string()` comes with this impl via the blanket `ToString`.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -6,12 +6,15 @@ use std::time::Instant;
 pub struct Timer(Instant);
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Timer {
         Timer(Instant::now())
     }
+    /// Seconds elapsed since [`Timer::start`].
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }
+    /// Milliseconds elapsed since [`Timer::start`].
     pub fn ms(&self) -> f64 {
         self.secs() * 1e3
     }
@@ -20,15 +23,23 @@ impl Timer {
 /// Summary statistics over a sample.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
+    /// sample size
     pub n: usize,
+    /// arithmetic mean
     pub mean: f64,
+    /// population standard deviation
     pub std: f64,
+    /// smallest observation
     pub min: f64,
+    /// largest observation
     pub max: f64,
+    /// median (nearest-rank)
     pub p50: f64,
+    /// 90th percentile (nearest-rank)
     pub p90: f64,
 }
 
+/// Summary statistics of a sample (all-zero [`Summary`] when empty).
 pub fn summarize(xs: &[f64]) -> Summary {
     if xs.is_empty() {
         return Summary::default();

@@ -4,17 +4,205 @@
 //! coordinate has global z-index `offset`. The pattern is uniform: fill a
 //! [`BLOCK`]-sized stack buffer from the counter-based stream (one
 //! ziggurat-table resolve per block instead of per coordinate), then run
-//! the fused arithmetic over the block in a tight loop the compiler can
-//! vectorize.
+//! the fused arithmetic over the block through the shared unrolled lane
+//! layer:
+//!
+//! * `block_apply8!` walks a block's coordinates 8
+//!   lanes at a time with an explicit manual unroll (`f32x8`-style, no
+//!   nightly features, remainder handled scalar), keeping 8 independent
+//!   accumulation chains in flight for the compiler to vectorize;
+//! * the `*1` op helpers (`axpy1`, `sgd1`, `fzoo1`, …) are the
+//!   per-coordinate arithmetic written ONCE and shared between the dense
+//!   kernels, the masked fill path and the masked per-coordinate path —
+//!   a lane body can never drift between variants.
 //!
 //! BIT-EXACTNESS CONTRACT: each kernel performs, per coordinate, exactly
 //! the floating-point operations (same order, same associativity) as the
-//! scalar seed loops it replaced. That is what makes blocked/threaded
-//! execution interchangeable with the historical code and with itself at
-//! any thread count — see `zkernel::tests`.
+//! scalar seed loops it replaced. Lanes are whole, independent
+//! coordinates — multi-seed accumulation happens *within* a lane, in
+//! slice order — so the 8-wide unroll reorders nothing and blocked,
+//! threaded, pooled and unrolled execution all remain interchangeable
+//! with the historical code and with each other at any thread count —
+//! see `zkernel::tests` and `tests/properties.rs`.
 
 use super::{AdamParams, BLOCK};
 use crate::rng::GaussianStream;
+
+/// Apply a per-coordinate lane body for `j in 0..$n`, manually unrolled 8
+/// lanes at a time with a scalar remainder loop. Each lane is one whole
+/// coordinate, so the unroll preserves every coordinate's operation order
+/// bit for bit; it exists purely to keep 8 independent dependency chains
+/// in flight (the `f32x8` shape) without nightly SIMD features.
+macro_rules! block_apply8 {
+    ($n:expr, |$j:ident| $body:expr) => {{
+        let n__: usize = $n;
+        let mut base__ = 0usize;
+        while base__ + 8 <= n__ {
+            {
+                let $j = base__;
+                $body;
+            }
+            {
+                let $j = base__ + 1;
+                $body;
+            }
+            {
+                let $j = base__ + 2;
+                $body;
+            }
+            {
+                let $j = base__ + 3;
+                $body;
+            }
+            {
+                let $j = base__ + 4;
+                $body;
+            }
+            {
+                let $j = base__ + 5;
+                $body;
+            }
+            {
+                let $j = base__ + 6;
+                $body;
+            }
+            {
+                let $j = base__ + 7;
+                $body;
+            }
+            base__ += 8;
+        }
+        while base__ < n__ {
+            {
+                let $j = base__;
+                $body;
+            }
+            base__ += 1;
+        }
+    }};
+}
+
+// ---------------- per-coordinate op bodies (written once) ---------------
+//
+// Multi-seed ops read z through a `z(k)` closure so the same body serves
+// the dense path (blocked buffer at `zb[k*BLOCK + j]`), the masked fill
+// path (blocked buffer at the block-relative slot) and the masked
+// per-coordinate path (`stream.z(offset + idx)`). Everything is
+// `#[inline(always)]`: after inlining, each call site compiles to the
+// exact loop body the pre-unroll kernels had.
+
+/// θ += s·z
+#[inline(always)]
+fn axpy1(th: &mut f32, z: f32, s: f32) {
+    *th += s * z;
+}
+
+/// out = θ + s·z
+#[inline(always)]
+fn perturb1(out: &mut f32, th: f32, z: f32, s: f32) {
+    *out = th + s * z;
+}
+
+/// θ −= lr·(g·z + wd·θ)
+#[inline(always)]
+fn sgd1(th: &mut f32, z: f32, lr: f32, g: f32, wd: f32) {
+    *th -= lr * (g * z + wd * *th);
+}
+
+/// n-SPSA: every `(stream, g)` update applied in slice order.
+#[inline(always)]
+fn multi_sgd1(
+    th: &mut f32,
+    zs: &[(GaussianStream, f32)],
+    z: impl Fn(usize) -> f32,
+    lr: f32,
+    wd: f32,
+) {
+    for (k, &(_, g)) in zs.iter().enumerate() {
+        *th -= lr * (g * z(k) + wd * *th);
+    }
+}
+
+/// FZOO: g = (Σᵢ gᵢ·zᵢ)/n, then one fused subtraction with one wd term.
+#[inline(always)]
+fn fzoo1(
+    th: &mut f32,
+    zs: &[(GaussianStream, f32)],
+    z: impl Fn(usize) -> f32,
+    n_f: f32,
+    lr: f32,
+    wd: f32,
+) {
+    let mut g = 0.0f32;
+    for (k, &(_, pg)) in zs.iter().enumerate() {
+        g += pg * z(k);
+    }
+    *th -= lr * (g / n_f + wd * *th);
+}
+
+/// Batched replay: θ += Σᵢ sᵢ·zᵢ, seeds in slice order.
+#[inline(always)]
+fn multi_axpy1(th: &mut f32, zs: &[(GaussianStream, f32)], z: impl Fn(usize) -> f32) {
+    for (k, &(_, s)) in zs.iter().enumerate() {
+        *th += s * z(k);
+    }
+}
+
+/// Momentum: g = (Σᵢ gᵢ·zᵢ)/n + wd·θ; m = μ·m + g; θ −= lr·m.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn momentum1(
+    th: &mut f32,
+    mk: &mut f32,
+    zs: &[(GaussianStream, f32)],
+    z: impl Fn(usize) -> f32,
+    lr: f32,
+    wd: f32,
+    momentum: f32,
+    n_records: f32,
+) {
+    let mut g = 0.0f32;
+    for (k, &(_, pg)) in zs.iter().enumerate() {
+        g += pg * z(k);
+    }
+    g = g / n_records + wd * *th;
+    *mk = momentum * *mk + g;
+    *th -= lr * *mk;
+}
+
+/// Adam: bias-corrected moment EMAs + fused parameter update.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn adam1(
+    th: &mut f32,
+    mk: &mut f32,
+    vk: &mut f32,
+    zs: &[(GaussianStream, f32)],
+    z: impl Fn(usize) -> f32,
+    p: AdamParams,
+    bc1: f32,
+    bc2: f32,
+) {
+    let mut g = 0.0f32;
+    for (k, &(_, pg)) in zs.iter().enumerate() {
+        g += pg * z(k);
+    }
+    g = g / p.n + p.wd * *th;
+    *mk = p.beta1 * *mk + (1.0 - p.beta1) * g;
+    *vk = p.beta2 * *vk + (1.0 - p.beta2) * g * g;
+    let mhat = *mk / bc1;
+    let vhat = *vk / bc2;
+    *th -= p.lr * mhat / (vhat.sqrt() + p.eps);
+}
+
+/// m = β·m + (1−β)·(pgrad·z) (Adam-style) or m = β·m + pgrad·z.
+#[inline(always)]
+fn ema1(mk: &mut f32, z: f32, pgrad: f32, beta: f32, adam_style: bool) {
+    let g = pgrad * z;
+    *mk = if adam_style { beta * *mk + (1.0 - beta) * g } else { beta * *mk + g };
+}
+
+// ---------------- dense kernel bodies -----------------------------------
 
 /// θ[j] += s · z(offset + j)
 pub(super) fn axpy_serial(stream: GaussianStream, offset: u64, theta: &mut [f32], s: f32) {
@@ -23,9 +211,8 @@ pub(super) fn axpy_serial(stream: GaussianStream, offset: u64, theta: &mut [f32]
     while i < theta.len() {
         let n = BLOCK.min(theta.len() - i);
         stream.fill(&mut zb[..n], offset + i as u64);
-        for (th, &z) in theta[i..i + n].iter_mut().zip(&zb[..n]) {
-            *th += s * z;
-        }
+        let th = &mut theta[i..i + n];
+        block_apply8!(n, |j| axpy1(&mut th[j], zb[j], s));
         i += n;
     }
 }
@@ -43,9 +230,8 @@ pub(super) fn perturb_into_serial(
     while i < out.len() {
         let n = BLOCK.min(out.len() - i);
         stream.fill(&mut zb[..n], offset + i as u64);
-        for ((o, &th), &z) in out[i..i + n].iter_mut().zip(&theta[i..i + n]).zip(&zb[..n]) {
-            *o = th + s * z;
-        }
+        let (o, th) = (&mut out[i..i + n], &theta[i..i + n]);
+        block_apply8!(n, |j| perturb1(&mut o[j], th[j], zb[j], s));
         i += n;
     }
 }
@@ -64,9 +250,8 @@ pub(super) fn sgd_serial(
     while i < theta.len() {
         let n = BLOCK.min(theta.len() - i);
         stream.fill(&mut zb[..n], offset + i as u64);
-        for (th, &z) in theta[i..i + n].iter_mut().zip(&zb[..n]) {
-            *th -= lr * (g * z + wd * *th);
-        }
+        let th = &mut theta[i..i + n];
+        block_apply8!(n, |j| sgd1(&mut th[j], zb[j], lr, g, wd));
         i += n;
     }
 }
@@ -89,12 +274,8 @@ pub(super) fn multi_sgd_serial(
         for (kk, &(stream, _)) in zs.iter().enumerate() {
             stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
         }
-        for (j, th) in theta[i..i + n].iter_mut().enumerate() {
-            for (kk, &(_, g)) in zs.iter().enumerate() {
-                let z = zb[kk * BLOCK + j];
-                *th -= lr * (g * z + wd * *th);
-            }
-        }
+        let th = &mut theta[i..i + n];
+        block_apply8!(n, |j| multi_sgd1(&mut th[j], zs, |kk| zb[kk * BLOCK + j], lr, wd));
         i += n;
     }
 }
@@ -123,13 +304,8 @@ pub(super) fn fzoo_serial(
         for (kk, &(stream, _)) in zs.iter().enumerate() {
             stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
         }
-        for (j, th) in theta[i..i + n].iter_mut().enumerate() {
-            let mut g = 0.0f32;
-            for (kk, &(_, pg)) in zs.iter().enumerate() {
-                g += pg * zb[kk * BLOCK + j];
-            }
-            *th -= lr * (g / n_f + wd * *th);
-        }
+        let th = &mut theta[i..i + n];
+        block_apply8!(n, |j| fzoo1(&mut th[j], zs, |kk| zb[kk * BLOCK + j], n_f, lr, wd));
         i += n;
     }
 }
@@ -147,12 +323,117 @@ pub(super) fn multi_axpy_serial(zs: &[(GaussianStream, f32)], offset: u64, theta
         for (kk, &(stream, _)) in zs.iter().enumerate() {
             stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
         }
-        for (j, th) in theta[i..i + n].iter_mut().enumerate() {
-            for (kk, &(_, s)) in zs.iter().enumerate() {
-                *th += s * zb[kk * BLOCK + j];
-            }
-        }
+        let th = &mut theta[i..i + n];
+        block_apply8!(n, |j| multi_axpy1(&mut th[j], zs, |kk| zb[kk * BLOCK + j]));
         i += n;
+    }
+}
+
+/// Fused momentum update over a record batch:
+/// g = (Σᵢ gᵢ·zᵢ)/n + wd·θ;  m = μ·m + g;  θ −= lr·m
+#[allow(clippy::too_many_arguments)]
+pub(super) fn momentum_serial(
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    theta: &mut [f32],
+    m: &mut [f32],
+    lr: f32,
+    wd: f32,
+    momentum: f32,
+    n_records: f32,
+) {
+    let k = zs.len();
+    let mut zb = vec![0.0f32; k * BLOCK];
+    let mut i = 0;
+    while i < theta.len() {
+        let n = BLOCK.min(theta.len() - i);
+        for (kk, &(stream, _)) in zs.iter().enumerate() {
+            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+        }
+        let (th, mk) = (&mut theta[i..i + n], &mut m[i..i + n]);
+        block_apply8!(n, |j| {
+            let z = |kk: usize| zb[kk * BLOCK + j];
+            momentum1(&mut th[j], &mut mk[j], zs, z, lr, wd, momentum, n_records)
+        });
+        i += n;
+    }
+}
+
+/// Fused Adam update over a record batch (bias-corrected).
+pub(super) fn adam_serial(
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    p: AdamParams,
+) {
+    let k = zs.len();
+    let mut zb = vec![0.0f32; k * BLOCK];
+    // same value per coordinate in the seed loop; hoisted here
+    let bc1 = 1.0 - p.beta1.powf(p.t);
+    let bc2 = 1.0 - p.beta2.powf(p.t);
+    let mut i = 0;
+    while i < theta.len() {
+        let n = BLOCK.min(theta.len() - i);
+        for (kk, &(stream, _)) in zs.iter().enumerate() {
+            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+        }
+        let (th, mk, vk) = (&mut theta[i..i + n], &mut m[i..i + n], &mut v[i..i + n]);
+        block_apply8!(n, |j| {
+            let z = |kk: usize| zb[kk * BLOCK + j];
+            adam1(&mut th[j], &mut mk[j], &mut vk[j], zs, z, p, bc1, bc2)
+        });
+        i += n;
+    }
+}
+
+/// m = β·m + (1−β)·(pgrad·z) (Adam-style) or m = β·m + pgrad·z.
+pub(super) fn ema_serial(
+    stream: GaussianStream,
+    offset: u64,
+    m: &mut [f32],
+    pgrad: f32,
+    beta: f32,
+    adam_style: bool,
+) {
+    let mut zb = [0.0f32; BLOCK];
+    let mut i = 0;
+    while i < m.len() {
+        let n = BLOCK.min(m.len() - i);
+        stream.fill(&mut zb[..n], offset + i as u64);
+        let mk = &mut m[i..i + n];
+        block_apply8!(n, |j| ema1(&mut mk[j], zb[j], pgrad, beta, adam_style));
+        i += n;
+    }
+}
+
+/// out[jj] = base[jj] + scale · Σᵢ z((start+jj)·d_low + i)·v[i]
+/// (`start` = chunk offset in rows; each row's z-range is contiguous, so
+/// the row fills through the blocked path.)
+///
+/// NOT unrolled: the inner loop is a *reduction* over `d_low` within one
+/// output coordinate, and splitting it into 8 accumulation chains would
+/// change the summation order — a values change, not a perf knob. The
+/// bit-exactness contract keeps this one a straight sequential dot.
+pub(super) fn project_rows_serial(
+    stream: GaussianStream,
+    d_low: usize,
+    v: &[f32],
+    base: &[f32],
+    scale: f32,
+    out: &mut [f32],
+    start: usize,
+) {
+    let mut zrow = vec![0.0f32; d_low];
+    for (jj, (o, &b)) in out.iter_mut().zip(base).enumerate() {
+        let row = (start + jj) as u64 * d_low as u64;
+        stream.fill(&mut zrow, row);
+        let mut acc = 0.0f32;
+        for (&zr, &vi) in zrow.iter().zip(v) {
+            acc += zr * vi;
+        }
+        *o = b + scale * acc;
     }
 }
 
@@ -171,7 +452,9 @@ pub(super) fn multi_axpy_serial(zs: &[(GaussianStream, f32)], offset: u64, theta
 // runs pay the per-coordinate `z()` dispatch instead of generating 256
 // coordinates to use a few. Both paths produce identical bits (`fill` is
 // elementwise `z()` — see tests/properties.rs), so the crossover is a pure
-// perf knob.
+// perf knob. Both paths run through `block_apply8!` over the run's index
+// slice (lanes = masked coordinates) and reuse the same `*1` op bodies as
+// the dense kernels.
 
 /// Minimum hits in one z-block before the masked kernels fill the whole
 /// block instead of calling `z()` per coordinate (~the crossover where
@@ -204,15 +487,20 @@ pub(super) fn masked_axpy_serial(
     let mut i = 0;
     while i < idxs.len() {
         let (j, first) = mask_run(idxs, i);
-        if j - i >= MASK_FILL_MIN {
+        let run = &idxs[i..j];
+        if run.len() >= MASK_FILL_MIN {
             stream.fill(&mut zb, offset + first);
-            for &idx in &idxs[i..j] {
-                theta[idx as usize - base] += s * zb[(idx as u64 - first) as usize];
-            }
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
+                let z = zb[(idx as u64 - first) as usize];
+                axpy1(&mut theta[idx as usize - base], z, s)
+            });
         } else {
-            for &idx in &idxs[i..j] {
-                theta[idx as usize - base] += s * stream.z(offset + idx as u64);
-            }
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
+                let z = stream.z(offset + idx as u64);
+                axpy1(&mut theta[idx as usize - base], z, s)
+            });
         }
         i = j;
     }
@@ -233,17 +521,20 @@ pub(super) fn masked_perturb_into_serial(
     let mut i = 0;
     while i < idxs.len() {
         let (j, first) = mask_run(idxs, i);
-        if j - i >= MASK_FILL_MIN {
+        let run = &idxs[i..j];
+        if run.len() >= MASK_FILL_MIN {
             stream.fill(&mut zb, offset + first);
-            for &idx in &idxs[i..j] {
-                let c = idx as usize - base;
-                out[c] = theta[c] + s * zb[(idx as u64 - first) as usize];
-            }
+            block_apply8!(run.len(), |r| {
+                let c = run[r] as usize - base;
+                let z = zb[(run[r] as u64 - first) as usize];
+                perturb1(&mut out[c], theta[c], z, s)
+            });
         } else {
-            for &idx in &idxs[i..j] {
-                let c = idx as usize - base;
-                out[c] = theta[c] + s * stream.z(offset + idx as u64);
-            }
+            block_apply8!(run.len(), |r| {
+                let c = run[r] as usize - base;
+                let z = stream.z(offset + run[r] as u64);
+                perturb1(&mut out[c], theta[c], z, s)
+            });
         }
         i = j;
     }
@@ -251,6 +542,7 @@ pub(super) fn masked_perturb_into_serial(
 
 /// θ[idx] −= lr · (g · z(offset + idx) + wd · θ[idx]) over the masked
 /// coordinates only.
+#[allow(clippy::too_many_arguments)]
 pub(super) fn masked_sgd_serial(
     stream: GaussianStream,
     offset: u64,
@@ -265,19 +557,20 @@ pub(super) fn masked_sgd_serial(
     let mut i = 0;
     while i < idxs.len() {
         let (j, first) = mask_run(idxs, i);
-        if j - i >= MASK_FILL_MIN {
+        let run = &idxs[i..j];
+        if run.len() >= MASK_FILL_MIN {
             stream.fill(&mut zb, offset + first);
-            for &idx in &idxs[i..j] {
-                let th = &mut theta[idx as usize - base];
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
                 let z = zb[(idx as u64 - first) as usize];
-                *th -= lr * (g * z + wd * *th);
-            }
+                sgd1(&mut theta[idx as usize - base], z, lr, g, wd)
+            });
         } else {
-            for &idx in &idxs[i..j] {
-                let th = &mut theta[idx as usize - base];
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
                 let z = stream.z(offset + idx as u64);
-                *th -= lr * (g * z + wd * *th);
-            }
+                sgd1(&mut theta[idx as usize - base], z, lr, g, wd)
+            });
         }
         i = j;
     }
@@ -300,26 +593,23 @@ pub(super) fn masked_multi_sgd_serial(
     let mut i = 0;
     while i < idxs.len() {
         let (j, first) = mask_run(idxs, i);
-        if j - i >= MASK_FILL_MIN {
+        let run = &idxs[i..j];
+        if run.len() >= MASK_FILL_MIN {
             for (kk, &(stream, _)) in zs.iter().enumerate() {
                 stream.fill(&mut zb[kk * BLOCK..(kk + 1) * BLOCK], offset + first);
             }
-            for &idx in &idxs[i..j] {
-                let th = &mut theta[idx as usize - base];
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
                 let jb = (idx as u64 - first) as usize;
-                for (kk, &(_, g)) in zs.iter().enumerate() {
-                    let z = zb[kk * BLOCK + jb];
-                    *th -= lr * (g * z + wd * *th);
-                }
-            }
+                let z = |kk: usize| zb[kk * BLOCK + jb];
+                multi_sgd1(&mut theta[idx as usize - base], zs, z, lr, wd)
+            });
         } else {
-            for &idx in &idxs[i..j] {
-                let th = &mut theta[idx as usize - base];
-                for &(stream, g) in zs {
-                    let z = stream.z(offset + idx as u64);
-                    *th -= lr * (g * z + wd * *th);
-                }
-            }
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
+                let z = |kk: usize| zs[kk].0.z(offset + idx as u64);
+                multi_sgd1(&mut theta[idx as usize - base], zs, z, lr, wd)
+            });
         }
         i = j;
     }
@@ -343,28 +633,23 @@ pub(super) fn masked_fzoo_serial(
     let mut i = 0;
     while i < idxs.len() {
         let (j, first) = mask_run(idxs, i);
-        if j - i >= MASK_FILL_MIN {
+        let run = &idxs[i..j];
+        if run.len() >= MASK_FILL_MIN {
             for (kk, &(stream, _)) in zs.iter().enumerate() {
                 stream.fill(&mut zb[kk * BLOCK..(kk + 1) * BLOCK], offset + first);
             }
-            for &idx in &idxs[i..j] {
-                let th = &mut theta[idx as usize - base];
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
                 let jb = (idx as u64 - first) as usize;
-                let mut g = 0.0f32;
-                for (kk, &(_, pg)) in zs.iter().enumerate() {
-                    g += pg * zb[kk * BLOCK + jb];
-                }
-                *th -= lr * (g / n_f + wd * *th);
-            }
+                let z = |kk: usize| zb[kk * BLOCK + jb];
+                fzoo1(&mut theta[idx as usize - base], zs, z, n_f, lr, wd)
+            });
         } else {
-            for &idx in &idxs[i..j] {
-                let th = &mut theta[idx as usize - base];
-                let mut g = 0.0f32;
-                for &(stream, pg) in zs {
-                    g += pg * stream.z(offset + idx as u64);
-                }
-                *th -= lr * (g / n_f + wd * *th);
-            }
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
+                let z = |kk: usize| zs[kk].0.z(offset + idx as u64);
+                fzoo1(&mut theta[idx as usize - base], zs, z, n_f, lr, wd)
+            });
         }
         i = j;
     }
@@ -384,146 +669,24 @@ pub(super) fn masked_multi_axpy_serial(
     let mut i = 0;
     while i < idxs.len() {
         let (j, first) = mask_run(idxs, i);
-        if j - i >= MASK_FILL_MIN {
+        let run = &idxs[i..j];
+        if run.len() >= MASK_FILL_MIN {
             for (kk, &(stream, _)) in zs.iter().enumerate() {
                 stream.fill(&mut zb[kk * BLOCK..(kk + 1) * BLOCK], offset + first);
             }
-            for &idx in &idxs[i..j] {
-                let th = &mut theta[idx as usize - base];
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
                 let jb = (idx as u64 - first) as usize;
-                for (kk, &(_, s)) in zs.iter().enumerate() {
-                    *th += s * zb[kk * BLOCK + jb];
-                }
-            }
+                let z = |kk: usize| zb[kk * BLOCK + jb];
+                multi_axpy1(&mut theta[idx as usize - base], zs, z)
+            });
         } else {
-            for &idx in &idxs[i..j] {
-                let th = &mut theta[idx as usize - base];
-                for &(stream, s) in zs {
-                    *th += s * stream.z(offset + idx as u64);
-                }
-            }
+            block_apply8!(run.len(), |r| {
+                let idx = run[r];
+                let z = |kk: usize| zs[kk].0.z(offset + idx as u64);
+                multi_axpy1(&mut theta[idx as usize - base], zs, z)
+            });
         }
         i = j;
-    }
-}
-
-/// Fused momentum update over a record batch:
-/// g = (Σᵢ gᵢ·zᵢ)/n + wd·θ;  m = μ·m + g;  θ −= lr·m
-#[allow(clippy::too_many_arguments)]
-pub(super) fn momentum_serial(
-    zs: &[(GaussianStream, f32)],
-    offset: u64,
-    theta: &mut [f32],
-    m: &mut [f32],
-    lr: f32,
-    wd: f32,
-    momentum: f32,
-    n_records: f32,
-) {
-    let k = zs.len();
-    let mut zb = vec![0.0f32; k * BLOCK];
-    let mut i = 0;
-    while i < theta.len() {
-        let n = BLOCK.min(theta.len() - i);
-        for (kk, &(stream, _)) in zs.iter().enumerate() {
-            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
-        }
-        for j in 0..n {
-            let th = &mut theta[i + j];
-            let mk = &mut m[i + j];
-            let mut g = 0.0f32;
-            for (kk, &(_, pg)) in zs.iter().enumerate() {
-                g += pg * zb[kk * BLOCK + j];
-            }
-            g = g / n_records + wd * *th;
-            *mk = momentum * *mk + g;
-            *th -= lr * *mk;
-        }
-        i += n;
-    }
-}
-
-/// Fused Adam update over a record batch (bias-corrected).
-pub(super) fn adam_serial(
-    zs: &[(GaussianStream, f32)],
-    offset: u64,
-    theta: &mut [f32],
-    m: &mut [f32],
-    v: &mut [f32],
-    p: AdamParams,
-) {
-    let k = zs.len();
-    let mut zb = vec![0.0f32; k * BLOCK];
-    // same value per coordinate in the seed loop; hoisted here
-    let bc1 = 1.0 - p.beta1.powf(p.t);
-    let bc2 = 1.0 - p.beta2.powf(p.t);
-    let mut i = 0;
-    while i < theta.len() {
-        let n = BLOCK.min(theta.len() - i);
-        for (kk, &(stream, _)) in zs.iter().enumerate() {
-            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
-        }
-        for j in 0..n {
-            let th = &mut theta[i + j];
-            let mk = &mut m[i + j];
-            let vk = &mut v[i + j];
-            let mut g = 0.0f32;
-            for (kk, &(_, pg)) in zs.iter().enumerate() {
-                g += pg * zb[kk * BLOCK + j];
-            }
-            g = g / p.n + p.wd * *th;
-            *mk = p.beta1 * *mk + (1.0 - p.beta1) * g;
-            *vk = p.beta2 * *vk + (1.0 - p.beta2) * g * g;
-            let mhat = *mk / bc1;
-            let vhat = *vk / bc2;
-            *th -= p.lr * mhat / (vhat.sqrt() + p.eps);
-        }
-        i += n;
-    }
-}
-
-/// m = β·m + (1−β)·(pgrad·z) (Adam-style) or m = β·m + pgrad·z.
-pub(super) fn ema_serial(
-    stream: GaussianStream,
-    offset: u64,
-    m: &mut [f32],
-    pgrad: f32,
-    beta: f32,
-    adam_style: bool,
-) {
-    let mut zb = [0.0f32; BLOCK];
-    let mut i = 0;
-    while i < m.len() {
-        let n = BLOCK.min(m.len() - i);
-        stream.fill(&mut zb[..n], offset + i as u64);
-        for (mk, &z) in m[i..i + n].iter_mut().zip(&zb[..n]) {
-            let g = pgrad * z;
-            *mk = if adam_style { beta * *mk + (1.0 - beta) * g } else { beta * *mk + g };
-        }
-        i += n;
-    }
-}
-
-/// out[jj] = base[jj] + scale · Σᵢ z((start+jj)·d_low + i)·v[i]
-/// (`start` = chunk offset in rows; each row's z-range is contiguous, so
-/// the row fills through the blocked path.)
-pub(super) fn project_rows_serial(
-    stream: GaussianStream,
-    d_low: usize,
-    v: &[f32],
-    base: &[f32],
-    scale: f32,
-    out: &mut [f32],
-    start: usize,
-) {
-    let mut zrow = vec![0.0f32; d_low];
-    for (jj, (o, &b)) in out.iter_mut().zip(base).enumerate() {
-        let row = (start + jj) as u64 * d_low as u64;
-        stream.fill(&mut zrow, row);
-        let mut acc = 0.0f32;
-        for (&zr, &vi) in zrow.iter().zip(v) {
-            acc += zr * vi;
-        }
-        *o = b + scale * acc;
     }
 }

@@ -365,9 +365,9 @@ mod tests {
         let p = store(&[8, 8]);
         // a duplicated tensor id could select the same coordinate twice
         let err = SparseMask::top_k(&p, &[0, 0], 4, Sensitivity::Magnitude).unwrap_err();
-        assert!(format!("{}", err).contains("more than once"), "{}", err);
+        assert!(err.to_string().contains("more than once"), "{}", err);
         let err = SparseMask::top_k(&p, &[2], 4, Sensitivity::Magnitude).unwrap_err();
-        assert!(format!("{}", err).contains("out of range"), "{}", err);
+        assert!(err.to_string().contains("out of range"), "{}", err);
     }
 
     #[test]

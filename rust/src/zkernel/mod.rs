@@ -18,8 +18,20 @@
 //!    the chunks processed by any number of threads with bit-identical
 //!    results: every coordinate's value and update arithmetic depend only
 //!    on its own index. [`ZEngine`] carves buffers into block-aligned
-//!    ranges and fans them out with `std::thread::scope`; thread count 1
-//!    and thread count N produce the same bits (covered by tests).
+//!    ranges and fans them out over a lazily-initialized, process-wide
+//!    **persistent worker pool** (`pool.rs`, internal): parked
+//!    workers are reused across dispatches instead of spawning threads
+//!    per kernel call, and the final chunk always runs on the calling
+//!    thread. Chunk boundaries and z-counter math do not depend on the
+//!    dispatcher, so thread count 1 and thread count N — and the pool
+//!    path versus the retained per-call `std::thread::scope` path
+//!    ([`ZEngine::with_threads_scoped`]) — produce the same bits
+//!    (covered by tests here and in `tests/properties.rs`).
+//!
+//! Within each chunk, the per-block inner loops are 8-wide manually
+//! unrolled (`block_apply8!` in `kernels.rs`): lanes are independent
+//! coordinates, so unrolling never reorders any coordinate's own
+//! arithmetic and bit-exactness is preserved by construction.
 //!
 //! The fused kernels (see [`ZEngine`]'s methods, bodies in `kernels.rs`):
 //!
@@ -60,6 +72,7 @@
 
 mod kernels;
 pub mod mask;
+mod pool;
 
 pub use mask::{Sensitivity, SparseMask};
 
@@ -86,6 +99,16 @@ pub fn default_threads() -> usize {
     })
 }
 
+/// How a multi-chunk dispatch reaches its worker threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dispatch {
+    /// Persistent process-wide worker pool; final chunk on the caller.
+    Pool,
+    /// Per-call `std::thread::scope` spawns — the pre-pool reference
+    /// path, kept for the pool-equivalence tests.
+    Scope,
+}
+
 /// The kernel engine: a thread budget plus the dispatch scaffolding. Copy,
 /// cheap, stateless — optimizers embed one and tests vary `threads` to
 /// prove bit-stability.
@@ -93,16 +116,19 @@ pub fn default_threads() -> usize {
 pub struct ZEngine {
     /// Maximum worker threads a kernel dispatch may fan out to.
     pub threads: usize,
+    /// Dispatch mechanism; never affects results, only wall-clock.
+    dispatch: Dispatch,
 }
 
 impl Default for ZEngine {
     fn default() -> ZEngine {
-        ZEngine { threads: default_threads() }
+        ZEngine::with_threads(default_threads())
     }
 }
 
 impl ZEngine {
-    /// Engine with an explicit thread budget (clamped to at least 1).
+    /// Engine with an explicit thread budget (clamped to at least 1),
+    /// dispatching over the persistent worker pool.
     ///
     /// Thread count never changes results — only wall-clock. The
     /// determinism tests run every kernel at 1/2/8 threads and assert
@@ -120,7 +146,37 @@ impl ZEngine {
     /// assert_eq!(a[123], 0.5 * stream.z(123));
     /// ```
     pub fn with_threads(threads: usize) -> ZEngine {
-        ZEngine { threads: threads.max(1) }
+        ZEngine { threads: threads.max(1), dispatch: Dispatch::Pool }
+    }
+
+    /// Engine that dispatches via per-call `std::thread::scope` spawns
+    /// instead of the persistent pool — the historical dispatch path.
+    ///
+    /// Kept so the equivalence tests (`tests/properties.rs`, the
+    /// `pool_vs_spawn` bench group) can pin the pool dispatch against the
+    /// pre-pool behavior bit for bit. Kernel arithmetic, chunk carving
+    /// and z-counter math are shared with the pool path, so the two
+    /// engines are interchangeable everywhere; this one just pays a
+    /// thread spawn + join per chunk per kernel call.
+    pub fn with_threads_scoped(threads: usize) -> ZEngine {
+        ZEngine { threads: threads.max(1), dispatch: Dispatch::Scope }
+    }
+
+    /// Fan a dispatch's chunk jobs out according to the engine's dispatch
+    /// mode. Both modes run every job to completion before returning and
+    /// produce identical bits — each job is pure in its own chunk; the
+    /// dispatcher only decides which OS thread executes it.
+    fn execute<'s>(&self, jobs: Vec<pool::Job<'s>>) {
+        match self.dispatch {
+            Dispatch::Pool => pool::run_jobs(jobs),
+            Dispatch::Scope => {
+                std::thread::scope(|sc| {
+                    for job in jobs {
+                        sc.spawn(job);
+                    }
+                });
+            }
+        }
     }
 
     /// Block-aligned contiguous ranges covering [0, len), at most
@@ -135,8 +191,8 @@ impl ZEngine {
         if cap <= 1 || len == 0 {
             return vec![(0, len)];
         }
-        let blocks = (len + BLOCK - 1) / BLOCK;
-        let per = ((blocks + cap - 1) / cap) * BLOCK;
+        let blocks = len.div_ceil(BLOCK);
+        let per = blocks.div_ceil(cap) * BLOCK;
         let mut out = Vec::with_capacity(cap);
         let mut start = 0;
         while start < len {
@@ -161,15 +217,15 @@ impl ZEngine {
         }
         let fr = &f;
         let mut rest = data;
-        std::thread::scope(|sc| {
-            for &(start, end) in &ranges {
-                // mem::take keeps the carved chunk at the outer lifetime
-                // (a plain reborrow would not outlive the loop body)
-                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
-                rest = tail;
-                sc.spawn(move || fr(start, chunk));
-            }
-        });
+        let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(ranges.len());
+        for &(start, end) in &ranges {
+            // mem::take keeps the carved chunk at the outer lifetime
+            // (a plain reborrow would not outlive the loop body)
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+            rest = tail;
+            jobs.push(Box::new(move || fr(start, chunk)));
+        }
+        self.execute(jobs);
     }
 
     /// As `run`, but with a read-only source carved in lockstep
@@ -186,14 +242,14 @@ impl ZEngine {
         }
         let fr = &f;
         let mut rest = dst;
-        std::thread::scope(|sc| {
-            for &(start, end) in &ranges {
-                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
-                rest = tail;
-                let s = &src[start..end];
-                sc.spawn(move || fr(start, s, chunk));
-            }
-        });
+        let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(ranges.len());
+        for &(start, end) in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+            rest = tail;
+            let s = &src[start..end];
+            jobs.push(Box::new(move || fr(start, s, chunk)));
+        }
+        self.execute(jobs);
     }
 
     /// As `run`, over two mutable buffers carved in lockstep (θ + moment).
@@ -210,15 +266,15 @@ impl ZEngine {
         let fr = &f;
         let mut rest_a = a;
         let mut rest_b = b;
-        std::thread::scope(|sc| {
-            for &(start, end) in &ranges {
-                let (ca, ta) = std::mem::take(&mut rest_a).split_at_mut(end - start);
-                let (cb, tb) = std::mem::take(&mut rest_b).split_at_mut(end - start);
-                rest_a = ta;
-                rest_b = tb;
-                sc.spawn(move || fr(start, ca, cb));
-            }
-        });
+        let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(ranges.len());
+        for &(start, end) in &ranges {
+            let (ca, ta) = std::mem::take(&mut rest_a).split_at_mut(end - start);
+            let (cb, tb) = std::mem::take(&mut rest_b).split_at_mut(end - start);
+            rest_a = ta;
+            rest_b = tb;
+            jobs.push(Box::new(move || fr(start, ca, cb)));
+        }
+        self.execute(jobs);
     }
 
     /// As `run`, over three mutable buffers (θ + first + second moment).
@@ -237,17 +293,17 @@ impl ZEngine {
         let mut rest_a = a;
         let mut rest_b = b;
         let mut rest_c = c;
-        std::thread::scope(|sc| {
-            for &(start, end) in &ranges {
-                let (ca, ta) = std::mem::take(&mut rest_a).split_at_mut(end - start);
-                let (cb, tb) = std::mem::take(&mut rest_b).split_at_mut(end - start);
-                let (cc, tc) = std::mem::take(&mut rest_c).split_at_mut(end - start);
-                rest_a = ta;
-                rest_b = tb;
-                rest_c = tc;
-                sc.spawn(move || fr(start, ca, cb, cc));
-            }
-        });
+        let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(ranges.len());
+        for &(start, end) in &ranges {
+            let (ca, ta) = std::mem::take(&mut rest_a).split_at_mut(end - start);
+            let (cb, tb) = std::mem::take(&mut rest_b).split_at_mut(end - start);
+            let (cc, tc) = std::mem::take(&mut rest_c).split_at_mut(end - start);
+            rest_a = ta;
+            rest_b = tb;
+            rest_c = tc;
+            jobs.push(Box::new(move || fr(start, ca, cb, cc)));
+        }
+        self.execute(jobs);
     }
 
     /// As `run`, but over a masked index list: the *list* is chunked (not
@@ -271,21 +327,21 @@ impl ZEngine {
         let fr = &f;
         let mut rest = theta;
         let mut consumed = 0usize;
-        std::thread::scope(|sc| {
-            for (r, &(a, b)) in bounds.iter().enumerate() {
-                let end_coord = if r + 1 == bounds.len() {
-                    consumed + rest.len()
-                } else {
-                    idxs[b] as usize
-                };
-                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end_coord - consumed);
-                rest = tail;
-                let ci = &idxs[a..b];
-                let base = consumed;
-                consumed = end_coord;
-                sc.spawn(move || fr(ci, base, chunk));
-            }
-        });
+        let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(bounds.len());
+        for (r, &(a, b)) in bounds.iter().enumerate() {
+            let end_coord = if r + 1 == bounds.len() {
+                consumed + rest.len()
+            } else {
+                idxs[b] as usize
+            };
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end_coord - consumed);
+            rest = tail;
+            let ci = &idxs[a..b];
+            let base = consumed;
+            consumed = end_coord;
+            jobs.push(Box::new(move || fr(ci, base, chunk)));
+        }
+        self.execute(jobs);
     }
 
     /// As `run_masked`, with a read-only source carved in lockstep
@@ -312,22 +368,22 @@ impl ZEngine {
         let fr = &f;
         let mut rest = dst;
         let mut consumed = 0usize;
-        std::thread::scope(|sc| {
-            for (r, &(a, b)) in bounds.iter().enumerate() {
-                let end_coord = if r + 1 == bounds.len() {
-                    consumed + rest.len()
-                } else {
-                    idxs[b] as usize
-                };
-                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end_coord - consumed);
-                rest = tail;
-                let s = &src[consumed..end_coord];
-                let ci = &idxs[a..b];
-                let base = consumed;
-                consumed = end_coord;
-                sc.spawn(move || fr(ci, base, s, chunk));
-            }
-        });
+        let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(bounds.len());
+        for (r, &(a, b)) in bounds.iter().enumerate() {
+            let end_coord = if r + 1 == bounds.len() {
+                consumed + rest.len()
+            } else {
+                idxs[b] as usize
+            };
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end_coord - consumed);
+            rest = tail;
+            let s = &src[consumed..end_coord];
+            let ci = &idxs[a..b];
+            let base = consumed;
+            consumed = end_coord;
+            jobs.push(Box::new(move || fr(ci, base, s, chunk)));
+        }
+        self.execute(jobs);
     }
 
     // ---------------- public kernels (serial bodies in kernels.rs) -------
@@ -573,6 +629,7 @@ impl ZEngine {
 
     /// Masked [`ZEngine::sgd_update`]: θ[idx] −= lr · (g · z(offset + idx)
     /// + wd · θ[idx]) over the masked coordinates only.
+    #[allow(clippy::too_many_arguments)]
     pub fn sgd_update_masked(
         &self,
         stream: GaussianStream,
@@ -666,7 +723,7 @@ fn mask_bounds(n: usize, threads: usize, min_per_thread: usize) -> Vec<(usize, u
     if cap <= 1 {
         return vec![(0, n)];
     }
-    let per = (n + cap - 1) / cap;
+    let per = n.div_ceil(cap);
     let mut out = Vec::with_capacity(cap);
     let mut a = 0;
     while a < n {

@@ -1,0 +1,235 @@
+//! Persistent worker pool behind every parallel kernel dispatch.
+//!
+//! The scope-based dispatcher this replaces paid one `std::thread::spawn`
+//! plus one join per chunk on EVERY kernel call — four-plus dispatches per
+//! MeZO step, tens of microseconds of pure overhead each at small-to-mid
+//! tensor sizes. This module keeps a process-wide set of parked workers
+//! that every [`ZEngine`](super::ZEngine) dispatch reuses:
+//!
+//! * **Lazy & growable.** No threads exist until a dispatch actually fans
+//!   out (single-chunk dispatches run inline and never touch the pool).
+//!   The pool grows to the peak *aggregate* in-flight helper-job count —
+//!   summed across concurrent dispatches, so simultaneous engine users
+//!   stay as parallel as the per-call spawn path they replaced — and
+//!   never shrinks; workers park on a condvar while idle.
+//! * **Final chunk on the caller.** A dispatch with `k` chunks enqueues
+//!   `k − 1` jobs and runs the last chunk on the calling thread — one
+//!   chunk of every dispatch is always handoff-free, and a pool of `N`
+//!   workers serves engines with budgets up to `N + 1` threads.
+//! * **Scoped borrows without scoped threads.** Jobs borrow the caller's
+//!   stack frame (chunk slices, the kernel closure). [`run_jobs`] erases
+//!   that lifetime to enqueue and re-establishes it with a completion
+//!   latch: it never returns — not even on panic — before every job it
+//!   enqueued has finished running.
+//! * **Panic-transparent.** A panicking job is caught on the worker (which
+//!   keeps the worker alive), recorded in the latch, and re-raised on the
+//!   calling thread after all jobs complete — the same observable behavior
+//!   as a panicking `std::thread::scope` spawn.
+//!
+//! Determinism is untouched by construction: the pool only schedules the
+//! jobs the engine carved; chunk boundaries and z-counter math are decided
+//! before anything is enqueued, and every coordinate's arithmetic depends
+//! only on its own global index. The scope path is retained as
+//! [`ZEngine::with_threads_scoped`](super::ZEngine::with_threads_scoped)
+//! and pinned bit-identical to the pool path in `tests/properties.rs`.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One chunk's worth of kernel work, borrowing the dispatch's stack frame.
+pub(super) type Job<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// A job as stored in the process-wide queue. The borrow lifetime is
+/// erased on submission and re-guaranteed by the completion latch (see
+/// the SAFETY comment in [`run_jobs`]).
+type QueuedJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// A panic payload carried from a worker back to the dispatching thread.
+type PanicPayload = Box<dyn std::any::Any + Send>;
+
+struct Pool {
+    queue: Mutex<VecDeque<QueuedJob>>,
+    /// Signaled when jobs are enqueued; idle workers park here.
+    available: Condvar,
+    /// Workers spawned so far (monotonic; tracks peak in-flight demand).
+    workers: AtomicUsize,
+    /// Helper jobs currently enqueued or running, across ALL concurrent
+    /// dispatches. Sizing the pool to this aggregate — not to one
+    /// dispatch's chunk count — keeps concurrent engine users as
+    /// parallel as the per-call spawn path they replaced.
+    inflight: AtomicUsize,
+    /// Serializes growth so concurrent dispatches don't over-spawn.
+    grow: Mutex<()>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        queue: Mutex::new(VecDeque::new()),
+        available: Condvar::new(),
+        workers: AtomicUsize::new(0),
+        inflight: AtomicUsize::new(0),
+        grow: Mutex::new(()),
+    })
+}
+
+/// Number of pool workers spawned so far (test hook). Zero until the
+/// first multi-chunk dispatch — the pool is lazy.
+#[cfg(test)]
+pub(super) fn spawned_workers() -> usize {
+    POOL.get().map_or(0, |p| p.workers.load(Ordering::Relaxed))
+}
+
+impl Pool {
+    /// Grow toward `want` parked workers; returns the live worker count,
+    /// which may be less than `want` if the OS refuses new threads (a
+    /// transient ulimit/cgroup cap). Never panics: a spawn failure must
+    /// not poison `grow` and take every future dispatch down with it —
+    /// the pool serves with what it has and retries growth next time.
+    fn ensure_workers(&'static self, want: usize) -> usize {
+        let have = self.workers.load(Ordering::Relaxed);
+        if have >= want {
+            return have;
+        }
+        let _g = match self.grow.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let mut have = self.workers.load(Ordering::Relaxed);
+        while have < want {
+            let spawned = std::thread::Builder::new()
+                .name(format!("mezo-zkernel-{}", have))
+                .spawn(move || self.worker_loop());
+            match spawned {
+                Ok(_) => have += 1,
+                Err(_) => break, // thread cap hit: serve with what we have
+            }
+        }
+        self.workers.store(have, Ordering::Relaxed);
+        have
+    }
+
+    /// Park on the condvar until a job arrives; run it; repeat forever.
+    /// Jobs arrive pre-wrapped in `catch_unwind`, so a kernel panic can
+    /// never kill a worker.
+    fn worker_loop(&'static self) {
+        loop {
+            let job = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(job) = q.pop_front() {
+                        break job;
+                    }
+                    q = self.available.wait(q).unwrap();
+                }
+            };
+            job();
+        }
+    }
+}
+
+/// Completion latch for one dispatch: counts outstanding jobs down and
+/// carries the first worker panic back to the caller.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<PanicPayload>,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { remaining: jobs, panic: None }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panic: Option<PanicPayload>) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        if s.panic.is_none() {
+            s.panic = panic;
+        }
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every job has completed; returns the first panic.
+    fn wait(&self) -> Option<PanicPayload> {
+        let mut s = self.state.lock().unwrap();
+        while s.remaining > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        s.panic.take()
+    }
+}
+
+/// Run every job to completion: the FINAL job on the calling thread, the
+/// rest on pool workers. Blocks until all jobs (including queued ones)
+/// have finished; a panic in any job — worker or caller — is re-raised
+/// here after completion, exactly like a panicking scoped spawn.
+///
+/// Zero jobs is a no-op; one job runs inline without touching the pool.
+pub(super) fn run_jobs(mut jobs: Vec<Job<'_>>) {
+    let Some(last) = jobs.pop() else { return };
+    if jobs.is_empty() {
+        last();
+        return;
+    }
+    let p = pool();
+    // Size to the aggregate in-flight helper demand, not just this
+    // dispatch's chunk count: with two callers each fanning out 7 helper
+    // jobs concurrently, the pool grows to 14 workers, matching the
+    // parallelism the per-call spawn path used to provide.
+    let want = p.inflight.fetch_add(jobs.len(), Ordering::Relaxed) + jobs.len();
+    if p.ensure_workers(want) == 0 {
+        // The OS refused even one worker: run every chunk inline. Only
+        // scheduling changes — chunk boundaries and z-counters were fixed
+        // before dispatch, so the bits are identical.
+        p.inflight.fetch_sub(jobs.len(), Ordering::Relaxed);
+        for job in jobs {
+            job();
+        }
+        last();
+        return;
+    }
+    let latch = Arc::new(Latch::new(jobs.len()));
+    {
+        let mut q = p.queue.lock().unwrap();
+        for job in jobs {
+            // SAFETY: the latch guarantees `run_jobs` does not return —
+            // on any path, including panics — until this job has finished
+            // executing, so every borrow inside the job (chunk slices of
+            // the caller's buffers, the kernel closure) strictly outlives
+            // its use. The transmute erases only the lifetime parameter;
+            // the trait-object layout is identical.
+            let job: QueuedJob = unsafe { std::mem::transmute::<Job<'_>, QueuedJob>(job) };
+            let latch = Arc::clone(&latch);
+            q.push_back(Box::new(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(job));
+                p.inflight.fetch_sub(1, Ordering::Relaxed);
+                latch.complete(outcome.err());
+            }));
+        }
+        p.available.notify_all();
+    }
+    // The final chunk always runs here — no handoff for it. Even if it
+    // panics, the workers must be waited out first: they may still hold
+    // borrows into the caller's frame.
+    let mine = catch_unwind(AssertUnwindSafe(last));
+    let worker_panic = latch.wait();
+    if let Err(payload) = mine {
+        resume_unwind(payload);
+    }
+    if let Some(payload) = worker_panic {
+        resume_unwind(payload);
+    }
+}

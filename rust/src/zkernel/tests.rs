@@ -523,6 +523,124 @@ fn ranges_are_block_aligned_and_cover() {
     }
 }
 
+// ---------------- persistent worker pool lifecycle ----------------------
+
+#[test]
+fn pool_and_scope_dispatch_are_bit_identical() {
+    // the tentpole pin at unit level (the full kernel matrix lives in
+    // tests/properties.rs): pool dispatch vs the retained scope path
+    let stream = GaussianStream::new(99);
+    let (lr, g, wd, s) = (1e-2f32, 0.37f32, 1e-4f32, 1e-3f32);
+    for &len in &[BLOCK + 3, 70_003, 200_000] {
+        let init = randomized(len, 33);
+        let idxs = random_mask(len, 0.2, 34);
+        for &t in &THREADS {
+            let pool_eng = ZEngine::with_threads(t);
+            let scope_eng = ZEngine::with_threads_scoped(t);
+            let mut a = init.clone();
+            pool_eng.sgd_update(stream, 7, &mut a, lr, g, wd);
+            let mut b = init.clone();
+            scope_eng.sgd_update(stream, 7, &mut b, lr, g, wd);
+            assert_bits_eq(&a, &b, &format!("sgd pool vs scope len={} t={}", len, t));
+            let mut a = init.clone();
+            pool_eng.axpy_z_masked(stream, 7, &idxs, &mut a, s);
+            let mut b = init.clone();
+            scope_eng.axpy_z_masked(stream, 7, &idxs, &mut b, s);
+            assert_bits_eq(&a, &b, &format!("masked axpy pool vs scope len={} t={}", len, t));
+        }
+    }
+}
+
+#[test]
+fn engine_is_deterministic_when_used_from_concurrent_os_threads() {
+    // several OS threads dispatching on the shared pool at once: no
+    // deadlock, and every thread gets the single-thread bits
+    let stream = GaussianStream::new(777);
+    let len = 150_000;
+    let init = randomized(len, 31);
+    let (lr, g, wd) = (1e-3f32, 0.21f32, 1e-5f32);
+    let mut want = init.clone();
+    ZEngine::with_threads(1).sgd_update(stream, 3, &mut want, lr, g, wd);
+    std::thread::scope(|sc| {
+        for _ in 0..4 {
+            sc.spawn(|| {
+                for &t in &[2usize, 4, 8] {
+                    let mut theta = init.clone();
+                    ZEngine::with_threads(t).sgd_update(stream, 3, &mut theta, lr, g, wd);
+                    assert_bits_eq(&theta, &want, &format!("concurrent t={}", t));
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn pool_grows_with_demand_and_still_serves_smaller_budgets() {
+    let stream = GaussianStream::new(555);
+    let len = 200_000; // >= 8 * PAR_MIN coordinates -> 8 chunks at t=8
+    let init = randomized(len, 35);
+    let mut want = init.clone();
+    ZEngine::with_threads(1).axpy_z(stream, 0, &mut want, 1e-3);
+    let mut big = init.clone();
+    ZEngine::with_threads(8).axpy_z(stream, 0, &mut big, 1e-3);
+    assert_bits_eq(&big, &want, "t=8");
+    // 8 chunks -> 7 helper jobs (the 8th chunk ran on this thread); the
+    // pool never shrinks, so this holds regardless of test ordering
+    assert!(
+        pool::spawned_workers() >= 7,
+        "pool should have grown to >= 7 workers, have {}",
+        pool::spawned_workers()
+    );
+    // a smaller budget after growth still chunks by ITS budget and
+    // produces the same bits
+    let mut small = init.clone();
+    ZEngine::with_threads(2).axpy_z(stream, 0, &mut small, 1e-3);
+    assert_bits_eq(&small, &want, "t=2 after growth");
+}
+
+#[test]
+fn mezo_threads_is_respected_after_pool_init() {
+    // grow the pool well past the default budget first
+    let mut buf = vec![0.0f32; 200_000];
+    ZEngine::with_threads(8).fill_z(GaussianStream::new(3), 0, &mut buf);
+    // the env knob still decides ZEngine::default() — pool growth must
+    // never leak into the thread budget (verify.sh runs this whole suite
+    // under MEZO_THREADS=1/2/8, which is when the assertion bites)
+    if let Some(n) =
+        std::env::var("MEZO_THREADS").ok().and_then(|s| s.parse::<usize>().ok()).filter(|&n| n > 0)
+    {
+        assert_eq!(default_threads(), n);
+        assert_eq!(ZEngine::default().threads, n);
+    }
+    // and the default engine's bits match the explicit single-thread bits
+    let stream = GaussianStream::new(888);
+    let init = randomized(150_000, 32);
+    let mut want = init.clone();
+    ZEngine::with_threads(1).axpy_z(stream, 5, &mut want, 2e-3);
+    let mut got = init.clone();
+    ZEngine::default().axpy_z(stream, 5, &mut got, 2e-3);
+    assert_bits_eq(&got, &want, "default engine after pool growth");
+}
+
+#[test]
+fn pool_propagates_worker_panics_and_stays_usable() {
+    let jobs: Vec<pool::Job<'static>> = vec![
+        Box::new(|| panic!("boom-worker")),
+        Box::new(|| {}), // final job runs on the calling thread
+    ];
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool::run_jobs(jobs)));
+    assert!(caught.is_err(), "worker panic must resurface on the caller");
+    // the worker caught the panic pool-side and parked again; the pool
+    // keeps serving dispatches with correct bits
+    let stream = GaussianStream::new(4242);
+    let init = randomized(200_000, 30);
+    let mut want = init.clone();
+    ZEngine::with_threads(1).axpy_z(stream, 0, &mut want, 1e-3);
+    let mut got = init.clone();
+    ZEngine::with_threads(8).axpy_z(stream, 0, &mut got, 1e-3);
+    assert_bits_eq(&got, &want, "pool dispatch after a worker panic");
+}
+
 #[test]
 fn default_engine_is_sane() {
     let eng = ZEngine::default();

@@ -1,13 +1,37 @@
 #!/usr/bin/env bash
-# Tier-1 verify (ROADMAP.md): build + tests + docs gate, then the kernel
-# bit-identity tests re-run under an explicit thread-count matrix via the
-# engine's MEZO_THREADS knob. The in-test matrix (ZEngine::with_threads at
-# 1/2/8) covers explicitly-constructed engines; this loop additionally
-# pins every ZEngine::default() path (optimizers, replay, staging) at each
-# process-default thread count, so a determinism regression fails the gate
-# rather than only the default configuration.
+# Tier-1 verify (ROADMAP.md): style gates + build + tests + docs gate,
+# then the kernel bit-identity tests re-run under an explicit thread-count
+# matrix via the engine's MEZO_THREADS knob. The in-test matrix
+# (ZEngine::with_threads at 1/2/8) covers explicitly-constructed engines;
+# this loop additionally pins every ZEngine::default() path (optimizers,
+# replay, staging) at each process-default thread count, so a determinism
+# regression fails the gate rather than only the default configuration.
+#
+# CI (.github/workflows/ci.yml) runs THIS script — local verify and CI
+# stay one script. The fmt/clippy gates run first so style failures fail
+# fast, are hard failures wherever the components exist, and skip with a
+# notice on the bare offline cargo image, which ships neither. The CI
+# verify job sets MEZO_SKIP_LINT=1 because its dedicated lint job is the
+# one clippy/fmt run — no duplicated compile.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [ "${MEZO_SKIP_LINT:-0}" = "1" ]; then
+    echo "verify: MEZO_SKIP_LINT=1, fmt/clippy enforced elsewhere"
+else
+    # root package only: the vendored workspace stubs (vendor/anyhow,
+    # vendor/xla-stub) mirror upstream layout and are not fmt-gated
+    if cargo fmt --version >/dev/null 2>&1; then
+        cargo fmt -- --check
+    else
+        echo "verify: rustfmt unavailable, skipping format gate"
+    fi
+    if cargo clippy --version >/dev/null 2>&1; then
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "verify: clippy unavailable, skipping lint gate"
+    fi
+fi
 
 cargo build --release
 cargo test -q

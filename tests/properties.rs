@@ -636,6 +636,285 @@ fn prop_sparse_trajectory_replays_bitwise_from_seeds_and_digest() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Persistent worker-pool dispatch (ISSUE 4). The pool path must be a pure
+// scheduling change: every dense and masked kernel, and every optimizer
+// trajectory built on them, produces bit-identical results on the pool
+// dispatcher (ZEngine::with_threads) and the retained per-call
+// std::thread::scope dispatcher (ZEngine::with_threads_scoped), at
+// thread counts 1/2/8.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_pool_dispatch_is_bit_identical_to_scope_dispatch_for_every_kernel() {
+    use mezo::zkernel::{AdamParams, ZEngine};
+
+    const KERNELS: [&str; 17] = [
+        "fill_z",
+        "axpy_z",
+        "perturb_into",
+        "sgd_update",
+        "multi_sgd_update",
+        "fzoo_update",
+        "multi_axpy_z",
+        "momentum_update",
+        "adam_update",
+        "ema_z",
+        "project_rows",
+        "axpy_z_masked",
+        "perturb_into_masked",
+        "sgd_update_masked",
+        "multi_sgd_update_masked",
+        "fzoo_update_masked",
+        "multi_axpy_z_masked",
+    ];
+
+    /// Run one kernel on the given engine; returns every output buffer.
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        kernel: &str,
+        eng: &ZEngine,
+        init: &[f32],
+        aux: &[f32],
+        aux2: &[f32],
+        idxs: &[u32],
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+    ) -> Vec<Vec<f32>> {
+        let (stream, g) = zs[0];
+        let (lr, wd) = (1e-2f32, 1e-4f32);
+        let mut theta = init.to_vec();
+        match kernel {
+            "fill_z" => {
+                let mut out = vec![0.0; init.len()];
+                eng.fill_z(stream, offset, &mut out);
+                vec![out]
+            }
+            "axpy_z" => {
+                eng.axpy_z(stream, offset, &mut theta, g);
+                vec![theta]
+            }
+            "perturb_into" => {
+                let mut out = vec![0.0; init.len()];
+                eng.perturb_into(stream, offset, init, g, &mut out);
+                vec![out]
+            }
+            "sgd_update" => {
+                eng.sgd_update(stream, offset, &mut theta, lr, g, wd);
+                vec![theta]
+            }
+            "multi_sgd_update" => {
+                eng.multi_sgd_update(zs, offset, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "fzoo_update" => {
+                eng.fzoo_update(zs, offset, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "multi_axpy_z" => {
+                eng.multi_axpy_z(zs, offset, &mut theta);
+                vec![theta]
+            }
+            "momentum_update" => {
+                let mut m = aux.to_vec();
+                eng.momentum_update(zs, offset, &mut theta, &mut m, lr, wd, 0.9, zs.len() as f32);
+                vec![theta, m]
+            }
+            "adam_update" => {
+                let mut m = aux.to_vec();
+                let mut v = aux2.to_vec();
+                let p = AdamParams {
+                    lr,
+                    wd,
+                    beta1: 0.9,
+                    beta2: 0.999,
+                    eps: 1e-8,
+                    t: 3.0,
+                    n: zs.len() as f32,
+                };
+                eng.adam_update(zs, offset, &mut theta, &mut m, &mut v, p);
+                vec![theta, m, v]
+            }
+            "ema_z" => {
+                let mut m = aux.to_vec();
+                eng.ema_z(stream, offset, &mut m, g, 0.9, true);
+                vec![m]
+            }
+            "project_rows" => {
+                let d_low = 48usize;
+                let mut out = vec![0.0; init.len()];
+                eng.project_rows(stream, d_low, &aux[..d_low], init, 0.125, &mut out);
+                vec![out]
+            }
+            "axpy_z_masked" => {
+                eng.axpy_z_masked(stream, offset, idxs, &mut theta, g);
+                vec![theta]
+            }
+            "perturb_into_masked" => {
+                let mut out = init.to_vec();
+                eng.perturb_into_masked(stream, offset, idxs, init, g, &mut out);
+                vec![out]
+            }
+            "sgd_update_masked" => {
+                eng.sgd_update_masked(stream, offset, idxs, &mut theta, lr, g, wd);
+                vec![theta]
+            }
+            "multi_sgd_update_masked" => {
+                eng.multi_sgd_update_masked(zs, offset, idxs, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "fzoo_update_masked" => {
+                eng.fzoo_update_masked(zs, offset, idxs, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "multi_axpy_z_masked" => {
+                eng.multi_axpy_z_masked(zs, offset, idxs, &mut theta);
+                vec![theta]
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    forall(
+        8,
+        36,
+        |rng| {
+            let len = match rng.below(3) {
+                0 => rng.below(300) + 60,      // sub-block to small
+                1 => 3 * 256 + rng.below(7),   // several blocks, unaligned
+                _ => 70_000 + rng.below(7),    // threads actually fan out
+            };
+            (len, rng.next_u64(), rng.below(500) as u64, rng.below(3) + 1)
+        },
+        |&(len, seed, offset, n_seeds)| {
+            let mut rng = Pcg::new(seed ^ 0x44);
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let aux: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let aux2: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 0.5).abs()).collect();
+            let idxs: Vec<u32> = (0..len as u32).filter(|_| rng.next_f64() < 0.2).collect();
+            let zs: Vec<(GaussianStream, f32)> = (0..n_seeds)
+                .map(|k| (GaussianStream::new(seed ^ (0xB0 + k as u64)), 0.35 - 0.3 * k as f32))
+                .collect();
+            for kernel in KERNELS {
+                for threads in [1usize, 2, 8] {
+                    let pool_eng = ZEngine::with_threads(threads);
+                    let scope_eng = ZEngine::with_threads_scoped(threads);
+                    let pool = run(kernel, &pool_eng, &init, &aux, &aux2, &idxs, &zs, offset);
+                    let scope = run(kernel, &scope_eng, &init, &aux, &aux2, &idxs, &zs, offset);
+                    for (bi, (pb, sb)) in pool.iter().zip(&scope).enumerate() {
+                        for (j, (a, b)) in pb.iter().zip(sb).enumerate() {
+                            if a.to_bits() != b.to_bits() {
+                                return Err(format!(
+                                    "{} t={} len={} buf {} coord {}: pool {} vs scope {}",
+                                    kernel, threads, len, bi, j, a, b
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pool_optimizer_runs_match_scope_runs_and_replay_bitwise() {
+    // satellite: pool-path trajectories replay bitwise against pre-pool
+    // (scope-dispatched) seed logs — the run, its history, and every
+    // replay flavor of the log are dispatch-invariant
+    use mezo::optim::fzoo::{Fzoo, FzooConfig};
+    use mezo::optim::mezo::{MezoConfig, MezoSgd};
+    use mezo::zkernel::ZEngine;
+
+    fn quad(p: &ParamStore) -> f32 {
+        p.data.iter().flatten().map(|&x| (x - 0.7) * (x - 0.7)).sum()
+    }
+
+    forall(
+        8,
+        37,
+        |rng| {
+            (
+                rng.next_u64(),
+                rng.below(400) + 50,
+                rng.below(400) + 50,
+                rng.below(2) == 0, // fzoo or mezo
+                rng.below(3) + 1,  // seeds per step
+            )
+        },
+        |&(master, d1, d2, use_fzoo, n)| {
+            let specs = vec![
+                TensorDesc { name: "a".into(), shape: vec![d1], dtype: "f32".into() },
+                TensorDesc { name: "b".into(), shape: vec![d2], dtype: "f32".into() },
+            ];
+            let mk = || {
+                let mut p = ParamStore::from_specs(specs.clone());
+                p.init(master);
+                p
+            };
+            let run_with = |engine: ZEngine| -> (Vec<StepRecord>, Vec<Vec<f32>>) {
+                let mut p = mk();
+                if use_fzoo {
+                    let cfg = FzooConfig { lr: 1e-2, eps: 1e-3, n, ..Default::default() };
+                    let mut opt = Fzoo::new(cfg, vec![0, 1], master ^ 0x77);
+                    opt.engine = engine;
+                    for _ in 0..6 {
+                        opt.step(&mut p, |p| Ok(quad(p))).unwrap();
+                    }
+                    (opt.history.clone(), p.data.clone())
+                } else {
+                    let cfg = MezoConfig { lr: 1e-2, eps: 1e-3, n, ..Default::default() };
+                    let mut opt = MezoSgd::new(cfg, vec![0, 1], master ^ 0x77);
+                    opt.engine = engine;
+                    for _ in 0..6 {
+                        opt.step(&mut p, |p| Ok(quad(p))).unwrap();
+                    }
+                    (opt.history.clone(), p.data.clone())
+                }
+            };
+            // "pre-pool" run: the retained scope dispatch path
+            let (scope_hist, scope_data) = run_with(ZEngine::with_threads_scoped(4));
+            let (pool_hist, pool_data) = run_with(ZEngine::with_threads(4));
+            ensure(scope_hist.len() == pool_hist.len(), "history length diverged")?;
+            for (a, b) in scope_hist.iter().zip(&pool_hist) {
+                ensure(a.seed == b.seed, "seed diverged")?;
+                ensure(a.pgrad.to_bits() == b.pgrad.to_bits(), "pgrad diverged")?;
+                ensure(a.lr.to_bits() == b.lr.to_bits(), "lr diverged")?;
+            }
+            for (x, y) in scope_data.iter().flatten().zip(pool_data.iter().flatten()) {
+                ensure(x.to_bits() == y.to_bits(), "trained params diverged")?;
+            }
+            // the pre-pool seed log replays bitwise on the pool path, at
+            // any thread count, sequentially and seed-batched
+            let names = vec!["a".to_string(), "b".to_string()];
+            let traj = Trajectory::from_run(names, &scope_hist);
+            let mut reference = mk();
+            traj.replay_with(&ZEngine::with_threads_scoped(4), &mut reference);
+            for threads in [1usize, 2, 8] {
+                let eng = ZEngine::with_threads(threads);
+                let mut seq = mk();
+                traj.replay_with(&eng, &mut seq);
+                for (x, y) in seq.data.iter().flatten().zip(reference.data.iter().flatten()) {
+                    ensure(
+                        x.to_bits() == y.to_bits(),
+                        format!("t={}: pool replay diverged from scope replay", threads),
+                    )?;
+                }
+                let mut bat = mk();
+                traj.replay_batched_with(&eng, &mut bat, n).map_err(|e| e.to_string())?;
+                for (x, y) in bat.data.iter().flatten().zip(seq.data.iter().flatten()) {
+                    ensure(
+                        x.to_bits() == y.to_bits(),
+                        format!("t={}: pool batched replay diverged", threads),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_fzoo_n1_without_variance_norm_is_the_one_sided_spsa_update() {
     // ISSUE 2 acceptance: with a single seed and variance normalization
