@@ -14,8 +14,11 @@
 //! `fzoo_vs_mezo_bench`); a third sweeps sparse SensZOQ mask densities
 //! {1%, 10%, 100%} against the dense composite (`mask_density_bench`);
 //! a fourth pins the persistent worker pool against per-call
-//! `std::thread::scope` spawns (`pool_vs_spawn_bench`). Results land in
-//! BENCH_zkernel.json so the perf trajectory is tracked across PRs.
+//! `std::thread::scope` spawns (`pool_vs_spawn_bench`); a fifth measures
+//! shard-parallel replay and stepping at shard counts 1/2/4/8
+//! (`shard_scaling_bench` — per-shard critical path, scatter/gather
+//! overhead). Results land in BENCH_zkernel.json so the perf trajectory
+//! is tracked across PRs.
 //!
 //! `MEZO_BENCH_QUICK=1` switches every group to a reduced size/rep grid —
 //! the CI bench-smoke mode, which records the trajectory artifact per PR
@@ -340,11 +343,140 @@ fn pool_vs_spawn_bench() -> Vec<Json> {
     out
 }
 
+/// Sharded replay + step scaling: a K-way ShardPlan turns one replay or
+/// perturb+update pass into K independent shard-local passes that K
+/// workers could own. Measured per (d, shards, threads): dense replay vs
+/// the full in-process sharded replay (all K shards — the overhead view:
+/// the same arithmetic routed through K× more dispatches), the MAX
+/// per-shard time (the critical path a K-worker cluster would see — the
+/// multi-node speedup model), scatter/gather cost, and the 4-pass
+/// perturb+update composite dense vs sharded. Results land in
+/// BENCH_zkernel.json under "shard_scaling".
+fn shard_scaling_bench() -> Vec<Json> {
+    use mezo::model::meta::TensorDesc;
+    use mezo::model::params::ParamStore;
+    use mezo::optim::mezo::StepRecord;
+    use mezo::shard::{ShardPlan, ShardedStore};
+    use mezo::storage::Trajectory;
+
+    let (lr, g, wd, eps) = (1e-4f32, 0.37f32, 1e-5f32, 1e-3f32);
+    let n_records = if quick() { 4usize } else { 8 };
+    let shard_counts: &[usize] = if quick() { &[1, 4] } else { &[1, 2, 4, 8] };
+    let thread_grid: &[usize] = if quick() { &[1, 4] } else { &[1, 4, 8] };
+    let mut out = Vec::new();
+    for &d in &sizes() {
+        let reps = reps_for(d);
+        // several tensors so shard cuts can be tensor-aligned
+        let specs = vec![
+            TensorDesc { name: "w1".into(), shape: vec![d / 2], dtype: "f32".into() },
+            TensorDesc { name: "w2".into(), shape: vec![d / 4], dtype: "f32".into() },
+            TensorDesc {
+                name: "w3".into(),
+                shape: vec![d - d / 2 - d / 4],
+                dtype: "f32".into(),
+            },
+        ];
+        let mut p0 = ParamStore::from_specs(specs);
+        p0.init(1);
+        let names = vec!["w1".to_string(), "w2".to_string(), "w3".to_string()];
+        let mut traj = Trajectory::new(names);
+        for i in 0..n_records as u64 {
+            traj.records.push(StepRecord {
+                seed: 0x5EED + i,
+                pgrad: 0.05 * i as f32 - 0.15,
+                lr: 1e-4,
+            });
+        }
+        let stream = GaussianStream::new(0x5CA1E);
+        for &t in thread_grid {
+            let eng = ZEngine::with_threads(t);
+            // dense baselines, shard-count independent
+            let mut dense = p0.clone();
+            let dense_replay_s = time(reps, || traj.replay_with(&eng, &mut dense));
+            let step_dense = |p: &mut ParamStore| {
+                let offsets = p.offsets.clone();
+                for (buf, &off) in p.data.iter_mut().zip(&offsets) {
+                    eng.axpy_z(stream, off, buf, eps);
+                    eng.axpy_z(stream, off, buf, -2.0 * eps);
+                    eng.axpy_z(stream, off, buf, eps);
+                    eng.sgd_update(stream, off, buf, lr, g, wd);
+                }
+            };
+            let mut pd = p0.clone();
+            let step_dense_s = time(reps, || step_dense(&mut pd));
+            for &k in shard_counts {
+                let plan = ShardPlan::new(&p0, k).expect("plan");
+                let manifest = plan.manifest();
+                let scatter_s = time(reps, || {
+                    let _ = ShardedStore::scatter(&plan, &p0).expect("scatter");
+                });
+                let mut sharded = ShardedStore::scatter(&plan, &p0).expect("scatter");
+                let mut gathered = p0.clone();
+                let gather_s = time(reps, || sharded.gather_into(&mut gathered).expect("gather"));
+                let sharded_replay_s = time(reps, || {
+                    traj.replay_sharded_with(&eng, &mut sharded, &manifest).expect("replay")
+                });
+                let shard_replay_max_s = (0..k)
+                    .map(|ki| {
+                        time(reps, || {
+                            traj.replay_shard_with(&eng, &mut sharded, &manifest, ki)
+                                .expect("replay shard")
+                        })
+                    })
+                    .fold(0.0f64, f64::max);
+                // the 4-pass in-place composite, shard-segment by segment
+                let step_sharded = |p: &mut ParamStore| {
+                    for shard in plan.shards() {
+                        for seg in &shard.segments {
+                            let off = p.offsets[seg.tensor];
+                            let buf = &mut p.data[seg.tensor];
+                            eng.axpy_z_shard(stream, off, seg.lo, seg.hi, buf, eps);
+                            eng.axpy_z_shard(stream, off, seg.lo, seg.hi, buf, -2.0 * eps);
+                            eng.axpy_z_shard(stream, off, seg.lo, seg.hi, buf, eps);
+                            eng.sgd_update_shard(stream, off, seg.lo, seg.hi, buf, lr, g, wd);
+                        }
+                    }
+                };
+                let mut ps = p0.clone();
+                let step_sharded_s = time(reps, || step_sharded(&mut ps));
+                out.push(obj(vec![
+                    ("d", Json::from(d as f64)),
+                    ("shards", Json::from(k as f64)),
+                    ("threads", Json::from(t as f64)),
+                    ("records", Json::from(n_records as f64)),
+                    ("dense_replay_s", Json::from(dense_replay_s)),
+                    ("sharded_replay_s", Json::from(sharded_replay_s)),
+                    ("shard_replay_max_s", Json::from(shard_replay_max_s)),
+                    (
+                        "critical_path_speedup",
+                        Json::from(dense_replay_s / shard_replay_max_s),
+                    ),
+                    ("scatter_s", Json::from(scatter_s)),
+                    ("gather_s", Json::from(gather_s)),
+                    ("step_dense_s", Json::from(step_dense_s)),
+                    ("step_sharded_s", Json::from(step_sharded_s)),
+                ]));
+                if t == thread_grid[thread_grid.len() - 1] {
+                    println!(
+                        "d={:>9} shards={}: critical-path replay speedup {:.2}x (t={})",
+                        d,
+                        k,
+                        dense_replay_s / shard_replay_max_s,
+                        t
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
 fn main() {
     let rows = zkernel_bench();
     let fzoo_rows = fzoo_vs_mezo_bench();
     let mask_rows = mask_density_bench();
     let pool_rows = pool_vs_spawn_bench();
+    let shard_rows = shard_scaling_bench();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let report = obj(vec![
         ("bench", Json::from("zkernel")),
@@ -354,6 +486,7 @@ fn main() {
         ("fzoo_vs_mezo", Json::Arr(fzoo_rows)),
         ("mask_density", Json::Arr(mask_rows)),
         ("pool_vs_spawn", Json::Arr(pool_rows)),
+        ("shard_scaling", Json::Arr(shard_rows)),
     ]);
     std::fs::write("BENCH_zkernel.json", report.to_string()).expect("write BENCH_zkernel.json");
     println!("wrote BENCH_zkernel.json ({} rows)", rows.len());

@@ -11,6 +11,7 @@ use crate::rng::{GaussianStream, Pcg};
 use crate::zkernel::ZEngine;
 use anyhow::Result;
 
+/// Configuration of the [`Bbt`] evolutionary prefix optimizer.
 #[derive(Debug, Clone)]
 pub struct BbtCfg {
     /// intrinsic dimension of the search space (BBTv2 uses 500)
@@ -21,7 +22,9 @@ pub struct BbtCfg {
     pub mu: usize,
     /// initial step size
     pub sigma: f32,
+    /// planned ES generations (drivers budget forward passes with this)
     pub iters: usize,
+    /// master seed for the population sampler and the projection
     pub seed: u64,
 }
 
@@ -31,13 +34,19 @@ impl Default for BbtCfg {
     }
 }
 
+/// The BBTv2-style (μ/μ, λ) evolutionary strategy over a fixed random
+/// projection of the prefix tensors — gradient-free like MeZO, but
+/// searching a `d_low`-dimensional subspace instead of the full θ.
 pub struct Bbt {
+    /// configuration (mutable between generations)
     pub cfg: BbtCfg,
     /// indices of the prefix tensors this optimizer controls
     pub tensors: Vec<usize>,
     /// projection seed (A is regenerated, never stored — same trick as MeZO)
     proj_seed: u64,
+    /// current search mean in the projected space, length `d_low`
     pub mean: Vec<f32>,
+    /// per-coordinate step sizes (diagonal covariance), length `d_low`
     pub sigma: Vec<f32>,
     /// blocked/threaded kernel engine for the projection rows
     pub engine: ZEngine,
@@ -47,6 +56,8 @@ pub struct Bbt {
 }
 
 impl Bbt {
+    /// New optimizer over the given prefix tensors; the tensors' current
+    /// values become the projection's base point.
     pub fn new(cfg: BbtCfg, tensors: Vec<usize>, params: &ParamStore) -> Bbt {
         let base = tensors.iter().map(|&ti| params.data[ti].clone()).collect();
         Bbt {
@@ -122,6 +133,8 @@ impl Bbt {
         Ok(pop[0].0)
     }
 
+    /// Forward passes a run of `iters_done` generations consumed (λ
+    /// population evaluations plus the post-recombination mean, each).
     pub fn forward_passes(&self, iters_done: usize) -> usize {
         iters_done * (self.cfg.lambda + 1)
     }

@@ -9,11 +9,16 @@
 use crate::rng::Pcg;
 use anyhow::Result;
 
+/// Configuration of the [`LogReg`] full-batch gradient-descent fit.
 #[derive(Debug, Clone)]
 pub struct LogRegCfg {
+    /// gradient-descent learning rate
     pub lr: f64,
+    /// L2 regularization strength
     pub l2: f64,
+    /// iteration cap
     pub max_iters: usize,
+    /// early-stopping tolerance on the training-loss plateau
     pub tol: f64,
 }
 
@@ -26,12 +31,19 @@ impl Default for LogRegCfg {
 /// W: (n_classes, d+1) with bias folded in as the last column.
 #[derive(Debug, Clone)]
 pub struct LogReg {
+    /// per-class weight rows, each `d + 1` long (bias last)
     pub w: Vec<Vec<f64>>,
+    /// number of classes the probe separates
     pub n_classes: usize,
+    /// feature dimensionality (without the bias column)
     pub d: usize,
 }
 
 impl LogReg {
+    /// Fit a multinomial logistic regression on frozen features with
+    /// full-batch gradient descent (features are standardized internally
+    /// and the standardization is folded back into the weights, so
+    /// [`LogReg::predict`] takes raw features).
     pub fn fit(
         feats: &[Vec<f32>],
         labels: &[usize],
@@ -121,6 +133,7 @@ impl LogReg {
         Ok(LogReg { w, n_classes, d })
     }
 
+    /// Arg-max class for one raw (unstandardized) feature vector.
     pub fn predict(&self, feat: &[f32]) -> usize {
         let mut best = 0;
         let mut bv = f64::MIN;
@@ -137,6 +150,7 @@ impl LogReg {
         best
     }
 
+    /// Classification accuracy of [`LogReg::predict`] over a labeled set.
     pub fn accuracy(&self, feats: &[Vec<f32>], labels: &[usize]) -> f64 {
         let preds: Vec<usize> = feats.iter().map(|f| self.predict(f)).collect();
         crate::eval::metrics::accuracy(&preds, labels)

@@ -13,13 +13,19 @@ use crate::util::json::{obj, Json};
 /// Model size ladder (matches python/compile/model.py::SIZES).
 #[derive(Debug, Clone, Copy)]
 pub struct SizeSpec {
+    /// ladder name ("tiny" … "xl")
     pub name: &'static str,
+    /// residual-stream width
     pub d_model: u64,
+    /// transformer block count
     pub n_layers: u64,
+    /// attention heads per block
     pub n_heads: u64,
+    /// MLP hidden width
     pub d_ff: u64,
 }
 
+/// The five profiled model sizes, smallest to largest.
 pub const SIZES: [SizeSpec; 5] = [
     SizeSpec { name: "tiny", d_model: 64, n_layers: 2, n_heads: 2, d_ff: 256 },
     SizeSpec { name: "small", d_model: 128, n_layers: 4, n_heads: 4, d_ff: 512 },
@@ -28,9 +34,12 @@ pub const SIZES: [SizeSpec; 5] = [
     SizeSpec { name: "xl", d_model: 1024, n_layers: 12, n_heads: 16, d_ff: 4096 },
 ];
 
+/// Vocabulary size shared by every ladder entry.
 pub const VOCAB: u64 = 512;
+/// Maximum sequence length shared by every ladder entry.
 pub const MAX_SEQ: u64 = 64;
 
+/// Look a ladder entry up by its name.
 pub fn size_by_name(name: &str) -> Option<SizeSpec> {
     SIZES.iter().copied().find(|s| s.name == name)
 }
@@ -72,12 +81,14 @@ pub enum Method {
     FtAdamCkpt,
 }
 
+/// Every method the Fig. 3 / Table 22 exhibits compare.
 pub const PROFILED_METHODS: [Method; 8] = [
     Method::Inference, Method::MezoMatrix, Method::Icl, Method::Jvp,
     Method::FtPrefix, Method::FtSgd, Method::FtAdam, Method::FtAdamCkpt,
 ];
 
 impl Method {
+    /// Display name, as it appears in the paper's tables.
     pub fn name(&self) -> &'static str {
         match self {
             Method::Inference => "zero-shot/MeZO",

@@ -121,6 +121,13 @@ impl ParamStore {
         }
     }
 
+    /// Deterministic K-way partition of this store's global coordinate
+    /// space — shorthand for [`crate::shard::ShardPlan::new`], the unit
+    /// of multi-node replay (see [`crate::shard`]).
+    pub fn shard_plan(&self, n_shards: usize) -> anyhow::Result<crate::shard::ShardPlan> {
+        crate::shard::ShardPlan::new(self, n_shards)
+    }
+
     // ---------------- binary checkpoints --------------------------------
     // format: magic "MZCK" u32, n_tensors u32, then per tensor:
     //   name_len u32 | name bytes | ndim u32 | dims u64... | f32 data
@@ -245,6 +252,15 @@ mod tests {
         let p = ParamStore::from_specs(toy_specs());
         assert_eq!(p.offsets, vec![0, 64, 68, 72]);
         assert_eq!(p.n_params(), 88);
+    }
+
+    #[test]
+    fn shard_plan_shorthand_matches_direct_construction() {
+        let p = ParamStore::from_specs(toy_specs());
+        let a = p.shard_plan(3).unwrap();
+        let b = crate::shard::ShardPlan::new(&p, 3).unwrap();
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.total(), 88);
     }
 
     #[test]

@@ -32,10 +32,18 @@
 //! reconstruct the run from the log alone, and
 //! [`crate::optim::mezo::recompute_first_moment`] sees each seed's true
 //! contribution to the step.
+//!
+//! [`FzooConfig::flavor`] selects what consumes the batched estimate:
+//! `Sgd` (the plain FZOO mean update), or `Momentum`/`Adam` — the
+//! FZOO-Adam variant — which feed the SAME per-coordinate mean
+//! g = (Σᵢ gᵢ·zᵢ)/n through the fused moment kernels
+//! ([`ZEngine::momentum_update`] / [`ZEngine::adam_update`]) at the
+//! variance-adapted step size, one pass over θ + moments per step.
 
 use crate::model::params::ParamStore;
-use crate::optim::mezo::{StepInfo, StepRecord};
+use crate::optim::mezo::{Flavor, StepInfo, StepRecord};
 use crate::rng::{GaussianStream, Pcg};
+use crate::shard::{trainable_flags, ShardPlan};
 use crate::zkernel::{SparseMask, ZEngine};
 use anyhow::Result;
 
@@ -59,6 +67,25 @@ pub struct FzooConfig {
     /// below this σ_g the normalization is skipped (degenerate batches
     /// where every seed saw the same loss must not explode the step)
     pub sigma_floor: f32,
+    /// update rule consuming the batched one-sided estimate: `Sgd` is the
+    /// plain FZOO mean update; `Momentum`/`Adam` feed the SAME estimate
+    /// (mean of the per-seed gᵢ·zᵢ, one wd term, lr already
+    /// variance-normalized) through the fused moment kernels
+    /// ([`ZEngine::momentum_update`] / [`ZEngine::adam_update`]) — the
+    /// FZOO-Adam variant. Note the replay caveat: like MeZO's own moment
+    /// flavors, a Momentum/Adam run's `history` records the raw
+    /// estimates (from which the moments are *recomputable*,
+    /// [`crate::optim::mezo::recompute_first_moment`]), so plain
+    /// `Trajectory::replay` reconstructs Sgd-flavor runs only
+    pub flavor: Flavor,
+    /// momentum coefficient (Momentum flavor)
+    pub momentum: f32,
+    /// first-moment EMA coefficient (Adam flavor)
+    pub beta1: f32,
+    /// second-moment EMA coefficient (Adam flavor)
+    pub beta2: f32,
+    /// Adam denominator stabilizer
+    pub adam_eps: f32,
 }
 
 impl Default for FzooConfig {
@@ -70,6 +97,11 @@ impl Default for FzooConfig {
             n: 8,
             variance_norm: true,
             sigma_floor: 1e-6,
+            flavor: Flavor::Sgd,
+            momentum: 0.9,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
         }
     }
 }
@@ -93,10 +125,21 @@ pub struct Fzoo {
     /// [`SparseMask::digest`] next to `history` so replay can verify mask
     /// identity (`storage::Trajectory::with_mask_digest`).
     pub mask: Option<SparseMask>,
+    /// optional shard plan: when set, staging and the fused update walk
+    /// the plan's shard segments through the shard-scoped kernels instead
+    /// of whole tensors — the same coordinates at the same global z
+    /// counters, so a sharded step is bit-identical to the dense step
+    /// while each shard's passes are independent dispatches a worker
+    /// could own (see [`crate::shard`]). Sgd flavor only, and exclusive
+    /// with `mask`; `step` errors otherwise.
+    pub shard: Option<ShardPlan>,
     /// (seed, gᵢ/n, lr_eff) per applied seed — the full trajectory, in the
     /// shape `Trajectory::replay`/`replay_batched` reconstruct from
     pub history: Vec<StepRecord>,
     seed_rng: Pcg,
+    /// dense first/second moments (Momentum / Adam flavors only)
+    m: Option<Vec<Vec<f32>>>,
+    v: Option<Vec<Vec<f32>>>,
     /// staging store, allocated once and reused every step — no per-step
     /// clone or reallocation (pointer/capacity identity pinned in the
     /// `scratch_store_is_reused_without_reallocation` test). Dense steps
@@ -126,8 +169,11 @@ impl Fzoo {
             step: 0,
             engine: ZEngine::default(),
             mask: None,
+            shard: None,
             history: Vec::new(),
             seed_rng: Pcg::new(master_seed),
+            m: None,
+            v: None,
             scratch: None,
             scratch_digest: None,
             scratch_stale: false,
@@ -210,6 +256,40 @@ impl Fzoo {
         }
     }
 
+    /// FZOO-momentum / FZOO-Adam: feed the batched one-sided estimate
+    /// through the fused moment kernels (the wiring shared with
+    /// `MezoSgd`, `optim::mezo::apply_moment_update`). `zs` carries the
+    /// *raw* per-seed projected gradients; the kernels take the mean over
+    /// `zs.len()` per coordinate (exactly the estimate the Sgd flavor
+    /// applies) before the EMA and parameter updates, with the step's
+    /// variance-adapted `lr_eff`.
+    fn apply_with_moments(
+        &mut self,
+        params: &mut ParamStore,
+        zs: &[(GaussianStream, f32)],
+        lr_eff: f32,
+    ) {
+        let cfg = crate::optim::mezo::MomentCfg {
+            flavor: self.cfg.flavor,
+            lr: lr_eff,
+            wd: self.cfg.weight_decay,
+            momentum: self.cfg.momentum,
+            beta1: self.cfg.beta1,
+            beta2: self.cfg.beta2,
+            adam_eps: self.cfg.adam_eps,
+            t: (self.step + 1) as f32,
+        };
+        crate::optim::mezo::apply_moment_update(
+            self.engine,
+            &self.trainable,
+            params,
+            zs,
+            cfg,
+            &mut self.m,
+            &mut self.v,
+        );
+    }
+
     /// One FZOO step: n + 1 forward passes (`loss` is called once on the
     /// unperturbed `params` and once per staged θ + ε·zᵢ), then the whole
     /// n-seed update in a single fused pass over every trainable tensor.
@@ -234,9 +314,12 @@ impl Fzoo {
     where
         F: FnMut(&ParamStore) -> Result<f32>,
     {
-        if let Some(m) = &self.mask {
-            m.validate(params)?;
-        }
+        crate::optim::mezo::validate_scoping(
+            self.mask.as_ref(),
+            self.shard.as_ref(),
+            self.cfg.flavor,
+            params,
+        )?;
         let n = self.cfg.n.max(1);
         let eps = self.cfg.eps;
         // anchor: one forward at the unperturbed θ
@@ -245,29 +328,54 @@ impl Fzoo {
         let mut zs: Vec<(GaussianStream, f32)> = Vec::with_capacity(n);
         let mut seeds: Vec<u64> = Vec::with_capacity(n);
         let mut diffs: Vec<f32> = Vec::with_capacity(n);
+        let tr = self
+            .shard
+            .as_ref()
+            .map(|_| trainable_flags(params.specs.len(), &self.trainable));
         for _ in 0..n {
             let seed = self.seed_rng.next_u64();
             let stream = GaussianStream::new(seed);
             // stage θ + ε·z without touching θ (no restore pass, no
             // drift); under a mask only the masked coordinates are
-            // rewritten — the rest of scratch already mirrors θ
-            for &ti in &self.trainable {
-                match &self.mask {
-                    None => self.engine.perturb_into(
-                        stream,
-                        params.offsets[ti],
-                        &params.data[ti],
-                        eps,
-                        &mut scratch.data[ti],
-                    ),
-                    Some(m) => self.engine.perturb_into_masked(
-                        stream,
-                        params.offsets[ti],
-                        m.indices(ti),
-                        &params.data[ti],
-                        eps,
-                        &mut scratch.data[ti],
-                    ),
+            // rewritten — the rest of scratch already mirrors θ; under a
+            // shard plan the segments jointly rewrite every trainable
+            // coordinate, one shard-local dispatch per segment
+            match (&self.mask, &self.shard) {
+                (Some(m), _) => {
+                    for &ti in &self.trainable {
+                        self.engine.perturb_into_masked(
+                            stream,
+                            params.offsets[ti],
+                            m.indices(ti),
+                            &params.data[ti],
+                            eps,
+                            &mut scratch.data[ti],
+                        );
+                    }
+                }
+                (None, Some(plan)) => {
+                    for seg in plan.segments_where(tr.as_ref().unwrap()) {
+                        self.engine.perturb_into_shard(
+                            stream,
+                            params.offsets[seg.tensor],
+                            seg.lo,
+                            seg.hi,
+                            &params.data[seg.tensor],
+                            eps,
+                            &mut scratch.data[seg.tensor],
+                        );
+                    }
+                }
+                (None, None) => {
+                    for &ti in &self.trainable {
+                        self.engine.perturb_into(
+                            stream,
+                            params.offsets[ti],
+                            &params.data[ti],
+                            eps,
+                            &mut scratch.data[ti],
+                        );
+                    }
                 }
             }
             let li = loss(&scratch)?;
@@ -278,28 +386,57 @@ impl Fzoo {
         self.scratch = Some(scratch);
 
         let lr_eff = self.effective_lr(&diffs);
-        // the whole n-seed batch in one fused pass per tensor
-        for &ti in &self.trainable {
-            match &self.mask {
-                None => self.engine.fzoo_update(
-                    &zs,
-                    params.offsets[ti],
-                    &mut params.data[ti],
-                    lr_eff,
-                    self.cfg.weight_decay,
-                ),
-                Some(m) => self.engine.fzoo_update_masked(
-                    &zs,
-                    params.offsets[ti],
-                    m.indices(ti),
-                    &mut params.data[ti],
-                    lr_eff,
-                    self.cfg.weight_decay,
-                ),
+        match self.cfg.flavor {
+            Flavor::Sgd => {
+                // the whole n-seed batch in one fused pass per tensor (or
+                // per shard segment)
+                if let Some(plan) = &self.shard {
+                    for seg in plan.segments_where(tr.as_ref().unwrap()) {
+                        self.engine.fzoo_update_shard(
+                            &zs,
+                            params.offsets[seg.tensor],
+                            seg.lo,
+                            seg.hi,
+                            &mut params.data[seg.tensor],
+                            lr_eff,
+                            self.cfg.weight_decay,
+                        );
+                    }
+                } else {
+                    for &ti in &self.trainable {
+                        match &self.mask {
+                            None => self.engine.fzoo_update(
+                                &zs,
+                                params.offsets[ti],
+                                &mut params.data[ti],
+                                lr_eff,
+                                self.cfg.weight_decay,
+                            ),
+                            Some(m) => self.engine.fzoo_update_masked(
+                                &zs,
+                                params.offsets[ti],
+                                m.indices(ti),
+                                &mut params.data[ti],
+                                lr_eff,
+                                self.cfg.weight_decay,
+                            ),
+                        }
+                    }
+                }
             }
+            // FZOO-Adam / FZOO-momentum: the same batched one-sided
+            // estimate — g = (Σᵢ gᵢ·zᵢ)/n + wd·θ per coordinate — through
+            // the fused moment kernels, at the variance-adapted lr
+            Flavor::Momentum | Flavor::Adam => self.apply_with_moments(params, &zs, lr_eff),
         }
         // one record per seed, gradient mean-normalized so that replay's
-        // θ −= lr·pgrad·z reconstructs this step's update (wd aside)
+        // θ −= lr·pgrad·z reconstructs this step's update for the Sgd
+        // flavor (wd aside). Moment flavors log the SAME estimate — the
+        // moments are recomputable from it (B.2,
+        // optim::mezo::recompute_first_moment) — but a plain
+        // Trajectory::replay of such a log applies the un-EMA'd updates
+        // and does NOT land on the trained θ, exactly as for MeZO's own
+        // Momentum/Adam flavors.
         let n_f = n as f32;
         for (&seed, &(_, g)) in seeds.iter().zip(&zs) {
             self.history.push(StepRecord { seed, pgrad: g / n_f, lr: lr_eff });
@@ -629,6 +766,192 @@ mod tests {
                 reference = Some((opt.history.clone(), p.data.clone()));
             }
         }
+    }
+
+    #[test]
+    fn fzoo_adam_and_momentum_flavors_optimize() {
+        for flavor in [Flavor::Momentum, Flavor::Adam] {
+            let mut p = toy_params();
+            let lr = if flavor == Flavor::Adam { 2e-2 } else { 5e-3 };
+            let cfg = FzooConfig { lr, eps: 1e-3, n: 6, flavor, ..Default::default() };
+            let mut opt = Fzoo::new(cfg, vec![0, 1], 6);
+            let l0 = quad_loss(&p).unwrap();
+            for _ in 0..150 {
+                opt.step(&mut p, |p| quad_loss(p)).unwrap();
+            }
+            let l1 = quad_loss(&p).unwrap();
+            assert!(l1 < l0 * 0.6, "{:?}: l0={} l1={}", flavor, l0, l1);
+        }
+    }
+
+    #[test]
+    fn fzoo_adam_trajectory_is_bit_identical_across_threads() {
+        // the FZOO-Adam satellite pin: same master seed => same history
+        // (bitwise) and same final θ (bitwise) at threads 1/2/8, variance
+        // normalization and weight decay on
+        for flavor in [Flavor::Momentum, Flavor::Adam] {
+            let mut reference: Option<(Vec<StepRecord>, Vec<Vec<f32>>)> = None;
+            for threads in [1usize, 2, 8] {
+                let mut p = big_params();
+                let cfg = FzooConfig {
+                    lr: 5e-3,
+                    eps: 1e-3,
+                    weight_decay: 1e-4,
+                    n: 5,
+                    variance_norm: true,
+                    flavor,
+                    ..Default::default()
+                };
+                let mut opt = Fzoo::new(cfg, vec![0, 1], 0xADA);
+                opt.engine = ZEngine::with_threads(threads);
+                for _ in 0..5 {
+                    opt.step(&mut p, |p| quad_loss(p)).unwrap();
+                }
+                if let Some((hist, data)) = &reference {
+                    assert_eq!(hist.len(), opt.history.len());
+                    for (a, b) in hist.iter().zip(&opt.history) {
+                        assert_eq!(a.seed, b.seed, "{:?} t={}", flavor, threads);
+                        assert_eq!(
+                            a.pgrad.to_bits(),
+                            b.pgrad.to_bits(),
+                            "{:?} t={}",
+                            flavor,
+                            threads
+                        );
+                        assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "{:?} t={}", flavor, threads);
+                    }
+                    for (x, y) in data.iter().flatten().zip(p.data.iter().flatten()) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{:?} t={}: {} vs {}",
+                            flavor,
+                            threads,
+                            x,
+                            y
+                        );
+                    }
+                } else {
+                    reference = Some((opt.history.clone(), p.data.clone()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fzoo_adam_single_step_is_the_fused_adam_update_of_the_batched_estimate() {
+        // wiring pin: one FZOO-Adam step == adam_update applied to the
+        // step's raw per-seed gradients (history pgrads are gᵢ/n) at the
+        // recorded lr, from zero moments, bit for bit
+        use crate::zkernel::AdamParams;
+        let mut p = toy_params();
+        let p0 = p.clone();
+        let (wd, n) = (1e-4f32, 4usize);
+        let cfg = FzooConfig {
+            lr: 1e-2,
+            eps: 1e-3,
+            weight_decay: wd,
+            n,
+            flavor: Flavor::Adam,
+            ..Default::default()
+        };
+        let mut opt = Fzoo::new(cfg.clone(), vec![0, 1], 0xBADA);
+        opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        assert_eq!(opt.history.len(), n);
+        let zs: Vec<(GaussianStream, f32)> = opt
+            .history
+            .iter()
+            .map(|r| (GaussianStream::new(r.seed), r.pgrad * n as f32))
+            .collect();
+        let engine = ZEngine::default();
+        let mut want = p0.clone();
+        let mut m: Vec<Vec<f32>> = vec![vec![0.0; 16], vec![0.0; 8]];
+        let mut v: Vec<Vec<f32>> = vec![vec![0.0; 16], vec![0.0; 8]];
+        for (k, &ti) in [0usize, 1].iter().enumerate() {
+            engine.adam_update(
+                &zs,
+                want.offsets[ti],
+                &mut want.data[ti],
+                &mut m[k],
+                &mut v[k],
+                AdamParams {
+                    lr: opt.history[0].lr,
+                    wd,
+                    beta1: cfg.beta1,
+                    beta2: cfg.beta2,
+                    eps: cfg.adam_eps,
+                    t: 1.0,
+                    n: n as f32,
+                },
+            );
+        }
+        for (x, y) in p.data.iter().flatten().zip(want.data.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{} vs {}", x, y);
+        }
+    }
+
+    #[test]
+    fn sharded_fzoo_step_is_bitwise_identical_to_dense() {
+        use crate::shard::ShardPlan;
+        for k in [1usize, 2, 4] {
+            for threads in [1usize, 2, 8] {
+                let cfg = FzooConfig {
+                    lr: 5e-3,
+                    eps: 1e-3,
+                    weight_decay: 1e-4,
+                    n: 4,
+                    variance_norm: true,
+                    ..Default::default()
+                };
+                let mut p_dense = big_params();
+                let mut dense = Fzoo::new(cfg.clone(), vec![0, 1], 0x5AFE);
+                dense.engine = ZEngine::with_threads(threads);
+                let mut p_shard = big_params();
+                let mut sharded = Fzoo::new(cfg, vec![0, 1], 0x5AFE);
+                sharded.engine = ZEngine::with_threads(threads);
+                sharded.shard = Some(ShardPlan::new(&p_shard, k).unwrap());
+                for _ in 0..4 {
+                    dense.step(&mut p_dense, |p| quad_loss(p)).unwrap();
+                    sharded.step(&mut p_shard, |p| quad_loss(p)).unwrap();
+                }
+                for (a, b) in dense.history.iter().zip(&sharded.history) {
+                    assert_eq!(a.seed, b.seed, "k={} t={}", k, threads);
+                    assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "k={} t={}", k, threads);
+                    assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "k={} t={}", k, threads);
+                }
+                for (x, y) in p_dense.data.iter().flatten().zip(p_shard.data.iter().flatten()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "k={} t={}: {} vs {}", k, threads, x, y);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fzoo_flavor_and_shard_guards_error_loudly() {
+        use crate::shard::ShardPlan;
+        let mut p = toy_params();
+        // mask + moment flavor bails
+        let cfg = FzooConfig { flavor: Flavor::Adam, ..Default::default() };
+        let mut opt = Fzoo::new(cfg, vec![0, 1], 1);
+        opt.mask = Some(crate::zkernel::SparseMask::full(&p, &[0, 1]));
+        let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+        assert!(err.to_string().contains("Sgd flavor"), "{}", err);
+        // shard + moment flavor bails
+        let cfg = FzooConfig { flavor: Flavor::Momentum, ..Default::default() };
+        let mut opt = Fzoo::new(cfg, vec![0, 1], 1);
+        opt.shard = Some(ShardPlan::new(&p, 2).unwrap());
+        let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+        assert!(err.to_string().contains("Sgd flavor"), "{}", err);
+        // mask + shard bails
+        let mut opt = Fzoo::new(FzooConfig::default(), vec![0, 1], 1);
+        opt.mask = Some(crate::zkernel::SparseMask::full(&p, &[0, 1]));
+        opt.shard = Some(ShardPlan::new(&p, 2).unwrap());
+        let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+        assert!(err.to_string().contains("cannot combine"), "{}", err);
+        // a plan built for another store bails
+        let mut opt = Fzoo::new(FzooConfig::default(), vec![0, 1], 1);
+        opt.shard = Some(ShardPlan::new(&big_params(), 2).unwrap());
+        assert!(opt.step(&mut p, |p| quad_loss(p)).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@
 
 use crate::model::params::ParamStore;
 use crate::rng::{GaussianStream, Pcg};
+use crate::shard::{trainable_flags, ShardPlan};
 use crate::zkernel::{AdamParams, SparseMask, ZEngine};
 use anyhow::{bail, Result};
 
@@ -137,6 +138,15 @@ pub struct MezoSgd {
     /// Log [`SparseMask::digest`] next to `history` so replay can verify
     /// mask identity (`storage::Trajectory::with_mask_digest`).
     pub mask: Option<SparseMask>,
+    /// optional shard plan: when set, every parameter write (perturb /
+    /// restore / update) walks the plan's shard segments through the
+    /// shard-scoped kernels instead of whole tensors — the same
+    /// coordinates at the same global z counters, so a sharded step is
+    /// bit-identical to the dense step while each shard's passes are
+    /// independent dispatches a worker could own (see [`crate::shard`]).
+    /// Sgd flavor only, and exclusive with `mask`; `step` errors
+    /// otherwise.
+    pub shard: Option<ShardPlan>,
     seed_rng: Pcg,
     /// (seed, projected_grad, lr) per applied z — the full trajectory
     pub history: Vec<StepRecord>,
@@ -156,6 +166,7 @@ impl MezoSgd {
             step: 0,
             engine: ZEngine::default(),
             mask: None,
+            shard: None,
             seed_rng: Pcg::new(master_seed),
             history: Vec::new(),
             m: None,
@@ -169,9 +180,25 @@ impl MezoSgd {
     /// pass regenerates identical coordinates. Under a sparse mask, only
     /// the masked coordinates are touched (same z per coordinate).
     pub fn perturb(&self, params: &mut ParamStore, seed: u64, scale: f32) {
-        match &self.mask {
-            None => perturb_tensors_with(&self.engine, params, &self.trainable, seed, scale),
-            Some(m) => {
+        let tr = self
+            .shard
+            .as_ref()
+            .map(|_| trainable_flags(params.specs.len(), &self.trainable));
+        self.perturb_scoped(params, seed, scale, tr.as_deref());
+    }
+
+    /// Body of [`MezoSgd::perturb`] with the shard-walk flags already
+    /// built — `step` hoists them once per step instead of once per pass
+    /// (a step runs 3n+ perturb passes).
+    fn perturb_scoped(
+        &self,
+        params: &mut ParamStore,
+        seed: u64,
+        scale: f32,
+        tr: Option<&[bool]>,
+    ) {
+        match (&self.mask, &self.shard) {
+            (Some(m), _) => {
                 let stream = GaussianStream::new(seed);
                 for &ti in &self.trainable {
                     self.engine.axpy_z_masked(
@@ -182,6 +209,25 @@ impl MezoSgd {
                         scale,
                     );
                 }
+            }
+            (None, Some(plan)) => {
+                // shard-major walk over the trainable segments: the same
+                // coordinates at the same global z counters as the dense
+                // arm, each segment an independent shard-local dispatch
+                let stream = GaussianStream::new(seed);
+                for seg in plan.segments_where(tr.expect("shard flags built with the plan")) {
+                    self.engine.axpy_z_shard(
+                        stream,
+                        params.offsets[seg.tensor],
+                        seg.lo,
+                        seg.hi,
+                        &mut params.data[seg.tensor],
+                        scale,
+                    );
+                }
+            }
+            (None, None) => {
+                perturb_tensors_with(&self.engine, params, &self.trainable, seed, scale)
             }
         }
     }
@@ -217,30 +263,28 @@ impl MezoSgd {
     where
         F: FnMut(&ParamStore) -> Result<f32>,
     {
-        if let Some(m) = &self.mask {
-            m.validate(params)?;
-            if self.cfg.flavor != Flavor::Sgd {
-                bail!(
-                    "sparse masks support the Sgd flavor only (SensZOQ perturbs/updates a \
-                     static coordinate set; the Momentum/Adam moment buffers are dense)"
-                );
-            }
-        }
+        validate_scoping(self.mask.as_ref(), self.shard.as_ref(), self.cfg.flavor, params)?;
         let n = self.n_now();
         let eps = self.cfg.eps;
         let lr = self.cfg.lr;
         let mut records: Vec<StepRecord> = Vec::with_capacity(n);
         let mut mean_loss = 0.0f32;
         let mut fwd = 0usize;
+        // shard-walk flags, hoisted once per step (a step runs 3n+
+        // perturb passes plus the update)
+        let shard_tr = self
+            .shard
+            .as_ref()
+            .map(|_| trainable_flags(params.specs.len(), &self.trainable));
 
         for _ in 0..n {
             let seed = self.seed_rng.next_u64();
             let pgrad = if self.cfg.one_point {
                 // Definition 8: g = (L(θ_t + εz_t) − L(θ_{t−1} + εz_{t−1}))/ε
-                self.perturb(params, seed, eps);
+                self.perturb_scoped(params, seed, eps, shard_tr.as_deref());
                 let lp = loss(params)?;
                 fwd += 1;
-                self.perturb(params, seed, -eps); // restore
+                self.perturb_scoped(params, seed, -eps, shard_tr.as_deref()); // restore
                 let g = match self.prev_loss {
                     Some(prev) => (lp - prev) / eps,
                     None => 0.0,
@@ -250,11 +294,11 @@ impl MezoSgd {
                 g
             } else {
                 // Algorithm 1: θ+εz, θ−εz, restore
-                self.perturb(params, seed, eps);
+                self.perturb_scoped(params, seed, eps, shard_tr.as_deref());
                 let lp = loss(params)?;
-                self.perturb(params, seed, -2.0 * eps);
+                self.perturb_scoped(params, seed, -2.0 * eps, shard_tr.as_deref());
                 let lm = loss(params)?;
-                self.perturb(params, seed, eps);
+                self.perturb_scoped(params, seed, eps, shard_tr.as_deref());
                 fwd += 2;
                 mean_loss += 0.5 * (lp + lm);
                 (lp - lm) / (2.0 * eps)
@@ -273,23 +317,41 @@ impl MezoSgd {
                     .iter()
                     .map(|r| (GaussianStream::new(r.seed), r.pgrad / n as f32))
                     .collect();
-                for &ti in &self.trainable {
-                    match &self.mask {
-                        None => self.engine.multi_sgd_update(
+                if let Some(plan) = &self.shard {
+                    // shard-major: each segment's fused update is its own
+                    // dispatch at the segment's global counters — bitwise
+                    // the slice of the dense update below
+                    let tr = shard_tr.as_deref().expect("shard flags built with the plan");
+                    for seg in plan.segments_where(tr) {
+                        self.engine.multi_sgd_update_shard(
                             &zs,
-                            params.offsets[ti],
-                            &mut params.data[ti],
+                            params.offsets[seg.tensor],
+                            seg.lo,
+                            seg.hi,
+                            &mut params.data[seg.tensor],
                             lr,
                             self.cfg.weight_decay,
-                        ),
-                        Some(m) => self.engine.multi_sgd_update_masked(
-                            &zs,
-                            params.offsets[ti],
-                            m.indices(ti),
-                            &mut params.data[ti],
-                            lr,
-                            self.cfg.weight_decay,
-                        ),
+                        );
+                    }
+                } else {
+                    for &ti in &self.trainable {
+                        match &self.mask {
+                            None => self.engine.multi_sgd_update(
+                                &zs,
+                                params.offsets[ti],
+                                &mut params.data[ti],
+                                lr,
+                                self.cfg.weight_decay,
+                            ),
+                            Some(m) => self.engine.multi_sgd_update_masked(
+                                &zs,
+                                params.offsets[ti],
+                                m.indices(ti),
+                                &mut params.data[ti],
+                                lr,
+                                self.cfg.weight_decay,
+                            ),
+                        }
                     }
                 }
             }
@@ -318,7 +380,7 @@ impl MezoSgd {
         scratch: &mut Vec<f32>,
     ) -> Result<StepInfo> {
         assert!(self.cfg.flavor == Flavor::Sgd && !self.cfg.one_point && self.n_now() == 1
-                    && self.mask.is_none(),
+                    && self.mask.is_none() && self.shard.is_none(),
                 "fast path covers plain dense 2-point MeZO-SGD; use step() for variants");
         let eps = self.cfg.eps;
         let lr = self.cfg.lr;
@@ -354,65 +416,137 @@ impl MezoSgd {
         }
     }
 
-    fn ensure_moments(&mut self, params: &ParamStore) {
-        if self.m.is_none() {
-            self.m = Some(
-                self.trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect(),
-            );
-        }
-        if self.cfg.flavor == Flavor::Adam && self.v.is_none() {
-            self.v = Some(
-                self.trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect(),
-            );
-        }
-    }
-
     fn apply_with_moments(&mut self, params: &mut ParamStore, records: &[StepRecord]) {
-        self.ensure_moments(params);
-        let n = records.len() as f32;
-        let cfg = self.cfg.clone();
-        let t = (self.step + 1) as f32;
         let zs: Vec<(GaussianStream, f32)> =
             records.iter().map(|r| (GaussianStream::new(r.seed), r.pgrad)).collect();
-        // take the moment buffers out of self to sidestep aliasing with
-        // the trainable-index iteration below
-        let mut m = self.m.take().unwrap();
-        let mut v = self.v.take();
-        for (k, &ti) in self.trainable.iter().enumerate() {
-            let off = params.offsets[ti];
-            let buf = &mut params.data[ti];
-            let mk = &mut m[k];
-            match cfg.flavor {
-                Flavor::Momentum => {
-                    self.engine.momentum_update(
-                        &zs, off, buf, mk, cfg.lr, cfg.weight_decay, cfg.momentum, n,
-                    );
-                }
-                Flavor::Adam => {
-                    let vk = &mut v.as_mut().unwrap()[k];
-                    self.engine.adam_update(
-                        &zs,
-                        off,
-                        buf,
-                        mk,
-                        vk,
-                        AdamParams {
-                            lr: cfg.lr,
-                            wd: cfg.weight_decay,
-                            beta1: cfg.beta1,
-                            beta2: cfg.beta2,
-                            eps: cfg.adam_eps,
-                            t,
-                            n,
-                        },
-                    );
-                }
-                Flavor::Sgd => unreachable!(),
-            }
-        }
-        self.m = Some(m);
-        self.v = v;
+        let cfg = MomentCfg {
+            flavor: self.cfg.flavor,
+            lr: self.cfg.lr,
+            wd: self.cfg.weight_decay,
+            momentum: self.cfg.momentum,
+            beta1: self.cfg.beta1,
+            beta2: self.cfg.beta2,
+            adam_eps: self.cfg.adam_eps,
+            t: (self.step + 1) as f32,
+        };
+        apply_moment_update(
+            self.engine,
+            &self.trainable,
+            params,
+            &zs,
+            cfg,
+            &mut self.m,
+            &mut self.v,
+        );
     }
+}
+
+/// Scalar knobs of one fused moment update (shared by [`MezoSgd`] and
+/// `Fzoo`): which rule, and every coefficient it consumes.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct MomentCfg {
+    pub flavor: Flavor,
+    pub lr: f32,
+    pub wd: f32,
+    pub momentum: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+    /// 1-based step count for Adam bias correction
+    pub t: f32,
+}
+
+/// Shared wiring of the fused moment kernels: lazily size the m (and,
+/// for Adam, v) buffers, then feed the record batch through
+/// [`ZEngine::momentum_update`] / [`ZEngine::adam_update`] per trainable
+/// tensor. Both optimizers route their Momentum/Adam flavors through
+/// this one function — MezoSgd at `cfg.lr`, Fzoo at its
+/// variance-adapted `lr_eff` — so the moment-update plumbing cannot
+/// drift between them.
+pub(crate) fn apply_moment_update(
+    engine: ZEngine,
+    trainable: &[usize],
+    params: &mut ParamStore,
+    zs: &[(GaussianStream, f32)],
+    cfg: MomentCfg,
+    m_slot: &mut Option<Vec<Vec<f32>>>,
+    v_slot: &mut Option<Vec<Vec<f32>>>,
+) {
+    if m_slot.is_none() {
+        *m_slot = Some(trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect());
+    }
+    if cfg.flavor == Flavor::Adam && v_slot.is_none() {
+        *v_slot = Some(trainable.iter().map(|&ti| vec![0.0; params.data[ti].len()]).collect());
+    }
+    let n = zs.len() as f32;
+    let m = m_slot.as_mut().unwrap();
+    for (k, &ti) in trainable.iter().enumerate() {
+        let off = params.offsets[ti];
+        let buf = &mut params.data[ti];
+        let mk = &mut m[k];
+        match cfg.flavor {
+            Flavor::Momentum => {
+                engine.momentum_update(zs, off, buf, mk, cfg.lr, cfg.wd, cfg.momentum, n);
+            }
+            Flavor::Adam => {
+                let vk = &mut v_slot.as_mut().unwrap()[k];
+                engine.adam_update(
+                    zs,
+                    off,
+                    buf,
+                    mk,
+                    vk,
+                    AdamParams {
+                        lr: cfg.lr,
+                        wd: cfg.wd,
+                        beta1: cfg.beta1,
+                        beta2: cfg.beta2,
+                        eps: cfg.adam_eps,
+                        t: cfg.t,
+                        n,
+                    },
+                );
+            }
+            Flavor::Sgd => unreachable!(),
+        }
+    }
+}
+
+/// Shared step-entry guard of the scoping modes: a mask must fit the
+/// store and a shard plan must match it; both demand the Sgd flavor
+/// (moment buffers are dense, neither masked nor shard-partitioned);
+/// and the two cannot combine — sharding decomposes the DENSE pass.
+pub(crate) fn validate_scoping(
+    mask: Option<&SparseMask>,
+    shard: Option<&ShardPlan>,
+    flavor: Flavor,
+    params: &ParamStore,
+) -> Result<()> {
+    if let Some(m) = mask {
+        m.validate(params)?;
+        if flavor != Flavor::Sgd {
+            bail!(
+                "sparse masks support the Sgd flavor only (a static coordinate set is \
+                 perturbed/updated; the Momentum/Adam moment buffers are dense)"
+            );
+        }
+    }
+    if let Some(plan) = shard {
+        if mask.is_some() {
+            bail!(
+                "a sparse mask and a shard plan cannot combine: sharding decomposes the \
+                 DENSE parameter pass — clear one of the two"
+            );
+        }
+        plan.validate(params)?;
+        if flavor != Flavor::Sgd {
+            bail!(
+                "shard-scoped stepping supports the Sgd flavor only (the Momentum/Adam \
+                 moment buffers are dense, not shard-partitioned)"
+            );
+        }
+    }
+    Ok(())
 }
 
 /// θ += scale · z(seed) over the given tensors (shared with variance
@@ -948,6 +1082,83 @@ mod tests {
                 reference = Some((opt.history.clone(), p.data.clone()));
             }
         }
+    }
+
+    #[test]
+    fn sharded_step_is_bitwise_identical_to_dense_step() {
+        // the sharding acceptance at the optimizer level: a shard plan
+        // changes which dispatches write θ, never a single bit — for any
+        // shard count, any thread count, n > 1, weight decay on
+        use crate::shard::ShardPlan;
+        for k in [1usize, 2, 4] {
+            for threads in [1usize, 2, 8] {
+                let cfg = MezoConfig {
+                    lr: 1e-2,
+                    eps: 1e-3,
+                    weight_decay: 1e-4,
+                    n: 3,
+                    ..Default::default()
+                };
+                let mut p_dense = big_params();
+                let mut dense = MezoSgd::new(cfg.clone(), vec![0, 1], 0x51AB);
+                dense.engine = ZEngine::with_threads(threads);
+                let mut p_shard = big_params();
+                let mut sharded = MezoSgd::new(cfg, vec![0, 1], 0x51AB);
+                sharded.engine = ZEngine::with_threads(threads);
+                sharded.shard = Some(ShardPlan::new(&p_shard, k).unwrap());
+                for _ in 0..4 {
+                    dense.step(&mut p_dense, |p| quad_loss(p)).unwrap();
+                    sharded.step(&mut p_shard, |p| quad_loss(p)).unwrap();
+                }
+                for (a, b) in dense.history.iter().zip(&sharded.history) {
+                    assert_eq!(a.seed, b.seed, "k={} t={}", k, threads);
+                    assert_eq!(a.pgrad.to_bits(), b.pgrad.to_bits(), "k={} t={}", k, threads);
+                }
+                for (x, y) in p_dense.data.iter().flatten().zip(p_shard.data.iter().flatten()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "k={} t={}: {} vs {}", k, threads, x, y);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_step_skips_non_trainable_tensors() {
+        use crate::shard::ShardPlan;
+        let mut p = big_params();
+        let before = p.data.clone();
+        let cfg = MezoConfig { lr: 1e-2, eps: 1e-3, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, vec![1], 0xF00D); // w2 only
+        opt.shard = Some(ShardPlan::new(&p, 3).unwrap());
+        for _ in 0..3 {
+            opt.step(&mut p, |p| quad_loss(p)).unwrap();
+        }
+        for (a, b) in p.data[0].iter().zip(&before[0]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "frozen tensor moved under sharding");
+        }
+        assert!(p.data[1].iter().zip(&before[1]).any(|(a, b)| a.to_bits() != b.to_bits()));
+    }
+
+    #[test]
+    fn shard_plan_rejects_moment_flavors_masks_and_wrong_stores() {
+        use crate::shard::ShardPlan;
+        let mut p = toy_params();
+        let plan = ShardPlan::new(&p, 2).unwrap();
+        // moment flavors bail
+        let cfg = MezoConfig { flavor: Flavor::Adam, ..Default::default() };
+        let mut opt = MezoSgd::new(cfg, vec![0, 1], 1);
+        opt.shard = Some(plan.clone());
+        let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+        assert!(err.to_string().contains("Sgd flavor"), "{}", err);
+        // mask + shard bails
+        let mut opt = MezoSgd::new(MezoConfig::default(), vec![0, 1], 1);
+        opt.mask = Some(SparseMask::full(&p, &[0, 1]));
+        opt.shard = Some(plan.clone());
+        let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+        assert!(err.to_string().contains("cannot combine"), "{}", err);
+        // a plan built for another store bails
+        let mut opt = MezoSgd::new(MezoConfig::default(), vec![0, 1], 1);
+        opt.shard = Some(ShardPlan::new(&big_params(), 2).unwrap());
+        assert!(opt.step(&mut p, |p| quad_loss(p)).is_err());
     }
 
     #[test]

@@ -1,0 +1,691 @@
+//! Sharded parameter store: the unit of multi-node MeZO replay.
+//!
+//! A MeZO fine-tune is reconstructible anywhere the `(seed, pgrad, lr)`
+//! log is (§2.1, `storage::Trajectory`) — which makes serving many
+//! fine-tunes cheap *if* the parameter vector itself can be partitioned
+//! across workers. This module is that partition:
+//!
+//! * [`ShardPlan`] deterministically splits a [`ParamStore`]'s global
+//!   coordinate space `[0, n_params)` into K contiguous shards —
+//!   tensor-aligned where a tensor boundary lies close to the ideal cut,
+//!   coordinate-split where a tensor genuinely straddles it — and stamps
+//!   the whole structure with a chained-splitmix64 digest (the same
+//!   construction as [`SparseMask::digest`](crate::zkernel::SparseMask)).
+//! * [`ShardedStore`] holds one detached buffer per shard segment,
+//!   scattered from / gathered back to a dense store bitwise.
+//! * [`ShardManifest`] is the "MZT3" digest record shipped next to a
+//!   trajectory so a worker can refuse a mismatched plan loudly before
+//!   touching a single coordinate.
+//!
+//! The bit-exactness story is the [`crate::zkernel`] determinism contract
+//! promoted to an API: every kernel is pure per coordinate in its own
+//! *global* z index, so running a kernel over the `[lo, hi)` slice of a
+//! tensor with the counter offset advanced by `lo` produces exactly the
+//! `[lo, hi)` slice of the dense result — the same argument that makes
+//! thread-chunking invariant. A shard worker therefore replays or steps
+//! its slice independently (`ZEngine::*_shard`,
+//! `storage::Trajectory::replay_sharded`,
+//! `optim::mezo::MezoSgd::shard` / `optim::fzoo::Fzoo::shard`) and a
+//! gather after K-way sharded replay is `to_bits()`-identical to the
+//! dense run (`tests/properties.rs`).
+//!
+//! ```
+//! use mezo::model::meta::TensorDesc;
+//! use mezo::model::params::ParamStore;
+//! use mezo::shard::{ShardPlan, ShardedStore};
+//! let mut p = ParamStore::from_specs(vec![
+//!     TensorDesc { name: "w1".into(), shape: vec![300], dtype: "f32".into() },
+//!     TensorDesc { name: "w2".into(), shape: vec![200], dtype: "f32".into() },
+//! ]);
+//! p.init(7);
+//! let plan = ShardPlan::new(&p, 4).unwrap();
+//! assert_eq!(plan.n_shards(), 4);
+//! // scatter -> gather is a bitwise round trip
+//! let sharded = ShardedStore::scatter(&plan, &p).unwrap();
+//! let mut q = ParamStore::from_specs(p.specs.clone());
+//! sharded.gather_into(&mut q).unwrap();
+//! assert_eq!(p.data, q.data);
+//! ```
+
+use crate::model::params::ParamStore;
+use crate::rng::splitmix64;
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// One contiguous sub-range of a single tensor — the intersection of a
+/// shard's global range with that tensor's coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    /// index of the tensor in the store's spec order
+    pub tensor: usize,
+    /// first tensor-local coordinate (inclusive)
+    pub lo: usize,
+    /// one past the last tensor-local coordinate
+    pub hi: usize,
+}
+
+impl Segment {
+    /// Coordinates in the segment.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Whether the segment covers no coordinates.
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+}
+
+/// One shard: a contiguous slice `[start, end)` of the global coordinate
+/// space, decomposed into per-tensor [`Segment`]s.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    /// first global coordinate (inclusive)
+    pub start: u64,
+    /// one past the last global coordinate
+    pub end: u64,
+    /// the tensor sub-ranges `[start, end)` decomposes into, in tensor
+    /// order (empty for an empty shard)
+    pub segments: Vec<Segment>,
+}
+
+impl Shard {
+    /// Global coordinates the shard owns.
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    /// Whether the shard owns no coordinates (only possible in degenerate
+    /// plans, e.g. more shards than parameters).
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// A deterministic K-way partition of a [`ParamStore`]'s global coordinate
+/// space, with structural digests for the whole plan and for every shard.
+/// See the [module docs](self) for the cut rule and the bit-exactness
+/// contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPlan {
+    /// tensor names, in the store's spec order (part of the digest: a
+    /// plan is bound to one parameter ABI)
+    names: Vec<String>,
+    /// tensor lengths, parallel to `names`
+    lens: Vec<usize>,
+    /// global flat offset of each tensor (the z-counter base)
+    offsets: Vec<u64>,
+    /// the K shards, contiguous and covering `[0, total)`
+    shards: Vec<Shard>,
+    /// chained-splitmix64 digest of the whole structure
+    digest: u64,
+    /// per-shard structural digests, parallel to `shards`
+    shard_digests: Vec<u64>,
+}
+
+impl ShardPlan {
+    /// Partition `params` into `n_shards` contiguous shards.
+    ///
+    /// Cut rule, deterministic in `(store geometry, n_shards)`: the k-th
+    /// cut starts at the ideal point `total·k/K`; if an *interior* tensor
+    /// boundary lies within a quarter of the ideal shard width of it, the
+    /// cut snaps there (tensor-aligned shards ship whole tensors), else
+    /// the straddled tensor is coordinate-split at the ideal point. Cuts
+    /// are clamped monotone, so degenerate inputs (more shards than
+    /// parameters) yield empty trailing shards rather than an error.
+    pub fn new(params: &ParamStore, n_shards: usize) -> Result<ShardPlan> {
+        if n_shards == 0 {
+            bail!("ShardPlan: shard count must be > 0");
+        }
+        let names: Vec<String> = params.specs.iter().map(|s| s.name.clone()).collect();
+        let lens: Vec<usize> = params.data.iter().map(|d| d.len()).collect();
+        let offsets = params.offsets.clone();
+        let total: u64 = lens.iter().map(|&l| l as u64).sum();
+
+        let mut cuts: Vec<u64> = Vec::with_capacity(n_shards + 1);
+        cuts.push(0);
+        let tol = total / n_shards as u64 / 4;
+        for k in 1..n_shards {
+            let prev = *cuts.last().unwrap();
+            let ideal = (total as u128 * k as u128 / n_shards as u128) as u64;
+            let snapped = nearest_interior_boundary(&offsets, ideal)
+                .filter(|&b| b > prev && b < total && b.abs_diff(ideal) <= tol);
+            cuts.push(snapped.unwrap_or(ideal).clamp(prev, total));
+        }
+        cuts.push(total);
+
+        let shards: Vec<Shard> = cuts
+            .windows(2)
+            .map(|w| {
+                let (start, end) = (w[0], w[1]);
+                let mut segments = Vec::new();
+                for (ti, (&off, &len)) in offsets.iter().zip(&lens).enumerate() {
+                    let t_end = off + len as u64;
+                    let lo = start.max(off);
+                    let hi = end.min(t_end);
+                    if lo < hi {
+                        segments.push(Segment {
+                            tensor: ti,
+                            lo: (lo - off) as usize,
+                            hi: (hi - off) as usize,
+                        });
+                    }
+                }
+                Shard { start, end, segments }
+            })
+            .collect();
+
+        let (digest, shard_digests) = compute_digests(&names, &lens, &shards);
+        Ok(ShardPlan { names, lens, offsets, shards, digest, shard_digests })
+    }
+
+    /// Number of shards in the plan.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Number of tensors the plan is defined over (== the store's).
+    pub fn n_tensors(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Total coordinates across the whole plan.
+    pub fn total(&self) -> u64 {
+        self.shards.last().map(|s| s.end).unwrap_or(0)
+    }
+
+    /// All shards, in global-coordinate order.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// One shard by index.
+    pub fn shard(&self, k: usize) -> &Shard {
+        &self.shards[k]
+    }
+
+    /// Global flat offsets of the tensors (the z-counter bases the shard
+    /// kernels index from).
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Order- and structure-sensitive digest of the whole plan: tensor
+    /// names and lengths, shard count, every shard's range and segments.
+    /// Any change — a renamed tensor, a moved cut, a different K —
+    /// changes the digest.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Structural digest of one shard (range + segments).
+    pub fn shard_digest(&self, k: usize) -> u64 {
+        self.shard_digests[k]
+    }
+
+    /// The MZT3 manifest for this plan: the record shipped next to a
+    /// trajectory so replaying workers can verify plan identity.
+    pub fn manifest(&self) -> ShardManifest {
+        ShardManifest { plan_digest: self.digest, shard_digests: self.shard_digests.clone() }
+    }
+
+    /// Check the plan is applicable to a store: same tensor names and
+    /// lengths, in the same order. A plan built against a different ABI
+    /// would mis-address z counters, so mismatch is an error.
+    pub fn validate(&self, params: &ParamStore) -> Result<()> {
+        if self.names.len() != params.specs.len() {
+            bail!(
+                "ShardPlan: plan covers {} tensors, store has {}",
+                self.names.len(),
+                params.specs.len()
+            );
+        }
+        for (ti, (name, &len)) in self.names.iter().zip(&self.lens).enumerate() {
+            if params.specs[ti].name != *name {
+                bail!(
+                    "ShardPlan: tensor {} is '{}' in the plan but '{}' in the store",
+                    ti,
+                    name,
+                    params.specs[ti].name
+                );
+            }
+            if params.data[ti].len() != len {
+                bail!(
+                    "ShardPlan: tensor '{}' has {} coordinates in the plan but {} in the store",
+                    name,
+                    len,
+                    params.data[ti].len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Indices of the named tensors, in `names` order; errors on a name
+    /// the plan does not know (replay resolves a trajectory's trainable
+    /// list through this without needing a dense store).
+    pub fn indices_of(&self, names: &[String]) -> Result<Vec<usize>> {
+        let mut out = Vec::with_capacity(names.len());
+        for n in names {
+            match self.names.iter().position(|p| p == n) {
+                Some(i) => out.push(i),
+                None => bail!("ShardPlan: no tensor named '{}'", n),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Every segment whose tensor is flagged in `keep`, in shard-major
+    /// order — the walk every shard-scoped parameter pass does (build
+    /// `keep` with [`trainable_flags`]).
+    pub fn segments_where<'a>(
+        &'a self,
+        keep: &'a [bool],
+    ) -> impl Iterator<Item = &'a Segment> + 'a {
+        self.shards.iter().flat_map(|s| &s.segments).filter(move |seg| keep[seg.tensor])
+    }
+}
+
+/// Per-tensor membership flags of a tensor-index set — what
+/// [`ShardPlan::segments_where`] filters by (the shard-scoped optimizer
+/// and replay paths build this from their trainable lists).
+pub fn trainable_flags(n_tensors: usize, trainable: &[usize]) -> Vec<bool> {
+    let mut f = vec![false; n_tensors];
+    for &ti in trainable {
+        f[ti] = true;
+    }
+    f
+}
+
+/// The interior tensor boundary (a tensor's global start offset, excluding
+/// 0) nearest to `ideal`; ties break toward the lower boundary. `None`
+/// when there is no interior boundary (zero or one tensor).
+fn nearest_interior_boundary(offsets: &[u64], ideal: u64) -> Option<u64> {
+    let interior = match offsets.split_first() {
+        Some((_, rest)) if !rest.is_empty() => rest,
+        _ => return None,
+    };
+    let i = interior.partition_point(|&b| b < ideal);
+    let lo = i.checked_sub(1).map(|j| interior[j]);
+    let hi = interior.get(i).copied();
+    match (lo, hi) {
+        (Some(a), Some(b)) => Some(if ideal - a <= b - ideal { a } else { b }),
+        (Some(a), None) => Some(a),
+        (None, b) => b,
+    }
+}
+
+/// The chained splitmix64 walk behind [`ShardPlan::digest`] /
+/// [`ShardPlan::shard_digest`] — same construction as the sparse-mask
+/// digest, extended with the tensor ABI (names + lengths).
+fn compute_digests(names: &[String], lens: &[usize], shards: &[Shard]) -> (u64, Vec<u64>) {
+    const GOLD: u64 = 0x9E3779B97F4A7C15;
+    let shard_digests: Vec<u64> = shards
+        .iter()
+        .enumerate()
+        .map(|(k, s)| {
+            let mut h = splitmix64(0x0005_44A2_u64 ^ (k as u64).wrapping_mul(GOLD));
+            h = splitmix64(h ^ s.start);
+            h = splitmix64(h ^ s.end.wrapping_mul(GOLD));
+            for seg in &s.segments {
+                h = splitmix64(h ^ (seg.tensor as u64).wrapping_mul(GOLD));
+                h = splitmix64(h ^ seg.lo as u64);
+                h = splitmix64(h ^ (seg.hi as u64).wrapping_mul(GOLD));
+            }
+            h
+        })
+        .collect();
+    let mut h = splitmix64(0x0005_44A9_u64 ^ shards.len() as u64);
+    h = splitmix64(h ^ names.len() as u64);
+    for (name, &len) in names.iter().zip(lens) {
+        h = splitmix64(h ^ name.len() as u64);
+        for &b in name.as_bytes() {
+            h = splitmix64(h ^ b as u64);
+        }
+        h = splitmix64(h ^ (len as u64).wrapping_mul(GOLD));
+    }
+    for &sd in &shard_digests {
+        h = splitmix64(h ^ sd);
+    }
+    (h, shard_digests)
+}
+
+/// The per-shard parameter slices of one [`ShardPlan`] over one store:
+/// what a K-worker deployment would spread across K machines, held
+/// in-process here. Detached buffers — mutating a dense store after
+/// scattering does not move the shards, and vice versa, until an explicit
+/// [`ShardedStore::gather_into`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedStore {
+    plan: ShardPlan,
+    /// `data[k][si]` = the buffer for `plan.shard(k).segments[si]`
+    data: Vec<Vec<Vec<f32>>>,
+}
+
+impl ShardedStore {
+    /// Copy every shard segment's slice out of a dense store (validated
+    /// against the plan first).
+    pub fn scatter(plan: &ShardPlan, params: &ParamStore) -> Result<ShardedStore> {
+        plan.validate(params)?;
+        let data = plan
+            .shards
+            .iter()
+            .map(|s| {
+                s.segments
+                    .iter()
+                    .map(|seg| params.data[seg.tensor][seg.lo..seg.hi].to_vec())
+                    .collect()
+            })
+            .collect();
+        Ok(ShardedStore { plan: plan.clone(), data })
+    }
+
+    /// The plan the store was scattered under.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Copy every shard segment back into a dense store (validated
+    /// against the plan first). Shards partition the coordinate space, so
+    /// this rewrites every coordinate of every tensor.
+    pub fn gather_into(&self, params: &mut ParamStore) -> Result<()> {
+        self.plan.validate(params)?;
+        for (shard, bufs) in self.plan.shards.iter().zip(&self.data) {
+            for (seg, buf) in shard.segments.iter().zip(bufs) {
+                params.data[seg.tensor][seg.lo..seg.hi].copy_from_slice(buf);
+            }
+        }
+        Ok(())
+    }
+
+    /// Borrow one segment's buffer.
+    pub fn segment(&self, shard: usize, si: usize) -> &[f32] {
+        &self.data[shard][si]
+    }
+
+    /// Visit every `(segment, buffer)` pair of one shard mutably — the
+    /// shape a shard-local replay pass walks.
+    pub fn segments_mut(
+        &mut self,
+        shard: usize,
+    ) -> impl Iterator<Item = (&Segment, &mut Vec<f32>)> {
+        self.plan.shards[shard].segments.iter().zip(self.data[shard].iter_mut())
+    }
+
+    /// Total coordinates held across all shards (== the store's
+    /// `n_params` the plan was built against).
+    pub fn n_values(&self) -> usize {
+        self.data.iter().flatten().map(|b| b.len()).sum()
+    }
+}
+
+/// The MZT3 manifest: the shard-plan digest plus every per-shard digest,
+/// shipped next to a trajectory so a replaying worker can verify — before
+/// touching a single coordinate — that its local [`ShardPlan`] is the one
+/// the log's publisher partitioned under. Binary format:
+/// `"MZT3" | plan_digest u64 | n_shards u32 | (shard_digest u64)*`,
+/// little-endian.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardManifest {
+    /// [`ShardPlan::digest`] of the publishing plan
+    pub plan_digest: u64,
+    /// [`ShardPlan::shard_digest`] of every shard, in shard order
+    pub shard_digests: Vec<u64>,
+}
+
+impl ShardManifest {
+    /// Number of shards the manifest describes.
+    pub fn n_shards(&self) -> usize {
+        self.shard_digests.len()
+    }
+
+    /// Verify a local plan against the manifest; any mismatch — a
+    /// different K, different cuts, a different tensor ABI — fails
+    /// loudly, because replaying under the wrong plan would scatter
+    /// updates onto the wrong coordinates.
+    pub fn check(&self, plan: &ShardPlan) -> Result<()> {
+        if self.plan_digest != plan.digest() {
+            bail!(
+                "ShardManifest: plan digest {:#018x} does not match the manifest's {:#018x} — \
+                 this is not the shard plan the trajectory was published under",
+                plan.digest(),
+                self.plan_digest
+            );
+        }
+        if self.shard_digests != plan.shard_digests {
+            bail!(
+                "ShardManifest: per-shard digests disagree with the plan despite a matching \
+                 plan digest — corrupt manifest"
+            );
+        }
+        Ok(())
+    }
+
+    /// Write the manifest to disk (magic `"MZT3"`; see the type docs for
+    /// the layout).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"MZT3")?;
+        f.write_all(&self.plan_digest.to_le_bytes())?;
+        f.write_all(&(self.shard_digests.len() as u32).to_le_bytes())?;
+        for &d in &self.shard_digests {
+            f.write_all(&d.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Read a manifest written by [`ShardManifest::save`].
+    pub fn load(path: &Path) -> std::io::Result<ShardManifest> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"MZT3" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad shard manifest magic",
+            ));
+        }
+        let mut u64b = [0u8; 8];
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u64b)?;
+        let plan_digest = u64::from_le_bytes(u64b);
+        f.read_exact(&mut u32b)?;
+        let n = u32::from_le_bytes(u32b) as usize;
+        // the count is untrusted input: cap the pre-allocation so a
+        // corrupt header fails on the short read below, not on a huge
+        // up-front allocation
+        let mut shard_digests = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            f.read_exact(&mut u64b)?;
+            shard_digests.push(u64::from_le_bytes(u64b));
+        }
+        Ok(ShardManifest { plan_digest, shard_digests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+
+    fn store(lens: &[usize]) -> ParamStore {
+        let specs = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| TensorDesc {
+                name: format!("t{}", i),
+                shape: vec![n],
+                dtype: "f32".into(),
+            })
+            .collect();
+        let mut p = ParamStore::from_specs(specs);
+        p.init(5);
+        p
+    }
+
+    /// every plan must cover [0, total) contiguously, shard segments must
+    /// reconstruct the shard's range exactly, and segments must respect
+    /// tensor bounds
+    fn assert_plan_covers(plan: &ShardPlan, lens: &[usize]) {
+        let total: u64 = lens.iter().map(|&l| l as u64).sum();
+        assert_eq!(plan.total(), total);
+        assert_eq!(plan.shards().first().map(|s| s.start), Some(0));
+        assert_eq!(plan.shards().last().map(|s| s.end), Some(total));
+        for w in plan.shards().windows(2) {
+            assert_eq!(w[0].end, w[1].start, "shards contiguous");
+        }
+        for s in plan.shards() {
+            let seg_total: u64 = s.segments.iter().map(|g| g.len() as u64).sum();
+            assert_eq!(seg_total, s.len(), "segments reconstruct the shard range");
+            for g in &s.segments {
+                assert!(g.lo < g.hi && g.hi <= lens[g.tensor]);
+            }
+        }
+    }
+
+    #[test]
+    fn plans_cover_the_space_for_many_shapes_and_counts() {
+        for lens in [vec![10], vec![64, 68, 72, 100], vec![3, 3, 3], vec![1000, 7, 2000]] {
+            let p = store(&lens);
+            for k in [1usize, 2, 3, 4, 8] {
+                let plan = ShardPlan::new(&p, k).unwrap();
+                assert_eq!(plan.n_shards(), k);
+                assert_plan_covers(&plan, &lens);
+            }
+        }
+    }
+
+    #[test]
+    fn cuts_snap_to_nearby_tensor_boundaries() {
+        // total 200, K=2: ideal cut 100, tensor boundary at 90 is within
+        // the quarter-width tolerance (25) -> shard 0 is exactly tensor 0
+        let p = store(&[90, 110]);
+        let plan = ShardPlan::new(&p, 2).unwrap();
+        assert_eq!(plan.shard(0).end, 90);
+        assert_eq!(plan.shard(0).segments, vec![Segment { tensor: 0, lo: 0, hi: 90 }]);
+        assert_eq!(plan.shard(1).segments, vec![Segment { tensor: 1, lo: 0, hi: 110 }]);
+    }
+
+    #[test]
+    fn straddling_tensors_are_coordinate_split_at_the_ideal_cut() {
+        // one tensor, no interior boundary to snap to: the tensor splits
+        let p = store(&[200]);
+        let plan = ShardPlan::new(&p, 2).unwrap();
+        assert_eq!(plan.shard(0).segments, vec![Segment { tensor: 0, lo: 0, hi: 100 }]);
+        assert_eq!(plan.shard(1).segments, vec![Segment { tensor: 0, lo: 100, hi: 200 }]);
+        // a far-away boundary does NOT snap: total 1000, ideal 500,
+        // boundary at 100 is outside tol 125 -> coordinate split at 500
+        let p = store(&[100, 900]);
+        let plan = ShardPlan::new(&p, 2).unwrap();
+        assert_eq!(plan.shard(0).end, 500);
+        assert_eq!(
+            plan.shard(0).segments,
+            vec![Segment { tensor: 0, lo: 0, hi: 100 }, Segment { tensor: 1, lo: 0, hi: 400 }]
+        );
+    }
+
+    #[test]
+    fn zero_tensor_store_plans_to_empty_shards() {
+        let p = ParamStore::from_specs(Vec::new());
+        let plan = ShardPlan::new(&p, 3).unwrap();
+        assert_eq!(plan.n_shards(), 3);
+        assert_eq!(plan.total(), 0);
+        assert!(plan.shards().iter().all(|s| s.is_empty() && s.segments.is_empty()));
+        let sharded = ShardedStore::scatter(&plan, &p).unwrap();
+        assert_eq!(sharded.n_values(), 0);
+    }
+
+    #[test]
+    fn degenerate_plans_get_empty_trailing_shards_and_zero_shards_error() {
+        let p = store(&[3]);
+        let plan = ShardPlan::new(&p, 8).unwrap();
+        assert_eq!(plan.n_shards(), 8);
+        let held: u64 = plan.shards().iter().map(|s| s.len()).sum();
+        assert_eq!(held, 3);
+        assert!(plan.shards().iter().any(|s| s.is_empty()));
+        // empty shards still scatter/gather
+        let sharded = ShardedStore::scatter(&plan, &p).unwrap();
+        let mut q = store(&[3]);
+        q.data[0].iter_mut().for_each(|x| *x = f32::NAN);
+        sharded.gather_into(&mut q).unwrap();
+        assert_eq!(p.data, q.data);
+        assert!(ShardPlan::new(&p, 0).is_err());
+    }
+
+    #[test]
+    fn digest_is_structure_and_abi_sensitive() {
+        let p = store(&[100, 100]);
+        let a = ShardPlan::new(&p, 2).unwrap();
+        let b = ShardPlan::new(&p, 4).unwrap();
+        assert_ne!(a.digest(), b.digest(), "different K");
+        assert_eq!(a.digest(), ShardPlan::new(&p, 2).unwrap().digest(), "deterministic");
+        let q = store(&[100, 101]);
+        assert_ne!(a.digest(), ShardPlan::new(&q, 2).unwrap().digest(), "different lengths");
+        // same shapes, different names -> different ABI -> different digest
+        let mut specs = p.specs.clone();
+        specs[1].name = "renamed".into();
+        let r = ParamStore::from_specs(specs);
+        assert_ne!(a.digest(), ShardPlan::new(&r, 2).unwrap().digest(), "different names");
+        // per-shard digests are pairwise distinct for non-degenerate plans
+        assert_ne!(a.shard_digest(0), a.shard_digest(1));
+    }
+
+    #[test]
+    fn validate_rejects_mismatched_stores_and_indices_resolve_names() {
+        let p = store(&[50, 60]);
+        let plan = ShardPlan::new(&p, 2).unwrap();
+        assert!(plan.validate(&p).is_ok());
+        let err = plan.validate(&store(&[50])).unwrap_err();
+        assert!(err.to_string().contains("tensors"), "{}", err);
+        let err = plan.validate(&store(&[50, 61])).unwrap_err();
+        assert!(err.to_string().contains("coordinates"), "{}", err);
+        assert_eq!(plan.indices_of(&["t1".into(), "t0".into()]).unwrap(), vec![1, 0]);
+        assert!(plan.indices_of(&["nope".into()]).is_err());
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip_is_bitwise() {
+        let p = store(&[300, 7, 129]);
+        for k in [1usize, 2, 4] {
+            let plan = ShardPlan::new(&p, k).unwrap();
+            let sharded = ShardedStore::scatter(&plan, &p).unwrap();
+            assert_eq!(sharded.n_values(), p.n_params());
+            let mut q = store(&[300, 7, 129]);
+            q.data.iter_mut().flatten().for_each(|x| *x = -9.0);
+            sharded.gather_into(&mut q).unwrap();
+            for (a, b) in p.data.iter().flatten().zip(q.data.iter().flatten()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // scatter refuses a mismatched store
+            assert!(ShardedStore::scatter(&plan, &store(&[300, 7])).is_err());
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_guards_plan_identity() {
+        let p = store(&[128, 64]);
+        let plan = ShardPlan::new(&p, 3).unwrap();
+        let manifest = plan.manifest();
+        assert_eq!(manifest.n_shards(), 3);
+        assert!(manifest.check(&plan).is_ok());
+        let err = manifest.check(&ShardPlan::new(&p, 2).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("plan digest"), "{}", err);
+
+        let path = std::env::temp_dir().join("mezo_shard_manifest_test.mzt3");
+        manifest.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], b"MZT3");
+        let back = ShardManifest::load(&path).unwrap();
+        assert_eq!(back, manifest);
+        std::fs::remove_file(&path).ok();
+        // a corrupt magic is rejected
+        let bad = std::env::temp_dir().join("mezo_shard_manifest_bad.mzt3");
+        std::fs::write(&bad, b"MZTXxxxxxxxx").unwrap();
+        assert!(ShardManifest::load(&bad).is_err());
+        std::fs::remove_file(&bad).ok();
+    }
+}

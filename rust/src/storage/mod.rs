@@ -9,6 +9,7 @@
 use crate::model::params::ParamStore;
 use crate::optim::mezo::StepRecord;
 use crate::rng::GaussianStream;
+use crate::shard::{trainable_flags, ShardManifest, ShardedStore};
 use crate::zkernel::{SparseMask, ZEngine};
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
@@ -237,6 +238,167 @@ impl Trajectory {
         Ok(())
     }
 
+    /// Re-apply the whole log onto a sharded copy of the parameters: for
+    /// every shard, every record's update runs over just that shard's
+    /// segments, reading z at the tensors' global counters — so each
+    /// shard's buffers end up bitwise the slice of what dense
+    /// [`Trajectory::replay`] produces, and a
+    /// [`ShardedStore::gather_into`] afterwards is `to_bits()`-identical
+    /// to the dense replay (pinned in `tests/properties.rs`). The MZT3
+    /// `manifest` must match the store's plan — replaying under a
+    /// different partition would scatter updates onto the wrong
+    /// coordinates, so mismatch fails loudly, as does a sparse
+    /// (mask-digest-carrying) log.
+    pub fn replay_sharded(
+        &self,
+        store: &mut ShardedStore,
+        manifest: &ShardManifest,
+    ) -> Result<()> {
+        self.replay_sharded_with(&ZEngine::default(), store, manifest)
+    }
+
+    /// As [`Trajectory::replay_sharded`], on an explicit kernel engine.
+    /// Validation (manifest digest, trainable names) runs once, not once
+    /// per shard.
+    pub fn replay_sharded_with(
+        &self,
+        engine: &ZEngine,
+        store: &mut ShardedStore,
+        manifest: &ShardManifest,
+    ) -> Result<()> {
+        let trainable = self.check_sharded(store, manifest)?;
+        for k in 0..store.plan().n_shards() {
+            self.replay_shard_unchecked(engine, store, &trainable, k);
+        }
+        Ok(())
+    }
+
+    /// One worker's share of [`Trajectory::replay_sharded`]: replay the
+    /// log over shard `k`'s segments only. Safe to run per shard on
+    /// separate machines — shards are disjoint and each reads z from the
+    /// log's seeds alone.
+    pub fn replay_shard_with(
+        &self,
+        engine: &ZEngine,
+        store: &mut ShardedStore,
+        manifest: &ShardManifest,
+        k: usize,
+    ) -> Result<()> {
+        let trainable = self.check_sharded(store, manifest)?;
+        self.replay_shard_unchecked(engine, store, &trainable, k);
+        Ok(())
+    }
+
+    /// Guard-free body of the per-shard sequential replay: callers have
+    /// already validated the manifest and resolved the trainable flags.
+    fn replay_shard_unchecked(
+        &self,
+        engine: &ZEngine,
+        store: &mut ShardedStore,
+        trainable: &[bool],
+        k: usize,
+    ) {
+        let offsets: Vec<u64> = store.plan().offsets().to_vec();
+        for r in &self.records {
+            let stream = GaussianStream::new(r.seed);
+            for (seg, buf) in store.segments_mut(k) {
+                if !trainable[seg.tensor] {
+                    continue;
+                }
+                // buf IS the [lo, hi) slice, so the counter base advances
+                // by lo — the same alignment the in-place shard kernels use
+                engine.axpy_z(
+                    stream,
+                    offsets[seg.tensor] + seg.lo as u64,
+                    buf,
+                    -(r.lr * r.pgrad),
+                );
+            }
+        }
+    }
+
+    /// Seed-batched flavor of [`Trajectory::replay_sharded`]: consecutive
+    /// batches of `seeds_per_step` records apply as ONE fused pass per
+    /// shard segment ([`ZEngine::multi_axpy_z`]). Bitwise equal to the
+    /// sequential sharded replay for any batch size, with the same
+    /// integrity guards as [`Trajectory::replay_batched`].
+    pub fn replay_sharded_batched(
+        &self,
+        store: &mut ShardedStore,
+        manifest: &ShardManifest,
+        seeds_per_step: usize,
+    ) -> Result<()> {
+        self.replay_sharded_batched_with(&ZEngine::default(), store, manifest, seeds_per_step)
+    }
+
+    /// As [`Trajectory::replay_sharded_batched`], on an explicit engine.
+    /// Validation (manifest digest, trainable names, batch divisibility)
+    /// and the per-batch coefficient vectors are computed once, not once
+    /// per shard.
+    pub fn replay_sharded_batched_with(
+        &self,
+        engine: &ZEngine,
+        store: &mut ShardedStore,
+        manifest: &ShardManifest,
+        seeds_per_step: usize,
+    ) -> Result<()> {
+        let trainable = self.check_sharded(store, manifest)?;
+        self.check_batches(seeds_per_step)?;
+        let batches = self.batched_coeffs(seeds_per_step);
+        for k in 0..store.plan().n_shards() {
+            replay_shard_batched_unchecked(engine, store, &trainable, k, &batches);
+        }
+        Ok(())
+    }
+
+    /// One worker's share of [`Trajectory::replay_sharded_batched`].
+    pub fn replay_shard_batched_with(
+        &self,
+        engine: &ZEngine,
+        store: &mut ShardedStore,
+        manifest: &ShardManifest,
+        k: usize,
+        seeds_per_step: usize,
+    ) -> Result<()> {
+        let trainable = self.check_sharded(store, manifest)?;
+        self.check_batches(seeds_per_step)?;
+        let batches = self.batched_coeffs(seeds_per_step);
+        replay_shard_batched_unchecked(engine, store, &trainable, k, &batches);
+        Ok(())
+    }
+
+    /// Per-seed-batch `(stream, −lr·pgrad)` coefficient vectors — shared
+    /// by every shard of a batched sharded replay, so they are built once
+    /// per replay, not once per shard.
+    fn batched_coeffs(&self, seeds_per_step: usize) -> Vec<Vec<(GaussianStream, f32)>> {
+        self.records
+            .chunks(seeds_per_step)
+            .map(|batch| {
+                batch
+                    .iter()
+                    .map(|r| (GaussianStream::new(r.seed), -(r.lr * r.pgrad)))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Shared guard of the sharded replay paths: dense logs only, the
+    /// manifest must hash-match the store's plan, and every trainable
+    /// name must resolve in the plan. Returns the per-tensor trainable
+    /// flags the segment walks filter by.
+    fn check_sharded(&self, store: &ShardedStore, manifest: &ShardManifest) -> Result<Vec<bool>> {
+        if let Some(d) = self.mask_digest {
+            bail!(
+                "replay_sharded: this log was recorded under a sparse mask (digest {:#x}); \
+                 sharded replay covers dense logs — use replay_masked on a dense store",
+                d
+            );
+        }
+        manifest.check(store.plan())?;
+        let idxs = store.plan().indices_of(&self.trainable)?;
+        Ok(trainable_flags(store.plan().n_tensors(), &idxs))
+    }
+
     /// The seed-batch integrity guard shared by the batched replays.
     fn check_batches(&self, seeds_per_step: usize) -> Result<()> {
         if seeds_per_step == 0 {
@@ -327,6 +489,28 @@ impl Trajectory {
             records.push(StepRecord { seed, pgrad, lr });
         }
         Ok(Trajectory { trainable, records, mask_digest })
+    }
+}
+
+/// Guard-free body of the per-shard seed-batched replay: one fused
+/// [`ZEngine::multi_axpy_z`] pass per batch per trainable segment of
+/// shard `k`. Callers have validated the manifest, resolved the
+/// trainable flags, and built the per-batch coefficients.
+fn replay_shard_batched_unchecked(
+    engine: &ZEngine,
+    store: &mut ShardedStore,
+    trainable: &[bool],
+    k: usize,
+    batches: &[Vec<(GaussianStream, f32)>],
+) {
+    let offsets: Vec<u64> = store.plan().offsets().to_vec();
+    for zs in batches {
+        for (seg, buf) in store.segments_mut(k) {
+            if !trainable[seg.tensor] {
+                continue;
+            }
+            engine.multi_axpy_z(zs, offsets[seg.tensor] + seg.lo as u64, buf);
+        }
     }
 }
 
@@ -499,6 +683,99 @@ mod tests {
         let dense = Trajectory::from_run(vec!["w1".into(), "w2".into()], &opt.history);
         let err = dense.replay_masked(&mut toy(), &mask).unwrap_err();
         assert!(err.to_string().contains("dense"), "{}", err);
+    }
+
+    #[test]
+    fn sharded_replay_gathers_to_the_dense_replay_bitwise() {
+        use crate::shard::{ShardPlan, ShardedStore};
+        // a tensor big enough that the engine actually fans out, plus a
+        // small one so a shard cut can land mid-tensor
+        let mk = || {
+            let mut p = ParamStore::from_specs(vec![
+                TensorDesc { name: "w1".into(), shape: vec![70_000], dtype: "f32".into() },
+                TensorDesc { name: "w2".into(), shape: vec![123], dtype: "f32".into() },
+            ]);
+            p.init(9);
+            p
+        };
+        let mut traj = Trajectory::new(vec!["w1".into(), "w2".into()]);
+        for i in 0..9u64 {
+            traj.records.push(StepRecord {
+                seed: 70 + i,
+                pgrad: 0.05 * i as f32 - 0.2,
+                lr: 1e-3,
+            });
+        }
+        let init = mk();
+        let mut dense = mk();
+        traj.replay_with(&ZEngine::with_threads(2), &mut dense);
+        for k in [1usize, 2, 4] {
+            let plan = ShardPlan::new(&init, k).unwrap();
+            let manifest = plan.manifest();
+            for batched in [false, true] {
+                let mut sharded = ShardedStore::scatter(&plan, &init).unwrap();
+                if batched {
+                    traj.replay_sharded_batched_with(
+                        &ZEngine::with_threads(2),
+                        &mut sharded,
+                        &manifest,
+                        3,
+                    )
+                    .unwrap();
+                } else {
+                    traj.replay_sharded_with(&ZEngine::with_threads(2), &mut sharded, &manifest)
+                        .unwrap();
+                }
+                let mut gathered = mk();
+                sharded.gather_into(&mut gathered).unwrap();
+                for (a, b) in dense.data.iter().flatten().zip(gathered.data.iter().flatten()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "k={} batched={}", k, batched);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_replay_guards_manifest_log_kind_and_names() {
+        use crate::shard::{ShardPlan, ShardedStore};
+        let p = toy();
+        let plan = ShardPlan::new(&p, 2).unwrap();
+        let mut traj = Trajectory::new(vec!["w1".into()]);
+        traj.records.push(StepRecord { seed: 3, pgrad: 0.2, lr: 1e-3 });
+        // a manifest from a DIFFERENT plan fails loudly
+        let wrong = ShardPlan::new(&p, 3).unwrap().manifest();
+        let mut sharded = ShardedStore::scatter(&plan, &p).unwrap();
+        let err = traj.replay_sharded(&mut sharded, &wrong).unwrap_err();
+        assert!(err.to_string().contains("plan digest"), "{}", err);
+        let err = traj.replay_sharded_batched(&mut sharded, &wrong, 1).unwrap_err();
+        assert!(err.to_string().contains("plan digest"), "{}", err);
+        // a sparse log is refused
+        let sparse = Trajectory::from_run(vec!["w1".into()], &traj.records)
+            .with_mask_digest(0xBEEF);
+        let err = sparse.replay_sharded(&mut sharded, &plan.manifest()).unwrap_err();
+        assert!(err.to_string().contains("sparse mask"), "{}", err);
+        // an unknown trainable name is refused
+        let alien = Trajectory::from_run(vec!["nope".into()], &traj.records);
+        let err = alien.replay_sharded(&mut sharded, &plan.manifest()).unwrap_err();
+        assert!(err.to_string().contains("no tensor named"), "{}", err);
+        // the matching manifest replays fine, and only w1 moves
+        let before = sharded.clone();
+        traj.replay_sharded(&mut sharded, &plan.manifest()).unwrap();
+        let mut moved = false;
+        for k in 0..plan.n_shards() {
+            for (si, seg) in plan.shard(k).segments.iter().enumerate() {
+                let (a, b) = (before.segment(k, si), sharded.segment(k, si));
+                if seg.tensor == 0 {
+                    moved |= a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits());
+                } else {
+                    assert!(
+                        a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "non-trainable tensor moved"
+                    );
+                }
+            }
+        }
+        assert!(moved, "trainable tensor never moved");
     }
 
     #[test]

@@ -65,6 +65,13 @@
 //! parameter buffer at chunk-boundary coordinates — deterministic at any
 //! thread count for the same reason the dense kernels are.
 //!
+//! The sharded tier (`crate::shard`) adds `_shard` variants of the same
+//! six kernels ([`ZEngine::axpy_z_shard`] and friends) that run the dense
+//! kernel over a `[lo, hi)` sub-range of a tensor with the z counter
+//! advanced by `lo` — each shard's output is bitwise the slice of the
+//! dense kernel's, which is what lets K workers each own one shard of a
+//! MeZO pass and still land on the dense bits.
+//!
 //! Every kernel is bit-for-bit equivalent to the scalar per-coordinate
 //! reference (same per-coordinate operation order as the seed code); the
 //! tests in this module enforce that across thread counts 1/2/8 and across
@@ -707,6 +714,123 @@ impl ZEngine {
             kernels::masked_multi_axpy_serial(zs, offset, ci, base, chunk);
         });
     }
+
+    // ---------------- shard (range-scoped) kernels -----------------------
+    //
+    // Each takes a tensor-local coordinate range [lo, hi) — one shard
+    // segment of the tensor (see `crate::shard::ShardPlan`) — and runs
+    // the dense kernel over exactly that sub-slice while reading z at the
+    // tensor's global counters (`offset + j` for tensor coordinate j).
+    // Every dense kernel is pure per coordinate in its own global index,
+    // so the range kernel's output is bitwise the [lo, hi) slice of the
+    // dense kernel's — the same argument that makes thread-chunking
+    // invariant, promoted to an API: a shard worker can run its slice of
+    // a pass independently and land on exactly the dense bits (pinned in
+    // zkernel/tests.rs and tests/properties.rs). `offset` is the TENSOR's
+    // global flat offset, as for the dense kernels; the range advance
+    // happens inside.
+
+    /// Shard-scoped [`ZEngine::axpy_z`]: θ[j] += s · z(offset + j) for
+    /// j ∈ [lo, hi) only — the shard-local perturb / restore / replay
+    /// primitive.
+    pub fn axpy_z_shard(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        lo: usize,
+        hi: usize,
+        theta: &mut [f32],
+        s: f32,
+    ) {
+        check_shard_range(lo, hi, theta.len());
+        self.axpy_z(stream, offset + lo as u64, &mut theta[lo..hi], s);
+    }
+
+    /// Shard-scoped [`ZEngine::perturb_into`]: out[j] = θ[j] + s ·
+    /// z(offset + j) for j ∈ [lo, hi); coordinates outside the range are
+    /// NOT written.
+    #[allow(clippy::too_many_arguments)]
+    pub fn perturb_into_shard(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        lo: usize,
+        hi: usize,
+        theta: &[f32],
+        s: f32,
+        out: &mut [f32],
+    ) {
+        check_shard_range(lo, hi, theta.len());
+        check_shard_range(lo, hi, out.len());
+        self.perturb_into(stream, offset + lo as u64, &theta[lo..hi], s, &mut out[lo..hi]);
+    }
+
+    /// Shard-scoped [`ZEngine::sgd_update`]: the MeZO-SGD update over
+    /// j ∈ [lo, hi) only.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgd_update_shard(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        lo: usize,
+        hi: usize,
+        theta: &mut [f32],
+        lr: f32,
+        g: f32,
+        wd: f32,
+    ) {
+        check_shard_range(lo, hi, theta.len());
+        self.sgd_update(stream, offset + lo as u64, &mut theta[lo..hi], lr, g, wd);
+    }
+
+    /// Shard-scoped [`ZEngine::multi_sgd_update`]: all n-SPSA updates in
+    /// one pass over j ∈ [lo, hi) only.
+    #[allow(clippy::too_many_arguments)]
+    pub fn multi_sgd_update_shard(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        lo: usize,
+        hi: usize,
+        theta: &mut [f32],
+        lr: f32,
+        wd: f32,
+    ) {
+        check_shard_range(lo, hi, theta.len());
+        self.multi_sgd_update(zs, offset + lo as u64, &mut theta[lo..hi], lr, wd);
+    }
+
+    /// Shard-scoped [`ZEngine::fzoo_update`]: the FZOO batched one-sided
+    /// mean update over j ∈ [lo, hi) only.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fzoo_update_shard(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        lo: usize,
+        hi: usize,
+        theta: &mut [f32],
+        lr: f32,
+        wd: f32,
+    ) {
+        check_shard_range(lo, hi, theta.len());
+        self.fzoo_update(zs, offset + lo as u64, &mut theta[lo..hi], lr, wd);
+    }
+
+    /// Shard-scoped [`ZEngine::multi_axpy_z`]: θ[j] += Σᵢ sᵢ·zᵢ(offset +
+    /// j) for j ∈ [lo, hi) — the shard-local seed-batched replay
+    /// primitive.
+    pub fn multi_axpy_z_shard(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        lo: usize,
+        hi: usize,
+        theta: &mut [f32],
+    ) {
+        check_shard_range(lo, hi, theta.len());
+        self.multi_axpy_z(zs, offset + lo as u64, &mut theta[lo..hi]);
+    }
 }
 
 /// Chunk a masked index list into at most `threads` contiguous ranges of
@@ -732,6 +856,19 @@ fn mask_bounds(n: usize, threads: usize, min_per_thread: usize) -> Vec<(usize, u
         a = b;
     }
     out
+}
+
+/// Shard kernels address a [lo, hi) sub-range of a tensor; a malformed
+/// range would silently read z at the wrong counters, so fail fast.
+#[inline]
+fn check_shard_range(lo: usize, hi: usize, len: usize) {
+    assert!(
+        lo <= hi && hi <= len,
+        "zkernel: shard range {}..{} invalid for tensor of length {}",
+        lo,
+        hi,
+        len
+    );
 }
 
 /// Masked kernels index θ directly; an out-of-range index would corrupt

@@ -523,6 +523,96 @@ fn ranges_are_block_aligned_and_cover() {
     }
 }
 
+// ---------------- shard (range-scoped) kernels --------------------------
+
+#[test]
+fn shard_kernels_produce_bitwise_slices_of_the_dense_kernels() {
+    // the sharding contract at unit level: running a kernel over [lo, hi)
+    // with the counter advanced by lo equals the dense kernel's [lo, hi)
+    // slice, for every kernel, at block-misaligned cuts, at threads 1/2/8
+    let zs: Vec<(GaussianStream, f32)> = (0..3)
+        .map(|k| (GaussianStream::new(800 + k), 0.3 - 0.25 * k as f32))
+        .collect();
+    let (stream, g) = zs[0];
+    let (lr, wd, s, off) = (1e-2f32, 1e-4f32, 2e-3f32, 29u64);
+    for &len in &[BLOCK + 3, 70_003] {
+        let init = randomized(len, 41);
+        // cuts misaligned with BLOCK and with thread chunking
+        let mut cuts = vec![0usize, 7, BLOCK - 1, len / 2 + 3, len];
+        cuts.sort_unstable();
+        for &t in &THREADS {
+            let eng = ZEngine::with_threads(t);
+            // dense references
+            let mut d_axpy = init.clone();
+            eng.axpy_z(stream, off, &mut d_axpy, s);
+            let mut d_pert = vec![0.0f32; len];
+            eng.perturb_into(stream, off, &init, s, &mut d_pert);
+            let mut d_sgd = init.clone();
+            eng.sgd_update(stream, off, &mut d_sgd, lr, g, wd);
+            let mut d_msgd = init.clone();
+            eng.multi_sgd_update(&zs, off, &mut d_msgd, lr, wd);
+            let mut d_fzoo = init.clone();
+            eng.fzoo_update(&zs, off, &mut d_fzoo, lr, wd);
+            let mut d_maxpy = init.clone();
+            eng.multi_axpy_z(&zs, off, &mut d_maxpy);
+            // shard-by-shard runs over the SAME full buffers
+            let mut s_axpy = init.clone();
+            let mut s_pert = vec![0.0f32; len];
+            let mut s_sgd = init.clone();
+            let mut s_msgd = init.clone();
+            let mut s_fzoo = init.clone();
+            let mut s_maxpy = init.clone();
+            for w in cuts.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                eng.axpy_z_shard(stream, off, lo, hi, &mut s_axpy, s);
+                eng.perturb_into_shard(stream, off, lo, hi, &init, s, &mut s_pert);
+                eng.sgd_update_shard(stream, off, lo, hi, &mut s_sgd, lr, g, wd);
+                eng.multi_sgd_update_shard(&zs, off, lo, hi, &mut s_msgd, lr, wd);
+                eng.fzoo_update_shard(&zs, off, lo, hi, &mut s_fzoo, lr, wd);
+                eng.multi_axpy_z_shard(&zs, off, lo, hi, &mut s_maxpy);
+            }
+            assert_bits_eq(&s_axpy, &d_axpy, &format!("shard axpy len={} t={}", len, t));
+            assert_bits_eq(&s_pert, &d_pert, &format!("shard perturb len={} t={}", len, t));
+            assert_bits_eq(&s_sgd, &d_sgd, &format!("shard sgd len={} t={}", len, t));
+            assert_bits_eq(&s_msgd, &d_msgd, &format!("shard multi_sgd len={} t={}", len, t));
+            assert_bits_eq(&s_fzoo, &d_fzoo, &format!("shard fzoo len={} t={}", len, t));
+            assert_bits_eq(&s_maxpy, &d_maxpy, &format!("shard multi_axpy len={} t={}", len, t));
+        }
+    }
+}
+
+#[test]
+fn shard_kernels_touch_only_their_range() {
+    let stream = GaussianStream::new(94);
+    let len = 2 * BLOCK + 11;
+    let init = randomized(len, 42);
+    let (lo, hi) = (37usize, BLOCK + 5);
+    let mut theta = init.clone();
+    ZEngine::with_threads(4).axpy_z_shard(stream, 3, lo, hi, &mut theta, 1e-3);
+    let mut moved = 0usize;
+    for j in 0..len {
+        if j < lo || j >= hi {
+            assert_eq!(theta[j].to_bits(), init[j].to_bits(), "coord {} outside range moved", j);
+        } else {
+            moved += (theta[j].to_bits() != init[j].to_bits()) as usize;
+        }
+    }
+    // (a tiny z can leave an individual coordinate bit-identical; the
+    // range as a whole must move)
+    assert!(moved > (hi - lo) / 2, "only {} of {} in-range coords moved", moved, hi - lo);
+    // an empty range is a no-op
+    let mut noop = init.clone();
+    ZEngine::with_threads(4).axpy_z_shard(stream, 3, 5, 5, &mut noop, 1e-3);
+    assert_bits_eq(&noop, &init, "empty shard range");
+}
+
+#[test]
+#[should_panic(expected = "shard range")]
+fn shard_kernel_rejects_out_of_range() {
+    let mut theta = vec![0.0f32; 8];
+    ZEngine::with_threads(1).axpy_z_shard(GaussianStream::new(1), 0, 4, 9, &mut theta, 1.0);
+}
+
 // ---------------- persistent worker pool lifecycle ----------------------
 
 #[test]

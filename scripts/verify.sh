@@ -40,6 +40,10 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 for t in 1 2 8; do
     echo "== determinism matrix: MEZO_THREADS=$t =="
     MEZO_THREADS=$t cargo test -q --release --lib zkernel
+    # shard bit-identity: plan/scatter/gather unit tests plus every
+    # *shard* optimizer/storage test, so shard-determinism regressions on
+    # the ZEngine::default() paths fail the gate
+    MEZO_THREADS=$t cargo test -q --release --lib shard
     MEZO_THREADS=$t cargo test -q --release --test properties
 done
 echo "verify: OK"

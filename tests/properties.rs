@@ -915,6 +915,296 @@ fn prop_pool_optimizer_runs_match_scope_runs_and_replay_bitwise() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Sharded parameter store (ISSUE 5). A ShardPlan partitions the global
+// coordinate space; every shard-scoped pass reads z at the same global
+// counters as the dense kernels, so shard-by-shard execution must be
+// bitwise the dense run: shard kernels over a partition equal the dense
+// kernel, gathering a ShardedStore after K-way sharded replay equals
+// dense Trajectory::replay, and shard-scoped optimizer steps equal dense
+// steps — for shard counts 1/2/4 crossed with threads 1/2/8 (and the
+// whole file re-runs under MEZO_THREADS=1/2/8 via scripts/verify.sh).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_shard_kernel_partitions_equal_the_dense_kernels_bitwise() {
+    forall(
+        20,
+        41,
+        |rng| {
+            let len = match rng.below(3) {
+                0 => rng.below(300) + 2,        // sub-block
+                1 => rng.below(3000) + 257,     // several blocks, unaligned
+                _ => 70_000 + rng.below(7),     // threads actually fan out
+            };
+            let n_cuts = rng.below(4); // 0..=3 interior cuts
+            let cuts: Vec<usize> = (0..n_cuts).map(|_| rng.below(len)).collect();
+            (len, cuts, rng.next_u64(), rng.below(900) as u64, rng.below(3) + 1)
+        },
+        |(len, cuts, seed, offset, n_seeds)| {
+            let (len, offset) = (*len, *offset);
+            let mut bounds = vec![0usize, len];
+            bounds.extend(cuts.iter().copied());
+            bounds.sort_unstable();
+            let mut init_rng = Pcg::new(seed ^ 0x55);
+            let init: Vec<f32> = (0..len).map(|_| init_rng.normal_f32(0.0, 1.0)).collect();
+            let zs: Vec<(GaussianStream, f32)> = (0..*n_seeds)
+                .map(|k| (GaussianStream::new(seed ^ (0xC0 + k as u64)), 0.3 - 0.2 * k as f32))
+                .collect();
+            let (stream, g) = zs[0];
+            let (lr, wd, s) = (1e-2f32, 1e-4f32, 2e-3f32);
+            for threads in [1usize, 2, 8] {
+                let eng = mezo::zkernel::ZEngine::with_threads(threads);
+                // dense references
+                let mut d_axpy = init.clone();
+                eng.axpy_z(stream, offset, &mut d_axpy, s);
+                let mut d_sgd = init.clone();
+                eng.sgd_update(stream, offset, &mut d_sgd, lr, g, wd);
+                let mut d_msgd = init.clone();
+                eng.multi_sgd_update(&zs, offset, &mut d_msgd, lr, wd);
+                let mut d_fzoo = init.clone();
+                eng.fzoo_update(&zs, offset, &mut d_fzoo, lr, wd);
+                let mut d_maxpy = init.clone();
+                eng.multi_axpy_z(&zs, offset, &mut d_maxpy);
+                let mut d_pert = vec![0.0f32; len];
+                eng.perturb_into(stream, offset, &init, s, &mut d_pert);
+                // the same passes shard by shard over the random partition
+                let mut s_axpy = init.clone();
+                let mut s_sgd = init.clone();
+                let mut s_msgd = init.clone();
+                let mut s_fzoo = init.clone();
+                let mut s_maxpy = init.clone();
+                let mut s_pert = vec![0.0f32; len];
+                for w in bounds.windows(2) {
+                    let (lo, hi) = (w[0], w[1]);
+                    eng.axpy_z_shard(stream, offset, lo, hi, &mut s_axpy, s);
+                    eng.sgd_update_shard(stream, offset, lo, hi, &mut s_sgd, lr, g, wd);
+                    eng.multi_sgd_update_shard(&zs, offset, lo, hi, &mut s_msgd, lr, wd);
+                    eng.fzoo_update_shard(&zs, offset, lo, hi, &mut s_fzoo, lr, wd);
+                    eng.multi_axpy_z_shard(&zs, offset, lo, hi, &mut s_maxpy);
+                    eng.perturb_into_shard(stream, offset, lo, hi, &init, s, &mut s_pert);
+                }
+                for (name, got, want) in [
+                    ("axpy_z", &s_axpy, &d_axpy),
+                    ("sgd_update", &s_sgd, &d_sgd),
+                    ("multi_sgd_update", &s_msgd, &d_msgd),
+                    ("fzoo_update", &s_fzoo, &d_fzoo),
+                    ("multi_axpy_z", &s_maxpy, &d_maxpy),
+                    ("perturb_into", &s_pert, &d_pert),
+                ] {
+                    for (j, (a, b)) in got.iter().zip(want).enumerate() {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "{} t={} len={} cuts={:?} coord {}: {} vs {}",
+                                name, threads, len, bounds, j, a, b
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_replay_gathers_bitwise_to_dense_replay() {
+    // the ISSUE 5 acceptance: gather(K-way sharded replay) == dense
+    // replay, to_bits, for shards 1/2/4 at threads 1/2/8, sequential and
+    // seed-batched, with an MZT3 disk round-trip and a wrong-plan-digest
+    // error path
+    use mezo::shard::{ShardManifest, ShardPlan, ShardedStore};
+
+    forall(
+        8,
+        42,
+        |rng| {
+            let d1 = if rng.below(4) == 0 { 70_000 + rng.below(7) } else { rng.below(400) + 50 };
+            (rng.next_u64(), d1, rng.below(400) + 50, rng.below(3) + 1, rng.below(30) + 1)
+        },
+        |&(master, d1, d2, seeds_per_step, n_steps)| {
+            let specs = vec![
+                TensorDesc { name: "a".into(), shape: vec![d1], dtype: "f32".into() },
+                TensorDesc { name: "b".into(), shape: vec![d2], dtype: "f32".into() },
+            ];
+            let mk = || {
+                let mut p = ParamStore::from_specs(specs.clone());
+                p.init(master);
+                p
+            };
+            let mut traj = Trajectory::new(vec!["a".into(), "b".into()]);
+            let mut rng = Pcg::new(master ^ 0x66);
+            for _ in 0..n_steps * seeds_per_step {
+                traj.records.push(StepRecord {
+                    seed: rng.next_u64(),
+                    pgrad: rng.normal() as f32,
+                    lr: rng.next_f32() * 1e-2,
+                });
+            }
+            let init = mk();
+            let mut dense = mk();
+            traj.replay_with(&mezo::zkernel::ZEngine::with_threads(2), &mut dense);
+            for k in [1usize, 2, 4] {
+                let plan = ShardPlan::new(&init, k).map_err(|e| e.to_string())?;
+                // the manifest round-trips through disk before guarding
+                let path = std::env::temp_dir()
+                    .join(format!("mezo_prop_mzt3_{}_{}.bin", master, k));
+                plan.manifest().save(&path).map_err(|e| e.to_string())?;
+                let manifest = ShardManifest::load(&path).map_err(|e| e.to_string())?;
+                std::fs::remove_file(&path).ok();
+                ensure(manifest == plan.manifest(), "MZT3 roundtrip")?;
+                for threads in [1usize, 2, 8] {
+                    let eng = mezo::zkernel::ZEngine::with_threads(threads);
+                    for batched in [false, true] {
+                        let mut sharded =
+                            ShardedStore::scatter(&plan, &init).map_err(|e| e.to_string())?;
+                        if batched {
+                            traj.replay_sharded_batched_with(
+                                &eng,
+                                &mut sharded,
+                                &manifest,
+                                seeds_per_step,
+                            )
+                            .map_err(|e| e.to_string())?;
+                        } else {
+                            traj.replay_sharded_with(&eng, &mut sharded, &manifest)
+                                .map_err(|e| e.to_string())?;
+                        }
+                        let mut gathered = mk();
+                        sharded.gather_into(&mut gathered).map_err(|e| e.to_string())?;
+                        for (a, b) in
+                            dense.data.iter().flatten().zip(gathered.data.iter().flatten())
+                        {
+                            if a.to_bits() != b.to_bits() {
+                                return Err(format!(
+                                    "k={} t={} batched={}: {} vs {}",
+                                    k, threads, batched, a, b
+                                ));
+                            }
+                        }
+                    }
+                }
+                // wrong-plan digest: a manifest from a different partition
+                // must refuse loudly
+                let other = ShardPlan::new(&init, k + 1).map_err(|e| e.to_string())?;
+                let mut sharded =
+                    ShardedStore::scatter(&plan, &init).map_err(|e| e.to_string())?;
+                let err = traj
+                    .replay_sharded(&mut sharded, &other.manifest())
+                    .expect_err("mismatched plan must not replay");
+                ensure(
+                    err.to_string().contains("plan digest"),
+                    format!("unexpected error: {}", err),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_stepping_is_bitwise_dense_stepping() {
+    // shard-scoped optimizer steps (MezoSgd and Fzoo) equal the dense
+    // steps bit for bit: same history, same final θ, for shards 1/2/4 at
+    // threads 1/2/8
+    use mezo::optim::fzoo::{Fzoo, FzooConfig};
+    use mezo::optim::mezo::{MezoConfig, MezoSgd};
+    use mezo::shard::ShardPlan;
+    use mezo::zkernel::ZEngine;
+
+    fn quad(p: &ParamStore) -> f32 {
+        p.data.iter().flatten().map(|&x| (x - 0.4) * (x - 0.4)).sum()
+    }
+
+    forall(
+        4,
+        43,
+        |rng| {
+            (
+                rng.next_u64(),
+                rng.below(400) + 50,
+                rng.below(400) + 50,
+                rng.below(2) == 0, // fzoo or mezo
+                rng.below(3) + 1,  // seeds per step
+            )
+        },
+        |&(master, d1, d2, use_fzoo, n)| {
+            let specs = vec![
+                TensorDesc { name: "a".into(), shape: vec![d1], dtype: "f32".into() },
+                TensorDesc { name: "b".into(), shape: vec![d2], dtype: "f32".into() },
+            ];
+            let mk = || {
+                let mut p = ParamStore::from_specs(specs.clone());
+                p.init(master);
+                p
+            };
+            let run = |engine: ZEngine,
+                       shard: Option<ShardPlan>|
+             -> Result<(Vec<StepRecord>, Vec<Vec<f32>>), String> {
+                let mut p = mk();
+                if use_fzoo {
+                    let cfg = FzooConfig {
+                        lr: 1e-2,
+                        eps: 1e-3,
+                        weight_decay: 1e-4,
+                        n,
+                        ..Default::default()
+                    };
+                    let mut opt = Fzoo::new(cfg, vec![0, 1], master ^ 0x88);
+                    opt.engine = engine;
+                    opt.shard = shard;
+                    for _ in 0..5 {
+                        opt.step(&mut p, |p| Ok(quad(p))).map_err(|e| e.to_string())?;
+                    }
+                    Ok((opt.history.clone(), p.data.clone()))
+                } else {
+                    let cfg = MezoConfig {
+                        lr: 1e-2,
+                        eps: 1e-3,
+                        weight_decay: 1e-4,
+                        n,
+                        ..Default::default()
+                    };
+                    let mut opt = MezoSgd::new(cfg, vec![0, 1], master ^ 0x88);
+                    opt.engine = engine;
+                    opt.shard = shard;
+                    for _ in 0..5 {
+                        opt.step(&mut p, |p| Ok(quad(p))).map_err(|e| e.to_string())?;
+                    }
+                    Ok((opt.history.clone(), p.data.clone()))
+                }
+            };
+            let (dense_hist, dense_data) = run(ZEngine::with_threads(2), None)?;
+            let init = mk();
+            for k in [1usize, 2, 4] {
+                let plan = ShardPlan::new(&init, k).map_err(|e| e.to_string())?;
+                for threads in [1usize, 2, 8] {
+                    let (hist, data) = run(ZEngine::with_threads(threads), Some(plan.clone()))?;
+                    ensure(hist.len() == dense_hist.len(), "history length diverged")?;
+                    for (a, b) in dense_hist.iter().zip(&hist) {
+                        ensure(a.seed == b.seed, format!("k={} t={}: seed", k, threads))?;
+                        ensure(
+                            a.pgrad.to_bits() == b.pgrad.to_bits(),
+                            format!("k={} t={}: pgrad", k, threads),
+                        )?;
+                        ensure(
+                            a.lr.to_bits() == b.lr.to_bits(),
+                            format!("k={} t={}: lr", k, threads),
+                        )?;
+                    }
+                    for (x, y) in dense_data.iter().flatten().zip(data.iter().flatten()) {
+                        ensure(
+                            x.to_bits() == y.to_bits(),
+                            format!("k={} t={}: {} vs {}", k, threads, x, y),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_fzoo_n1_without_variance_norm_is_the_one_sided_spsa_update() {
     // ISSUE 2 acceptance: with a single seed and variance normalization
