@@ -17,8 +17,11 @@
 //! `std::thread::scope` spawns (`pool_vs_spawn_bench`); a fifth measures
 //! shard-parallel replay and stepping at shard counts 1/2/4/8
 //! (`shard_scaling_bench` — per-shard critical path, scatter/gather
-//! overhead). Results land in BENCH_zkernel.json so the perf trajectory
-//! is tracked across PRs.
+//! overhead); a sixth sweeps the explicit SIMD dispatch tiers against the
+//! scalar tier (`simd_dispatch_bench`). Results land in
+//! BENCH_zkernel.json so the perf trajectory is tracked across PRs;
+//! `scripts/bench_summary.py` distills per-group medians into the small
+//! committed BENCH_summary.json.
 //!
 //! `MEZO_BENCH_QUICK=1` switches every group to a reduced size/rep grid —
 //! the CI bench-smoke mode, which records the trajectory artifact per PR
@@ -471,12 +474,87 @@ fn shard_scaling_bench() -> Vec<Json> {
     out
 }
 
+/// Explicit-SIMD tier sweep: every runnable tier (AVX-512 / AVX2 / NEON)
+/// against the Scalar tier — the PR-4 unrolled `block_apply8!` path — on
+/// the same engine, same thread count, same buffers. The tiers are pinned
+/// bit-identical in the property suite, so the delta here is pure
+/// instruction selection: vector width on the update bodies, plus the
+/// vectorized splitmix/u-stage of z generation on AVX-512. Measured per
+/// (tier, kernel, d, threads) for fill_z, axpy_z, sgd_update and the
+/// 4-seed fzoo_update (the batched-update body with the highest arithmetic
+/// density). Results land in BENCH_zkernel.json under "simd_dispatch";
+/// `scripts/bench_summary.py` distills them into the committed
+/// BENCH_summary.json trajectory.
+fn simd_dispatch_bench() -> Vec<Json> {
+    use mezo::zkernel::Tier;
+
+    let stream = GaussianStream::new(0x51D);
+    let (lr, g, wd, eps) = (1e-4f32, 0.37f32, 1e-5f32, 1e-3f32);
+    let zs: Vec<(GaussianStream, f32)> =
+        (0..4).map(|k| (GaussianStream::new(0x51D + 1 + k), 0.3 - 0.15 * k as f32)).collect();
+    let thread_grid: &[usize] = if quick() { &[1, 4] } else { &[1, 4, 8] };
+    let tiers: Vec<Tier> = Tier::available();
+    let mut out = Vec::new();
+    for &d in &sizes() {
+        let reps = reps_for(d);
+        let mut theta = vec![0.01f32; d];
+        let mut best = 0.0f64;
+        for &t in thread_grid {
+            let base = ZEngine::with_threads_simd(t, Tier::Scalar);
+            // warm the pool so one-time worker growth stays out of the reps
+            base.axpy_z(stream, 0, &mut theta, eps);
+            let sc_fill = time(reps, || base.fill_z(stream, 0, &mut theta));
+            let sc_axpy = time(reps, || base.axpy_z(stream, 0, &mut theta, eps));
+            let sc_sgd = time(reps, || base.sgd_update(stream, 0, &mut theta, lr, g, wd));
+            let sc_fzoo = time(reps, || base.fzoo_update(&zs, 0, &mut theta, lr, wd));
+            for &tier in &tiers {
+                let eng = ZEngine::with_threads_simd(t, tier);
+                for (kernel, scalar_s, tier_s) in [
+                    ("fill_z", sc_fill, time(reps, || eng.fill_z(stream, 0, &mut theta))),
+                    ("axpy_z", sc_axpy, time(reps, || eng.axpy_z(stream, 0, &mut theta, eps))),
+                    (
+                        "sgd_update",
+                        sc_sgd,
+                        time(reps, || eng.sgd_update(stream, 0, &mut theta, lr, g, wd)),
+                    ),
+                    (
+                        "fzoo_update_n4",
+                        sc_fzoo,
+                        time(reps, || eng.fzoo_update(&zs, 0, &mut theta, lr, wd)),
+                    ),
+                ] {
+                    if tier != Tier::Scalar && kernel != "fill_z" {
+                        best = best.max(scalar_s / tier_s);
+                    }
+                    out.push(obj(vec![
+                        ("kernel", Json::from(kernel)),
+                        ("tier", Json::from(tier.name())),
+                        ("d", Json::from(d as f64)),
+                        ("threads", Json::from(t as f64)),
+                        ("scalar_tier_s", Json::from(scalar_s)),
+                        ("tier_s", Json::from(tier_s)),
+                        ("tier_ns_per_coord", Json::from(tier_s * 1e9 / d as f64)),
+                        ("speedup_vs_scalar_tier", Json::from(scalar_s / tier_s)),
+                    ]));
+                }
+            }
+        }
+        let names: Vec<&str> = tiers.iter().map(|t| t.name()).collect();
+        println!(
+            "d={:>9} tiers={:?}: best SIMD update-body speedup vs scalar tier {:.2}x",
+            d, names, best
+        );
+    }
+    out
+}
+
 fn main() {
     let rows = zkernel_bench();
     let fzoo_rows = fzoo_vs_mezo_bench();
     let mask_rows = mask_density_bench();
     let pool_rows = pool_vs_spawn_bench();
     let shard_rows = shard_scaling_bench();
+    let simd_rows = simd_dispatch_bench();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let report = obj(vec![
         ("bench", Json::from("zkernel")),
@@ -487,6 +565,7 @@ fn main() {
         ("mask_density", Json::Arr(mask_rows)),
         ("pool_vs_spawn", Json::Arr(pool_rows)),
         ("shard_scaling", Json::Arr(shard_rows)),
+        ("simd_dispatch", Json::Arr(simd_rows)),
     ]);
     std::fs::write("BENCH_zkernel.json", report.to_string()).expect("write BENCH_zkernel.json");
     println!("wrote BENCH_zkernel.json ({} rows)", rows.len());

@@ -1,0 +1,39 @@
+// Probe the rustc version to gate the AVX-512 kernel bodies: the
+// `_mm512_*` intrinsics used by `rust/src/zkernel/simd.rs` and
+// `rust/src/rng.rs` were stabilized in Rust 1.89, and the build must keep
+// working on older toolchains — there the `mezo_avx512` cfg is simply not
+// set, the AVX-512 bodies are compiled out, and the AVX-512 SIMD tier
+// reports itself unsupported at runtime (forcing `MEZO_SIMD=avx512` then
+// fails loudly, by design).
+
+use std::process::Command;
+
+fn main() {
+    // Declare the custom cfg so `-D warnings` builds don't trip the
+    // `unexpected_cfgs` lint on toolchains where it is left unset.
+    println!("cargo::rustc-check-cfg=cfg(mezo_avx512)");
+    if rustc_minor().is_some_and(|minor| minor >= 89) {
+        println!("cargo::rustc-cfg=mezo_avx512");
+    }
+    println!("cargo::rerun-if-changed=build.rs");
+}
+
+/// Minor version of the active rustc ("rustc 1.89.0 (…)" → 89), saturated
+/// to `u32::MAX` for a hypothetical major > 1. `None` (probe failed) is
+/// treated as "too old": the scalar/AVX2/NEON tiers never need the probe.
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var_os("RUSTC")?;
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    // "-nightly"/"-beta" suffixes live on the patch component; the minor
+    // component is always a bare integer.
+    let minor: u32 = parts.next()?.parse().ok()?;
+    match major {
+        0 => None,
+        1 => Some(minor),
+        _ => Some(u32::MAX),
+    }
+}

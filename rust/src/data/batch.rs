@@ -13,17 +13,28 @@ use crate::data::tasks::Example;
 use crate::rng::Pcg;
 use crate::tokenizer::{MASK, PAD, SEP};
 
+/// One fixed-shape (B, S) batch in the artifact ABI: four row-major
+/// `B × S` buffers, padded with [PAD] / zeros past each sequence's end.
 #[derive(Debug, Clone)]
 pub struct Batch {
+    /// Batch size B (rows).
     pub b: usize,
+    /// Sequence length S (columns); every row is padded to exactly S.
     pub s: usize,
+    /// Input token ids, `[PAD]` past the sequence end.
     pub input_ids: Vec<i32>,
+    /// Per-position target token ids (AR: input shifted left; MLM: the
+    /// original token at masked positions). Only read where `loss_mask`
+    /// is set.
     pub targets: Vec<i32>,
+    /// 1.0 exactly on the positions the objective supervises.
     pub loss_mask: Vec<f32>,
+    /// 1.0 on real tokens, 0.0 on padding.
     pub attn_mask: Vec<f32>,
 }
 
 impl Batch {
+    /// An all-padding batch: `[PAD]` inputs/targets, zeroed masks.
     pub fn zeros(b: usize, s: usize) -> Batch {
         Batch {
             b,
@@ -65,6 +76,11 @@ impl Batch {
         }
     }
 
+    /// Write one sequence into `row`, supervising the `score` token range
+    /// under the AR objective (`mlm = false`: predictor positions
+    /// `[score.start−1, score.end−1)` are masked) or the MLM objective
+    /// (`mlm = true`: the range is replaced by [MASK] and supervised in
+    /// place).
     pub fn set_row(&mut self, row: usize, seq: &[u32], score: std::ops::Range<usize>, mlm: bool) {
         if mlm {
             self.set_row_mlm(row, seq, score)

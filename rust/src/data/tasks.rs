@@ -14,31 +14,51 @@ use crate::tokenizer::{Vocab, NOUNS_PER_TOPIC, N_DIGIT, N_NEG_ADJ, N_NEU_ADJ,
 /// Paper-task analogs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Task {
-    Sst2,    // SST-2: 2-way sentiment
-    Sst5,    // SST-5: 5-way sentiment strength
-    Snli,    // SNLI: 3-way NLI
-    Mnli,    // MNLI: 3-way NLI (shifted topic distribution)
-    Rte,     // RTE: 2-way NLI
-    Cb,      // CB: 3-way NLI, small data regime
-    Trec,    // TREC: 6-way topic
-    BoolQ,   // BoolQ: passage yes/no
-    Wsc,     // WSC analog: membership yes/no
-    Wic,     // WiC analog: same-sense yes/no
-    MultiRc, // MultiRC: answer-correctness yes/no over a passage
-    Copa,    // COPA: 2-choice plausible continuation
-    Record,  // ReCoRD: entity cloze multiple choice
-    Squad,   // SQuAD: extractive QA, generation
-    Drop,    // DROP: numeric QA, generation
+    /// SST-2: 2-way sentiment
+    Sst2,
+    /// SST-5: 5-way sentiment strength
+    Sst5,
+    /// SNLI: 3-way NLI
+    Snli,
+    /// MNLI: 3-way NLI (shifted topic distribution)
+    Mnli,
+    /// RTE: 2-way NLI
+    Rte,
+    /// CB: 3-way NLI, small data regime
+    Cb,
+    /// TREC: 6-way topic
+    Trec,
+    /// BoolQ: passage yes/no
+    BoolQ,
+    /// WSC analog: membership yes/no
+    Wsc,
+    /// WiC analog: same-sense yes/no
+    Wic,
+    /// MultiRC: answer-correctness yes/no over a passage
+    MultiRc,
+    /// COPA: 2-choice plausible continuation
+    Copa,
+    /// ReCoRD: entity cloze multiple choice
+    Record,
+    /// SQuAD: extractive QA, generation
+    Squad,
+    /// DROP: numeric QA, generation
+    Drop,
 }
 
+/// How a task is scored (paper Appendix E.2 prompt families).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskType {
+    /// Single-token label words, scored by label-word log-likelihood.
     Classification,
+    /// Multi-token candidates, scored by candidate log-likelihood.
     MultipleChoice,
+    /// Free-form answers: teacher forcing to train, greedy decode to eval.
     Generation,
 }
 
 impl Task {
+    /// Stable lowercase identifier (CLI names, result-table keys).
     pub fn name(&self) -> &'static str {
         match self {
             Task::Sst2 => "sst2",
@@ -59,10 +79,12 @@ impl Task {
         }
     }
 
+    /// Inverse of [`Task::name`]; `None` for an unknown identifier.
     pub fn from_name(s: &str) -> Option<Task> {
         ALL_TASKS.iter().copied().find(|t| t.name() == s)
     }
 
+    /// The scoring family this task belongs to.
     pub fn task_type(&self) -> TaskType {
         match self {
             Task::Copa | Task::Record => TaskType::MultipleChoice,
@@ -71,6 +93,8 @@ impl Task {
         }
     }
 
+    /// Label/candidate count (0 for the generation tasks, which have no
+    /// fixed candidate set).
     pub fn n_classes(&self) -> usize {
         match self {
             Task::Sst2 | Task::Rte | Task::BoolQ | Task::Wsc | Task::Wic
@@ -84,17 +108,19 @@ impl Task {
     }
 }
 
+/// Every task in the suite, in declaration order.
 pub const ALL_TASKS: [Task; 15] = [
     Task::Sst2, Task::Sst5, Task::Snli, Task::Mnli, Task::Rte, Task::Cb,
     Task::Trec, Task::BoolQ, Task::Wsc, Task::Wic, Task::MultiRc, Task::Copa,
     Task::Record, Task::Squad, Task::Drop,
 ];
 
-/// The OPT (Table 1) eleven and the RoBERTa (Table 18 / Fig. 2) six.
+/// The OPT-family eleven (Table 1).
 pub const OPT_TASKS: [Task; 11] = [
     Task::Sst2, Task::Rte, Task::Cb, Task::BoolQ, Task::Wsc, Task::Wic,
     Task::MultiRc, Task::Copa, Task::Record, Task::Squad, Task::Drop,
 ];
+/// The RoBERTa-family six (Table 18 / Fig. 2).
 pub const ROBERTA_TASKS: [Task; 6] =
     [Task::Sst2, Task::Sst5, Task::Snli, Task::Mnli, Task::Rte, Task::Trec];
 
@@ -146,9 +172,13 @@ impl Example {
 /// A generated dataset split.
 #[derive(Debug, Clone)]
 pub struct TaskData {
+    /// Which task the splits were generated for.
     pub task: Task,
+    /// Training examples (balanced labels for classification tasks).
     pub train: Vec<Example>,
+    /// Validation examples.
     pub val: Vec<Example>,
+    /// Held-out test examples.
     pub test: Vec<Example>,
 }
 
@@ -157,10 +187,15 @@ pub struct TaskData {
 /// to pre-training patterns.
 #[derive(Debug, Clone, Copy)]
 pub struct GenOpts {
+    /// Master seed; generation is deterministic per (task, seed).
     pub seed: u64,
+    /// Training examples to generate.
     pub n_train: usize,
+    /// Validation examples to generate.
     pub n_val: usize,
+    /// Test examples to generate.
     pub n_test: usize,
+    /// Include the prompt-template words (false = Table 5 ablation).
     pub prompt: bool,
 }
 
@@ -177,6 +212,8 @@ pub fn kshot(task: Task, v: &Vocab, k: usize, opts: GenOpts) -> TaskData {
     generate(task, v, GenOpts { n_train: n, n_val: n, ..opts })
 }
 
+/// Generate train/val/test splits for `task`, deterministically from
+/// `opts.seed` (labels balanced round-robin for classification tasks).
 pub fn generate(task: Task, v: &Vocab, opts: GenOpts) -> TaskData {
     let mut rng = Pcg::new(opts.seed ^ (task as u64).wrapping_mul(0x9E37));
     let gen_split = |rng: &mut Pcg, n: usize| -> Vec<Example> {

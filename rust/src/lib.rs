@@ -25,14 +25,13 @@
 //! `docs/ARCHITECTURE.md` for the paper-section → module mapping.
 #![warn(missing_docs)]
 
-// The core subsystems — rng, zkernel (incl. the sparse mask tier and the
-// worker pool), optim, storage, shard, model, util, baselines, memory —
-// are fully documented and hold the missing_docs line. The remaining
-// modules are grandfathered with module-level allows until their own doc
-// pass; shrinking this list is cheap follow-up work (document-then-remove
-// a marker, never add one).
+// The core subsystems — rng, zkernel (incl. the sparse mask tier, the
+// SIMD dispatch tiers, and the worker pool), optim, storage, shard,
+// model, util, baselines, memory, data — are fully documented and hold
+// the missing_docs line. The remaining modules are grandfathered with
+// module-level allows until their own doc pass; shrinking this list is
+// cheap follow-up work (document-then-remove a marker, never add one).
 pub mod baselines;
-#[allow(missing_docs)]
 pub mod data;
 #[allow(missing_docs)]
 pub mod eval;

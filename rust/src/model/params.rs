@@ -31,6 +31,13 @@ pub struct ParamStore {
 impl ParamStore {
     /// Store with all-zero buffers laid out per `specs` (offsets are the
     /// running scalar count, in spec order).
+    ///
+    /// Each buffer is first-touched through the kernel engine's chunking
+    /// path right after allocation (plus a huge-page hint for multi-MiB
+    /// tensors): the zkernel pool's workers are core-pinned, so under
+    /// Linux's first-touch placement every page lands on the NUMA node
+    /// of the worker that will keep processing it. Advisory only —
+    /// values and determinism are untouched (no-op under `MEZO_PIN=0`).
     pub fn from_specs(specs: Vec<TensorDesc>) -> ParamStore {
         let mut offsets = Vec::with_capacity(specs.len());
         let mut off = 0u64;
@@ -38,7 +45,12 @@ impl ParamStore {
             offsets.push(off);
             off += s.len() as u64;
         }
-        let data = specs.iter().map(|s| vec![0.0f32; s.len()]).collect();
+        let mut data: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0f32; s.len()]).collect();
+        let eng = crate::zkernel::ZEngine::default();
+        for buf in &mut data {
+            crate::zkernel::numa::advise_hugepages(buf);
+            eng.first_touch(buf);
+        }
         let index = specs
             .iter()
             .enumerate()

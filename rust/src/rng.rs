@@ -199,6 +199,92 @@ impl GaussianStream {
             *o = z_at(t, seed, offset + j as u64);
         }
     }
+
+    /// As [`GaussianStream::fill`], with an opt-in SIMD body: when `simd`
+    /// is set and the CPU/build can run it, the splitmix64 counter mixing
+    /// and the `u ∈ (−1, 1)` candidate computation run 8 lanes wide under
+    /// AVX-512 (the 64-bit lane multiplies need AVX-512DQ — there is no
+    /// AVX2/NEON fill tier), with the per-lane ziggurat table finish kept
+    /// scalar. Bit-identical to [`GaussianStream::fill`] in all cases:
+    /// integer lane ops are exact, `u64→f64` conversion is exact below
+    /// 2^53, and each `f64` vector op is the same single correctly-rounded
+    /// IEEE operation the scalar path performs in the same order (pinned
+    /// in this module's tests). Falls back to the scalar fill when the
+    /// body can't run; the `simd` flag comes from the engine's SIMD tier
+    /// (`zkernel::Tier::simd_fill`), so `MEZO_SIMD=scalar` benches the
+    /// true scalar path.
+    pub fn fill_dispatch(&self, out: &mut [f32], offset: u64, simd: bool) {
+        #[cfg(all(target_arch = "x86_64", mezo_avx512))]
+        {
+            if simd
+                && is_x86_feature_detected!("avx512f")
+                && is_x86_feature_detected!("avx512dq")
+            {
+                // SAFETY: avx512f+avx512dq verified just above.
+                unsafe { fill_avx512(zig_tables(), self.seed, out, offset) };
+                return;
+            }
+        }
+        let _ = simd;
+        self.fill(out, offset);
+    }
+}
+
+/// AVX-512 body of [`GaussianStream::fill_dispatch`]: 8 × u64 lanes of
+/// counter mixing + uniform-candidate math, scalar ziggurat finish per
+/// lane. Every lane performs exactly the scalar `z_at` fast-path ops in
+/// the same order; slow-path lanes defer to the shared `z_slow`.
+#[cfg(all(target_arch = "x86_64", mezo_avx512))]
+#[target_feature(enable = "avx512f,avx512dq")]
+unsafe fn fill_avx512(t: &ZigTables, seed: u64, out: &mut [f32], offset: u64) {
+    use core::arch::x86_64::*;
+    // counter multiplier of z_at + the splitmix64 constants
+    const M: u64 = 0x8CB92BA72F3D8DD7;
+    const S1: u64 = 0x9E3779B97F4A7C15;
+    const M2: u64 = 0xBF58476D1CE4E5B9;
+    const M3: u64 = 0x94D049BB133111EB;
+    let seed_v = _mm512_set1_epi64(seed as i64);
+    let m_v = _mm512_set1_epi64(M as i64);
+    let s1_v = _mm512_set1_epi64(S1 as i64);
+    let m2_v = _mm512_set1_epi64(M2 as i64);
+    let m3_v = _mm512_set1_epi64(M3 as i64);
+    let half = _mm512_set1_pd(0.5);
+    let inv53 = _mm512_set1_pd(1.0 / (1u64 << 53) as f64);
+    let two = _mm512_set1_pd(2.0);
+    let one = _mm512_set1_pd(1.0);
+    let n = out.len();
+    let mut j = 0;
+    while j + 8 <= n {
+        let base = offset + j as u64;
+        let idx: [u64; 8] =
+            [base, base + 1, base + 2, base + 3, base + 4, base + 5, base + 6, base + 7];
+        let i_v = core::mem::transmute::<[u64; 8], __m512i>(idx);
+        // e = splitmix64(seed ^ i·M), lane-wise (wrapping by construction)
+        let x = _mm512_add_epi64(_mm512_xor_epi64(seed_v, _mm512_mullo_epi64(i_v, m_v)), s1_v);
+        let z = _mm512_mullo_epi64(_mm512_xor_epi64(x, _mm512_srli_epi64::<30>(x)), m2_v);
+        let z = _mm512_mullo_epi64(_mm512_xor_epi64(z, _mm512_srli_epi64::<27>(z)), m3_v);
+        let e_v = _mm512_xor_epi64(z, _mm512_srli_epi64::<31>(z));
+        // u = ((e>>11) + 0.5)·2⁻⁵³·2 − 1 — signed_unit's exact op order;
+        // the u64→f64 conversion is exact (operand < 2^53)
+        let d = _mm512_cvtepu64_pd(_mm512_srli_epi64::<11>(e_v));
+        let u_v = _mm512_sub_pd(_mm512_mul_pd(_mm512_mul_pd(_mm512_add_pd(d, half), inv53), two), one);
+        let es = core::mem::transmute::<__m512i, [u64; 8]>(e_v);
+        let us = core::mem::transmute::<__m512d, [f64; 8]>(u_v);
+        for lane in 0..8 {
+            let (e, u) = (es[lane], us[lane]);
+            let layer = (e & 0x7F) as usize;
+            out[j + lane] = if u.abs() < t.r[layer] {
+                (u * t.x[layer]) as f32
+            } else {
+                z_slow(t, e, layer, u)
+            };
+        }
+        j += 8;
+    }
+    while j < n {
+        out[j] = z_at(t, seed, offset + j as u64);
+        j += 1;
+    }
 }
 
 /// Ziggurat sample for counter `i` of `seed`, with the tables hoisted by
@@ -404,6 +490,26 @@ mod tests {
         for (j, &v) in buf.iter().enumerate() {
             let want = g.z(5 + j as u64);
             assert_eq!(v.to_bits(), want.to_bits(), "coord {}", j);
+        }
+    }
+
+    #[test]
+    fn fill_dispatch_matches_fill_exactly() {
+        // Both flag values must produce the scalar bits — `simd: true`
+        // engages the AVX-512 body where the CPU/build allows and is a
+        // plain fallthrough everywhere else; either way, bit-identical.
+        // Length/offset chosen to cross the 8-lane remainder and hit slow
+        // paths (~1.5% of 100k coordinates).
+        let g = GaussianStream::new(99);
+        let n = 100_003usize;
+        let mut want = vec![0.0f32; n];
+        g.fill(&mut want, 5);
+        for simd in [false, true] {
+            let mut got = vec![0.0f32; n];
+            g.fill_dispatch(&mut got, 5, simd);
+            for (j, (&a, &b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "simd={} coord {}", simd, j);
+            }
         }
     }
 

@@ -13,8 +13,16 @@
 //!   accumulation chains in flight for the compiler to vectorize;
 //! * the `*1` op helpers (`axpy1`, `sgd1`, `fzoo1`, …) are the
 //!   per-coordinate arithmetic written ONCE and shared between the dense
-//!   kernels, the masked fill path and the masked per-coordinate path —
-//!   a lane body can never drift between variants.
+//!   kernels, the masked fill path, the masked per-coordinate path AND
+//!   the explicit-SIMD remainder loops in `super::simd` — a lane body
+//!   can never drift between variants;
+//! * the `*_block` fns wrap one `block_apply8!` invocation each: they
+//!   are the always-available scalar tier behind the runtime-dispatched
+//!   SIMD layer (`super::simd`), which routes each dense block either to
+//!   an explicit AVX2/AVX-512/NEON body or back here. The dense serial
+//!   kernels below therefore take the engine's [`Tier`] and call the
+//!   dispatchers; the masked kernels keep calling `block_apply8!`
+//!   directly (their hot loop is index-gather-bound, not lane-bound).
 //!
 //! BIT-EXACTNESS CONTRACT: each kernel performs, per coordinate, exactly
 //! the floating-point operations (same order, same associativity) as the
@@ -25,7 +33,7 @@
 //! with the historical code and with each other at any thread count —
 //! see `zkernel::tests` and `tests/properties.rs`.
 
-use super::{AdamParams, BLOCK};
+use super::{simd, AdamParams, Tier, BLOCK};
 use crate::rng::GaussianStream;
 
 /// Apply a per-coordinate lane body for `j in 0..$n`, manually unrolled 8
@@ -93,25 +101,25 @@ macro_rules! block_apply8 {
 
 /// θ += s·z
 #[inline(always)]
-fn axpy1(th: &mut f32, z: f32, s: f32) {
+pub(super) fn axpy1(th: &mut f32, z: f32, s: f32) {
     *th += s * z;
 }
 
 /// out = θ + s·z
 #[inline(always)]
-fn perturb1(out: &mut f32, th: f32, z: f32, s: f32) {
+pub(super) fn perturb1(out: &mut f32, th: f32, z: f32, s: f32) {
     *out = th + s * z;
 }
 
 /// θ −= lr·(g·z + wd·θ)
 #[inline(always)]
-fn sgd1(th: &mut f32, z: f32, lr: f32, g: f32, wd: f32) {
+pub(super) fn sgd1(th: &mut f32, z: f32, lr: f32, g: f32, wd: f32) {
     *th -= lr * (g * z + wd * *th);
 }
 
 /// n-SPSA: every `(stream, g)` update applied in slice order.
 #[inline(always)]
-fn multi_sgd1(
+pub(super) fn multi_sgd1(
     th: &mut f32,
     zs: &[(GaussianStream, f32)],
     z: impl Fn(usize) -> f32,
@@ -125,7 +133,7 @@ fn multi_sgd1(
 
 /// FZOO: g = (Σᵢ gᵢ·zᵢ)/n, then one fused subtraction with one wd term.
 #[inline(always)]
-fn fzoo1(
+pub(super) fn fzoo1(
     th: &mut f32,
     zs: &[(GaussianStream, f32)],
     z: impl Fn(usize) -> f32,
@@ -142,7 +150,7 @@ fn fzoo1(
 
 /// Batched replay: θ += Σᵢ sᵢ·zᵢ, seeds in slice order.
 #[inline(always)]
-fn multi_axpy1(th: &mut f32, zs: &[(GaussianStream, f32)], z: impl Fn(usize) -> f32) {
+pub(super) fn multi_axpy1(th: &mut f32, zs: &[(GaussianStream, f32)], z: impl Fn(usize) -> f32) {
     for (k, &(_, s)) in zs.iter().enumerate() {
         *th += s * z(k);
     }
@@ -151,7 +159,7 @@ fn multi_axpy1(th: &mut f32, zs: &[(GaussianStream, f32)], z: impl Fn(usize) -> 
 /// Momentum: g = (Σᵢ gᵢ·zᵢ)/n + wd·θ; m = μ·m + g; θ −= lr·m.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn momentum1(
+pub(super) fn momentum1(
     th: &mut f32,
     mk: &mut f32,
     zs: &[(GaussianStream, f32)],
@@ -173,7 +181,7 @@ fn momentum1(
 /// Adam: bias-corrected moment EMAs + fused parameter update.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn adam1(
+pub(super) fn adam1(
     th: &mut f32,
     mk: &mut f32,
     vk: &mut f32,
@@ -197,47 +205,148 @@ fn adam1(
 
 /// m = β·m + (1−β)·(pgrad·z) (Adam-style) or m = β·m + pgrad·z.
 #[inline(always)]
-fn ema1(mk: &mut f32, z: f32, pgrad: f32, beta: f32, adam_style: bool) {
+pub(super) fn ema1(mk: &mut f32, z: f32, pgrad: f32, beta: f32, adam_style: bool) {
     let g = pgrad * z;
     *mk = if adam_style { beta * *mk + (1.0 - beta) * g } else { beta * *mk + g };
+}
+
+// ---------------- scalar block bodies (the Scalar SIMD tier) ------------
+//
+// One `block_apply8!` invocation each, extracted from the former serial
+// loop bodies so `super::simd`'s dispatchers can target them by name:
+// `simd::axpy_block(tier, …)` lands here when `tier == Tier::Scalar` (or
+// on any arch without the requested ISA compiled in). These are the
+// reference bits every SIMD tier is pinned against. Multi-seed variants
+// read seed k's z-block at `zb[k*BLOCK + j]` (stride fixed at BLOCK).
+
+/// θ[j] += s·zb[j] for `j in 0..th.len()`.
+pub(super) fn axpy_block(th: &mut [f32], zb: &[f32], s: f32) {
+    block_apply8!(th.len(), |j| axpy1(&mut th[j], zb[j], s));
+}
+
+/// out[j] = θ[j] + s·zb[j].
+pub(super) fn perturb_block(out: &mut [f32], th: &[f32], zb: &[f32], s: f32) {
+    block_apply8!(out.len(), |j| perturb1(&mut out[j], th[j], zb[j], s));
+}
+
+/// θ[j] −= lr·(g·zb[j] + wd·θ[j]).
+pub(super) fn sgd_block(th: &mut [f32], zb: &[f32], lr: f32, g: f32, wd: f32) {
+    block_apply8!(th.len(), |j| sgd1(&mut th[j], zb[j], lr, g, wd));
+}
+
+/// n-SPSA block: seeds applied in slice order per coordinate.
+pub(super) fn multi_sgd_block(
+    th: &mut [f32],
+    zb: &[f32],
+    zs: &[(GaussianStream, f32)],
+    lr: f32,
+    wd: f32,
+) {
+    block_apply8!(th.len(), |j| multi_sgd1(&mut th[j], zs, |kk| zb[kk * BLOCK + j], lr, wd));
+}
+
+/// FZOO batched mean-update block.
+pub(super) fn fzoo_block(
+    th: &mut [f32],
+    zb: &[f32],
+    zs: &[(GaussianStream, f32)],
+    n_f: f32,
+    lr: f32,
+    wd: f32,
+) {
+    block_apply8!(th.len(), |j| fzoo1(&mut th[j], zs, |kk| zb[kk * BLOCK + j], n_f, lr, wd));
+}
+
+/// Batched multi-seed axpy block.
+pub(super) fn multi_axpy_block(th: &mut [f32], zb: &[f32], zs: &[(GaussianStream, f32)]) {
+    block_apply8!(th.len(), |j| multi_axpy1(&mut th[j], zs, |kk| zb[kk * BLOCK + j]));
+}
+
+/// Fused momentum block.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn momentum_block(
+    th: &mut [f32],
+    m: &mut [f32],
+    zb: &[f32],
+    zs: &[(GaussianStream, f32)],
+    lr: f32,
+    wd: f32,
+    momentum: f32,
+    n_records: f32,
+) {
+    block_apply8!(th.len(), |j| {
+        let z = |kk: usize| zb[kk * BLOCK + j];
+        momentum1(&mut th[j], &mut m[j], zs, z, lr, wd, momentum, n_records)
+    });
+}
+
+/// Fused bias-corrected Adam block.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn adam_block(
+    th: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    zb: &[f32],
+    zs: &[(GaussianStream, f32)],
+    p: AdamParams,
+    bc1: f32,
+    bc2: f32,
+) {
+    block_apply8!(th.len(), |j| {
+        let z = |kk: usize| zb[kk * BLOCK + j];
+        adam1(&mut th[j], &mut m[j], &mut v[j], zs, z, p, bc1, bc2)
+    });
+}
+
+/// Moment EMA block.
+pub(super) fn ema_block(m: &mut [f32], zb: &[f32], pgrad: f32, beta: f32, adam_style: bool) {
+    block_apply8!(m.len(), |j| ema1(&mut m[j], zb[j], pgrad, beta, adam_style));
 }
 
 // ---------------- dense kernel bodies -----------------------------------
 
 /// θ[j] += s · z(offset + j)
-pub(super) fn axpy_serial(stream: GaussianStream, offset: u64, theta: &mut [f32], s: f32) {
+pub(super) fn axpy_serial(
+    tier: Tier,
+    stream: GaussianStream,
+    offset: u64,
+    theta: &mut [f32],
+    s: f32,
+) {
+    let sf = tier.simd_fill();
     let mut zb = [0.0f32; BLOCK];
     let mut i = 0;
     while i < theta.len() {
         let n = BLOCK.min(theta.len() - i);
-        stream.fill(&mut zb[..n], offset + i as u64);
-        let th = &mut theta[i..i + n];
-        block_apply8!(n, |j| axpy1(&mut th[j], zb[j], s));
+        stream.fill_dispatch(&mut zb[..n], offset + i as u64, sf);
+        simd::axpy_block(tier, &mut theta[i..i + n], &zb[..n], s);
         i += n;
     }
 }
 
 /// out[j] = θ[j] + s · z(offset + j)
 pub(super) fn perturb_into_serial(
+    tier: Tier,
     stream: GaussianStream,
     offset: u64,
     theta: &[f32],
     s: f32,
     out: &mut [f32],
 ) {
+    let sf = tier.simd_fill();
     let mut zb = [0.0f32; BLOCK];
     let mut i = 0;
     while i < out.len() {
         let n = BLOCK.min(out.len() - i);
-        stream.fill(&mut zb[..n], offset + i as u64);
-        let (o, th) = (&mut out[i..i + n], &theta[i..i + n]);
-        block_apply8!(n, |j| perturb1(&mut o[j], th[j], zb[j], s));
+        stream.fill_dispatch(&mut zb[..n], offset + i as u64, sf);
+        simd::perturb_block(tier, &mut out[i..i + n], &theta[i..i + n], &zb[..n], s);
         i += n;
     }
 }
 
 /// θ[j] −= lr · (g · z(offset + j) + wd · θ[j])
 pub(super) fn sgd_serial(
+    tier: Tier,
     stream: GaussianStream,
     offset: u64,
     theta: &mut [f32],
@@ -245,13 +354,13 @@ pub(super) fn sgd_serial(
     g: f32,
     wd: f32,
 ) {
+    let sf = tier.simd_fill();
     let mut zb = [0.0f32; BLOCK];
     let mut i = 0;
     while i < theta.len() {
         let n = BLOCK.min(theta.len() - i);
-        stream.fill(&mut zb[..n], offset + i as u64);
-        let th = &mut theta[i..i + n];
-        block_apply8!(n, |j| sgd1(&mut th[j], zb[j], lr, g, wd));
+        stream.fill_dispatch(&mut zb[..n], offset + i as u64, sf);
+        simd::sgd_block(tier, &mut theta[i..i + n], &zb[..n], lr, g, wd);
         i += n;
     }
 }
@@ -260,22 +369,23 @@ pub(super) fn sgd_serial(
 /// apply in slice order — the same operation sequence as n separate
 /// `sgd_serial` passes, with θ read and written once.
 pub(super) fn multi_sgd_serial(
+    tier: Tier,
     zs: &[(GaussianStream, f32)],
     offset: u64,
     theta: &mut [f32],
     lr: f32,
     wd: f32,
 ) {
+    let sf = tier.simd_fill();
     let k = zs.len();
     let mut zb = vec![0.0f32; k * BLOCK];
     let mut i = 0;
     while i < theta.len() {
         let n = BLOCK.min(theta.len() - i);
         for (kk, &(stream, _)) in zs.iter().enumerate() {
-            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+            stream.fill_dispatch(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64, sf);
         }
-        let th = &mut theta[i..i + n];
-        block_apply8!(n, |j| multi_sgd1(&mut th[j], zs, |kk| zb[kk * BLOCK + j], lr, wd));
+        simd::multi_sgd_block(tier, &mut theta[i..i + n], &zb, zs, lr, wd);
         i += n;
     }
 }
@@ -289,12 +399,14 @@ pub(super) fn multi_sgd_serial(
 /// estimator calls for. With n = 1 the computation per coordinate is
 /// `θ −= lr·(g·z + wd·θ)` — exactly `sgd_serial` (see tests/properties.rs).
 pub(super) fn fzoo_serial(
+    tier: Tier,
     zs: &[(GaussianStream, f32)],
     offset: u64,
     theta: &mut [f32],
     lr: f32,
     wd: f32,
 ) {
+    let sf = tier.simd_fill();
     let k = zs.len();
     let n_f = k as f32;
     let mut zb = vec![0.0f32; k * BLOCK];
@@ -302,10 +414,9 @@ pub(super) fn fzoo_serial(
     while i < theta.len() {
         let n = BLOCK.min(theta.len() - i);
         for (kk, &(stream, _)) in zs.iter().enumerate() {
-            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+            stream.fill_dispatch(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64, sf);
         }
-        let th = &mut theta[i..i + n];
-        block_apply8!(n, |j| fzoo1(&mut th[j], zs, |kk| zb[kk * BLOCK + j], n_f, lr, wd));
+        simd::fzoo_block(tier, &mut theta[i..i + n], &zb, zs, n_f, lr, wd);
         i += n;
     }
 }
@@ -314,17 +425,22 @@ pub(super) fn fzoo_serial(
 /// per coordinate in slice order — the same operation sequence as k
 /// separate `axpy_serial` passes, with θ read and written once. This is the
 /// replay kernel for seed-batched (FZOO) trajectories.
-pub(super) fn multi_axpy_serial(zs: &[(GaussianStream, f32)], offset: u64, theta: &mut [f32]) {
+pub(super) fn multi_axpy_serial(
+    tier: Tier,
+    zs: &[(GaussianStream, f32)],
+    offset: u64,
+    theta: &mut [f32],
+) {
+    let sf = tier.simd_fill();
     let k = zs.len();
     let mut zb = vec![0.0f32; k * BLOCK];
     let mut i = 0;
     while i < theta.len() {
         let n = BLOCK.min(theta.len() - i);
         for (kk, &(stream, _)) in zs.iter().enumerate() {
-            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+            stream.fill_dispatch(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64, sf);
         }
-        let th = &mut theta[i..i + n];
-        block_apply8!(n, |j| multi_axpy1(&mut th[j], zs, |kk| zb[kk * BLOCK + j]));
+        simd::multi_axpy_block(tier, &mut theta[i..i + n], &zb, zs);
         i += n;
     }
 }
@@ -333,6 +449,7 @@ pub(super) fn multi_axpy_serial(zs: &[(GaussianStream, f32)], offset: u64, theta
 /// g = (Σᵢ gᵢ·zᵢ)/n + wd·θ;  m = μ·m + g;  θ −= lr·m
 #[allow(clippy::too_many_arguments)]
 pub(super) fn momentum_serial(
+    tier: Tier,
     zs: &[(GaussianStream, f32)],
     offset: u64,
     theta: &mut [f32],
@@ -342,25 +459,24 @@ pub(super) fn momentum_serial(
     momentum: f32,
     n_records: f32,
 ) {
+    let sf = tier.simd_fill();
     let k = zs.len();
     let mut zb = vec![0.0f32; k * BLOCK];
     let mut i = 0;
     while i < theta.len() {
         let n = BLOCK.min(theta.len() - i);
         for (kk, &(stream, _)) in zs.iter().enumerate() {
-            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+            stream.fill_dispatch(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64, sf);
         }
         let (th, mk) = (&mut theta[i..i + n], &mut m[i..i + n]);
-        block_apply8!(n, |j| {
-            let z = |kk: usize| zb[kk * BLOCK + j];
-            momentum1(&mut th[j], &mut mk[j], zs, z, lr, wd, momentum, n_records)
-        });
+        simd::momentum_block(tier, th, mk, &zb, zs, lr, wd, momentum, n_records);
         i += n;
     }
 }
 
 /// Fused Adam update over a record batch (bias-corrected).
 pub(super) fn adam_serial(
+    tier: Tier,
     zs: &[(GaussianStream, f32)],
     offset: u64,
     theta: &mut [f32],
@@ -368,6 +484,7 @@ pub(super) fn adam_serial(
     v: &mut [f32],
     p: AdamParams,
 ) {
+    let sf = tier.simd_fill();
     let k = zs.len();
     let mut zb = vec![0.0f32; k * BLOCK];
     // same value per coordinate in the seed loop; hoisted here
@@ -377,19 +494,17 @@ pub(super) fn adam_serial(
     while i < theta.len() {
         let n = BLOCK.min(theta.len() - i);
         for (kk, &(stream, _)) in zs.iter().enumerate() {
-            stream.fill(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64);
+            stream.fill_dispatch(&mut zb[kk * BLOCK..kk * BLOCK + n], offset + i as u64, sf);
         }
         let (th, mk, vk) = (&mut theta[i..i + n], &mut m[i..i + n], &mut v[i..i + n]);
-        block_apply8!(n, |j| {
-            let z = |kk: usize| zb[kk * BLOCK + j];
-            adam1(&mut th[j], &mut mk[j], &mut vk[j], zs, z, p, bc1, bc2)
-        });
+        simd::adam_block(tier, th, mk, vk, &zb, zs, p, bc1, bc2);
         i += n;
     }
 }
 
 /// m = β·m + (1−β)·(pgrad·z) (Adam-style) or m = β·m + pgrad·z.
 pub(super) fn ema_serial(
+    tier: Tier,
     stream: GaussianStream,
     offset: u64,
     m: &mut [f32],
@@ -397,13 +512,13 @@ pub(super) fn ema_serial(
     beta: f32,
     adam_style: bool,
 ) {
+    let sf = tier.simd_fill();
     let mut zb = [0.0f32; BLOCK];
     let mut i = 0;
     while i < m.len() {
         let n = BLOCK.min(m.len() - i);
-        stream.fill(&mut zb[..n], offset + i as u64);
-        let mk = &mut m[i..i + n];
-        block_apply8!(n, |j| ema1(&mut mk[j], zb[j], pgrad, beta, adam_style));
+        stream.fill_dispatch(&mut zb[..n], offset + i as u64, sf);
+        simd::ema_block(tier, &mut m[i..i + n], &zb[..n], pgrad, beta, adam_style);
         i += n;
     }
 }
@@ -412,11 +527,14 @@ pub(super) fn ema_serial(
 /// (`start` = chunk offset in rows; each row's z-range is contiguous, so
 /// the row fills through the blocked path.)
 ///
-/// NOT unrolled: the inner loop is a *reduction* over `d_low` within one
-/// output coordinate, and splitting it into 8 accumulation chains would
-/// change the summation order — a values change, not a perf knob. The
-/// bit-exactness contract keeps this one a straight sequential dot.
+/// NOT unrolled and NOT lane-split: the inner loop is a *reduction* over
+/// `d_low` within one output coordinate, and splitting it into lanes (or
+/// 8 accumulation chains) would change the summation order — a values
+/// change, not a perf knob. The bit-exactness contract keeps this one a
+/// straight sequential dot; only the row *fill* dispatches to SIMD.
+#[allow(clippy::too_many_arguments)]
 pub(super) fn project_rows_serial(
+    tier: Tier,
     stream: GaussianStream,
     d_low: usize,
     v: &[f32],
@@ -425,10 +543,11 @@ pub(super) fn project_rows_serial(
     out: &mut [f32],
     start: usize,
 ) {
+    let sf = tier.simd_fill();
     let mut zrow = vec![0.0f32; d_low];
     for (jj, (o, &b)) in out.iter_mut().zip(base).enumerate() {
         let row = (start + jj) as u64 * d_low as u64;
-        stream.fill(&mut zrow, row);
+        stream.fill_dispatch(&mut zrow, row, sf);
         let mut acc = 0.0f32;
         for (&zr, &vi) in zrow.iter().zip(v) {
             acc += zr * vi;

@@ -28,10 +28,38 @@
 //!    ([`ZEngine::with_threads_scoped`]) — produce the same bits
 //!    (covered by tests here and in `tests/properties.rs`).
 //!
-//! Within each chunk, the per-block inner loops are 8-wide manually
-//! unrolled (`block_apply8!` in `kernels.rs`): lanes are independent
-//! coordinates, so unrolling never reorders any coordinate's own
-//! arithmetic and bit-exactness is preserved by construction.
+//! Within each chunk, the per-block inner loops route through the
+//! explicit SIMD dispatch layer (`simd.rs`): each block body runs as a
+//! runtime-selected AVX-512 / AVX2 / NEON kernel, falling back to the
+//! 8-wide manually unrolled scalar path (`block_apply8!` in
+//! `kernels.rs`). In every tier, lanes are independent coordinates and
+//! each vector instruction is one correctly-rounded IEEE op, so SIMD
+//! never reorders any coordinate's own arithmetic and every tier is
+//! pinned `to_bits()`-identical to scalar (see [`Tier`]). On AVX-512
+//! machines the z *generation* itself is also vectorized
+//! (`GaussianStream::fill_dispatch`).
+//!
+//! # Environment knobs (all read ONCE per process, at first use)
+//!
+//! This is the canonical list — each knob is latched in a `OnceLock` on
+//! first read, so later `std::env::set_var` calls have no effect:
+//!
+//! * `MEZO_THREADS` — worker-thread budget for [`ZEngine::default`]
+//!   (and the pool size ceiling). Unset/invalid → hardware parallelism.
+//!   Read by [`default_threads`].
+//! * `MEZO_SIMD` — `auto|avx512|avx2|neon|scalar`; the SIMD tier for
+//!   engines built by [`ZEngine::with_threads`] and friends. Unset →
+//!   `auto` (best supported tier). A bogus or unsupported value PANICS
+//!   rather than silently falling back — a CI leg that asks for a tier
+//!   must run that tier. Read by [`Tier::active`]; per-engine override
+//!   via [`ZEngine::with_threads_simd`].
+//! * `MEZO_PIN` — set to `0` to disable best-effort worker→core pinning
+//!   and huge-page/first-touch hints (`numa.rs`). Any other value (or
+//!   unset) leaves them on. Never affects results, only locality.
+//!
+//! Precedence: an explicit constructor argument (`with_threads(n)`,
+//! `with_threads_simd(n, tier)`) always beats the environment; the
+//! environment beats auto-detection.
 //!
 //! The fused kernels (see [`ZEngine`]'s methods, bodies in `kernels.rs`):
 //!
@@ -79,9 +107,12 @@
 
 mod kernels;
 pub mod mask;
+pub(crate) mod numa;
 mod pool;
+mod simd;
 
 pub use mask::{Sensitivity, SparseMask};
+pub use simd::Tier;
 
 use crate::rng::GaussianStream;
 use std::sync::OnceLock;
@@ -125,6 +156,9 @@ pub struct ZEngine {
     pub threads: usize,
     /// Dispatch mechanism; never affects results, only wall-clock.
     dispatch: Dispatch,
+    /// SIMD tier for the per-block bodies; never affects results, only
+    /// wall-clock (every tier is pinned bit-identical to scalar).
+    simd: Tier,
 }
 
 impl Default for ZEngine {
@@ -153,7 +187,32 @@ impl ZEngine {
     /// assert_eq!(a[123], 0.5 * stream.z(123));
     /// ```
     pub fn with_threads(threads: usize) -> ZEngine {
-        ZEngine { threads: threads.max(1), dispatch: Dispatch::Pool }
+        ZEngine { threads: threads.max(1), dispatch: Dispatch::Pool, simd: Tier::active() }
+    }
+
+    /// Engine with an explicit thread budget AND an explicit SIMD tier,
+    /// overriding `MEZO_SIMD`/auto-detection for this engine only — the
+    /// hook the cross-tier bit-identity tests and the `simd_dispatch`
+    /// bench group use to run every available tier in one process.
+    ///
+    /// Panics if `tier` is not runnable on this CPU/build (same loud
+    /// failure as a forced `MEZO_SIMD`); [`Tier::available`] lists the
+    /// runnable tiers.
+    pub fn with_threads_simd(threads: usize, tier: Tier) -> ZEngine {
+        assert!(
+            tier.supported(),
+            "ZEngine::with_threads_simd: tier {} not runnable on this CPU/toolchain \
+             (available: {})",
+            tier,
+            Tier::available().iter().map(|t| t.name()).collect::<Vec<_>>().join("|"),
+        );
+        ZEngine { threads: threads.max(1), dispatch: Dispatch::Pool, simd: tier }
+    }
+
+    /// The engine's SIMD tier (selection is per-engine; the process
+    /// default comes from [`Tier::active`]).
+    pub fn simd(&self) -> Tier {
+        self.simd
     }
 
     /// Engine that dispatches via per-call `std::thread::scope` spawns
@@ -166,7 +225,7 @@ impl ZEngine {
     /// engines are interchangeable everywhere; this one just pays a
     /// thread spawn + join per chunk per kernel call.
     pub fn with_threads_scoped(threads: usize) -> ZEngine {
-        ZEngine { threads: threads.max(1), dispatch: Dispatch::Scope }
+        ZEngine { threads: threads.max(1), dispatch: Dispatch::Scope, simd: Tier::active() }
     }
 
     /// Fan a dispatch's chunk jobs out according to the engine's dispatch
@@ -397,8 +456,32 @@ impl ZEngine {
 
     /// out[j] = z(offset + j).
     pub fn fill_z(&self, stream: GaussianStream, offset: u64, out: &mut [f32]) {
+        let sf = self.simd.simd_fill();
         self.run(out, PAR_MIN, |start, chunk| {
-            stream.fill(chunk, offset + start as u64);
+            stream.fill_dispatch(chunk, offset + start as u64, sf);
+        });
+    }
+
+    /// Touch every page of a freshly allocated buffer through the normal
+    /// chunking path, so under Linux's first-touch placement each page
+    /// lands on the NUMA node of the pool worker that will keep
+    /// processing that chunk (workers are core-pinned — `pool.rs`).
+    /// Values are read and written back volatilely, never changed; purely
+    /// a locality hint (no-op when `MEZO_PIN=0` disables pinning).
+    pub fn first_touch(&self, buf: &mut [f32]) {
+        if !numa::pinning_enabled() {
+            return;
+        }
+        const PAGE_F32: usize = numa::PAGE_BYTES / std::mem::size_of::<f32>();
+        self.run(buf, PAR_MIN, |_start, chunk| {
+            let mut j = 0;
+            while j < chunk.len() {
+                let p = &mut chunk[j] as *mut f32;
+                // SAFETY: p points into the live chunk; volatile keeps
+                // the dead read+write from being elided.
+                unsafe { std::ptr::write_volatile(p, std::ptr::read_volatile(p)) };
+                j += PAGE_F32;
+            }
         });
     }
 
@@ -419,8 +502,9 @@ impl ZEngine {
     /// assert!(theta.iter().all(|&x| (x - 1.0).abs() < 1e-6));
     /// ```
     pub fn axpy_z(&self, stream: GaussianStream, offset: u64, theta: &mut [f32], s: f32) {
+        let tier = self.simd;
         self.run(theta, PAR_MIN, |start, chunk| {
-            kernels::axpy_serial(stream, offset + start as u64, chunk, s);
+            kernels::axpy_serial(tier, stream, offset + start as u64, chunk, s);
         });
     }
 
@@ -434,8 +518,9 @@ impl ZEngine {
         s: f32,
         out: &mut [f32],
     ) {
+        let tier = self.simd;
         self.run_src(theta, out, PAR_MIN, |start, src, chunk| {
-            kernels::perturb_into_serial(stream, offset + start as u64, src, s, chunk);
+            kernels::perturb_into_serial(tier, stream, offset + start as u64, src, s, chunk);
         });
     }
 
@@ -449,8 +534,9 @@ impl ZEngine {
         g: f32,
         wd: f32,
     ) {
+        let tier = self.simd;
         self.run(theta, PAR_MIN, |start, chunk| {
-            kernels::sgd_serial(stream, offset + start as u64, chunk, lr, g, wd);
+            kernels::sgd_serial(tier, stream, offset + start as u64, chunk, lr, g, wd);
         });
     }
 
@@ -468,9 +554,10 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run(theta, min, |start, chunk| {
-            kernels::multi_sgd_serial(zs, offset + start as u64, chunk, lr, wd);
+            kernels::multi_sgd_serial(tier, zs, offset + start as u64, chunk, lr, wd);
         });
     }
 
@@ -491,9 +578,10 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run(theta, min, |start, chunk| {
-            kernels::fzoo_serial(zs, offset + start as u64, chunk, lr, wd);
+            kernels::fzoo_serial(tier, zs, offset + start as u64, chunk, lr, wd);
         });
     }
 
@@ -505,9 +593,10 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run(theta, min, |start, chunk| {
-            kernels::multi_axpy_serial(zs, offset + start as u64, chunk);
+            kernels::multi_axpy_serial(tier, zs, offset + start as u64, chunk);
         });
     }
 
@@ -528,9 +617,20 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run2(theta, m, min, |start, th, mk| {
-            kernels::momentum_serial(zs, offset + start as u64, th, mk, lr, wd, momentum, n);
+            kernels::momentum_serial(
+                tier,
+                zs,
+                offset + start as u64,
+                th,
+                mk,
+                lr,
+                wd,
+                momentum,
+                n,
+            );
         });
     }
 
@@ -547,9 +647,10 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run3(theta, m, v, min, |start, th, mk, vk| {
-            kernels::adam_serial(zs, offset + start as u64, th, mk, vk, p);
+            kernels::adam_serial(tier, zs, offset + start as u64, th, mk, vk, p);
         });
     }
 
@@ -566,8 +667,17 @@ impl ZEngine {
         beta: f32,
         adam_style: bool,
     ) {
+        let tier = self.simd;
         self.run(m, PAR_MIN, |start, chunk| {
-            kernels::ema_serial(stream, offset + start as u64, chunk, pgrad, beta, adam_style);
+            kernels::ema_serial(
+                tier,
+                stream,
+                offset + start as u64,
+                chunk,
+                pgrad,
+                beta,
+                adam_style,
+            );
         });
     }
 
@@ -583,9 +693,10 @@ impl ZEngine {
         out: &mut [f32],
     ) {
         assert_eq!(v.len(), d_low, "zkernel: projection input length != d_low");
+        let tier = self.simd;
         let min = (PAR_MIN / d_low.max(1)).max(1);
         self.run_src(base, out, min, |start, b, chunk| {
-            kernels::project_rows_serial(stream, d_low, v, b, scale, chunk, start);
+            kernels::project_rows_serial(tier, stream, d_low, v, b, scale, chunk, start);
         });
     }
 

@@ -1,0 +1,170 @@
+//! Best-effort NUMA/locality plumbing for the kernel engine.
+//!
+//! Three levers, all advisory — results NEVER depend on any of them
+//! (determinism comes from the counter-based z-stream and fixed block
+//! geometry, not from where a thread or page happens to live):
+//!
+//! 1. **Worker pinning** — every pool worker pins itself to one core
+//!    (`sched_setaffinity`, worker *i* → core *i+1*, caller keeps core
+//!    0). Stable worker↔core mapping means a worker re-touches the same
+//!    θ stripes across steps, keeping its chunks in the same L2/LLC
+//!    slice and — with first-touch below — on the same NUMA node.
+//! 2. **First-touch striping** — [`super::ZEngine::first_touch`] walks a
+//!    fresh θ buffer through the normal chunking path, so under the
+//!    first-touch page placement policy each page lands on the node of
+//!    the worker that will keep processing it.
+//! 3. **Huge pages** — [`advise_hugepages`] hints `MADV_HUGEPAGE` for
+//!    multi-MiB θ buffers, cutting dTLB pressure on the d ≥ 1e6 sweeps.
+//!
+//! Everything here degrades to a no-op: off-Linux, on failed syscalls,
+//! or when the user sets `MEZO_PIN=0` (read once, like `MEZO_THREADS` —
+//! precedence rules in the `zkernel` module docs). Syscalls are issued
+//! raw via inline asm so the crate stays free of a libc dependency.
+
+use std::sync::OnceLock;
+
+/// Bytes per page assumed for first-touch striping and huge-page
+/// alignment. 4 KiB is universal on the targets we run on; if the real
+/// page size is larger the walk is merely redundant, never wrong.
+pub(crate) const PAGE_BYTES: usize = 4096;
+
+/// Whether pinning/paging hints are enabled (`MEZO_PIN` != "0"; read
+/// once per process).
+pub(crate) fn pinning_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("MEZO_PIN").map_or(true, |v| v.trim() != "0"))
+}
+
+/// Pin the calling thread to `cpu` (mod the core count). Best-effort:
+/// returns whether the affinity call succeeded; callers must not depend
+/// on the answer for correctness.
+pub(crate) fn pin_current_thread(cpu: usize) -> bool {
+    if !pinning_enabled() {
+        return false;
+    }
+    let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let cpu = cpu % ncpu;
+    // cpu_set_t is 1024 bits on Linux.
+    let mut mask = [0u64; 16];
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    sys::set_affinity(&mask)
+}
+
+/// Hint the kernel to back `buf` with transparent huge pages. Rounds
+/// inward to page boundaries and skips buffers below 2 MiB (one x86
+/// huge page) where the hint cannot help.
+pub(crate) fn advise_hugepages(buf: &[f32]) {
+    if !pinning_enabled() || buf.is_empty() {
+        return;
+    }
+    let start = buf.as_ptr() as usize;
+    let end = start + std::mem::size_of_val(buf);
+    let lo = start.next_multiple_of(PAGE_BYTES);
+    let hi = end - end % PAGE_BYTES;
+    if hi <= lo || hi - lo < 2 * 1024 * 1024 {
+        return;
+    }
+    sys::madvise_hugepage(lo, hi - lo);
+}
+
+/// Raw syscall shims. `pid`/`addr` arguments follow the kernel ABI:
+/// `sched_setaffinity(0, …)` targets the calling thread.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    const MADV_HUGEPAGE: usize = 14;
+
+    #[cfg(target_arch = "x86_64")]
+    const NR_SCHED_SETAFFINITY: usize = 203;
+    #[cfg(target_arch = "x86_64")]
+    const NR_MADVISE: usize = 28;
+
+    #[cfg(target_arch = "aarch64")]
+    const NR_SCHED_SETAFFINITY: usize = 122;
+    #[cfg(target_arch = "aarch64")]
+    const NR_MADVISE: usize = 233;
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 as isize => ret,
+            in("x1") a2,
+            in("x2") a3,
+            options(nostack),
+        );
+        ret
+    }
+
+    pub(super) fn set_affinity(mask: &[u64; 16]) -> bool {
+        // SAFETY: pid 0 = calling thread; the mask pointer/length pair
+        // describes a live 128-byte buffer for the duration of the call.
+        let ret = unsafe {
+            syscall3(
+                NR_SCHED_SETAFFINITY,
+                0,
+                std::mem::size_of_val(mask),
+                mask.as_ptr() as usize,
+            )
+        };
+        ret == 0
+    }
+
+    pub(super) fn madvise_hugepage(addr: usize, len: usize) -> bool {
+        // SAFETY: [addr, addr+len) lies page-rounded-inward within a live
+        // allocation (checked by the caller); MADV_HUGEPAGE is advisory
+        // and never invalidates the mapping.
+        let ret = unsafe { syscall3(NR_MADVISE, addr, len, MADV_HUGEPAGE) };
+        ret == 0
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sys {
+    pub(super) fn set_affinity(_mask: &[u64; 16]) -> bool {
+        false
+    }
+
+    pub(super) fn madvise_hugepage(_addr: usize, _len: usize) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_is_best_effort_and_never_panics() {
+        // Whatever the platform answers, the call must return cleanly —
+        // including for out-of-range indices (wrapped mod core count).
+        let _ = pin_current_thread(0);
+        let _ = pin_current_thread(usize::MAX);
+    }
+
+    #[test]
+    fn advise_hugepages_handles_all_sizes() {
+        advise_hugepages(&[]);
+        advise_hugepages(&[1.0f32; 16]); // below a page: rounds to nothing
+        let big = vec![0.0f32; 1 << 20]; // 4 MiB: real madvise span
+        advise_hugepages(&big);
+        assert_eq!(big.len(), 1 << 20);
+    }
+}

@@ -32,6 +32,15 @@
 //! only on its own global index. The scope path is retained as
 //! [`ZEngine::with_threads_scoped`](super::ZEngine::with_threads_scoped)
 //! and pinned bit-identical to the pool path in `tests/properties.rs`.
+//!
+//! **Core pinning.** Each worker pins itself to one core at spawn
+//! (worker *i* → core *i+1*, leaving core 0 to the calling thread; see
+//! `super::numa`). Workers are persistent and jobs are carved in a fixed
+//! order, so worker *i* tends to see the same θ stripes step after step —
+//! with first-touch page placement that keeps each stripe's pages on the
+//! node of the worker processing them. Best-effort and advisory only
+//! (disabled by `MEZO_PIN=0`, a no-op off-Linux); never part of the
+//! determinism argument.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -100,9 +109,14 @@ impl Pool {
         };
         let mut have = self.workers.load(Ordering::Relaxed);
         while have < want {
+            let idx = have;
             let spawned = std::thread::Builder::new()
                 .name(format!("mezo-zkernel-{}", have))
-                .spawn(move || self.worker_loop());
+                .spawn(move || {
+                    // caller keeps core 0; workers take 1, 2, … (mod ncpu)
+                    super::numa::pin_current_thread(idx + 1);
+                    self.worker_loop()
+                });
             match spawned {
                 Ok(_) => have += 1,
                 Err(_) => break, // thread cap hit: serve with what we have

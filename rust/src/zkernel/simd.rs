@@ -1,0 +1,791 @@
+//! Explicit, runtime-dispatched SIMD tiers for the per-block kernel bodies.
+//!
+//! PR 4's `block_apply8!` unroll is autovectorizer *bait*: whether the
+//! compiler actually emits vector code for a given body depends on
+//! optimization mood. This module makes the vector shape explicit. Each
+//! hot per-block body (the arithmetic between one `GaussianStream` fill
+//! and the next) exists in up to four **tiers**:
+//!
+//! * [`Tier::Avx512`] — 16 × f32 lanes via `_mm512_*` (`std::arch`);
+//!   needs `avx512f`+`avx512dq` at runtime AND a rustc ≥ 1.89 build (the
+//!   intrinsics' stabilization release — see `build.rs`, cfg
+//!   `mezo_avx512`). This tier also carries the only SIMD z-*generation*
+//!   body (`GaussianStream::fill_dispatch`): splitmix64 mixing needs
+//!   64-bit lane multiplies, which first appear in AVX-512DQ.
+//! * [`Tier::Avx2`] — 8 × f32 lanes via `_mm256_*`.
+//! * [`Tier::Neon`] — 4 × f32 lanes via `v*q_f32` (aarch64).
+//! * [`Tier::Scalar`] — the PR 4 unrolled path in `kernels.rs`, always
+//!   available, and the **reference bits** every other tier is pinned to.
+//!
+//! BIT-EXACTNESS ACROSS TIERS: lanes are whole, independent coordinates,
+//! and every vector op used here (`add/sub/mul/div/sqrt`, f32) is a
+//! single correctly-rounded IEEE-754 operation — identical to its scalar
+//! counterpart. The generated bodies perform, per coordinate, exactly the
+//! operation sequence of the scalar `*1` helpers in `kernels.rs`:
+//! multi-seed accumulation stays *within* a lane in slice order, no
+//! horizontal reductions, and **no FMA** (contraction would change
+//! rounding; none of the fused-multiply intrinsics appear here, and Rust
+//! never contracts `a * b + c` on its own). Remainder coordinates
+//! (`n % LANES`) run through the scalar helpers themselves. Hence every
+//! tier is `to_bits()`-identical to [`Tier::Scalar`] by construction —
+//! and by test: `zkernel/tests.rs` and the `tests/properties.rs` SIMD
+//! group pin all available tiers against scalar across thread counts,
+//! unaligned lengths, masked and `_shard` entry points.
+//!
+//! `project_rows` deliberately has NO SIMD tier: its inner loop is a
+//! sequential reduction and lane-splitting it would reorder the
+//! summation (see `kernels::project_rows_serial`).
+//!
+//! Tier selection: [`Tier::active`] reads `MEZO_SIMD` once per process
+//! (same discipline as `MEZO_THREADS`; precedence rules live in the
+//! `zkernel` module docs) and falls back to the best tier the CPU
+//! supports. A bogus or unsupported value panics loudly — silently
+//! falling back would un-test the tier CI asked for.
+
+use std::sync::OnceLock;
+
+/// SIMD instruction tier for the per-block kernel bodies. Selection never
+/// changes results — every tier is pinned `to_bits()`-identical to
+/// [`Tier::Scalar`] — only wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// 16-lane `_mm512_*` bodies plus the SIMD z-fill. Requires runtime
+    /// `avx512f`+`avx512dq` and a rustc ≥ 1.89 build (`mezo_avx512`).
+    Avx512,
+    /// 8-lane `_mm256_*` bodies (x86_64 with runtime `avx2`).
+    Avx2,
+    /// 4-lane NEON bodies (aarch64; `neon` is baseline there).
+    Neon,
+    /// The unrolled scalar path (`block_apply8!`) — always available; the
+    /// reference bits for every other tier.
+    Scalar,
+}
+
+#[cfg(all(target_arch = "x86_64", mezo_avx512))]
+fn have_avx512() -> bool {
+    is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512dq")
+}
+#[cfg(not(all(target_arch = "x86_64", mezo_avx512)))]
+fn have_avx512() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx2() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+#[cfg(not(target_arch = "x86_64"))]
+fn have_avx2() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn have_neon() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+#[cfg(not(target_arch = "aarch64"))]
+fn have_neon() -> bool {
+    false
+}
+
+impl Tier {
+    /// The tier's `MEZO_SIMD` name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Avx512 => "avx512",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+            Tier::Scalar => "scalar",
+        }
+    }
+
+    /// Whether this CPU *and* this build can actually run the tier.
+    /// [`Tier::Scalar`] is always supported; [`Tier::Avx512`] additionally
+    /// requires the crate to have been built by rustc ≥ 1.89 (`build.rs`).
+    pub fn supported(self) -> bool {
+        match self {
+            Tier::Avx512 => have_avx512(),
+            Tier::Avx2 => have_avx2(),
+            Tier::Neon => have_neon(),
+            Tier::Scalar => true,
+        }
+    }
+
+    /// Every tier runnable here, best first (always ends with `Scalar`).
+    /// The cross-tier bit-identity tests and the `simd_dispatch` bench
+    /// group iterate this.
+    pub fn available() -> Vec<Tier> {
+        [Tier::Avx512, Tier::Avx2, Tier::Neon, Tier::Scalar]
+            .into_iter()
+            .filter(|t| t.supported())
+            .collect()
+    }
+
+    /// Best tier the CPU supports (what `MEZO_SIMD=auto` resolves to).
+    pub fn detect() -> Tier {
+        if have_avx512() {
+            Tier::Avx512
+        } else if have_avx2() {
+            Tier::Avx2
+        } else if have_neon() {
+            Tier::Neon
+        } else {
+            Tier::Scalar
+        }
+    }
+
+    /// Process-default tier: `MEZO_SIMD` (read ONCE, like `MEZO_THREADS` —
+    /// precedence rules in the `zkernel` module docs) or [`Tier::detect`].
+    /// Panics on a bogus or unsupported `MEZO_SIMD` value.
+    pub fn active() -> Tier {
+        static T: OnceLock<Tier> = OnceLock::new();
+        *T.get_or_init(|| match std::env::var("MEZO_SIMD") {
+            Ok(v) => parse_mezo_simd(&v),
+            Err(_) => Tier::detect(),
+        })
+    }
+
+    /// Whether this tier has a SIMD z-generation body (AVX-512 only; see
+    /// `GaussianStream::fill_dispatch`).
+    pub(crate) fn simd_fill(self) -> bool {
+        self == Tier::Avx512
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Resolve a `MEZO_SIMD` value to a tier. Unknown names and tiers this
+/// CPU/build cannot run both panic — loudly, by design: a CI leg that
+/// asks for `avx512` must test avx512 or fail, never silently fall back
+/// to scalar and go green.
+pub(crate) fn parse_mezo_simd(value: &str) -> Tier {
+    let tier = match value.trim().to_ascii_lowercase().as_str() {
+        "auto" => return Tier::detect(),
+        "avx512" => Tier::Avx512,
+        "avx2" => Tier::Avx2,
+        "neon" => Tier::Neon,
+        "scalar" => Tier::Scalar,
+        other => panic!(
+            "MEZO_SIMD={:?}: unknown SIMD tier (expected auto|avx512|avx2|neon|scalar)",
+            other
+        ),
+    };
+    assert!(
+        tier.supported(),
+        "MEZO_SIMD={}: tier not runnable on this CPU/toolchain (available: {})",
+        value,
+        Tier::available().iter().map(|t| t.name()).collect::<Vec<_>>().join("|"),
+    );
+    tier
+}
+
+// ---------------- per-kernel tier dispatch ------------------------------
+//
+// One dispatcher per block body. The scalar arm calls the `block_apply8!`
+// body in `kernels.rs`; the SIMD arms call the per-ISA `unsafe fn`s
+// below. SAFETY invariant for every `unsafe` arm: a `Tier` value only
+// reaches a dispatcher through `ZEngine`, whose constructors validate
+// `Tier::supported()` (runtime CPU feature detection) — the `#[target_
+// feature]` bodies are never entered on a CPU lacking the feature.
+
+macro_rules! dispatcher {
+    ($(#[$doc:meta])* $name:ident ($($arg:ident : $ty:ty),* $(,)?)) => {
+        $(#[$doc])*
+        #[allow(clippy::too_many_arguments)]
+        pub(super) fn $name(tier: Tier, $($arg: $ty),*) {
+            #[cfg(all(target_arch = "x86_64", mezo_avx512))]
+            {
+                if tier == Tier::Avx512 {
+                    // SAFETY: avx512f+avx512dq verified at tier construction.
+                    unsafe { avx512::$name($($arg),*) };
+                    return;
+                }
+            }
+            #[cfg(target_arch = "x86_64")]
+            {
+                if tier == Tier::Avx2 {
+                    // SAFETY: avx2 verified at tier construction.
+                    unsafe { avx2::$name($($arg),*) };
+                    return;
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                if tier == Tier::Neon {
+                    // SAFETY: neon verified at tier construction.
+                    unsafe { neon::$name($($arg),*) };
+                    return;
+                }
+            }
+            let _ = tier;
+            super::kernels::$name($($arg),*);
+        }
+    };
+}
+
+use crate::rng::GaussianStream;
+use crate::zkernel::AdamParams;
+
+dispatcher!(
+    /// θ[j] += s·zb[j] (per-coordinate body: `kernels::axpy1`).
+    axpy_block(th: &mut [f32], zb: &[f32], s: f32)
+);
+dispatcher!(
+    /// out[j] = θ[j] + s·zb[j] (`kernels::perturb1`).
+    perturb_block(out: &mut [f32], th: &[f32], zb: &[f32], s: f32)
+);
+dispatcher!(
+    /// θ[j] −= lr·(g·zb[j] + wd·θ[j]) (`kernels::sgd1`).
+    sgd_block(th: &mut [f32], zb: &[f32], lr: f32, g: f32, wd: f32)
+);
+dispatcher!(
+    /// n-SPSA updates in seed order per coordinate (`kernels::multi_sgd1`);
+    /// `zb` holds seed k's block at `zb[k*BLOCK..]`.
+    multi_sgd_block(
+        th: &mut [f32],
+        zb: &[f32],
+        zs: &[(GaussianStream, f32)],
+        lr: f32,
+        wd: f32,
+    )
+);
+dispatcher!(
+    /// FZOO batched mean update (`kernels::fzoo1`); `zb` strided by BLOCK.
+    fzoo_block(
+        th: &mut [f32],
+        zb: &[f32],
+        zs: &[(GaussianStream, f32)],
+        n_f: f32,
+        lr: f32,
+        wd: f32,
+    )
+);
+dispatcher!(
+    /// θ[j] += Σᵢ sᵢ·zᵢ[j] in seed order (`kernels::multi_axpy1`).
+    multi_axpy_block(th: &mut [f32], zb: &[f32], zs: &[(GaussianStream, f32)])
+);
+dispatcher!(
+    /// Fused momentum block (`kernels::momentum1`).
+    momentum_block(
+        th: &mut [f32],
+        m: &mut [f32],
+        zb: &[f32],
+        zs: &[(GaussianStream, f32)],
+        lr: f32,
+        wd: f32,
+        momentum: f32,
+        n_records: f32,
+    )
+);
+dispatcher!(
+    /// Fused bias-corrected Adam block (`kernels::adam1`).
+    adam_block(
+        th: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        zb: &[f32],
+        zs: &[(GaussianStream, f32)],
+        p: AdamParams,
+        bc1: f32,
+        bc2: f32,
+    )
+);
+dispatcher!(
+    /// Moment EMA block (`kernels::ema1`).
+    ema_block(m: &mut [f32], zb: &[f32], pgrad: f32, beta: f32, adam_style: bool)
+);
+
+// ---------------- shared ISA kernel bodies ------------------------------
+//
+// One macro generates the nine block bodies for every ISA module. The
+// invoking module supplies a lane count `LANES` and eight `#[target_
+// feature]` wrapper fns (`ld/st/splat/vadd/vsub/vmul/vdiv/vsqrt`) over
+// its vector type; the bodies are otherwise IDENTICAL across ISAs, which
+// is what makes the bit-exactness argument reviewable in one place:
+// per coordinate, each body performs exactly the operation sequence of
+// the scalar `*1` helper it names — same order, same associativity, one
+// IEEE op per intrinsic, no FMA — and the scalar remainder loop calls
+// the `*1` helper itself.
+
+macro_rules! simd_block_kernels {
+    ($feat:literal) => {
+        use crate::rng::GaussianStream;
+        use crate::zkernel::{kernels as sk, AdamParams, BLOCK};
+
+        /// θ[j] += s·zb[j] — lane body of `sk::axpy1`.
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn axpy_block(th: &mut [f32], zb: &[f32], s: f32) {
+            debug_assert_eq!(th.len(), zb.len());
+            let n = th.len();
+            let sv = splat(s);
+            let mut j = 0;
+            while j + LANES <= n {
+                let t = ld(th.as_ptr().add(j));
+                let z = ld(zb.as_ptr().add(j));
+                st(th.as_mut_ptr().add(j), vadd(t, vmul(sv, z)));
+                j += LANES;
+            }
+            while j < n {
+                sk::axpy1(&mut th[j], zb[j], s);
+                j += 1;
+            }
+        }
+
+        /// out[j] = θ[j] + s·zb[j] — lane body of `sk::perturb1`.
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn perturb_block(out: &mut [f32], th: &[f32], zb: &[f32], s: f32) {
+            debug_assert_eq!(out.len(), th.len());
+            debug_assert_eq!(out.len(), zb.len());
+            let n = out.len();
+            let sv = splat(s);
+            let mut j = 0;
+            while j + LANES <= n {
+                let t = ld(th.as_ptr().add(j));
+                let z = ld(zb.as_ptr().add(j));
+                st(out.as_mut_ptr().add(j), vadd(t, vmul(sv, z)));
+                j += LANES;
+            }
+            while j < n {
+                sk::perturb1(&mut out[j], th[j], zb[j], s);
+                j += 1;
+            }
+        }
+
+        /// θ[j] −= lr·(g·zb[j] + wd·θ[j]) — lane body of `sk::sgd1`.
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn sgd_block(th: &mut [f32], zb: &[f32], lr: f32, g: f32, wd: f32) {
+            debug_assert_eq!(th.len(), zb.len());
+            let n = th.len();
+            let (lrv, gv, wdv) = (splat(lr), splat(g), splat(wd));
+            let mut j = 0;
+            while j + LANES <= n {
+                let t = ld(th.as_ptr().add(j));
+                let z = ld(zb.as_ptr().add(j));
+                let upd = vmul(lrv, vadd(vmul(gv, z), vmul(wdv, t)));
+                st(th.as_mut_ptr().add(j), vsub(t, upd));
+                j += LANES;
+            }
+            while j < n {
+                sk::sgd1(&mut th[j], zb[j], lr, g, wd);
+                j += 1;
+            }
+        }
+
+        /// n-SPSA in seed order per coordinate — lane body of
+        /// `sk::multi_sgd1`; θ stays in-register across the seed loop.
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn multi_sgd_block(
+            th: &mut [f32],
+            zb: &[f32],
+            zs: &[(GaussianStream, f32)],
+            lr: f32,
+            wd: f32,
+        ) {
+            let n = th.len();
+            let (lrv, wdv) = (splat(lr), splat(wd));
+            let mut j = 0;
+            while j + LANES <= n {
+                let mut t = ld(th.as_ptr().add(j));
+                for (k, &(_, g)) in zs.iter().enumerate() {
+                    let z = ld(zb.as_ptr().add(k * BLOCK + j));
+                    t = vsub(t, vmul(lrv, vadd(vmul(splat(g), z), vmul(wdv, t))));
+                }
+                st(th.as_mut_ptr().add(j), t);
+                j += LANES;
+            }
+            while j < n {
+                sk::multi_sgd1(&mut th[j], zs, |kk| zb[kk * BLOCK + j], lr, wd);
+                j += 1;
+            }
+        }
+
+        /// FZOO batched mean update — lane body of `sk::fzoo1`.
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn fzoo_block(
+            th: &mut [f32],
+            zb: &[f32],
+            zs: &[(GaussianStream, f32)],
+            n_f: f32,
+            lr: f32,
+            wd: f32,
+        ) {
+            let n = th.len();
+            let (nv, lrv, wdv) = (splat(n_f), splat(lr), splat(wd));
+            let mut j = 0;
+            while j + LANES <= n {
+                let mut gacc = splat(0.0);
+                for (k, &(_, pg)) in zs.iter().enumerate() {
+                    let z = ld(zb.as_ptr().add(k * BLOCK + j));
+                    gacc = vadd(gacc, vmul(splat(pg), z));
+                }
+                let t = ld(th.as_ptr().add(j));
+                let upd = vmul(lrv, vadd(vdiv(gacc, nv), vmul(wdv, t)));
+                st(th.as_mut_ptr().add(j), vsub(t, upd));
+                j += LANES;
+            }
+            while j < n {
+                sk::fzoo1(&mut th[j], zs, |kk| zb[kk * BLOCK + j], n_f, lr, wd);
+                j += 1;
+            }
+        }
+
+        /// θ[j] += Σᵢ sᵢ·zᵢ[j] in seed order — lane body of
+        /// `sk::multi_axpy1`.
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn multi_axpy_block(
+            th: &mut [f32],
+            zb: &[f32],
+            zs: &[(GaussianStream, f32)],
+        ) {
+            let n = th.len();
+            let mut j = 0;
+            while j + LANES <= n {
+                let mut t = ld(th.as_ptr().add(j));
+                for (k, &(_, s)) in zs.iter().enumerate() {
+                    let z = ld(zb.as_ptr().add(k * BLOCK + j));
+                    t = vadd(t, vmul(splat(s), z));
+                }
+                st(th.as_mut_ptr().add(j), t);
+                j += LANES;
+            }
+            while j < n {
+                sk::multi_axpy1(&mut th[j], zs, |kk| zb[kk * BLOCK + j]);
+                j += 1;
+            }
+        }
+
+        /// Fused momentum update — lane body of `sk::momentum1`.
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn momentum_block(
+            th: &mut [f32],
+            m: &mut [f32],
+            zb: &[f32],
+            zs: &[(GaussianStream, f32)],
+            lr: f32,
+            wd: f32,
+            momentum: f32,
+            n_records: f32,
+        ) {
+            let n = th.len();
+            let (lrv, wdv, muv, nv) = (splat(lr), splat(wd), splat(momentum), splat(n_records));
+            let mut j = 0;
+            while j + LANES <= n {
+                let mut gacc = splat(0.0);
+                for (k, &(_, pg)) in zs.iter().enumerate() {
+                    let z = ld(zb.as_ptr().add(k * BLOCK + j));
+                    gacc = vadd(gacc, vmul(splat(pg), z));
+                }
+                let t = ld(th.as_ptr().add(j));
+                let mk = ld(m.as_ptr().add(j));
+                let g2 = vadd(vdiv(gacc, nv), vmul(wdv, t));
+                let mnew = vadd(vmul(muv, mk), g2);
+                st(m.as_mut_ptr().add(j), mnew);
+                st(th.as_mut_ptr().add(j), vsub(t, vmul(lrv, mnew)));
+                j += LANES;
+            }
+            while j < n {
+                let z = |kk: usize| zb[kk * BLOCK + j];
+                sk::momentum1(&mut th[j], &mut m[j], zs, z, lr, wd, momentum, n_records);
+                j += 1;
+            }
+        }
+
+        /// Fused bias-corrected Adam update — lane body of `sk::adam1`.
+        /// `1 − β` is splat from the identical scalar computation, and
+        /// `(1−β₂)·g·g` keeps the scalar's left association.
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn adam_block(
+            th: &mut [f32],
+            m: &mut [f32],
+            v: &mut [f32],
+            zb: &[f32],
+            zs: &[(GaussianStream, f32)],
+            p: AdamParams,
+            bc1: f32,
+            bc2: f32,
+        ) {
+            let n = th.len();
+            let (nv, wdv, lrv, epsv) = (splat(p.n), splat(p.wd), splat(p.lr), splat(p.eps));
+            let (b1v, b2v) = (splat(p.beta1), splat(p.beta2));
+            let (c1v, c2v) = (splat(1.0 - p.beta1), splat(1.0 - p.beta2));
+            let (bc1v, bc2v) = (splat(bc1), splat(bc2));
+            let mut j = 0;
+            while j + LANES <= n {
+                let mut gacc = splat(0.0);
+                for (k, &(_, pg)) in zs.iter().enumerate() {
+                    let z = ld(zb.as_ptr().add(k * BLOCK + j));
+                    gacc = vadd(gacc, vmul(splat(pg), z));
+                }
+                let t = ld(th.as_ptr().add(j));
+                let mk = ld(m.as_ptr().add(j));
+                let vk = ld(v.as_ptr().add(j));
+                let g2 = vadd(vdiv(gacc, nv), vmul(wdv, t));
+                let mnew = vadd(vmul(b1v, mk), vmul(c1v, g2));
+                let vnew = vadd(vmul(b2v, vk), vmul(vmul(c2v, g2), g2));
+                st(m.as_mut_ptr().add(j), mnew);
+                st(v.as_mut_ptr().add(j), vnew);
+                let mhat = vdiv(mnew, bc1v);
+                let vhat = vdiv(vnew, bc2v);
+                let upd = vdiv(vmul(lrv, mhat), vadd(vsqrt(vhat), epsv));
+                st(th.as_mut_ptr().add(j), vsub(t, upd));
+                j += LANES;
+            }
+            while j < n {
+                let z = |kk: usize| zb[kk * BLOCK + j];
+                sk::adam1(&mut th[j], &mut m[j], &mut v[j], zs, z, p, bc1, bc2);
+                j += 1;
+            }
+        }
+
+        /// Moment EMA — lane body of `sk::ema1`. `c·g` with `c = 1−β` is
+        /// splat from the same scalar subtraction; the non-Adam branch
+        /// adds `g` directly (no multiply), matching the scalar exactly.
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn ema_block(
+            m: &mut [f32],
+            zb: &[f32],
+            pgrad: f32,
+            beta: f32,
+            adam_style: bool,
+        ) {
+            debug_assert_eq!(m.len(), zb.len());
+            let n = m.len();
+            let (pgv, bv) = (splat(pgrad), splat(beta));
+            let cv = splat(1.0 - beta);
+            let mut j = 0;
+            while j + LANES <= n {
+                let z = ld(zb.as_ptr().add(j));
+                let mk = ld(m.as_ptr().add(j));
+                let g = vmul(pgv, z);
+                let mnew = if adam_style {
+                    vadd(vmul(bv, mk), vmul(cv, g))
+                } else {
+                    vadd(vmul(bv, mk), g)
+                };
+                st(m.as_mut_ptr().add(j), mnew);
+                j += LANES;
+            }
+            while j < n {
+                sk::ema1(&mut m[j], zb[j], pgrad, beta, adam_style);
+                j += 1;
+            }
+        }
+    };
+}
+
+/// 8-lane AVX2 tier (`__m256`). The wrapper fns are safe to *call* from
+/// same-featured fns (target_feature 1.1); their bodies perform the raw
+/// loads/stores, which stay `unsafe` for the pointer arithmetic.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 8;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn ld(p: *const f32) -> __m256 {
+        _mm256_loadu_ps(p)
+    }
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn st(p: *mut f32, v: __m256) {
+        _mm256_storeu_ps(p, v)
+    }
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn splat(x: f32) -> __m256 {
+        _mm256_set1_ps(x)
+    }
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vadd(a: __m256, b: __m256) -> __m256 {
+        _mm256_add_ps(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vsub(a: __m256, b: __m256) -> __m256 {
+        _mm256_sub_ps(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vmul(a: __m256, b: __m256) -> __m256 {
+        _mm256_mul_ps(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vdiv(a: __m256, b: __m256) -> __m256 {
+        _mm256_div_ps(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vsqrt(a: __m256) -> __m256 {
+        _mm256_sqrt_ps(a)
+    }
+
+    simd_block_kernels!("avx2");
+}
+
+/// 16-lane AVX-512 tier (`__m512`); compiled only under rustc ≥ 1.89
+/// (`mezo_avx512`, see `build.rs`).
+#[cfg(all(target_arch = "x86_64", mezo_avx512))]
+mod avx512 {
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 16;
+
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn ld(p: *const f32) -> __m512 {
+        _mm512_loadu_ps(p)
+    }
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn st(p: *mut f32, v: __m512) {
+        _mm512_storeu_ps(p, v)
+    }
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn splat(x: f32) -> __m512 {
+        _mm512_set1_ps(x)
+    }
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn vadd(a: __m512, b: __m512) -> __m512 {
+        _mm512_add_ps(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn vsub(a: __m512, b: __m512) -> __m512 {
+        _mm512_sub_ps(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn vmul(a: __m512, b: __m512) -> __m512 {
+        _mm512_mul_ps(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn vdiv(a: __m512, b: __m512) -> __m512 {
+        _mm512_div_ps(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn vsqrt(a: __m512) -> __m512 {
+        _mm512_sqrt_ps(a)
+    }
+
+    simd_block_kernels!("avx512f");
+}
+
+/// 4-lane NEON tier (`float32x4_t`). `vfmaq`/`vmlaq` (fused) are
+/// deliberately absent — only the exact one-op intrinsics appear.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    const LANES: usize = 4;
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn ld(p: *const f32) -> float32x4_t {
+        vld1q_f32(p)
+    }
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn st(p: *mut f32, v: float32x4_t) {
+        vst1q_f32(p, v)
+    }
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn splat(x: f32) -> float32x4_t {
+        vdupq_n_f32(x)
+    }
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn vadd(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vaddq_f32(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn vsub(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vsubq_f32(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn vmul(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vmulq_f32(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn vdiv(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vdivq_f32(a, b)
+    }
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn vsqrt(a: float32x4_t) -> float32x4_t {
+        vsqrtq_f32(a)
+    }
+
+    simd_block_kernels!("neon");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_available_and_last() {
+        let avail = Tier::available();
+        assert_eq!(avail.last(), Some(&Tier::Scalar));
+        assert!(Tier::Scalar.supported());
+        assert!(Tier::detect().supported());
+        assert!(Tier::active().supported());
+    }
+
+    #[test]
+    fn parse_accepts_every_supported_name_and_auto() {
+        assert_eq!(parse_mezo_simd("scalar"), Tier::Scalar);
+        assert_eq!(parse_mezo_simd("SCALAR"), Tier::Scalar); // case-folded
+        assert_eq!(parse_mezo_simd(" auto "), Tier::detect());
+        for tier in Tier::available() {
+            assert_eq!(parse_mezo_simd(tier.name()), tier);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown SIMD tier")]
+    fn bogus_mezo_simd_fails_loudly() {
+        parse_mezo_simd("avx1024");
+    }
+
+    #[test]
+    fn known_but_unsupported_tier_fails_loudly() {
+        // On every platform at least one hardware tier is foreign (NEON
+        // on x86_64, AVX on aarch64) — forcing it must panic, not fall
+        // back to scalar.
+        let Some(t) =
+            [Tier::Avx512, Tier::Avx2, Tier::Neon].into_iter().find(|t| !t.supported())
+        else {
+            return;
+        };
+        let err = std::panic::catch_unwind(|| parse_mezo_simd(t.name()));
+        assert!(err.is_err(), "forcing unsupported {} should panic", t.name());
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for tier in [Tier::Avx512, Tier::Avx2, Tier::Neon, Tier::Scalar] {
+            if tier.supported() {
+                assert_eq!(parse_mezo_simd(tier.name()), tier);
+            }
+            assert_eq!(format!("{}", tier), tier.name());
+        }
+    }
+}

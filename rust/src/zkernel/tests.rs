@@ -735,9 +735,159 @@ fn pool_propagates_worker_panics_and_stays_usable() {
 fn default_engine_is_sane() {
     let eng = ZEngine::default();
     assert!(eng.threads >= 1);
+    assert!(eng.simd().supported());
     // a tiny buffer must not spawn: exercised implicitly (no panic, right
     // result) — the real assertion is bit-equality above
     let mut out = vec![0.0f32; 4];
     eng.fill_z(GaussianStream::new(1), 0, &mut out);
     assert!(out.iter().all(|x| x.is_finite()));
+}
+
+// ---------------- explicit SIMD tiers ------------------------------------
+
+#[test]
+fn every_simd_tier_matches_scalar_bits_across_threads() {
+    // The tentpole pin at unit level (the full 17-kernel matrix including
+    // masked/_shard entry points lives in tests/properties.rs): every
+    // runnable SIMD tier == the scalar tier, to the bit, for the dense
+    // kernels, across threads 1/2/8 and lengths that are NOT multiples of
+    // any lane width (1, 5, BLOCK-1, BLOCK+3, 70_003 exercise both the
+    // vector loop and every remainder size).
+    let stream = GaussianStream::new(321);
+    let zs: Vec<(GaussianStream, f32)> =
+        (0..3).map(|k| (GaussianStream::new(900 + k), 0.4 - 0.3 * k as f32)).collect();
+    let (lr, g, wd, s) = (1e-2f32, 0.37f32, 1e-4f32, 1e-3f32);
+    let p = AdamParams { lr, wd, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 3.0, n: 3.0 };
+    for tier in Tier::available() {
+        if tier == Tier::Scalar {
+            continue;
+        }
+        for &len in &LENS {
+            let init = randomized(len, 51);
+            let off = 13u64;
+            for &t in &THREADS {
+                let simd_eng = ZEngine::with_threads_simd(t, tier);
+                let ref_eng = ZEngine::with_threads_simd(t, Tier::Scalar);
+                assert_eq!(simd_eng.simd(), tier);
+                let label = |k: &str| format!("{} tier={} len={} t={}", k, tier, len, t);
+
+                let mut a = vec![0.0f32; len];
+                let mut b = vec![0.0f32; len];
+                simd_eng.fill_z(stream, off, &mut a);
+                ref_eng.fill_z(stream, off, &mut b);
+                assert_bits_eq(&a, &b, &label("fill_z"));
+
+                let mut a = init.clone();
+                let mut b = init.clone();
+                simd_eng.axpy_z(stream, off, &mut a, s);
+                ref_eng.axpy_z(stream, off, &mut b, s);
+                assert_bits_eq(&a, &b, &label("axpy_z"));
+
+                let mut a = vec![0.0f32; len];
+                let mut b = vec![0.0f32; len];
+                simd_eng.perturb_into(stream, off, &init, s, &mut a);
+                ref_eng.perturb_into(stream, off, &init, s, &mut b);
+                assert_bits_eq(&a, &b, &label("perturb_into"));
+
+                let mut a = init.clone();
+                let mut b = init.clone();
+                simd_eng.sgd_update(stream, off, &mut a, lr, g, wd);
+                ref_eng.sgd_update(stream, off, &mut b, lr, g, wd);
+                assert_bits_eq(&a, &b, &label("sgd_update"));
+
+                let mut a = init.clone();
+                let mut b = init.clone();
+                simd_eng.multi_sgd_update(&zs, off, &mut a, lr, wd);
+                ref_eng.multi_sgd_update(&zs, off, &mut b, lr, wd);
+                assert_bits_eq(&a, &b, &label("multi_sgd_update"));
+
+                let mut a = init.clone();
+                let mut b = init.clone();
+                simd_eng.fzoo_update(&zs, off, &mut a, lr, wd);
+                ref_eng.fzoo_update(&zs, off, &mut b, lr, wd);
+                assert_bits_eq(&a, &b, &label("fzoo_update"));
+
+                let mut a = init.clone();
+                let mut b = init.clone();
+                simd_eng.multi_axpy_z(&zs, off, &mut a);
+                ref_eng.multi_axpy_z(&zs, off, &mut b);
+                assert_bits_eq(&a, &b, &label("multi_axpy_z"));
+
+                let m0 = randomized(len, 52);
+                let mut a = init.clone();
+                let mut am = m0.clone();
+                let mut b = init.clone();
+                let mut bm = m0.clone();
+                simd_eng.momentum_update(&zs, off, &mut a, &mut am, lr, wd, 0.9, 3.0);
+                ref_eng.momentum_update(&zs, off, &mut b, &mut bm, lr, wd, 0.9, 3.0);
+                assert_bits_eq(&a, &b, &label("momentum th"));
+                assert_bits_eq(&am, &bm, &label("momentum m"));
+
+                let v0: Vec<f32> = randomized(len, 53).iter().map(|x| x * x).collect();
+                let mut a = init.clone();
+                let mut am = m0.clone();
+                let mut av = v0.clone();
+                let mut b = init.clone();
+                let mut bm = m0.clone();
+                let mut bv = v0.clone();
+                simd_eng.adam_update(&zs, off, &mut a, &mut am, &mut av, p);
+                ref_eng.adam_update(&zs, off, &mut b, &mut bm, &mut bv, p);
+                assert_bits_eq(&a, &b, &label("adam th"));
+                assert_bits_eq(&am, &bm, &label("adam m"));
+                assert_bits_eq(&av, &bv, &label("adam v"));
+
+                for adam_style in [false, true] {
+                    let mut a = m0.clone();
+                    let mut b = m0.clone();
+                    simd_eng.ema_z(stream, off, &mut a, 0.42, 0.9, adam_style);
+                    ref_eng.ema_z(stream, off, &mut b, 0.42, 0.9, adam_style);
+                    assert_bits_eq(&a, &b, &label(&format!("ema_z adam={}", adam_style)));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn project_rows_is_tier_invariant() {
+    // project_rows keeps its sequential dot in every tier (only the row
+    // fill dispatches), so its bits must be tier-independent too
+    let stream = GaussianStream::new(322);
+    let d_low = 48usize;
+    let v = randomized(d_low, 54);
+    let base = randomized(700, 55);
+    let scale = 1.0 / (d_low as f32).sqrt();
+    let mut want = vec![0.0f32; 700];
+    ZEngine::with_threads_simd(1, Tier::Scalar).project_rows(stream, d_low, &v, &base, scale, &mut want);
+    for tier in Tier::available() {
+        for &t in &THREADS {
+            let mut got = vec![0.0f32; 700];
+            ZEngine::with_threads_simd(t, tier).project_rows(stream, d_low, &v, &base, scale, &mut got);
+            assert_bits_eq(&got, &want, &format!("project_rows tier={} t={}", tier, t));
+        }
+    }
+}
+
+#[test]
+fn first_touch_preserves_bits() {
+    for &len in &[5usize, 70_003, 200_000] {
+        let init = randomized(len, 56);
+        let mut buf = init.clone();
+        for &t in &THREADS {
+            ZEngine::with_threads(t).first_touch(&mut buf);
+            assert_bits_eq(&buf, &init, &format!("first_touch len={} t={}", len, t));
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "not runnable")]
+fn forcing_an_unsupported_tier_on_the_engine_fails_loudly() {
+    // On every platform at least one hardware tier is foreign (NEON on
+    // x86_64, the AVX tiers on aarch64), so this panics everywhere.
+    let foreign = [Tier::Neon, Tier::Avx2, Tier::Avx512]
+        .into_iter()
+        .find(|t| !t.supported())
+        .expect("some tier must be unsupported on any given platform");
+    let _ = ZEngine::with_threads_simd(1, foreign);
 }

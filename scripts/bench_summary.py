@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Distill BENCH_zkernel.json into a small committed trajectory summary.
+
+The full microbench report is hundreds of rows (every kernel x d x threads
+x tier point). Committing it verbatim would churn on every run; committing
+nothing loses the perf trajectory. This script reduces each bench group to
+its per-(kernel, tier) median ns/element over the reduced CI grid, so the
+committed BENCH_summary.json is a handful of stable, comparable numbers.
+
+Usage:
+    python3 scripts/bench_summary.py BENCH_zkernel.json BENCH_summary.json
+
+CI (bench-smoke) regenerates the summary from its quick-mode run and diffs
+it against the committed file — report-only, because CI runner timings
+drift; the diff output is the signal, updating the committed file is a
+deliberate act in a PR. Stdlib only; keys sorted; values rounded to 2
+decimals so sub-noise drift doesn't show up as churn.
+"""
+
+import json
+import statistics
+import sys
+
+
+def _median_ns(rows, ns_field, group_keys):
+    """Median of `ns_field` per distinct group_keys tuple -> flat dict."""
+    buckets = {}
+    for row in rows:
+        key = "/".join(str(row[k]) for k in group_keys)
+        buckets.setdefault(key, []).append(float(row[ns_field]))
+    return {k: round(statistics.median(v), 2) for k, v in sorted(buckets.items())}
+
+
+def summarize(report):
+    """Reduce a BENCH_zkernel.json report dict to the committed summary."""
+    summary = {
+        "source": "scripts/bench_summary.py",
+        "quick_mode": report.get("quick_mode"),
+        "hardware_threads": report.get("hardware_threads"),
+    }
+    # main kernel rows: median kernel-path ns/coord per kernel
+    if report.get("rows"):
+        summary["kernel_ns_per_coord"] = _median_ns(
+            report["rows"], "kernel_ns_per_coord", ["kernel"]
+        )
+    # SIMD tiers: median ns/coord per (kernel, tier) — the trajectory the
+    # ISSUE 6 acceptance reads (explicit-SIMD update bodies vs the scalar
+    # tier at large d)
+    if report.get("simd_dispatch"):
+        summary["simd_ns_per_coord"] = _median_ns(
+            report["simd_dispatch"], "tier_ns_per_coord", ["kernel", "tier"]
+        )
+        speedups = _median_ns(
+            report["simd_dispatch"], "speedup_vs_scalar_tier", ["kernel", "tier"]
+        )
+        summary["simd_speedup_vs_scalar_tier"] = speedups
+    # pool dispatch: median per-step microseconds saved per thread count
+    if report.get("pool_vs_spawn"):
+        summary["pool_step_dispatch_saved_us"] = _median_ns(
+            report["pool_vs_spawn"], "step_dispatch_saved_us", ["threads"]
+        )
+    # masked kernels: median speedup vs dense per density
+    if report.get("mask_density"):
+        summary["masked_speedup_vs_dense"] = _median_ns(
+            report["mask_density"], "speedup_vs_dense", ["density"]
+        )
+    # FZOO vs MeZO at matched budgets: median step speedup per budget
+    if report.get("fzoo_vs_mezo"):
+        summary["fzoo_speedup_vs_mezo"] = _median_ns(
+            report["fzoo_vs_mezo"], "fzoo_speedup", ["budget_fwd"]
+        )
+    return summary
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip().splitlines()[0], file=sys.stderr)
+        print(
+            "usage: bench_summary.py BENCH_zkernel.json BENCH_summary.json",
+            file=sys.stderr,
+        )
+        return 2
+    with open(argv[1]) as f:
+        report = json.load(f)
+    summary = summarize(report)
+    with open(argv[2], "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print("wrote {} ({} groups)".format(argv[2], len(summary)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,11 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): style gates + build + tests + docs gate,
-# then the kernel bit-identity tests re-run under an explicit thread-count
-# matrix via the engine's MEZO_THREADS knob. The in-test matrix
-# (ZEngine::with_threads at 1/2/8) covers explicitly-constructed engines;
-# this loop additionally pins every ZEngine::default() path (optimizers,
-# replay, staging) at each process-default thread count, so a determinism
-# regression fails the gate rather than only the default configuration.
+# then the kernel bit-identity tests re-run under an explicit
+# MEZO_THREADS x MEZO_SIMD matrix. The in-test matrices
+# (ZEngine::with_threads at 1/2/8, ZEngine::with_threads_simd over
+# Tier::available()) cover explicitly-constructed engines; this loop
+# additionally pins every ZEngine::default() path (optimizers, replay,
+# staging) at each process-default thread count AND each process-default
+# SIMD tier, so a determinism regression fails the gate rather than only
+# the default configuration.
+#
+# SIMD legs are capability-gated: `auto` and `scalar` always run (scalar
+# is the always-available fallback tier and MUST stay green everywhere);
+# `avx2` runs when the CPU reports it; `avx512` additionally needs
+# avx512dq and a toolchain >= 1.89 (the build probe that enables the
+# AVX-512 intrinsics); `neon` runs on aarch64. A leg that cannot run on
+# this host is skipped with a notice — forcing it would just panic at
+# Tier::active() by design (MEZO_SIMD refuses silent fallback).
 #
 # CI (.github/workflows/ci.yml) runs THIS script — local verify and CI
 # stay one script. The fmt/clippy gates run first so style failures fail
@@ -37,13 +47,38 @@ cargo build --release
 cargo test -q
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
+# ---- capability-gated MEZO_SIMD legs -----------------------------------
+simd_legs="auto scalar"
+arch="$(uname -m)"
+cpu_has() { grep -qw "$1" /proc/cpuinfo 2>/dev/null; }
+rustc_minor() { rustc --version 2>/dev/null | sed -n 's/^rustc 1\.\([0-9]*\)\..*/\1/p'; }
+if [ "$arch" = "x86_64" ]; then
+    if cpu_has avx2; then
+        simd_legs="$simd_legs avx2"
+    else
+        echo "verify: CPU lacks avx2, skipping MEZO_SIMD=avx2 leg"
+    fi
+    minor="$(rustc_minor)"
+    if cpu_has avx512f && cpu_has avx512dq && [ -n "$minor" ] && [ "$minor" -ge 89 ]; then
+        simd_legs="$simd_legs avx512"
+    else
+        echo "verify: avx512 leg needs avx512f+avx512dq and rustc >= 1.89, skipping"
+    fi
+elif [ "$arch" = "aarch64" ]; then
+    # NEON is baseline on aarch64
+    simd_legs="$simd_legs neon"
+fi
+echo "verify: MEZO_SIMD legs: $simd_legs"
+
 for t in 1 2 8; do
-    echo "== determinism matrix: MEZO_THREADS=$t =="
-    MEZO_THREADS=$t cargo test -q --release --lib zkernel
-    # shard bit-identity: plan/scatter/gather unit tests plus every
-    # *shard* optimizer/storage test, so shard-determinism regressions on
-    # the ZEngine::default() paths fail the gate
-    MEZO_THREADS=$t cargo test -q --release --lib shard
-    MEZO_THREADS=$t cargo test -q --release --test properties
+    for s in $simd_legs; do
+        echo "== determinism matrix: MEZO_THREADS=$t MEZO_SIMD=$s =="
+        MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --lib zkernel
+        # shard bit-identity: plan/scatter/gather unit tests plus every
+        # *shard* optimizer/storage test, so shard-determinism regressions
+        # on the ZEngine::default() paths fail the gate
+        MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --lib shard
+        MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --test properties
+    done
 done
 echo "verify: OK"

@@ -1205,6 +1205,242 @@ fn prop_sharded_stepping_is_bitwise_dense_stepping() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Explicit SIMD tiers (ISSUE 6). The runtime-dispatched AVX2/AVX-512/NEON
+// block bodies are a pure instruction-selection change: per coordinate
+// they perform the same IEEE single-operations in the same order as the
+// scalar tier, so EVERY runnable tier must equal the scalar tier to the
+// bit — for every dense, masked, and shard entry point, at threads 1/2/8,
+// on lengths that are not a multiple of any lane width × 8 (so both the
+// vector loop and every remainder size are exercised).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_every_simd_tier_is_bit_identical_to_scalar_for_every_kernel() {
+    use mezo::zkernel::{AdamParams, Tier, ZEngine};
+
+    const SIMD_KERNELS: [&str; 23] = [
+        "fill_z",
+        "axpy_z",
+        "perturb_into",
+        "sgd_update",
+        "multi_sgd_update",
+        "fzoo_update",
+        "multi_axpy_z",
+        "momentum_update",
+        "adam_update",
+        "ema_z",
+        "project_rows",
+        "axpy_z_masked",
+        "perturb_into_masked",
+        "sgd_update_masked",
+        "multi_sgd_update_masked",
+        "fzoo_update_masked",
+        "multi_axpy_z_masked",
+        "axpy_z_shard",
+        "perturb_into_shard",
+        "sgd_update_shard",
+        "multi_sgd_update_shard",
+        "fzoo_update_shard",
+        "multi_axpy_z_shard",
+    ];
+
+    /// Run one kernel on the given engine; returns every output buffer.
+    /// Shard entry points split the buffer at `cut` and run both halves.
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        kernel: &str,
+        eng: &ZEngine,
+        init: &[f32],
+        aux: &[f32],
+        aux2: &[f32],
+        idxs: &[u32],
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        cut: usize,
+    ) -> Vec<Vec<f32>> {
+        let (stream, g) = zs[0];
+        let (lr, wd) = (1e-2f32, 1e-4f32);
+        let len = init.len();
+        let mut theta = init.to_vec();
+        match kernel {
+            "fill_z" => {
+                let mut out = vec![0.0; len];
+                eng.fill_z(stream, offset, &mut out);
+                vec![out]
+            }
+            "axpy_z" => {
+                eng.axpy_z(stream, offset, &mut theta, g);
+                vec![theta]
+            }
+            "perturb_into" => {
+                let mut out = vec![0.0; len];
+                eng.perturb_into(stream, offset, init, g, &mut out);
+                vec![out]
+            }
+            "sgd_update" => {
+                eng.sgd_update(stream, offset, &mut theta, lr, g, wd);
+                vec![theta]
+            }
+            "multi_sgd_update" => {
+                eng.multi_sgd_update(zs, offset, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "fzoo_update" => {
+                eng.fzoo_update(zs, offset, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "multi_axpy_z" => {
+                eng.multi_axpy_z(zs, offset, &mut theta);
+                vec![theta]
+            }
+            "momentum_update" => {
+                let mut m = aux.to_vec();
+                eng.momentum_update(zs, offset, &mut theta, &mut m, lr, wd, 0.9, zs.len() as f32);
+                vec![theta, m]
+            }
+            "adam_update" => {
+                let mut m = aux.to_vec();
+                let mut v = aux2.to_vec();
+                let p = AdamParams {
+                    lr,
+                    wd,
+                    beta1: 0.9,
+                    beta2: 0.999,
+                    eps: 1e-8,
+                    t: 3.0,
+                    n: zs.len() as f32,
+                };
+                eng.adam_update(zs, offset, &mut theta, &mut m, &mut v, p);
+                vec![theta, m, v]
+            }
+            "ema_z" => {
+                let mut ma = aux.to_vec();
+                eng.ema_z(stream, offset, &mut ma, g, 0.9, true);
+                let mut ms = aux.to_vec();
+                eng.ema_z(stream, offset, &mut ms, g, 0.9, false);
+                vec![ma, ms]
+            }
+            "project_rows" => {
+                let d_low = 48usize;
+                let mut out = vec![0.0; len];
+                eng.project_rows(stream, d_low, &aux[..d_low], init, 0.125, &mut out);
+                vec![out]
+            }
+            "axpy_z_masked" => {
+                eng.axpy_z_masked(stream, offset, idxs, &mut theta, g);
+                vec![theta]
+            }
+            "perturb_into_masked" => {
+                let mut out = init.to_vec();
+                eng.perturb_into_masked(stream, offset, idxs, init, g, &mut out);
+                vec![out]
+            }
+            "sgd_update_masked" => {
+                eng.sgd_update_masked(stream, offset, idxs, &mut theta, lr, g, wd);
+                vec![theta]
+            }
+            "multi_sgd_update_masked" => {
+                eng.multi_sgd_update_masked(zs, offset, idxs, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "fzoo_update_masked" => {
+                eng.fzoo_update_masked(zs, offset, idxs, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "multi_axpy_z_masked" => {
+                eng.multi_axpy_z_masked(zs, offset, idxs, &mut theta);
+                vec![theta]
+            }
+            "axpy_z_shard" => {
+                eng.axpy_z_shard(stream, offset, 0, cut, &mut theta, g);
+                eng.axpy_z_shard(stream, offset, cut, len, &mut theta, g);
+                vec![theta]
+            }
+            "perturb_into_shard" => {
+                let mut out = vec![0.0; len];
+                eng.perturb_into_shard(stream, offset, 0, cut, init, g, &mut out);
+                eng.perturb_into_shard(stream, offset, cut, len, init, g, &mut out);
+                vec![out]
+            }
+            "sgd_update_shard" => {
+                eng.sgd_update_shard(stream, offset, 0, cut, &mut theta, lr, g, wd);
+                eng.sgd_update_shard(stream, offset, cut, len, &mut theta, lr, g, wd);
+                vec![theta]
+            }
+            "multi_sgd_update_shard" => {
+                eng.multi_sgd_update_shard(zs, offset, 0, cut, &mut theta, lr, wd);
+                eng.multi_sgd_update_shard(zs, offset, cut, len, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "fzoo_update_shard" => {
+                eng.fzoo_update_shard(zs, offset, 0, cut, &mut theta, lr, wd);
+                eng.fzoo_update_shard(zs, offset, cut, len, &mut theta, lr, wd);
+                vec![theta]
+            }
+            "multi_axpy_z_shard" => {
+                eng.multi_axpy_z_shard(zs, offset, 0, cut, &mut theta);
+                eng.multi_axpy_z_shard(zs, offset, cut, len, &mut theta);
+                vec![theta]
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    let tiers: Vec<Tier> =
+        Tier::available().into_iter().filter(|&t| t != Tier::Scalar).collect();
+    if tiers.is_empty() {
+        // scalar-only host (or pre-AVX-512 toolchain with no AVX2): the
+        // dispatch layer degenerates to the scalar tier by construction
+        return;
+    }
+
+    forall(
+        6,
+        61,
+        |rng| {
+            // 259, 4097, 70_003: not multiples of 4, 8, or 16 — every lane
+            // width leaves a remainder, and the largest fans out threads
+            let len = [259usize, 4097, 70_003][rng.below(3)];
+            let cut = rng.below(len - 1) + 1;
+            (len, cut, rng.next_u64(), rng.below(500) as u64, rng.below(3) + 1)
+        },
+        |&(len, cut, seed, offset, n_seeds)| {
+            let mut rng = Pcg::new(seed ^ 0x99);
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let aux: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let aux2: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 0.5).abs()).collect();
+            let idxs: Vec<u32> = (0..len as u32).filter(|_| rng.next_f64() < 0.2).collect();
+            let zs: Vec<(GaussianStream, f32)> = (0..n_seeds)
+                .map(|k| (GaussianStream::new(seed ^ (0xD0 + k as u64)), 0.35 - 0.3 * k as f32))
+                .collect();
+            for &tier in &tiers {
+                for kernel in SIMD_KERNELS {
+                    for threads in [1usize, 2, 8] {
+                        let simd_eng = ZEngine::with_threads_simd(threads, tier);
+                        let ref_eng = ZEngine::with_threads_simd(threads, Tier::Scalar);
+                        let got =
+                            run(kernel, &simd_eng, &init, &aux, &aux2, &idxs, &zs, offset, cut);
+                        let want =
+                            run(kernel, &ref_eng, &init, &aux, &aux2, &idxs, &zs, offset, cut);
+                        for (bi, (gb, wb)) in got.iter().zip(&want).enumerate() {
+                            for (j, (a, b)) in gb.iter().zip(wb).enumerate() {
+                                if a.to_bits() != b.to_bits() {
+                                    return Err(format!(
+                                        "{} tier={} t={} len={} buf {} coord {}: {} vs {}",
+                                        kernel, tier, threads, len, bi, j, a, b
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_fzoo_n1_without_variance_norm_is_the_one_sided_spsa_update() {
     // ISSUE 2 acceptance: with a single seed and variance normalization
