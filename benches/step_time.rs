@@ -18,8 +18,11 @@
 //! shard-parallel replay and stepping at shard counts 1/2/4/8
 //! (`shard_scaling_bench` — per-shard critical path, scatter/gather
 //! overhead); a sixth sweeps the explicit SIMD dispatch tiers against the
-//! scalar tier (`simd_dispatch_bench`). Results land in
-//! BENCH_zkernel.json so the perf trajectory is tracked across PRs;
+//! scalar tier (`simd_dispatch_bench`); a seventh measures the MZW1
+//! wire codec (encode/decode throughput of control vs bulk frames) and
+//! the per-step overhead of driving a channel-transport worker fleet
+//! instead of the dense optimizer (`wire_transport_bench`). Results land
+//! in BENCH_zkernel.json so the perf trajectory is tracked across PRs;
 //! `scripts/bench_summary.py` distills per-group medians into the small
 //! committed BENCH_summary.json.
 //!
@@ -548,6 +551,113 @@ fn simd_dispatch_bench() -> Vec<Json> {
     out
 }
 
+/// Bench 7: the MZW1 wire layer. Frame codec throughput for a tiny
+/// control frame vs bulk shard-slice frames, then whole channel-fleet
+/// MeZO steps against the dense optimizer at shard counts 1/2/4 — the
+/// scatter/perturb/fetch/update round-trip tax the wire adds per step.
+/// Results land in BENCH_zkernel.json under "wire_transport".
+fn wire_transport_bench() -> Vec<Json> {
+    use mezo::model::meta::TensorDesc;
+    use mezo::model::params::ParamStore;
+    use mezo::optim::mezo::{MezoConfig, MezoSgd};
+    use mezo::wire::{channel_spawner, Fleet, FleetConfig, Msg};
+
+    let mut out = Vec::new();
+
+    // codec throughput: median seconds per encode / decode, batched so
+    // the timer overhead is amortized over `inner` calls per sample
+    let bulk_coords: &[usize] = if quick() { &[1 << 16] } else { &[1 << 16, 1 << 20] };
+    let mut frames: Vec<(String, Msg, usize)> = vec![(
+        "perturb_control".to_string(),
+        Msg::Perturb { plan_digest: 0xD16E57, seed: 42, scale: 1e-3 },
+        4096,
+    )];
+    for &n in bulk_coords {
+        frames.push((
+            format!("shard_slice_{}c", n),
+            Msg::ShardSlice {
+                plan_digest: 1,
+                shard: 0,
+                shard_digest: 2,
+                segments: vec![vec![0.5f32; n]],
+            },
+            if quick() { 8 } else { 16 },
+        ));
+    }
+    for (name, msg, inner) in &frames {
+        let bytes = msg.encode();
+        let reps = if quick() { 3 } else { 5 };
+        let enc_s = time(reps, || {
+            for _ in 0..*inner {
+                let _ = msg.encode();
+            }
+        }) / *inner as f64;
+        let dec_s = time(reps, || {
+            for _ in 0..*inner {
+                let _ = Msg::decode(&bytes).expect("decode");
+            }
+        }) / *inner as f64;
+        let mb = bytes.len() as f64 / (1024.0 * 1024.0);
+        out.push(obj(vec![
+            ("frame", Json::from(name.as_str())),
+            ("frame_bytes", Json::from(bytes.len() as f64)),
+            ("encode_s", Json::from(enc_s)),
+            ("decode_s", Json::from(dec_s)),
+            ("encode_mb_per_sec", Json::from(mb / enc_s)),
+            ("decode_mb_per_sec", Json::from(mb / dec_s)),
+        ]));
+    }
+
+    // whole-step wire tax: channel fleet vs dense MezoSgd, same seeds,
+    // trivial loss so the measurement is parameter traffic, not forwards
+    let d_grid: &[usize] = if quick() { &[100_000] } else { &[100_000, 1_000_000] };
+    let shard_counts: &[usize] = if quick() { &[1, 2] } else { &[1, 2, 4] };
+    for &d in d_grid {
+        let specs = vec![
+            TensorDesc { name: "w1".into(), shape: vec![d / 2], dtype: "f32".into() },
+            TensorDesc { name: "w2".into(), shape: vec![d / 4], dtype: "f32".into() },
+            TensorDesc {
+                name: "w3".into(),
+                shape: vec![d - d / 2 - d / 4],
+                dtype: "f32".into(),
+            },
+        ];
+        let mut p0 = ParamStore::from_specs(specs);
+        p0.init(1);
+        let names = vec!["w1".to_string(), "w2".to_string(), "w3".to_string()];
+        let reps = 3;
+        let mcfg = MezoConfig { lr: 1e-4, eps: 1e-3, ..MezoConfig::default() };
+        let mut pd = p0.clone();
+        let mut opt = MezoSgd::new(mcfg, vec![0, 1, 2], 7);
+        let dense_s = time(reps, || {
+            opt.step(&mut pd, |p| Ok(p.data[0][0])).expect("dense step");
+        });
+        for &k in shard_counts {
+            let fcfg = FleetConfig {
+                lr: 1e-4,
+                eps: 1e-3,
+                weight_decay: 0.0,
+                n: 1,
+                max_retries: 3,
+            };
+            let mut fleet = Fleet::new(&p0, k, names.clone(), 7, fcfg, channel_spawner(None))
+                .expect("fleet");
+            let fleet_s = time(reps, || {
+                fleet.step(|p| Ok(p.data[0][0])).expect("fleet step");
+            });
+            fleet.shutdown();
+            out.push(obj(vec![
+                ("d", Json::from(d as f64)),
+                ("shards", Json::from(k as f64)),
+                ("dense_step_s", Json::from(dense_s)),
+                ("fleet_step_s", Json::from(fleet_s)),
+                ("wire_overhead_x", Json::from(fleet_s / dense_s)),
+            ]));
+        }
+    }
+    out
+}
+
 fn main() {
     let rows = zkernel_bench();
     let fzoo_rows = fzoo_vs_mezo_bench();
@@ -555,6 +665,7 @@ fn main() {
     let pool_rows = pool_vs_spawn_bench();
     let shard_rows = shard_scaling_bench();
     let simd_rows = simd_dispatch_bench();
+    let wire_rows = wire_transport_bench();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let report = obj(vec![
         ("bench", Json::from("zkernel")),
@@ -566,6 +677,7 @@ fn main() {
         ("pool_vs_spawn", Json::Arr(pool_rows)),
         ("shard_scaling", Json::Arr(shard_rows)),
         ("simd_dispatch", Json::Arr(simd_rows)),
+        ("wire_transport", Json::Arr(wire_rows)),
     ]);
     std::fs::write("BENCH_zkernel.json", report.to_string()).expect("write BENCH_zkernel.json");
     println!("wrote BENCH_zkernel.json ({} rows)", rows.len());

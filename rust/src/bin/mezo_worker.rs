@@ -1,0 +1,64 @@
+//! `mezo-worker`: one shard worker of the MZW1 fleet, on a TCP socket.
+//!
+//! A thin process wrapper around [`mezo::wire::ShardWorker`]: it moves
+//! frames, the library moves coordinates. Two modes:
+//!
+//! * `mezo-worker --connect HOST:PORT` — dial the coordinator, serve
+//!   one session, exit when the coordinator disconnects or sends
+//!   Shutdown. This is what `wire::Fleet`-driven process fleets (and
+//!   the churn tests) spawn per shard.
+//! * `mezo-worker --listen HOST:PORT` — bind and serve inbound
+//!   coordinator sessions one at a time, forever (a long-lived worker
+//!   host; each session gets a fresh worker state).
+//!
+//! `--timeout-ms N` bounds each frame read (default: block forever);
+//! on expiry the worker exits nonzero, so an orphaned worker whose
+//! coordinator died mid-command does not linger.
+//!
+//! Thread count / SIMD tier come from the usual `MEZO_THREADS` /
+//! `MEZO_SIMD` environment, so a fleet inherits the verify matrix.
+
+use anyhow::{bail, Result};
+use mezo::util::args::Args;
+use mezo::wire::{ShardWorker, TcpTransport};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let timeout = args
+        .flags
+        .get("timeout-ms")
+        .map(|s| {
+            s.parse::<u64>()
+                .map(Duration::from_millis)
+                .map_err(|_| anyhow::anyhow!("--timeout-ms takes an integer, got '{}'", s))
+        })
+        .transpose()?;
+
+    match (args.flags.get("connect"), args.flags.get("listen")) {
+        (Some(addr), None) => {
+            let stream = TcpStream::connect(addr.as_str())
+                .map_err(|e| anyhow::anyhow!("mezo-worker: connect {}: {}", addr, e))?;
+            let mut transport = TcpTransport::new(stream, timeout)?;
+            ShardWorker::new().serve(&mut transport)?;
+            Ok(())
+        }
+        (None, Some(addr)) => {
+            let listener = TcpListener::bind(addr.as_str())
+                .map_err(|e| anyhow::anyhow!("mezo-worker: bind {}: {}", addr, e))?;
+            // the bound address on stdout lets a spawner use port 0
+            println!("mezo-worker: listening on {}", listener.local_addr()?);
+            for stream in listener.incoming() {
+                let mut transport = TcpTransport::new(stream?, timeout)?;
+                if let Err(e) = ShardWorker::new().serve(&mut transport) {
+                    eprintln!("mezo-worker: session ended: {}", e);
+                }
+            }
+            Ok(())
+        }
+        _ => bail!(
+            "usage: mezo-worker (--connect HOST:PORT | --listen HOST:PORT) [--timeout-ms N]"
+        ),
+    }
+}

@@ -11,23 +11,33 @@ use crate::tokenizer::EOS;
 use anyhow::Result;
 use std::rc::Rc;
 
+/// Artifact-backed task evaluator: scores candidates by mean per-token
+/// NLL (Appendix E.4), greedy-decodes generation tasks, and extracts
+/// pooled features for linear probing.
 pub struct Evaluator {
     /// loss-mode artifact (candidate scoring + train loss)
     pub loss_art: Rc<Artifact>,
     /// logits-mode artifact (generation + features); optional
     pub logits_art: Option<Rc<Artifact>>,
+    /// masked-LM input convention (RoBERTa-style) instead of
+    /// autoregressive
     pub mlm: bool,
 }
 
+/// Aggregate scores of one evaluation pass over a task split.
 #[derive(Debug, Clone, Default)]
 pub struct EvalResult {
     /// accuracy for cls/mch; token-F1 for generation
     pub score: f64,
+    /// exact-match rate (generation tasks; equals `score` otherwise)
     pub em: f64,
+    /// examples evaluated
     pub n: usize,
 }
 
 impl Evaluator {
+    /// Evaluator over a loss artifact, an optional logits artifact (for
+    /// generation/features) and the input convention flag.
     pub fn new(loss_art: Rc<Artifact>, logits_art: Option<Rc<Artifact>>, mlm: bool) -> Evaluator {
         Evaluator { loss_art, logits_art, mlm }
     }

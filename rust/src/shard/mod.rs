@@ -155,27 +155,71 @@ impl ShardPlan {
         }
         cuts.push(total);
 
-        let shards: Vec<Shard> = cuts
-            .windows(2)
-            .map(|w| {
-                let (start, end) = (w[0], w[1]);
-                let mut segments = Vec::new();
-                for (ti, (&off, &len)) in offsets.iter().zip(&lens).enumerate() {
-                    let t_end = off + len as u64;
-                    let lo = start.max(off);
-                    let hi = end.min(t_end);
-                    if lo < hi {
-                        segments.push(Segment {
-                            tensor: ti,
-                            lo: (lo - off) as usize,
-                            hi: (hi - off) as usize,
-                        });
-                    }
-                }
-                Shard { start, end, segments }
-            })
-            .collect();
+        let shards: Vec<Shard> =
+            cuts.windows(2).map(|w| build_shard(w[0], w[1], &offsets, &lens)).collect();
 
+        let (digest, shard_digests) = compute_digests(&names, &lens, &shards);
+        Ok(ShardPlan { names, lens, offsets, shards, digest, shard_digests })
+    }
+
+    /// Rebuild a plan from its structural parts — tensor ABI plus the
+    /// shard ranges — re-deriving offsets, segments and digests exactly
+    /// as [`ShardPlan::new`] does. This is how a plan crosses the wire
+    /// (`wire::frame`): the sender ships only `(names, lens, ranges,
+    /// digest)` and the receiver reconstructs, so a peer whose
+    /// derivation disagrees produces a different digest and fails the
+    /// frame's embedded-digest check loudly.
+    ///
+    /// Errors on structurally invalid ranges: no shards at all, a range
+    /// with `start > end`, a first shard not starting at 0, a gap or
+    /// overlap between consecutive shards, or a last shard not ending at
+    /// the tensor total.
+    pub fn from_parts(
+        names: Vec<String>,
+        lens: Vec<usize>,
+        ranges: &[(u64, u64)],
+    ) -> Result<ShardPlan> {
+        if names.len() != lens.len() {
+            bail!("ShardPlan: {} names but {} lengths", names.len(), lens.len());
+        }
+        if ranges.is_empty() {
+            bail!("ShardPlan: shard count must be > 0");
+        }
+        let mut offsets = Vec::with_capacity(lens.len());
+        let mut total = 0u64;
+        for &len in &lens {
+            offsets.push(total);
+            total = total
+                .checked_add(len as u64)
+                .ok_or_else(|| anyhow::anyhow!("ShardPlan: tensor lengths overflow u64"))?;
+        }
+        if ranges[0].0 != 0 {
+            bail!("ShardPlan: first shard starts at {}, not 0", ranges[0].0);
+        }
+        if ranges[ranges.len() - 1].1 != total {
+            bail!(
+                "ShardPlan: last shard ends at {}, but the tensors total {}",
+                ranges[ranges.len() - 1].1,
+                total
+            );
+        }
+        for (k, &(start, end)) in ranges.iter().enumerate() {
+            if start > end {
+                bail!("ShardPlan: shard {} range [{}, {}) is inverted", k, start, end);
+            }
+            if k > 0 && ranges[k - 1].1 != start {
+                bail!(
+                    "ShardPlan: shard {} starts at {} but shard {} ends at {} — \
+                     shards must tile [0, total) contiguously",
+                    k,
+                    start,
+                    k - 1,
+                    ranges[k - 1].1
+                );
+            }
+        }
+        let shards: Vec<Shard> =
+            ranges.iter().map(|&(s, e)| build_shard(s, e, &offsets, &lens)).collect();
         let (digest, shard_digests) = compute_digests(&names, &lens, &shards);
         Ok(ShardPlan { names, lens, offsets, shards, digest, shard_digests })
     }
@@ -209,6 +253,17 @@ impl ShardPlan {
     /// kernels index from).
     pub fn offsets(&self) -> &[u64] {
         &self.offsets
+    }
+
+    /// Tensor names, in the store's spec order (the plan's ABI half;
+    /// what [`ShardPlan::from_parts`] reconstructs a peer's plan from).
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Tensor lengths, parallel to [`ShardPlan::names`].
+    pub fn lens(&self) -> &[usize] {
+        &self.lens
     }
 
     /// Order- and structure-sensitive digest of the whole plan: tensor
@@ -296,6 +351,23 @@ pub fn trainable_flags(n_tensors: usize, trainable: &[usize]) -> Vec<bool> {
         f[ti] = true;
     }
     f
+}
+
+/// Decompose the global range `[start, end)` into per-tensor segments —
+/// the one derivation shared by [`ShardPlan::new`] and
+/// [`ShardPlan::from_parts`], so a plan rebuilt from its wire parts is
+/// structurally (and therefore digest-) identical to the original.
+fn build_shard(start: u64, end: u64, offsets: &[u64], lens: &[usize]) -> Shard {
+    let mut segments = Vec::new();
+    for (ti, (&off, &len)) in offsets.iter().zip(lens).enumerate() {
+        let t_end = off + len as u64;
+        let lo = start.max(off);
+        let hi = end.min(t_end);
+        if lo < hi {
+            segments.push(Segment { tensor: ti, lo: (lo - off) as usize, hi: (hi - off) as usize });
+        }
+    }
+    Shard { start, end, segments }
 }
 
 /// The interior tensor boundary (a tensor's global start offset, excluding
@@ -614,6 +686,51 @@ mod tests {
         sharded.gather_into(&mut q).unwrap();
         assert_eq!(p.data, q.data);
         assert!(ShardPlan::new(&p, 0).is_err());
+    }
+
+    #[test]
+    fn from_parts_rebuilds_plans_digest_identically() {
+        for lens in [vec![10], vec![64, 68, 72, 100], vec![3], vec![1000, 7, 2000]] {
+            let p = store(&lens);
+            for k in [1usize, 2, 4, 8] {
+                let plan = ShardPlan::new(&p, k).unwrap();
+                let ranges: Vec<(u64, u64)> =
+                    plan.shards().iter().map(|s| (s.start, s.end)).collect();
+                let back = ShardPlan::from_parts(
+                    plan.names().to_vec(),
+                    plan.lens().to_vec(),
+                    &ranges,
+                )
+                .unwrap();
+                assert_eq!(back, plan, "structural identity, lens {:?} k {}", lens, k);
+                assert_eq!(back.digest(), plan.digest());
+                assert_eq!(back.offsets(), plan.offsets());
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_rejects_non_tiling_ranges() {
+        let names = vec!["a".into(), "b".into()];
+        let lens = vec![100usize, 100];
+        let bad: &[(&str, Vec<(u64, u64)>)] = &[
+            ("no shards", vec![]),
+            ("first not at 0", vec![(5, 200)]),
+            ("last short of total", vec![(0, 150)]),
+            ("gap", vec![(0, 80), (90, 200)]),
+            ("overlap", vec![(0, 120), (110, 200)]),
+            ("inverted", vec![(0, 200), (200, 150)]),
+        ];
+        for (what, ranges) in bad {
+            assert!(
+                ShardPlan::from_parts(names.clone(), lens.clone(), ranges).is_err(),
+                "{} must be rejected",
+                what
+            );
+        }
+        // empty trailing shards ARE valid structure (degenerate plans)
+        let ok = ShardPlan::from_parts(vec!["a".into()], vec![3], &[(0, 2), (2, 3), (3, 3)]);
+        assert!(ok.unwrap().shard(2).is_empty());
     }
 
     #[test]

@@ -1,0 +1,459 @@
+//! The coordinator half of the shard protocol: scatters a dense store
+//! across K workers, drives MeZO stepping and trajectory replay over
+//! MZW1 frames, and gathers a result pinned bitwise-identical to the
+//! dense path.
+//!
+//! ## Bit-exactness
+//!
+//! [`Fleet::step`] issues exactly the dense [`MezoSgd`] (Sgd flavor)
+//! kernel sequence — per seed `+ε`, `−2ε`, `+ε` perturbs, then ONE
+//! fused multi-seed update with coefficients `pgrad/n` — and each
+//! worker executes its segment slices at the segments' global z
+//! counters, so the gathered store is `to_bits()`-identical to
+//! `MezoSgd::step` on a dense store with the same master seed
+//! (`tests/churn.rs` pins this for shards 1/2/4, with and without
+//! churn). Losses are evaluated on a dense *mirror* refreshed from the
+//! workers before each forward, so the loss closure sees exactly the
+//! perturbed parameters a dense run would.
+//!
+//! ## Churn
+//!
+//! Worker failure is expected, not exceptional. The fleet keeps, per
+//! shard: the slice values at the last checkpoint, plus the log of
+//! every mutating command issued since. When a worker times out or
+//! disconnects, the fleet spawns a replacement (the [`SpawnFn`]),
+//! re-installs the checkpoint slice, re-drives the command log in
+//! order, and retries the in-flight command. Every kernel is
+//! deterministic, so the rebuilt worker's buffers are bit-identical to
+//! the lost worker's — recovery is invisible in the gathered result.
+//! A command is appended to the log only *after* every worker has
+//! acked it, so a mid-broadcast respawn applies it exactly once.
+//! Protocol refusals ([`Msg::Nack`] — stale digests, sparse logs) are
+//! NOT churn: they mean the fleet itself is wrong, and abort loudly.
+
+use super::frame::{Msg, WireError};
+use super::transport::Transport;
+use crate::model::params::ParamStore;
+use crate::optim::mezo::{StepInfo, StepRecord};
+use crate::rng::Pcg;
+use crate::shard::ShardPlan;
+use crate::storage::Trajectory;
+use anyhow::{bail, Result};
+
+/// Spawns (or re-spawns) the transport to worker `k`. Called once per
+/// shard at fleet construction and again on every churn recovery; the
+/// factory owns whatever lives behind the transport (a thread, a child
+/// process, a socket).
+pub type SpawnFn = Box<dyn FnMut(usize) -> Result<Box<dyn Transport>> + Send>;
+
+/// Fleet stepping hyperparameters — the subset of
+/// [`MezoConfig`](crate::optim::mezo::MezoConfig) the wire protocol
+/// carries (Sgd flavor; moments are dense-only, see ROADMAP).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// learning rate
+    pub lr: f32,
+    /// perturbation scale ε
+    pub eps: f32,
+    /// weight decay
+    pub weight_decay: f32,
+    /// SPSA samples per step (n-SPSA averaging)
+    pub n: usize,
+    /// transport failures tolerated per command before giving up
+    pub max_retries: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig { lr: 1e-3, eps: 1e-3, weight_decay: 0.0, n: 1, max_retries: 3 }
+    }
+}
+
+/// How one worker call failed — the split the churn logic turns on.
+enum CallErr {
+    /// Transport fault (timeout / disconnect / io): respawn and retry.
+    Churn(WireError),
+    /// Protocol fault (refusal, wrong reply kind): abort the fleet op.
+    Fatal(anyhow::Error),
+}
+
+/// A coordinator plus K shard workers. Build with [`Fleet::new`], drive
+/// with [`Fleet::step`] / [`Fleet::replay`], read back with
+/// [`Fleet::gather_into`].
+pub struct Fleet {
+    plan: ShardPlan,
+    trainable: Vec<String>,
+    cfg: FleetConfig,
+    workers: Vec<Box<dyn Transport>>,
+    /// workers that died and were respawned but not yet re-driven
+    needs_reload: Vec<bool>,
+    spawn: SpawnFn,
+    /// per-shard segment values at the last checkpoint
+    checkpoint: Vec<Vec<Vec<f32>>>,
+    /// mutating commands issued since the checkpoint, in order
+    cmd_log: Vec<Msg>,
+    /// dense mirror the loss closure evaluates against
+    mirror: ParamStore,
+    seed_rng: Pcg,
+    /// the full `(seed, pgrad, lr)` log, exactly as a dense `MezoSgd`
+    /// would have recorded it — replayable anywhere
+    pub history: Vec<StepRecord>,
+    /// steps taken
+    pub step: u64,
+    /// workers respawned over the fleet's lifetime (observability; the
+    /// churn tests assert recovery actually happened)
+    pub respawns: usize,
+}
+
+impl Fleet {
+    /// Scatter `params` into `n_shards` shards and install one on each
+    /// freshly spawned worker. `trainable` names the tensors stepping
+    /// and replay may touch; `master_seed` drives the per-step seed
+    /// stream exactly like [`MezoSgd::new`], so a fleet and a dense
+    /// optimizer given the same seed walk the same seeds.
+    ///
+    /// [`MezoSgd`]: crate::optim::mezo::MezoSgd
+    /// [`MezoSgd::new`]: crate::optim::mezo::MezoSgd::new
+    pub fn new(
+        params: &ParamStore,
+        n_shards: usize,
+        trainable: Vec<String>,
+        master_seed: u64,
+        cfg: FleetConfig,
+        spawn: SpawnFn,
+    ) -> Result<Fleet> {
+        let plan = ShardPlan::new(params, n_shards)?;
+        plan.indices_of(&trainable)
+            .map_err(|e| e.context("Fleet: trainable names must resolve in the plan"))?;
+        let checkpoint: Vec<Vec<Vec<f32>>> = plan
+            .shards()
+            .iter()
+            .map(|s| {
+                s.segments
+                    .iter()
+                    .map(|seg| params.data[seg.tensor][seg.lo..seg.hi].to_vec())
+                    .collect()
+            })
+            .collect();
+        let mut mirror = ParamStore::from_specs(params.specs.clone());
+        mirror.copy_from(params);
+        let mut fleet = Fleet {
+            plan,
+            trainable,
+            cfg,
+            workers: Vec::new(),
+            needs_reload: vec![false; n_shards],
+            spawn,
+            checkpoint,
+            cmd_log: Vec::new(),
+            mirror,
+            seed_rng: Pcg::new(master_seed),
+            history: Vec::new(),
+            step: 0,
+            respawns: 0,
+        };
+        for k in 0..n_shards {
+            let t = (fleet.spawn)(k)
+                .map_err(|e| e.context(format!("Fleet: spawning worker {}", k)))?;
+            fleet.workers.push(t);
+            fleet.reload(k).map_err(|e| match e {
+                CallErr::Churn(w) => anyhow::Error::new(w)
+                    .context(format!("Fleet: initial scatter to worker {}", k)),
+                CallErr::Fatal(e) => e,
+            })?;
+        }
+        Ok(fleet)
+    }
+
+    /// The partition the fleet serves under.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// One MeZO step, distributed: the dense Algorithm-1 sequence with
+    /// every parameter write broadcast to the shard workers and every
+    /// forward evaluated on the refreshed dense mirror. Returns the same
+    /// [`StepInfo`] a dense step would.
+    pub fn step<F>(&mut self, mut loss: F) -> Result<StepInfo>
+    where
+        F: FnMut(&ParamStore) -> Result<f32>,
+    {
+        let n = self.cfg.n.max(1);
+        let (eps, lr) = (self.cfg.eps, self.cfg.lr);
+        let pd = self.plan.digest();
+        let mut records: Vec<StepRecord> = Vec::with_capacity(n);
+        let mut mean_loss = 0.0f32;
+        let mut fwd = 0usize;
+        for _ in 0..n {
+            let seed = self.seed_rng.next_u64();
+            self.broadcast(Msg::Perturb { plan_digest: pd, seed, scale: eps })?;
+            self.refresh_mirror()?;
+            let lp = loss(&self.mirror)?;
+            self.broadcast(Msg::Perturb { plan_digest: pd, seed, scale: -2.0 * eps })?;
+            self.refresh_mirror()?;
+            let lm = loss(&self.mirror)?;
+            self.broadcast(Msg::Perturb { plan_digest: pd, seed, scale: eps })?;
+            fwd += 2;
+            mean_loss += 0.5 * (lp + lm);
+            records.push(StepRecord { seed, pgrad: (lp - lm) / (2.0 * eps), lr });
+        }
+        mean_loss /= n as f32;
+        let zs: Vec<(u64, f32)> =
+            records.iter().map(|r| (r.seed, r.pgrad / n as f32)).collect();
+        self.broadcast(Msg::Update {
+            plan_digest: pd,
+            zs,
+            lr,
+            wd: self.cfg.weight_decay,
+        })?;
+        self.checkpoint_now()?;
+        self.history.extend(records.iter().copied());
+        self.step += 1;
+        let last = records.last().expect("n >= 1");
+        Ok(StepInfo { loss: mean_loss, pgrad: last.pgrad, seed: last.seed, forward_passes: fwd })
+    }
+
+    /// Replay a `(seed, pgrad, lr)` log across the fleet — every worker
+    /// re-applies the whole log over its own shard (`seeds_per_step = 0`
+    /// replays record-by-record; otherwise records apply as fused seed
+    /// batches, bitwise equal for any batch size). The coordinator-side
+    /// guards mirror [`Trajectory::replay_sharded`]'s: sparse logs and
+    /// unresolvable trainable names are refused before any frame ships.
+    pub fn replay(&mut self, log: &Trajectory, seeds_per_step: usize) -> Result<()> {
+        if log.mask_digest.is_some() {
+            bail!("Fleet: sparse (masked) logs cannot replay over a shard fleet");
+        }
+        self.plan.indices_of(&log.trainable)?;
+        if seeds_per_step > 0 && log.records.len() % seeds_per_step != 0 {
+            bail!(
+                "Fleet: {} records do not divide into seed-batches of {}",
+                log.records.len(),
+                seeds_per_step
+            );
+        }
+        self.broadcast(Msg::Replay {
+            plan_digest: self.plan.digest(),
+            log: Box::new(log.clone()),
+            seeds_per_step: seeds_per_step as u32,
+        })?;
+        self.checkpoint_now()
+    }
+
+    /// Fetch every shard, verify digest provenance, and write the
+    /// values into `out` (validated against the plan first). Bitwise:
+    /// the gathered store equals the dense run's.
+    pub fn gather_into(&mut self, out: &mut ParamStore) -> Result<()> {
+        self.plan.validate(out)?;
+        self.refresh_mirror()?;
+        out.copy_from(&self.mirror);
+        Ok(())
+    }
+
+    /// Orderly shutdown: best-effort [`Msg::Shutdown`] to every worker
+    /// (a dead worker is already shut down — errors are ignored).
+    pub fn shutdown(mut self) {
+        for t in self.workers.iter_mut() {
+            let _ = t.send(&Msg::Shutdown);
+            let _ = t.recv();
+        }
+    }
+
+    /// Broadcast one mutating command to every worker, then append it
+    /// to the since-checkpoint log. Appending AFTER the acks is what
+    /// makes churn recovery exactly-once: a worker respawned mid-
+    /// broadcast reloads the log *without* this command, then the retry
+    /// delivers it.
+    fn broadcast(&mut self, cmd: Msg) -> Result<()> {
+        for k in 0..self.workers.len() {
+            match self.rpc(k, &cmd)? {
+                Msg::Ack => {}
+                other => bail!(
+                    "Fleet: worker {} answered {} to a {} broadcast",
+                    k,
+                    other.kind_name(),
+                    cmd.kind_name()
+                ),
+            }
+        }
+        self.cmd_log.push(cmd);
+        Ok(())
+    }
+
+    /// One request/response against worker `k`, with churn recovery:
+    /// transport failures respawn the worker (checkpoint + command-log
+    /// re-drive) and retry, up to `cfg.max_retries` times; protocol
+    /// refusals abort immediately.
+    fn rpc(&mut self, k: usize, msg: &Msg) -> Result<Msg> {
+        let mut attempts = 0usize;
+        loop {
+            let err = match self.attempt(k, msg) {
+                Ok(reply) => return Ok(reply),
+                Err(CallErr::Fatal(e)) => return Err(e),
+                Err(CallErr::Churn(e)) => e,
+            };
+            attempts += 1;
+            if attempts > self.cfg.max_retries {
+                return Err(anyhow::Error::new(err).context(format!(
+                    "Fleet: worker {} still failing after {} respawn attempts",
+                    k, attempts
+                )));
+            }
+            self.respawn(k, &err)?;
+        }
+    }
+
+    /// One send/recv against worker `k`, re-driving its state first if
+    /// it was respawned since the last successful call.
+    fn attempt(&mut self, k: usize, msg: &Msg) -> Result<Msg, CallErr> {
+        if self.needs_reload[k] {
+            self.reload(k)?;
+        }
+        let t = &mut self.workers[k];
+        t.send(msg).map_err(CallErr::Churn)?;
+        match t.recv().map_err(CallErr::Churn)? {
+            Msg::Nack { message } => Err(CallErr::Fatal(anyhow::anyhow!(
+                "Fleet: worker {} refused {}: {}",
+                k,
+                msg.kind_name(),
+                message
+            ))),
+            reply => Ok(reply),
+        }
+    }
+
+    /// Replace worker `k`'s transport after a churn failure; the state
+    /// re-drive happens lazily on the next [`Fleet::attempt`].
+    fn respawn(&mut self, k: usize, cause: &WireError) -> Result<()> {
+        self.respawns += 1;
+        self.workers[k] = (self.spawn)(k).map_err(|e| {
+            e.context(format!(
+                "Fleet: respawning worker {} after transport failure ({})",
+                k, cause
+            ))
+        })?;
+        self.needs_reload[k] = true;
+        Ok(())
+    }
+
+    /// Re-install worker `k`'s checkpoint slice and re-drive every
+    /// command issued since. Deterministic kernels + identical command
+    /// order = the rebuilt buffers are bit-identical to the lost ones.
+    fn reload(&mut self, k: usize) -> Result<(), CallErr> {
+        let load = Msg::LoadShard {
+            plan: Box::new(self.plan.clone()),
+            shard: k as u32,
+            trainable: self.trainable.clone(),
+            segments: self.checkpoint[k].clone(),
+        };
+        let replays: Vec<Msg> = self.cmd_log.clone();
+        let t = &mut self.workers[k];
+        for cmd in std::iter::once(&load).chain(replays.iter()) {
+            t.send(cmd).map_err(CallErr::Churn)?;
+            match t.recv().map_err(CallErr::Churn)? {
+                Msg::Ack => {}
+                Msg::Nack { message } => {
+                    return Err(CallErr::Fatal(anyhow::anyhow!(
+                        "Fleet: worker {} refused {} during state re-drive: {}",
+                        k,
+                        cmd.kind_name(),
+                        message
+                    )))
+                }
+                other => {
+                    return Err(CallErr::Fatal(anyhow::anyhow!(
+                        "Fleet: worker {} answered {} to a {} re-drive",
+                        k,
+                        other.kind_name(),
+                        cmd.kind_name()
+                    )))
+                }
+            }
+        }
+        self.needs_reload[k] = false;
+        Ok(())
+    }
+
+    /// Fetch every worker's current slice (digest-verified) into the
+    /// dense mirror.
+    fn refresh_mirror(&mut self) -> Result<()> {
+        let pd = self.plan.digest();
+        for k in 0..self.workers.len() {
+            let reply = self.rpc(k, &Msg::FetchShard { plan_digest: pd })?;
+            let (plan_digest, shard, shard_digest, segments) = match reply {
+                Msg::ShardSlice { plan_digest, shard, shard_digest, segments } => {
+                    (plan_digest, shard, shard_digest, segments)
+                }
+                other => bail!("Fleet: worker {} answered {} to a fetch", k, other.kind_name()),
+            };
+            if plan_digest != pd || shard as usize != k || shard_digest != self.plan.shard_digest(k)
+            {
+                bail!(
+                    "Fleet: worker {} returned a slice for plan {:#018x} shard {} \
+                     (digest {:#018x}); expected plan {:#018x} shard {} (digest {:#018x})",
+                    k,
+                    plan_digest,
+                    shard,
+                    shard_digest,
+                    pd,
+                    k,
+                    self.plan.shard_digest(k)
+                );
+            }
+            let segs = &self.plan.shard(k).segments;
+            if segments.len() != segs.len() {
+                bail!(
+                    "Fleet: worker {} returned {} segment buffers, plan has {}",
+                    k,
+                    segments.len(),
+                    segs.len()
+                );
+            }
+            for (seg, buf) in segs.iter().zip(&segments) {
+                if buf.len() != seg.len() {
+                    bail!(
+                        "Fleet: worker {} segment buffer holds {} values, segment spans {}",
+                        k,
+                        buf.len(),
+                        seg.len()
+                    );
+                }
+                self.mirror.data[seg.tensor][seg.lo..seg.hi].copy_from_slice(buf);
+            }
+        }
+        Ok(())
+    }
+
+    /// Promote the workers' current state to the new checkpoint and
+    /// clear the command log — the recovery baseline rolls forward at
+    /// every step/replay boundary, so re-drives stay short.
+    fn checkpoint_now(&mut self) -> Result<()> {
+        self.refresh_mirror()?;
+        for (k, shard) in self.plan.shards().iter().enumerate() {
+            for (si, seg) in shard.segments.iter().enumerate() {
+                self.checkpoint[k][si]
+                    .copy_from_slice(&self.mirror.data[seg.tensor][seg.lo..seg.hi]);
+            }
+        }
+        self.cmd_log.clear();
+        Ok(())
+    }
+}
+
+/// Spawn one in-process channel worker per shard: each call starts a
+/// thread running [`ShardWorker::serve`](super::ShardWorker::serve)
+/// over the worker end of a [`channel_pair`](super::channel_pair) and
+/// returns the coordinator end. The default [`SpawnFn`] for
+/// single-process fleets, and the churn tests' respawn path (an
+/// orphaned worker thread exits when its channel disconnects).
+pub fn channel_spawner(timeout: Option<std::time::Duration>) -> SpawnFn {
+    Box::new(move |_k| {
+        let (coord, mut worker) = super::transport::channel_pair(timeout);
+        std::thread::spawn(move || {
+            let mut w = super::worker::ShardWorker::new();
+            // Disconnect-driven lifetime: serve() returns Ok when the
+            // coordinator drops this end (normal or churn teardown).
+            let _ = w.serve(&mut worker);
+        });
+        Ok(Box::new(coord) as Box<dyn Transport>)
+    })
+}

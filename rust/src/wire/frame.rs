@@ -1,0 +1,937 @@
+//! The MZW1 frame codec: every message crossing a transport is one
+//! length-prefixed, digest-authenticated binary frame.
+//!
+//! Layout, all integers little-endian:
+//!
+//! ```text
+//! "MZW1" | version u8 | kind u8 | payload_len u32 | payload | digest u64
+//! ```
+//!
+//! The trailing digest is a chained-splitmix64 walk (the same
+//! construction as [`ShardPlan::digest`](crate::shard::ShardPlan)) over
+//! `version`, `kind`, `payload_len` and the payload bytes, with the
+//! length folded in first so zero-padding a short payload cannot
+//! collide. It is an integrity check against truncation, bit rot and
+//! protocol skew — not a cryptographic MAC.
+//!
+//! Decoding is total: [`Msg::decode`] and [`Msg::read_from`] return a
+//! typed [`WireError`] for every malformed input — wrong magic, unknown
+//! version or kind, truncated frame, oversized length, digest mismatch,
+//! malformed payload — and never panic on arbitrary bytes. Allocation
+//! is bounded by [`MAX_PAYLOAD`] and by cross-checking every embedded
+//! count against the bytes actually present before reserving, so a
+//! fuzzed length field fails loudly instead of attempting a huge
+//! allocation (`tests/properties.rs` drives all of this).
+
+use crate::rng::splitmix64;
+use crate::shard::{ShardManifest, ShardPlan};
+use crate::storage::Trajectory;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Frame magic: the first four bytes of every MZW1 frame.
+pub const MAGIC: [u8; 4] = *b"MZW1";
+
+/// Protocol version this build speaks. A frame with any other version
+/// byte is rejected with [`WireError::BadVersion`] — skewed peers must
+/// fail loudly, not misparse.
+pub const VERSION: u8 = 1;
+
+/// Hard cap on a frame's payload length (256 MiB). A length field above
+/// this is rejected before any allocation ([`WireError::Oversize`]).
+pub const MAX_PAYLOAD: usize = 256 << 20;
+
+/// Fixed bytes before the payload: magic, version, kind, payload_len.
+pub const HEADER_LEN: usize = 4 + 1 + 1 + 4;
+
+/// Fixed bytes after the payload: the u64 digest.
+pub const TRAILER_LEN: usize = 8;
+
+const N_KINDS: u8 = 13;
+
+/// Every way a frame or transport operation can fail. Typed so tests
+/// and the coordinator's churn logic can tell *protocol* failures
+/// (corrupt frames, skewed peers — fatal) from *transport* failures
+/// (timeout, disconnect — retriable via worker respawn).
+#[derive(Debug)]
+pub enum WireError {
+    /// First four bytes were not `"MZW1"`.
+    BadMagic([u8; 4]),
+    /// Version byte differs from [`VERSION`].
+    BadVersion(u8),
+    /// Kind byte names no known frame kind.
+    UnknownKind(u8),
+    /// Fewer bytes than the frame's own header promises.
+    Truncated {
+        /// bytes the frame needs in total
+        needed: usize,
+        /// bytes actually available
+        have: usize,
+    },
+    /// Payload length field exceeds [`MAX_PAYLOAD`].
+    Oversize {
+        /// the claimed payload length
+        len: usize,
+        /// the cap it exceeded
+        max: usize,
+    },
+    /// Recomputed digest disagrees with the frame's trailer.
+    BadDigest {
+        /// digest recomputed from the received bytes
+        want: u64,
+        /// digest the frame carried
+        got: u64,
+    },
+    /// Digest-valid frame whose payload bytes do not parse as the kind
+    /// claims (includes an embedded-digest mismatch on a decoded plan).
+    BadPayload(String),
+    /// Transport read deadline expired with no frame.
+    Timeout,
+    /// Peer hung up (channel dropped / clean EOF).
+    Disconnected,
+    /// Underlying socket error other than timeout/EOF.
+    Io(std::io::Error),
+}
+
+impl WireError {
+    /// Stable short name of the variant — what the fuzz properties
+    /// assert on without matching display strings.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            WireError::BadMagic(_) => "bad_magic",
+            WireError::BadVersion(_) => "bad_version",
+            WireError::UnknownKind(_) => "unknown_kind",
+            WireError::Truncated { .. } => "truncated",
+            WireError::Oversize { .. } => "oversize",
+            WireError::BadDigest { .. } => "bad_digest",
+            WireError::BadPayload(_) => "bad_payload",
+            WireError::Timeout => "timeout",
+            WireError::Disconnected => "disconnected",
+            WireError::Io(_) => "io",
+        }
+    }
+
+    /// Whether this failure is a transport fault a coordinator may heal
+    /// by respawning the worker (vs. a protocol fault that must abort).
+    pub fn is_transport(&self) -> bool {
+        matches!(
+            self,
+            WireError::Timeout | WireError::Disconnected | WireError::Io(_)
+        )
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::BadMagic(m) => {
+                write!(f, "wire: bad frame magic {:02x?} (expected \"MZW1\")", m)
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "wire: protocol version {} (this build speaks {})", v, VERSION)
+            }
+            WireError::UnknownKind(k) => write!(f, "wire: unknown frame kind {}", k),
+            WireError::Truncated { needed, have } => {
+                write!(f, "wire: truncated frame ({} bytes present, {} needed)", have, needed)
+            }
+            WireError::Oversize { len, max } => {
+                write!(f, "wire: payload length {} exceeds the {} byte cap", len, max)
+            }
+            WireError::BadDigest { want, got } => write!(
+                f,
+                "wire: frame digest mismatch (computed {:#018x}, frame carries {:#018x})",
+                want, got
+            ),
+            WireError::BadPayload(m) => write!(f, "wire: bad payload: {}", m),
+            WireError::Timeout => write!(f, "wire: read timed out"),
+            WireError::Disconnected => write!(f, "wire: peer disconnected"),
+            WireError::Io(e) => write!(f, "wire: io error: {}", e),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        match e.kind() {
+            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock => WireError::Timeout,
+            std::io::ErrorKind::UnexpectedEof
+            | std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted => WireError::Disconnected,
+            _ => WireError::Io(e),
+        }
+    }
+}
+
+/// The chained-splitmix64 frame digest over `(version, kind,
+/// payload_len, payload)`. The length is folded in before the bytes so
+/// payloads that differ only by trailing zero bytes digest differently.
+pub fn frame_digest(version: u8, kind: u8, payload: &[u8]) -> u64 {
+    let mut h = splitmix64(0x0007_77AE ^ ((version as u64) << 8) ^ kind as u64);
+    h = splitmix64(h ^ payload.len() as u64);
+    let mut chunks = payload.chunks_exact(8);
+    for c in &mut chunks {
+        h = splitmix64(h ^ u64::from_le_bytes(c.try_into().expect("chunks_exact(8)")));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0u8; 8];
+        tail[..rem.len()].copy_from_slice(rem);
+        h = splitmix64(h ^ u64::from_le_bytes(tail));
+    }
+    h
+}
+
+/// Every message the shard protocol ships, one frame kind per variant.
+/// Encode with [`Msg::encode`] / [`Msg::write_to`]; decode with
+/// [`Msg::decode`] / [`Msg::read_from`]. The roundtrip is byte-exact:
+/// re-encoding a decoded frame reproduces the original bytes
+/// (`tests/properties.rs` pins this for every kind).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Handshake / liveness probe; a worker answers [`Msg::Ack`].
+    Hello {
+        /// sender's node id (coordinator uses the shard index)
+        node: u32,
+    },
+    /// Positive acknowledgement of the previous request.
+    Ack,
+    /// The peer refused the previous request (stale digest, unknown
+    /// tensor, malformed command...). A protocol-level refusal, distinct
+    /// from a transport failure: the connection stays usable.
+    Nack {
+        /// human-readable reason, for the coordinator's error
+        message: String,
+    },
+    /// A full [`ShardPlan`], structurally encoded (the receiver rebuilds
+    /// segments and digests and cross-checks the sender's digest).
+    Plan(Box<ShardPlan>),
+    /// An MZT3 [`ShardManifest`].
+    Manifest(ShardManifest),
+    /// A full `(seed, pgrad, lr)` [`Trajectory`] log.
+    Log(Box<Trajectory>),
+    /// Install shard `shard` of `plan` on the receiving worker, with the
+    /// trainable tensor names and one detached buffer per plan segment.
+    LoadShard {
+        /// the partition the worker will serve under
+        plan: Box<ShardPlan>,
+        /// which shard of the plan this worker owns
+        shard: u32,
+        /// trainable tensor names (resolved against the plan's ABI)
+        trainable: Vec<String>,
+        /// `segments[si]` = the values of `plan.shard(shard).segments[si]`
+        segments: Vec<Vec<f32>>,
+    },
+    /// In-place `θ += scale · z(seed)` over the worker's trainable
+    /// segments, z indexed at the segments' *global* counters.
+    Perturb {
+        /// [`ShardPlan::digest`] the command was issued under — a worker
+        /// holding a different plan refuses with [`Msg::Nack`]
+        plan_digest: u64,
+        /// Gaussian stream seed
+        seed: u64,
+        /// perturbation scale (±ε, −2ε...)
+        scale: f32,
+    },
+    /// Fused multi-seed SGD update over the worker's trainable segments:
+    /// one [`ZEngine::multi_sgd_update`](crate::zkernel::ZEngine) pass
+    /// with `(seed, coeff)` pairs (coeff = pgrad/n on the MeZO path).
+    Update {
+        /// plan digest guard, as in [`Msg::Perturb`]
+        plan_digest: u64,
+        /// per-seed `(stream seed, update coefficient)` pairs
+        zs: Vec<(u64, f32)>,
+        /// learning rate
+        lr: f32,
+        /// weight decay
+        wd: f32,
+    },
+    /// Replay a whole trajectory over the worker's shard (sequential
+    /// when `seeds_per_step == 0`, fused seed batches otherwise).
+    Replay {
+        /// plan digest guard, as in [`Msg::Perturb`]
+        plan_digest: u64,
+        /// the `(seed, pgrad, lr)` log to re-apply
+        log: Box<Trajectory>,
+        /// fused batch size; 0 = sequential record-by-record replay
+        seeds_per_step: u32,
+    },
+    /// Ask the worker for its current shard values.
+    FetchShard {
+        /// plan digest guard, as in [`Msg::Perturb`]
+        plan_digest: u64,
+    },
+    /// A worker's shard values, digest-stamped so the coordinator can
+    /// verify provenance before gathering.
+    ShardSlice {
+        /// digest of the plan the worker serves under
+        plan_digest: u64,
+        /// which shard the values belong to
+        shard: u32,
+        /// [`ShardPlan::shard_digest`] of that shard
+        shard_digest: u64,
+        /// one buffer per plan segment, in segment order
+        segments: Vec<Vec<f32>>,
+    },
+    /// Orderly worker shutdown (worker acks, then exits its serve loop).
+    Shutdown,
+}
+
+impl Msg {
+    /// The frame kind byte this message encodes as.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 0,
+            Msg::Ack => 1,
+            Msg::Nack { .. } => 2,
+            Msg::Plan(_) => 3,
+            Msg::Manifest(_) => 4,
+            Msg::Log(_) => 5,
+            Msg::LoadShard { .. } => 6,
+            Msg::Perturb { .. } => 7,
+            Msg::Update { .. } => 8,
+            Msg::Replay { .. } => 9,
+            Msg::FetchShard { .. } => 10,
+            Msg::ShardSlice { .. } => 11,
+            Msg::Shutdown => 12,
+        }
+    }
+
+    /// Stable human-readable name of the frame kind, for error messages.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::Ack => "ack",
+            Msg::Nack { .. } => "nack",
+            Msg::Plan(_) => "plan",
+            Msg::Manifest(_) => "manifest",
+            Msg::Log(_) => "log",
+            Msg::LoadShard { .. } => "load_shard",
+            Msg::Perturb { .. } => "perturb",
+            Msg::Update { .. } => "update",
+            Msg::Replay { .. } => "replay",
+            Msg::FetchShard { .. } => "fetch_shard",
+            Msg::ShardSlice { .. } => "shard_slice",
+            Msg::Shutdown => "shutdown",
+        }
+    }
+
+    /// Encode the message as one complete MZW1 frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        debug_assert!(payload.len() <= MAX_PAYLOAD, "payload exceeds MAX_PAYLOAD");
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.kind());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&frame_digest(VERSION, self.kind(), &payload).to_le_bytes());
+        out
+    }
+
+    /// Decode one frame from the front of `bytes`; on success returns
+    /// the message and the number of bytes consumed (trailing bytes are
+    /// left for the caller — streams carry back-to-back frames). Total:
+    /// every malformed input yields a typed [`WireError`], never a
+    /// panic, and allocation is bounded by the bytes actually present.
+    pub fn decode(bytes: &[u8]) -> Result<(Msg, usize), WireError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(WireError::Truncated { needed: HEADER_LEN, have: bytes.len() });
+        }
+        let mut magic = [0u8; 4];
+        magic.copy_from_slice(&bytes[..4]);
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let version = bytes[4];
+        if version != VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let kind = bytes[5];
+        if kind >= N_KINDS {
+            return Err(WireError::UnknownKind(kind));
+        }
+        let len =
+            u32::from_le_bytes(bytes[6..10].try_into().expect("4 header bytes")) as usize;
+        if len > MAX_PAYLOAD {
+            return Err(WireError::Oversize { len, max: MAX_PAYLOAD });
+        }
+        let total = HEADER_LEN + len + TRAILER_LEN;
+        if bytes.len() < total {
+            return Err(WireError::Truncated { needed: total, have: bytes.len() });
+        }
+        let payload = &bytes[HEADER_LEN..HEADER_LEN + len];
+        let got = u64::from_le_bytes(
+            bytes[HEADER_LEN + len..total].try_into().expect("8 trailer bytes"),
+        );
+        let want = frame_digest(version, kind, payload);
+        if want != got {
+            return Err(WireError::BadDigest { want, got });
+        }
+        let msg = Msg::decode_payload(kind, payload)?;
+        Ok((msg, total))
+    }
+
+    /// Write the message as one frame to a stream.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<(), WireError> {
+        w.write_all(&self.encode())?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read exactly one frame from a stream. EOF at a frame boundary is
+    /// [`WireError::Disconnected`]; a read deadline on the underlying
+    /// stream surfaces as [`WireError::Timeout`]. Header fields are
+    /// validated before the payload is allocated or read.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Msg, WireError> {
+        let mut head = [0u8; HEADER_LEN];
+        r.read_exact(&mut head)?;
+        let mut magic = [0u8; 4];
+        magic.copy_from_slice(&head[..4]);
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        if head[4] != VERSION {
+            return Err(WireError::BadVersion(head[4]));
+        }
+        let kind = head[5];
+        if kind >= N_KINDS {
+            return Err(WireError::UnknownKind(kind));
+        }
+        let len = u32::from_le_bytes(head[6..10].try_into().expect("4 header bytes")) as usize;
+        if len > MAX_PAYLOAD {
+            return Err(WireError::Oversize { len, max: MAX_PAYLOAD });
+        }
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload)?;
+        let mut trailer = [0u8; TRAILER_LEN];
+        r.read_exact(&mut trailer)?;
+        let got = u64::from_le_bytes(trailer);
+        let want = frame_digest(VERSION, kind, &payload);
+        if want != got {
+            return Err(WireError::BadDigest { want, got });
+        }
+        Msg::decode_payload(kind, &payload)
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        match self {
+            Msg::Hello { node } => e.u32(*node),
+            Msg::Ack | Msg::Shutdown => {}
+            Msg::Nack { message } => e.str(message),
+            Msg::Plan(plan) => e.plan(plan),
+            Msg::Manifest(m) => {
+                e.u64(m.plan_digest);
+                e.u32(m.shard_digests.len() as u32);
+                for &d in &m.shard_digests {
+                    e.u64(d);
+                }
+            }
+            Msg::Log(log) => e.trajectory(log),
+            Msg::LoadShard { plan, shard, trainable, segments } => {
+                e.plan(plan);
+                e.u32(*shard);
+                e.strs(trainable);
+                e.seg_bufs(segments);
+            }
+            Msg::Perturb { plan_digest, seed, scale } => {
+                e.u64(*plan_digest);
+                e.u64(*seed);
+                e.f32(*scale);
+            }
+            Msg::Update { plan_digest, zs, lr, wd } => {
+                e.u64(*plan_digest);
+                e.u32(zs.len() as u32);
+                for &(seed, coeff) in zs {
+                    e.u64(seed);
+                    e.f32(coeff);
+                }
+                e.f32(*lr);
+                e.f32(*wd);
+            }
+            Msg::Replay { plan_digest, log, seeds_per_step } => {
+                e.u64(*plan_digest);
+                e.trajectory(log);
+                e.u32(*seeds_per_step);
+            }
+            Msg::FetchShard { plan_digest } => e.u64(*plan_digest),
+            Msg::ShardSlice { plan_digest, shard, shard_digest, segments } => {
+                e.u64(*plan_digest);
+                e.u32(*shard);
+                e.u64(*shard_digest);
+                e.seg_bufs(segments);
+            }
+        }
+        e.buf
+    }
+
+    fn decode_payload(kind: u8, payload: &[u8]) -> Result<Msg, WireError> {
+        let mut d = Dec::new(payload);
+        let msg = match kind {
+            0 => Msg::Hello { node: d.u32()? },
+            1 => Msg::Ack,
+            2 => Msg::Nack { message: d.str()? },
+            3 => Msg::Plan(Box::new(d.plan()?)),
+            4 => {
+                let plan_digest = d.u64()?;
+                let n = d.u32()? as usize;
+                d.fits(n.checked_mul(8))?;
+                let mut shard_digests = Vec::with_capacity(n);
+                for _ in 0..n {
+                    shard_digests.push(d.u64()?);
+                }
+                Msg::Manifest(ShardManifest { plan_digest, shard_digests })
+            }
+            5 => Msg::Log(Box::new(d.trajectory()?)),
+            6 => {
+                let plan = Box::new(d.plan()?);
+                let shard = d.u32()?;
+                let trainable = d.strs()?;
+                let segments = d.seg_bufs()?;
+                Msg::LoadShard { plan, shard, trainable, segments }
+            }
+            7 => Msg::Perturb { plan_digest: d.u64()?, seed: d.u64()?, scale: d.f32()? },
+            8 => {
+                let plan_digest = d.u64()?;
+                let n = d.u32()? as usize;
+                d.fits(n.checked_mul(12))?;
+                let mut zs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let seed = d.u64()?;
+                    let coeff = d.f32()?;
+                    zs.push((seed, coeff));
+                }
+                Msg::Update { plan_digest, zs, lr: d.f32()?, wd: d.f32()? }
+            }
+            9 => {
+                let plan_digest = d.u64()?;
+                let log = Box::new(d.trajectory()?);
+                let seeds_per_step = d.u32()?;
+                Msg::Replay { plan_digest, log, seeds_per_step }
+            }
+            10 => Msg::FetchShard { plan_digest: d.u64()? },
+            11 => {
+                let plan_digest = d.u64()?;
+                let shard = d.u32()?;
+                let shard_digest = d.u64()?;
+                let segments = d.seg_bufs()?;
+                Msg::ShardSlice { plan_digest, shard, shard_digest, segments }
+            }
+            12 => Msg::Shutdown,
+            _ => return Err(WireError::UnknownKind(kind)),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Payload writer: primitive little-endian emitters plus the composite
+/// layouts shared by several frame kinds.
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// `len u32 | utf8 bytes`
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    /// `count u32 | str*`
+    fn strs(&mut self, ss: &[String]) {
+        self.u32(ss.len() as u32);
+        for s in ss {
+            self.str(s);
+        }
+    }
+    /// `count u64 | f32 LE*`
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+    /// `count u32 | f32s*` — the segment-buffer list of a shard.
+    fn seg_bufs(&mut self, bufs: &[Vec<f32>]) {
+        self.u32(bufs.len() as u32);
+        for b in bufs {
+            self.f32s(b);
+        }
+    }
+    /// Structural plan layout:
+    /// `n_tensors u32 | (name str, len u64)* | n_shards u32 |
+    ///  (start u64, end u64)* | digest u64`.
+    /// The receiver rebuilds segments/offsets/digests from the structure
+    /// and cross-checks the trailing digest — a plan whose derivation
+    /// rules disagree between peers fails loudly instead of silently
+    /// mis-addressing z counters.
+    fn plan(&mut self, p: &ShardPlan) {
+        self.u32(p.n_tensors() as u32);
+        for (name, &len) in p.names().iter().zip(p.lens()) {
+            self.str(name);
+            self.u64(len as u64);
+        }
+        self.u32(p.n_shards() as u32);
+        for s in p.shards() {
+            self.u64(s.start);
+            self.u64(s.end);
+        }
+        self.u64(p.digest());
+    }
+    /// Trajectory layout:
+    /// `mask_flag u8 | [mask_digest u64] | trainable strs |
+    ///  n_records u64 | (seed u64, pgrad f32, lr f32)*`.
+    fn trajectory(&mut self, t: &Trajectory) {
+        match t.mask_digest {
+            Some(d) => {
+                self.u8(1);
+                self.u64(d);
+            }
+            None => self.u8(0),
+        }
+        self.strs(&t.trainable);
+        self.u64(t.records.len() as u64);
+        for r in &t.records {
+            self.u64(r.seed);
+            self.f32(r.pgrad);
+            self.f32(r.lr);
+        }
+    }
+}
+
+/// Payload reader over a digest-verified byte slice. Every read is
+/// bounds-checked (a forged frame with a colliding digest still cannot
+/// panic or over-allocate) and [`Dec::finish`] rejects trailing bytes,
+/// so a payload parses for exactly one message.
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    /// Check an up-front size claim (typically `count * elem_size`,
+    /// passed as a `checked_mul` result) against the bytes left, BEFORE
+    /// any `Vec::with_capacity` — corrupt counts fail loudly, they do
+    /// not allocate.
+    fn fits(&self, need: Option<usize>) -> Result<(), WireError> {
+        match need {
+            Some(n) if n <= self.remaining() => Ok(()),
+            Some(n) => Err(WireError::BadPayload(format!(
+                "embedded count needs {} bytes, {} remain",
+                n,
+                self.remaining()
+            ))),
+            None => Err(WireError::BadPayload("embedded count overflows usize".into())),
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::BadPayload(format!(
+                "payload needs {} more bytes, {} remain",
+                n,
+                self.remaining()
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::BadPayload("string is not valid utf-8".into()))
+    }
+
+    fn strs(&mut self) -> Result<Vec<String>, WireError> {
+        let n = self.u32()? as usize;
+        // each string costs at least its 4-byte length prefix
+        self.fits(n.checked_mul(4))?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.str()?);
+        }
+        Ok(out)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n64 = self.u64()?;
+        let n = usize::try_from(n64)
+            .map_err(|_| WireError::BadPayload("f32 count overflows usize".into()))?;
+        self.fits(n.checked_mul(4))?;
+        let bytes = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().expect("4 bytes")));
+        }
+        Ok(out)
+    }
+
+    fn seg_bufs(&mut self) -> Result<Vec<Vec<f32>>, WireError> {
+        let n = self.u32()? as usize;
+        // each buffer costs at least its 8-byte count prefix
+        self.fits(n.checked_mul(8))?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32s()?);
+        }
+        Ok(out)
+    }
+
+    fn plan(&mut self) -> Result<ShardPlan, WireError> {
+        let nt = self.u32()? as usize;
+        self.fits(nt.checked_mul(12))?;
+        let mut names = Vec::with_capacity(nt);
+        let mut lens = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            names.push(self.str()?);
+            let len64 = self.u64()?;
+            lens.push(usize::try_from(len64).map_err(|_| {
+                WireError::BadPayload("tensor length overflows usize".into())
+            })?);
+        }
+        let ns = self.u32()? as usize;
+        self.fits(ns.checked_mul(16))?;
+        let mut ranges = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            let start = self.u64()?;
+            let end = self.u64()?;
+            ranges.push((start, end));
+        }
+        let claimed = self.u64()?;
+        let plan = ShardPlan::from_parts(names, lens, &ranges)
+            .map_err(|e| WireError::BadPayload(format!("plan structure invalid: {}", e)))?;
+        if plan.digest() != claimed {
+            return Err(WireError::BadPayload(format!(
+                "plan digest mismatch: rebuilt {:#018x}, frame claims {:#018x} — \
+                 peers disagree on the plan derivation",
+                plan.digest(),
+                claimed
+            )));
+        }
+        Ok(plan)
+    }
+
+    fn trajectory(&mut self) -> Result<Trajectory, WireError> {
+        let mask_digest = match self.u8()? {
+            0 => None,
+            1 => Some(self.u64()?),
+            f => {
+                return Err(WireError::BadPayload(format!(
+                    "trajectory mask flag must be 0 or 1, got {}",
+                    f
+                )))
+            }
+        };
+        let trainable = self.strs()?;
+        let n64 = self.u64()?;
+        let n = usize::try_from(n64)
+            .map_err(|_| WireError::BadPayload("record count overflows usize".into()))?;
+        self.fits(n.checked_mul(16))?;
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            let seed = self.u64()?;
+            let pgrad = self.f32()?;
+            let lr = self.f32()?;
+            records.push(crate::optim::mezo::StepRecord { seed, pgrad, lr });
+        }
+        let mut t = Trajectory::new(trainable);
+        t.records = records;
+        if let Some(d) = mask_digest {
+            t = t.with_mask_digest(d);
+        }
+        Ok(t)
+    }
+
+    /// Reject unconsumed trailing bytes — one payload, one message.
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.b.len() {
+            return Err(WireError::BadPayload(format!(
+                "{} trailing bytes after a complete message",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+    use crate::model::params::ParamStore;
+    use crate::optim::mezo::StepRecord;
+
+    fn plan(lens: &[usize], k: usize) -> ShardPlan {
+        let specs = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| TensorDesc {
+                name: format!("t{}", i),
+                shape: vec![n],
+                dtype: "f32".into(),
+            })
+            .collect();
+        ShardPlan::new(&ParamStore::from_specs(specs), k).unwrap()
+    }
+
+    #[test]
+    fn frame_digest_is_length_and_content_sensitive() {
+        let a = frame_digest(VERSION, 1, b"abcdefgh");
+        assert_ne!(a, frame_digest(VERSION, 1, b"abcdefgi"), "content");
+        assert_ne!(a, frame_digest(VERSION, 2, b"abcdefgh"), "kind");
+        assert_ne!(a, frame_digest(VERSION + 1, 1, b"abcdefgh"), "version");
+        // zero-padding must not collide with the shorter payload
+        assert_ne!(frame_digest(VERSION, 1, b"ab"), frame_digest(VERSION, 1, b"ab\0\0"));
+        // deterministic across calls (the wire contract)
+        assert_eq!(a, frame_digest(VERSION, 1, b"abcdefgh"));
+    }
+
+    #[test]
+    fn layout_matches_the_spec_constants() {
+        let bytes = Msg::Ack.encode();
+        assert_eq!(bytes.len(), HEADER_LEN + TRAILER_LEN);
+        assert_eq!(&bytes[..4], b"MZW1");
+        assert_eq!(bytes[4], VERSION);
+        assert_eq!(bytes[5], Msg::Ack.kind());
+        assert_eq!(u32::from_le_bytes(bytes[6..10].try_into().unwrap()), 0);
+    }
+
+    #[test]
+    fn every_kind_roundtrips_through_decode() {
+        let p = plan(&[300, 7, 129], 3);
+        let mut log = Trajectory::new(vec!["t0".into(), "t2".into()]);
+        log.records = vec![
+            StepRecord { seed: 7, pgrad: 0.25, lr: 1e-3 },
+            StepRecord { seed: 9, pgrad: -1.5, lr: 2e-3 },
+        ];
+        let msgs = vec![
+            Msg::Hello { node: 3 },
+            Msg::Ack,
+            Msg::Nack { message: "stale plan".into() },
+            Msg::Plan(Box::new(p.clone())),
+            Msg::Manifest(p.manifest()),
+            Msg::Log(Box::new(log.clone())),
+            Msg::LoadShard {
+                plan: Box::new(p.clone()),
+                shard: 1,
+                trainable: vec!["t0".into()],
+                segments: vec![vec![1.0, -2.5], vec![]],
+            },
+            Msg::Perturb { plan_digest: p.digest(), seed: 42, scale: 1e-3 },
+            Msg::Update {
+                plan_digest: p.digest(),
+                zs: vec![(1, 0.5), (2, -0.25)],
+                lr: 1e-3,
+                wd: 0.1,
+            },
+            Msg::Replay {
+                plan_digest: p.digest(),
+                log: Box::new(log.with_mask_digest(0xDEAD)),
+                seeds_per_step: 2,
+            },
+            Msg::FetchShard { plan_digest: p.digest() },
+            Msg::ShardSlice {
+                plan_digest: p.digest(),
+                shard: 2,
+                shard_digest: p.shard_digest(2),
+                segments: vec![vec![0.0, f32::MIN, f32::MAX]],
+            },
+            Msg::Shutdown,
+        ];
+        for m in msgs {
+            let bytes = m.encode();
+            let (back, used) = Msg::decode(&bytes).unwrap();
+            assert_eq!(used, bytes.len(), "{}: whole frame consumed", m.kind_name());
+            assert_eq!(back, m, "{}: value roundtrip", m.kind_name());
+            assert_eq!(back.encode(), bytes, "{}: byte roundtrip", m.kind_name());
+            // a stream suffix is left untouched
+            let mut two = bytes.clone();
+            two.extend_from_slice(&Msg::Ack.encode());
+            let (first, used2) = Msg::decode(&two).unwrap();
+            assert_eq!((first, used2), (m, bytes.len()));
+        }
+    }
+
+    #[test]
+    fn header_corruptions_hit_their_typed_arms() {
+        let good = Msg::Hello { node: 1 }.encode();
+        let mut b = good.clone();
+        b[0] = b'X';
+        assert_eq!(Msg::decode(&b).unwrap_err().kind_name(), "bad_magic");
+        let mut b = good.clone();
+        b[4] = 9;
+        assert_eq!(Msg::decode(&b).unwrap_err().kind_name(), "bad_version");
+        let mut b = good.clone();
+        b[5] = 200;
+        assert_eq!(Msg::decode(&b).unwrap_err().kind_name(), "unknown_kind");
+        let mut b = good.clone();
+        b[6..10].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        assert_eq!(Msg::decode(&b).unwrap_err().kind_name(), "oversize");
+        let mut b = good.clone();
+        *b.last_mut().unwrap() ^= 1;
+        assert_eq!(Msg::decode(&b).unwrap_err().kind_name(), "bad_digest");
+        for cut in 0..good.len() {
+            assert!(Msg::decode(&good[..cut]).is_err(), "prefix of {} bytes", cut);
+        }
+    }
+
+    #[test]
+    fn io_errors_map_to_timeout_and_disconnect() {
+        let timed: WireError =
+            std::io::Error::new(std::io::ErrorKind::WouldBlock, "deadline").into();
+        assert_eq!(timed.kind_name(), "timeout");
+        let eof: WireError =
+            std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "eof").into();
+        assert_eq!(eof.kind_name(), "disconnected");
+        assert!(timed.is_transport() && eof.is_transport());
+        assert!(!WireError::BadVersion(3).is_transport());
+    }
+}

@@ -1,0 +1,35 @@
+//! The MZW1 shard wire protocol: frames, transports, workers, fleet.
+//!
+//! PR 5's sharded store proved a MeZO fine-tune decomposes into
+//! `(ShardPlan, shard slices, seed/pgrad log)` with bitwise identity to
+//! the dense run; this module ships those pieces over a wire and puts a
+//! process (or thread) on each end:
+//!
+//! * [`frame`] — the versioned binary frame codec ("MZW1":
+//!   length-prefixed, digest-authenticated, loud typed failure on any
+//!   mismatch) and the [`Msg`] protocol vocabulary.
+//! * [`transport`] — the [`Transport`] trait with in-process channel
+//!   and TCP carriers (no new dependencies).
+//! * [`worker`] — [`ShardWorker`], which holds one shard's detached
+//!   buffers and serves perturb/update/replay/fetch commands; the
+//!   `mezo-worker` binary is a TCP wrapper around it.
+//! * [`fleet`] — [`Fleet`], the coordinator: scatter, drive, verify
+//!   digests, gather bitwise-identical to dense, and survive worker
+//!   churn via checkpoint + command-log replay.
+//!
+//! The adversarial test surface lives in `tests/properties.rs` (frame
+//! fuzzing: arbitrary bytes, truncations, bit flips — typed errors,
+//! never panics) and `tests/churn.rs` (kill/restart workers mid-step
+//! and mid-replay; the gathered store stays `to_bits()`-identical).
+
+pub mod fleet;
+pub mod frame;
+pub mod transport;
+pub mod worker;
+
+pub use fleet::{channel_spawner, Fleet, FleetConfig, SpawnFn};
+pub use frame::{
+    frame_digest, Msg, WireError, HEADER_LEN, MAGIC, MAX_PAYLOAD, TRAILER_LEN, VERSION,
+};
+pub use transport::{channel_pair, ChannelTransport, TcpTransport, Transport};
+pub use worker::ShardWorker;

@@ -1,0 +1,146 @@
+//! Frame transports: how MZW1 frames move between a coordinator and its
+//! workers. Two built-in carriers, zero new dependencies:
+//!
+//! * [`ChannelTransport`] — in-process `std::sync::mpsc` byte-vector
+//!   channels, one encoded frame per message. The default for tests and
+//!   single-machine fleets; [`channel_pair`] wires a coordinator end to
+//!   a worker end.
+//! * [`TcpTransport`] — one frame stream over a `TcpStream` (local
+//!   sockets; the `mezo-worker` binary's carrier). A read deadline maps
+//!   to [`WireError::Timeout`] so a coordinator can treat a stuck
+//!   worker exactly like a dead one.
+//!
+//! Both ends speak the same [`Transport`] trait, so the fleet, the
+//! churn harness's chaos wrappers (`tests/churn.rs`) and any future
+//! carrier are interchangeable.
+
+use super::frame::{Msg, WireError};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// One bidirectional frame pipe: send a [`Msg`], receive a [`Msg`].
+/// Implementations must preserve frame boundaries and order; integrity
+/// comes from the MZW1 digest, which every `recv` verifies.
+pub trait Transport: Send {
+    /// Send one message. [`WireError::Disconnected`] when the peer is
+    /// gone.
+    fn send(&mut self, msg: &Msg) -> Result<(), WireError>;
+    /// Receive the next message, verifying its frame digest.
+    /// [`WireError::Timeout`] when a configured deadline expires first.
+    fn recv(&mut self) -> Result<Msg, WireError>;
+}
+
+/// In-process transport: encoded frames over a pair of mpsc channels.
+pub struct ChannelTransport {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+    timeout: Option<Duration>,
+}
+
+/// A connected pair of in-process transports — give one end to the
+/// coordinator and move the other into the worker's thread. `timeout`
+/// bounds every `recv` on both ends (None blocks forever).
+pub fn channel_pair(timeout: Option<Duration>) -> (ChannelTransport, ChannelTransport) {
+    let (a_tx, b_rx) = mpsc::channel();
+    let (b_tx, a_rx) = mpsc::channel();
+    (
+        ChannelTransport { tx: a_tx, rx: a_rx, timeout },
+        ChannelTransport { tx: b_tx, rx: b_rx, timeout },
+    )
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
+        self.tx.send(msg.encode()).map_err(|_| WireError::Disconnected)
+    }
+
+    fn recv(&mut self) -> Result<Msg, WireError> {
+        let bytes = match self.timeout {
+            Some(d) => self.rx.recv_timeout(d).map_err(|e| match e {
+                mpsc::RecvTimeoutError::Timeout => WireError::Timeout,
+                mpsc::RecvTimeoutError::Disconnected => WireError::Disconnected,
+            })?,
+            None => self.rx.recv().map_err(|_| WireError::Disconnected)?,
+        };
+        let (msg, used) = Msg::decode(&bytes)?;
+        if used != bytes.len() {
+            return Err(WireError::BadPayload(format!(
+                "channel message carries {} bytes past the frame",
+                bytes.len() - used
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+/// Socket transport: the MZW1 stream framing over TCP.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    /// Wrap a connected stream. `read_timeout` bounds every `recv`
+    /// (None blocks forever); Nagle is disabled — frames are
+    /// request/response sized, latency beats batching here.
+    pub fn new(stream: TcpStream, read_timeout: Option<Duration>) -> std::io::Result<TcpTransport> {
+        stream.set_read_timeout(read_timeout)?;
+        stream.set_nodelay(true)?;
+        Ok(TcpTransport { stream })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
+        msg.write_to(&mut self.stream)
+    }
+
+    fn recv(&mut self) -> Result<Msg, WireError> {
+        Msg::read_from(&mut self.stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn channel_pair_roundtrips_and_times_out() {
+        let (mut a, mut b) = channel_pair(Some(Duration::from_millis(50)));
+        a.send(&Msg::Hello { node: 7 }).unwrap();
+        assert_eq!(b.recv().unwrap(), Msg::Hello { node: 7 });
+        b.send(&Msg::Ack).unwrap();
+        assert_eq!(a.recv().unwrap(), Msg::Ack);
+        // nothing pending: the deadline fires as a typed Timeout
+        assert_eq!(a.recv().unwrap_err().kind_name(), "timeout");
+        // dropping one end disconnects the other
+        drop(b);
+        assert_eq!(a.recv().unwrap_err().kind_name(), "disconnected");
+        assert_eq!(a.send(&Msg::Ack).unwrap_err().kind_name(), "disconnected");
+    }
+
+    #[test]
+    fn tcp_transport_roundtrips_and_times_out() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut t = TcpTransport::new(
+                TcpStream::connect(addr).unwrap(),
+                Some(Duration::from_secs(5)),
+            )
+            .unwrap();
+            t.send(&Msg::Hello { node: 1 }).unwrap();
+            assert_eq!(t.recv().unwrap(), Msg::Shutdown);
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut server = TcpTransport::new(stream, Some(Duration::from_millis(50))).unwrap();
+        assert_eq!(server.recv().unwrap(), Msg::Hello { node: 1 });
+        // empty socket: deadline -> typed Timeout
+        assert_eq!(server.recv().unwrap_err().kind_name(), "timeout");
+        server.send(&Msg::Shutdown).unwrap();
+        client.join().unwrap();
+        // client hung up after the shutdown: EOF -> Disconnected
+        assert_eq!(server.recv().unwrap_err().kind_name(), "disconnected");
+    }
+}

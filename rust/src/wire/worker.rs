@@ -1,0 +1,395 @@
+//! The worker half of the shard protocol: holds ONE shard's detached
+//! segment buffers and serves perturb / update / replay / fetch
+//! commands over a [`Transport`].
+//!
+//! Bit-exactness is inherited, not re-proven: every buffer IS the
+//! `[lo, hi)` slice of its tensor, so running the dense kernels with
+//! the z counter based at `offset + lo` performs exactly the arithmetic
+//! the `_shard` kernels (and therefore the dense step) perform on that
+//! slice — the same alignment `storage::Trajectory::replay_shard_with`
+//! uses. A fleet of these workers therefore reproduces the dense run
+//! bit for bit (`tests/churn.rs` pins this, including under churn).
+//!
+//! Failure discipline: a command carrying a stale plan digest, an
+//! unknown tensor name, a sparse log, or malformed geometry is refused
+//! with [`Msg::Nack`] — the worker stays up and keeps its state, the
+//! *coordinator* decides what to do. Only transport-level failures
+//! (peer gone) end the serve loop.
+
+use super::frame::{Msg, WireError};
+use super::transport::Transport;
+use crate::rng::GaussianStream;
+use crate::shard::ShardPlan;
+use crate::storage::Trajectory;
+use crate::zkernel::ZEngine;
+use anyhow::{bail, Result};
+
+/// A worker's installed shard: the plan it serves under, which shard it
+/// owns, the per-tensor trainable flags, and one detached buffer per
+/// segment.
+struct Loaded {
+    plan: ShardPlan,
+    shard: usize,
+    trainable: Vec<bool>,
+    segments: Vec<Vec<f32>>,
+}
+
+/// One shard-serving worker. Drive it with [`ShardWorker::serve`] over
+/// any transport (the `mezo-worker` binary serves TCP; tests serve
+/// in-process channels), or feed it messages directly with
+/// [`ShardWorker::handle`].
+pub struct ShardWorker {
+    engine: ZEngine,
+    state: Option<Loaded>,
+}
+
+impl Default for ShardWorker {
+    fn default() -> ShardWorker {
+        ShardWorker::new()
+    }
+}
+
+impl ShardWorker {
+    /// A worker with no shard installed yet, on the process-default
+    /// engine (`MEZO_THREADS` / `MEZO_SIMD` apply as everywhere else).
+    pub fn new() -> ShardWorker {
+        ShardWorker { engine: ZEngine::default(), state: None }
+    }
+
+    /// A worker on an explicit kernel engine.
+    pub fn with_engine(engine: ZEngine) -> ShardWorker {
+        ShardWorker { engine, state: None }
+    }
+
+    /// Serve requests until the peer disconnects or sends
+    /// [`Msg::Shutdown`] (both return `Ok`). Malformed frames and
+    /// refused commands are answered with [`Msg::Nack`] and the loop
+    /// continues; only an unusable transport is an error.
+    pub fn serve<T: Transport + ?Sized>(&mut self, transport: &mut T) -> Result<(), WireError> {
+        loop {
+            let msg = match transport.recv() {
+                Ok(m) => m,
+                Err(WireError::Disconnected) => return Ok(()),
+                Err(e) if e.is_transport() => return Err(e),
+                // decode-level failure: the frame was delivered but is
+                // corrupt or skewed — tell the peer loudly, keep serving
+                Err(e) => {
+                    transport.send(&Msg::Nack { message: e.to_string() })?;
+                    continue;
+                }
+            };
+            let shutdown = matches!(msg, Msg::Shutdown);
+            let reply = match self.handle(msg) {
+                Ok(r) => r,
+                Err(e) => Msg::Nack { message: e.to_string() },
+            };
+            transport.send(&reply)?;
+            if shutdown {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Handle one request, returning the reply frame. Exposed so tests
+    /// (and in-process fleets) can drive a worker without a transport.
+    pub fn handle(&mut self, msg: Msg) -> Result<Msg> {
+        match msg {
+            Msg::Hello { .. } | Msg::Shutdown => Ok(Msg::Ack),
+            Msg::LoadShard { plan, shard, trainable, segments } => {
+                self.load(*plan, shard as usize, &trainable, segments)?;
+                Ok(Msg::Ack)
+            }
+            Msg::Perturb { plan_digest, seed, scale } => {
+                let engine = self.engine;
+                let st = self.loaded(plan_digest)?;
+                let stream = GaussianStream::new(seed);
+                // each buffer IS its segment's [lo, hi) slice: counter
+                // base offset + lo, the exact alignment of the in-place
+                // shard kernels
+                for (base, buf) in st.trainable_segments() {
+                    engine.axpy_z(stream, base, buf, scale);
+                }
+                Ok(Msg::Ack)
+            }
+            Msg::Update { plan_digest, zs, lr, wd } => {
+                let engine = self.engine;
+                let st = self.loaded(plan_digest)?;
+                let streams: Vec<(GaussianStream, f32)> =
+                    zs.iter().map(|&(seed, c)| (GaussianStream::new(seed), c)).collect();
+                for (base, buf) in st.trainable_segments() {
+                    engine.multi_sgd_update(&streams, base, buf, lr, wd);
+                }
+                Ok(Msg::Ack)
+            }
+            Msg::Replay { plan_digest, log, seeds_per_step } => {
+                self.replay(plan_digest, &log, seeds_per_step as usize)?;
+                Ok(Msg::Ack)
+            }
+            Msg::FetchShard { plan_digest } => {
+                let st = self.loaded(plan_digest)?;
+                Ok(Msg::ShardSlice {
+                    plan_digest: st.plan.digest(),
+                    shard: st.shard as u32,
+                    shard_digest: st.plan.shard_digest(st.shard),
+                    segments: st.segments.clone(),
+                })
+            }
+            other => bail!("worker: unexpected {} frame", other.kind_name()),
+        }
+    }
+
+    /// Which shard the worker currently holds, if any.
+    pub fn shard(&self) -> Option<usize> {
+        self.state.as_ref().map(|s| s.shard)
+    }
+
+    fn load(
+        &mut self,
+        plan: ShardPlan,
+        shard: usize,
+        trainable: &[String],
+        segments: Vec<Vec<f32>>,
+    ) -> Result<()> {
+        if shard >= plan.n_shards() {
+            bail!(
+                "worker: shard index {} out of range for a {}-shard plan",
+                shard,
+                plan.n_shards()
+            );
+        }
+        let idxs = plan.indices_of(trainable)?;
+        let trainable = crate::shard::trainable_flags(plan.n_tensors(), &idxs);
+        let segs = &plan.shard(shard).segments;
+        if segments.len() != segs.len() {
+            bail!(
+                "worker: shard {} has {} segments in the plan but {} buffers were shipped",
+                shard,
+                segs.len(),
+                segments.len()
+            );
+        }
+        for (si, (seg, buf)) in segs.iter().zip(&segments).enumerate() {
+            if buf.len() != seg.len() {
+                bail!(
+                    "worker: segment {} of shard {} spans {} coordinates but the buffer \
+                     holds {}",
+                    si,
+                    shard,
+                    seg.len(),
+                    buf.len()
+                );
+            }
+        }
+        self.state = Some(Loaded { plan, shard, trainable, segments });
+        Ok(())
+    }
+
+    /// The digest-guarded state access every mutating command goes
+    /// through: no shard installed, or a command minted against a
+    /// different plan, is refused before any coordinate is touched.
+    fn loaded(&mut self, plan_digest: u64) -> Result<&mut Loaded> {
+        let st = match self.state.as_mut() {
+            Some(s) => s,
+            None => bail!("worker: no shard loaded"),
+        };
+        if st.plan.digest() != plan_digest {
+            bail!(
+                "worker: stale plan digest {:#018x} (worker serves plan {:#018x}) — \
+                 re-scatter before commanding this worker",
+                plan_digest,
+                st.plan.digest()
+            );
+        }
+        Ok(st)
+    }
+
+    fn replay(&mut self, plan_digest: u64, log: &Trajectory, seeds_per_step: usize) -> Result<()> {
+        let engine = self.engine;
+        let st = self.loaded(plan_digest)?;
+        if let Some(d) = log.mask_digest {
+            bail!(
+                "worker: log was recorded under a sparse mask (digest {:#x}); \
+                 shard replay covers dense logs",
+                d
+            );
+        }
+        let idxs = st.plan.indices_of(&log.trainable)?;
+        let trainable = crate::shard::trainable_flags(st.plan.n_tensors(), &idxs);
+        let offsets: Vec<u64> = st.plan.offsets().to_vec();
+        let segs = st.plan.shard(st.shard).segments.clone();
+        let walk = |bufs: &mut [Vec<f32>], f: &mut dyn FnMut(u64, &mut [f32])| {
+            for (seg, buf) in segs.iter().zip(bufs.iter_mut()) {
+                if trainable[seg.tensor] {
+                    f(offsets[seg.tensor] + seg.lo as u64, buf);
+                }
+            }
+        };
+        if seeds_per_step == 0 {
+            // sequential replay: record order per coordinate, exactly
+            // Trajectory::replay_shard_with
+            for r in &log.records {
+                let stream = GaussianStream::new(r.seed);
+                walk(&mut st.segments, &mut |base, buf| {
+                    engine.axpy_z(stream, base, buf, -(r.lr * r.pgrad));
+                });
+            }
+        } else {
+            if log.records.len() % seeds_per_step != 0 {
+                bail!(
+                    "worker: {} records do not divide into seed-batches of {}",
+                    log.records.len(),
+                    seeds_per_step
+                );
+            }
+            for batch in log.records.chunks(seeds_per_step) {
+                let zs: Vec<(GaussianStream, f32)> = batch
+                    .iter()
+                    .map(|r| (GaussianStream::new(r.seed), -(r.lr * r.pgrad)))
+                    .collect();
+                walk(&mut st.segments, &mut |base, buf| {
+                    engine.multi_axpy_z(&zs, base, buf);
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Loaded {
+    /// `(global counter base, buffer)` pairs of the trainable segments —
+    /// the walk every mutating command does. The base is the segment
+    /// tensor's global offset plus `lo`, so dense kernels over these
+    /// detached buffers generate exactly the dense run's z values.
+    fn trainable_segments(&mut self) -> impl Iterator<Item = (u64, &mut Vec<f32>)> {
+        let Loaded { plan, shard, trainable, segments } = self;
+        let offsets = plan.offsets();
+        plan.shard(*shard)
+            .segments
+            .iter()
+            .zip(segments.iter_mut())
+            .filter(move |(seg, _)| trainable[seg.tensor])
+            .map(move |(seg, buf)| (offsets[seg.tensor] + seg.lo as u64, buf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+    use crate::model::params::ParamStore;
+    use crate::optim::mezo::StepRecord;
+    use crate::shard::ShardedStore;
+
+    fn store(lens: &[usize]) -> ParamStore {
+        let specs = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| TensorDesc {
+                name: format!("t{}", i),
+                shape: vec![n],
+                dtype: "f32".into(),
+            })
+            .collect();
+        let mut p = ParamStore::from_specs(specs);
+        p.init(11);
+        p
+    }
+
+    fn load_msg(plan: &ShardPlan, p: &ParamStore, k: usize, trainable: Vec<String>) -> Msg {
+        let segments = plan
+            .shard(k)
+            .segments
+            .iter()
+            .map(|seg| p.data[seg.tensor][seg.lo..seg.hi].to_vec())
+            .collect();
+        Msg::LoadShard { plan: Box::new(plan.clone()), shard: k as u32, trainable, segments }
+    }
+
+    #[test]
+    fn worker_replay_matches_the_shard_replay_path() {
+        let p = store(&[300, 7, 129]);
+        let plan = ShardPlan::new(&p, 3).unwrap();
+        let mut log = Trajectory::new(vec!["t0".into(), "t2".into()]);
+        log.records = (0..6)
+            .map(|i| StepRecord { seed: 100 + i, pgrad: 0.1 * i as f32 - 0.2, lr: 1e-3 })
+            .collect();
+        // reference: the in-process sharded replay
+        let mut reference = ShardedStore::scatter(&plan, &p).unwrap();
+        log.replay_sharded(&mut reference, &plan.manifest()).unwrap();
+        for k in 0..plan.n_shards() {
+            let mut w = ShardWorker::new();
+            let tr = vec!["t0".to_string(), "t2".to_string()];
+            assert_eq!(w.handle(load_msg(&plan, &p, k, tr)).unwrap(), Msg::Ack);
+            let replay = Msg::Replay {
+                plan_digest: plan.digest(),
+                log: Box::new(log.clone()),
+                seeds_per_step: 0,
+            };
+            assert_eq!(w.handle(replay).unwrap(), Msg::Ack);
+            match w.handle(Msg::FetchShard { plan_digest: plan.digest() }).unwrap() {
+                Msg::ShardSlice { shard, shard_digest, segments, .. } => {
+                    assert_eq!(shard as usize, k);
+                    assert_eq!(shard_digest, plan.shard_digest(k));
+                    for (si, buf) in segments.iter().enumerate() {
+                        let want = reference.segment(k, si);
+                        assert_eq!(buf.len(), want.len());
+                        for (a, b) in buf.iter().zip(want) {
+                            assert_eq!(a.to_bits(), b.to_bits(), "shard {} seg {}", k, si);
+                        }
+                    }
+                }
+                other => panic!("expected a shard slice, got {}", other.kind_name()),
+            }
+        }
+    }
+
+    #[test]
+    fn worker_refuses_stale_plans_sparse_logs_and_bad_geometry() {
+        let p = store(&[100, 100]);
+        let plan = ShardPlan::new(&p, 2).unwrap();
+        let other = ShardPlan::new(&p, 4).unwrap();
+        let mut w = ShardWorker::new();
+        // nothing loaded yet
+        let err = w
+            .handle(Msg::Perturb { plan_digest: plan.digest(), seed: 1, scale: 0.1 })
+            .unwrap_err();
+        assert!(err.to_string().contains("no shard loaded"), "{}", err);
+        assert_eq!(w.shard(), None);
+        w.handle(load_msg(&plan, &p, 0, vec!["t0".into()])).unwrap();
+        assert_eq!(w.shard(), Some(0));
+        // stale digest: a command minted against a different plan
+        let err = w
+            .handle(Msg::Perturb { plan_digest: other.digest(), seed: 1, scale: 0.1 })
+            .unwrap_err();
+        assert!(err.to_string().contains("stale plan digest"), "{}", err);
+        // sparse log refused
+        let sparse = Trajectory::new(vec!["t0".into()]).with_mask_digest(0xBEEF);
+        let err = w
+            .handle(Msg::Replay {
+                plan_digest: plan.digest(),
+                log: Box::new(sparse),
+                seeds_per_step: 0,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("sparse mask"), "{}", err);
+        // unknown trainable name refused
+        let err = w.handle(load_msg(&plan, &p, 0, vec!["nope".into()])).unwrap_err();
+        assert!(err.to_string().contains("no tensor named"), "{}", err);
+        // wrong buffer geometry refused
+        let bad = Msg::LoadShard {
+            plan: Box::new(plan.clone()),
+            shard: 0,
+            trainable: vec!["t0".into()],
+            segments: vec![vec![0.0; 3]],
+        };
+        assert!(w.handle(bad).is_err());
+        // shard index out of range refused
+        let mut oob = load_msg(&plan, &p, 0, vec!["t0".into()]);
+        if let Msg::LoadShard { shard, .. } = &mut oob {
+            *shard = 9;
+        }
+        assert!(w.handle(oob).is_err());
+        // an unexpected frame kind is refused, not crashed on
+        assert!(w.handle(Msg::Ack).is_err());
+    }
+}

@@ -64,6 +64,19 @@ def summarize(report):
         summary["masked_speedup_vs_dense"] = _median_ns(
             report["mask_density"], "speedup_vs_dense", ["density"]
         )
+    # MZW1 wire layer: median codec throughput per frame shape, and the
+    # per-step fleet-vs-dense overhead per (d, shards)
+    if report.get("wire_transport"):
+        codec = [r for r in report["wire_transport"] if "frame" in r]
+        fleet = [r for r in report["wire_transport"] if "wire_overhead_x" in r]
+        if codec:
+            summary["wire_decode_mb_per_sec"] = _median_ns(
+                codec, "decode_mb_per_sec", ["frame"]
+            )
+        if fleet:
+            summary["wire_step_overhead_x"] = _median_ns(
+                fleet, "wire_overhead_x", ["d", "shards"]
+            )
     # FZOO vs MeZO at matched budgets: median step speedup per budget
     if report.get("fzoo_vs_mezo"):
         summary["fzoo_speedup_vs_mezo"] = _median_ns(

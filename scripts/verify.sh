@@ -78,7 +78,14 @@ for t in 1 2 8; do
         # *shard* optimizer/storage test, so shard-determinism regressions
         # on the ZEngine::default() paths fail the gate
         MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --lib shard
+        # MZW1 wire layer: frame codec + transports + worker + fleet unit
+        # tests, then the full property suite (frame fuzzing included) and
+        # the churn/chaos fleet suite — scatter/step/replay/gather must
+        # stay bitwise dense at every thread count and SIMD tier, with
+        # workers being killed and respawned mid-command
+        MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --lib wire
         MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --test properties
+        MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --test churn
     done
 done
 echo "verify: OK"

@@ -1,0 +1,455 @@
+//! Churn/chaos integration suite for the MZW1 shard fleet
+//! (`mezo::wire`): the acceptance pin is that scatter → per-worker
+//! step/replay over the wire → gather is `to_bits()`-identical to the
+//! dense path for shard counts 1/2/4 — *including* while workers are
+//! being killed and respawned mid-command.
+//!
+//! Chaos is injected at the transport layer: a `Chaos` wrapper around
+//! the in-process channel transport fails a scripted recv with
+//! `Disconnected` (worker "killed") or `Timeout` (coordinator deadline
+//! fired, reply discarded), which drives the fleet's respawn +
+//! checkpoint/command-log recovery path. One test kills a *real*
+//! `mezo-worker` child process mid-run over TCP — that test doubles as
+//! the CI fleet leg (coordinator + several worker processes).
+//!
+//! Run under the usual matrix: `MEZO_THREADS=1/2/8 cargo test --test
+//! churn` (scripts/verify.sh does).
+
+use anyhow::Result;
+use mezo::model::meta::TensorDesc;
+use mezo::model::params::ParamStore;
+use mezo::optim::mezo::{MezoConfig, MezoSgd, StepRecord};
+use mezo::rng::Pcg;
+use mezo::storage::Trajectory;
+use mezo::wire::{
+    channel_pair, channel_spawner, Fleet, FleetConfig, Msg, ShardWorker, SpawnFn, Transport,
+    WireError,
+};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ---------------------------------------------------------------- fixtures
+
+/// A small store with enough tensors that shard cuts land mid-tensor.
+fn store(lens: &[usize], seed: u64) -> ParamStore {
+    let specs = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| TensorDesc { name: format!("t{}", i), shape: vec![n], dtype: "f32".into() })
+        .collect();
+    let mut p = ParamStore::from_specs(specs);
+    p.init(seed);
+    p
+}
+
+/// Every value of every tensor, as raw bits — the equality the suite
+/// pins is bitwise, not approximate.
+fn bits(p: &ParamStore) -> Vec<u32> {
+    p.data.iter().flatten().map(|x| x.to_bits()).collect()
+}
+
+/// The shared loss closure: deterministic, order-stable summation, so
+/// dense and fleet forwards see bit-identical losses on bit-identical
+/// parameters.
+fn quad(p: &ParamStore) -> f32 {
+    p.data.iter().flatten().map(|&x| x * x).sum()
+}
+
+/// Dense reference: `MezoSgd` (Sgd flavor) with the hyperparameters the
+/// fleet carries, same master seed, same loss.
+fn dense_steps(
+    p0: &ParamStore,
+    trainable: &[usize],
+    master_seed: u64,
+    cfg: &FleetConfig,
+    steps: usize,
+) -> (ParamStore, Vec<StepRecord>) {
+    let mcfg = MezoConfig {
+        lr: cfg.lr,
+        eps: cfg.eps,
+        weight_decay: cfg.weight_decay,
+        n: cfg.n,
+        ..MezoConfig::default()
+    };
+    let mut p = p0.clone();
+    let mut opt = MezoSgd::new(mcfg, trainable.to_vec(), master_seed);
+    for _ in 0..steps {
+        opt.step(&mut p, |p| Ok(quad(p))).expect("dense step");
+    }
+    (p, opt.history.clone())
+}
+
+/// A synthetic but realistic `(seed, pgrad, lr)` log.
+fn synth_log(trainable: &[&str], n_records: usize, seed: u64) -> Trajectory {
+    let mut rng = Pcg::new(seed);
+    let mut log = Trajectory::new(trainable.iter().map(|s| s.to_string()).collect());
+    for _ in 0..n_records {
+        log.records.push(StepRecord {
+            seed: rng.next_u64(),
+            pgrad: rng.normal_f32(0.0, 1.0),
+            lr: 1e-2,
+        });
+    }
+    log
+}
+
+// ------------------------------------------------------------ chaos layer
+
+/// What a scripted fault injects on its chosen recv.
+#[derive(Clone, Copy)]
+enum Fault {
+    /// connection dropped — the worker was killed
+    Kill,
+    /// coordinator read deadline fired; the reply is discarded with the
+    /// transport, exercising the timeout → respawn → retry path
+    Timeout,
+}
+
+/// A transport wrapper that fails its `at`-th recv (1-based) with the
+/// scripted fault. Dropping it (which the fleet's respawn does) drops
+/// the inner channel end, so the worker thread behind it really dies.
+struct Chaos {
+    inner: Box<dyn Transport>,
+    fault: Option<(usize, Fault)>,
+    recvs: usize,
+}
+
+impl Transport for Chaos {
+    fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
+        self.inner.send(msg)
+    }
+    fn recv(&mut self) -> Result<Msg, WireError> {
+        self.recvs += 1;
+        if let Some((at, fault)) = self.fault {
+            if self.recvs == at {
+                return Err(match fault {
+                    Fault::Kill => WireError::Disconnected,
+                    Fault::Timeout => WireError::Timeout,
+                });
+            }
+        }
+        self.inner.recv()
+    }
+}
+
+/// A channel spawner with a fault schedule: entry `(k, at, fault)` arms
+/// the *next* transport spawned for shard `k` to fail its `at`-th recv.
+/// Respawned transports are clean unless the schedule has another entry
+/// for that shard, so recovery itself can be made to fail and recover.
+fn chaos_spawner(schedule: Vec<(usize, usize, Fault)>) -> SpawnFn {
+    let mut base = channel_spawner(Some(Duration::from_secs(30)));
+    let pending = Arc::new(Mutex::new(schedule));
+    Box::new(move |k| {
+        let inner = base(k)?;
+        let fault = {
+            let mut p = pending.lock().unwrap();
+            p.iter().position(|f| f.0 == k).map(|i| {
+                let (_, at, fault) = p.remove(i);
+                (at, fault)
+            })
+        };
+        Ok(Box::new(Chaos { inner, fault, recvs: 0 }) as Box<dyn Transport>)
+    })
+}
+
+// ----------------------------------------------------- calm-water pins
+
+/// Scatter → distributed MeZO stepping → gather equals the dense
+/// optimizer bit for bit, for 1 / 2 / 4 shards (K=1 is the degenerate
+/// single-worker fleet), including the recorded history.
+#[test]
+fn fleet_stepping_is_bitwise_dense_for_shards_1_2_4() {
+    let p0 = store(&[7, 64, 3, 33], 11);
+    let cfg = FleetConfig { lr: 1e-2, eps: 1e-3, weight_decay: 0.1, n: 2, max_retries: 3 };
+    let (dense, dense_hist) = dense_steps(&p0, &[0, 1, 3], 42, &cfg, 3);
+    for k in [1usize, 2, 4] {
+        let trainable = vec!["t0".to_string(), "t1".to_string(), "t3".to_string()];
+        let mut fleet =
+            Fleet::new(&p0, k, trainable, 42, cfg, channel_spawner(Some(Duration::from_secs(30))))
+                .expect("fleet construction");
+        for _ in 0..3 {
+            let info = fleet.step(|p| Ok(quad(p))).expect("fleet step");
+            assert_eq!(info.forward_passes, 4, "n=2 SPSA is 4 forwards");
+        }
+        let mut gathered = ParamStore::from_specs(p0.specs.clone());
+        fleet.gather_into(&mut gathered).expect("gather");
+        assert_eq!(bits(&gathered), bits(&dense), "K={} stepping diverged from dense", k);
+        assert_eq!(fleet.history, dense_hist, "K={} history diverged from dense", k);
+        assert_eq!(fleet.respawns, 0, "calm water: no churn expected");
+        fleet.shutdown();
+    }
+}
+
+/// Scatter → distributed trajectory replay → gather equals the dense
+/// replay bit for bit, sequential (`seeds_per_step = 0`) and batched,
+/// for 1 / 2 / 4 shards.
+#[test]
+fn fleet_replay_is_bitwise_dense_for_shards_1_2_4() {
+    let p0 = store(&[5, 48, 17], 3);
+    let log = synth_log(&["t0", "t2"], 12, 99);
+
+    let mut dense_seq = p0.clone();
+    log.replay(&mut dense_seq);
+    let mut dense_batched = p0.clone();
+    log.replay_batched(&mut dense_batched, 4).expect("dense batched replay");
+
+    for k in [1usize, 2, 4] {
+        for (seeds_per_step, dense) in [(0usize, &dense_seq), (4, &dense_batched)] {
+            let mut fleet = Fleet::new(
+                &p0,
+                k,
+                vec!["t0".to_string(), "t2".to_string()],
+                7,
+                FleetConfig::default(),
+                channel_spawner(Some(Duration::from_secs(30))),
+            )
+            .expect("fleet construction");
+            fleet.replay(&log, seeds_per_step).expect("fleet replay");
+            let mut gathered = ParamStore::from_specs(p0.specs.clone());
+            fleet.gather_into(&mut gathered).expect("gather");
+            assert_eq!(
+                bits(&gathered),
+                bits(dense),
+                "K={} seeds_per_step={} replay diverged from dense",
+                k,
+                seeds_per_step
+            );
+            fleet.shutdown();
+        }
+    }
+}
+
+/// More shards than coordinates: the trailing shards are empty, and
+/// their (zero-segment) LoadShard / Perturb / FetchShard frames must
+/// survive the wire without upsetting the arithmetic.
+#[test]
+fn empty_trailing_shards_survive_the_wire() {
+    let p0 = store(&[2, 1], 5); // 3 coordinates, 8 shards
+    let cfg = FleetConfig { lr: 1e-2, eps: 1e-3, weight_decay: 0.0, n: 1, max_retries: 3 };
+    let (dense, _) = dense_steps(&p0, &[0, 1], 17, &cfg, 2);
+    let mut fleet = Fleet::new(
+        &p0,
+        8,
+        vec!["t0".to_string(), "t1".to_string()],
+        17,
+        cfg,
+        channel_spawner(Some(Duration::from_secs(30))),
+    )
+    .expect("fleet construction");
+    assert!(fleet.plan().shard(7).is_empty(), "trailing shard should be empty");
+    for _ in 0..2 {
+        fleet.step(|p| Ok(quad(p))).expect("fleet step");
+    }
+    let mut gathered = ParamStore::from_specs(p0.specs.clone());
+    fleet.gather_into(&mut gathered).expect("gather");
+    assert_eq!(bits(&gathered), bits(&dense), "empty-shard fleet diverged from dense");
+    fleet.shutdown();
+}
+
+// ------------------------------------------------------------ churn pins
+
+/// Kill two workers mid-stepping (one during a perturb broadcast, one
+/// during a mirror refresh) and kill the first worker's *replacement*
+/// too. Recovery must be invisible: the gathered store and the history
+/// stay bitwise dense, and the respawn counter proves churn happened.
+#[test]
+fn worker_kills_mid_stepping_recover_bitwise() {
+    let p0 = store(&[9, 40, 21], 23);
+    let cfg = FleetConfig { lr: 5e-3, eps: 1e-3, weight_decay: 0.05, n: 2, max_retries: 3 };
+    let (dense, dense_hist) = dense_steps(&p0, &[0, 1, 2], 1234, &cfg, 2);
+    // recv 1 is the LoadShard ack; faults land on later, mid-step recvs.
+    // (0, 4, Kill) dies mid-perturb-sequence; its replacement (second
+    // schedule entry for shard 0) dies again during the command-log
+    // re-drive; (2, 7, Kill) dies around the fused update.
+    let schedule =
+        vec![(0usize, 4usize, Fault::Kill), (0, 2, Fault::Kill), (2, 7, Fault::Kill)];
+    let trainable = vec!["t0".to_string(), "t1".to_string(), "t2".to_string()];
+    let mut fleet =
+        Fleet::new(&p0, 3, trainable, 1234, cfg, chaos_spawner(schedule)).expect("fleet");
+    for _ in 0..2 {
+        fleet.step(|p| Ok(quad(p))).expect("fleet step under churn");
+    }
+    assert_eq!(fleet.respawns, 3, "all three scheduled kills should have fired");
+    let mut gathered = ParamStore::from_specs(p0.specs.clone());
+    fleet.gather_into(&mut gathered).expect("gather");
+    assert_eq!(bits(&gathered), bits(&dense), "churned stepping diverged from dense");
+    assert_eq!(fleet.history, dense_hist, "churned history diverged from dense");
+    fleet.shutdown();
+}
+
+/// Kill one worker and time out the other mid-replay: the coordinator's
+/// deadline path (respawn, checkpoint re-scatter, retry the in-flight
+/// Replay) must land bitwise on the dense replay.
+#[test]
+fn kill_and_timeout_mid_replay_recover_bitwise() {
+    let p0 = store(&[31, 14], 8);
+    let log = synth_log(&["t0", "t1"], 9, 555);
+    let mut dense = p0.clone();
+    log.replay(&mut dense);
+    // recv 2 is the Replay ack (recv 1 was LoadShard): worker 1 dies
+    // mid-replay; worker 0's reply to the checkpoint fetch (recv 3) is
+    // lost to a timeout instead.
+    let schedule = vec![(1usize, 2usize, Fault::Kill), (0, 3, Fault::Timeout)];
+    let mut fleet = Fleet::new(
+        &p0,
+        2,
+        vec!["t0".to_string(), "t1".to_string()],
+        9,
+        FleetConfig::default(),
+        chaos_spawner(schedule),
+    )
+    .expect("fleet");
+    fleet.replay(&log, 0).expect("fleet replay under churn");
+    assert_eq!(fleet.respawns, 2, "one kill + one timeout should both respawn");
+    let mut gathered = ParamStore::from_specs(p0.specs.clone());
+    fleet.gather_into(&mut gathered).expect("gather");
+    assert_eq!(bits(&gathered), bits(&dense), "churned replay diverged from dense");
+    fleet.shutdown();
+}
+
+/// Sweep the kill over every recv position of a one-step run: wherever
+/// the worker dies — perturb, fetch, update, checkpoint, gather — the
+/// result must stay bitwise dense. (Position 1, the initial scatter,
+/// is construction-time and surfaces as an error by design, so the
+/// sweep starts at 2.)
+#[test]
+fn a_kill_at_every_protocol_position_is_survivable() {
+    let p0 = store(&[13, 26], 31);
+    let cfg = FleetConfig { lr: 1e-2, eps: 1e-3, weight_decay: 0.0, n: 1, max_retries: 3 };
+    let (dense, _) = dense_steps(&p0, &[0, 1], 77, &cfg, 1);
+    let mut total_respawns = 0usize;
+    // one step at K=2 touches ~9 recvs per worker (perturb ×3, fetch
+    // ×2, update, checkpoint fetch, gather fetch, after the load ack)
+    for pos in 2usize..=9 {
+        let schedule = vec![(pos % 2, pos, Fault::Kill)];
+        let mut fleet = Fleet::new(
+            &p0,
+            2,
+            vec!["t0".to_string(), "t1".to_string()],
+            77,
+            cfg,
+            chaos_spawner(schedule),
+        )
+        .expect("fleet");
+        fleet.step(|p| Ok(quad(p))).expect("fleet step under churn");
+        let mut gathered = ParamStore::from_specs(p0.specs.clone());
+        fleet.gather_into(&mut gathered).expect("gather");
+        assert_eq!(bits(&gathered), bits(&dense), "kill at recv {} diverged from dense", pos);
+        total_respawns += fleet.respawns;
+        fleet.shutdown();
+    }
+    assert!(total_respawns >= 6, "the sweep should actually have killed workers");
+}
+
+/// A worker answering with a stale plan digest is a protocol fault, not
+/// churn: the refusal must be a loud typed Nack naming the digests, and
+/// the worker must stay up (state intact) afterwards.
+#[test]
+fn stale_plan_digests_are_refused_loudly_over_the_wire() {
+    let p0 = store(&[6, 10], 2);
+    let plan = mezo::shard::ShardPlan::new(&p0, 2).expect("plan");
+    let (mut coord, mut worker_end) = channel_pair(Some(Duration::from_secs(30)));
+    let serve = std::thread::spawn(move || {
+        let mut w = ShardWorker::new();
+        w.serve(&mut worker_end)
+    });
+    let segments: Vec<Vec<f32>> = plan
+        .shard(0)
+        .segments
+        .iter()
+        .map(|seg| p0.data[seg.tensor][seg.lo..seg.hi].to_vec())
+        .collect();
+    coord
+        .send(&Msg::LoadShard {
+            plan: Box::new(plan.clone()),
+            shard: 0,
+            trainable: vec!["t0".to_string(), "t1".to_string()],
+            segments,
+        })
+        .expect("send load");
+    assert!(matches!(coord.recv().expect("load ack"), Msg::Ack));
+    // a perturb under a digest the worker does not serve must bounce
+    coord
+        .send(&Msg::Perturb { plan_digest: plan.digest() ^ 1, seed: 4, scale: 1e-3 })
+        .expect("send stale perturb");
+    match coord.recv().expect("stale perturb reply") {
+        Msg::Nack { message } => {
+            assert!(
+                message.contains("stale plan digest"),
+                "refusal should name the fault, got: {}",
+                message
+            );
+        }
+        other => panic!("expected Nack, got {}", other.kind_name()),
+    }
+    // the refusal must not have cost the worker its state
+    coord
+        .send(&Msg::FetchShard { plan_digest: plan.digest() })
+        .expect("send fetch");
+    match coord.recv().expect("fetch reply") {
+        Msg::ShardSlice { shard_digest, .. } => {
+            assert_eq!(shard_digest, plan.shard_digest(0), "state should be intact");
+        }
+        other => panic!("expected ShardSlice, got {}", other.kind_name()),
+    }
+    coord.send(&Msg::Shutdown).expect("send shutdown");
+    assert!(matches!(coord.recv().expect("shutdown ack"), Msg::Ack));
+    serve.join().expect("worker thread").expect("worker serve");
+}
+
+// ---------------------------------------------------- real-process fleet
+
+/// The CI fleet leg: a coordinator driving real `mezo-worker` child
+/// processes over TCP, one of which is kill(2)-ed between steps. The
+/// fleet must respawn a fresh process, re-scatter its shard, and still
+/// gather bitwise dense.
+#[test]
+fn tcp_process_fleet_survives_a_real_worker_kill() {
+    use std::net::TcpListener;
+    use std::process::{Child, Command, Stdio};
+
+    let p0 = store(&[19, 37, 8], 61);
+    let cfg = FleetConfig { lr: 1e-2, eps: 1e-3, weight_decay: 0.1, n: 1, max_retries: 3 };
+    let (dense, dense_hist) = dense_steps(&p0, &[0, 1, 2], 2024, &cfg, 3);
+
+    let children: Arc<Mutex<Vec<Child>>> = Arc::new(Mutex::new(Vec::new()));
+    let kids = children.clone();
+    let spawn: SpawnFn = Box::new(move |_k| {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let child = Command::new(env!("CARGO_BIN_EXE_mezo-worker"))
+            .arg("--connect")
+            .arg(addr.to_string())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()?;
+        kids.lock().unwrap().push(child);
+        let (stream, _) = listener.accept()?;
+        let t = mezo::wire::TcpTransport::new(stream, Some(Duration::from_secs(30)))?;
+        Ok(Box::new(t) as Box<dyn Transport>)
+    });
+
+    let trainable = vec!["t0".to_string(), "t1".to_string(), "t2".to_string()];
+    let mut fleet = Fleet::new(&p0, 2, trainable, 2024, cfg, spawn).expect("tcp fleet");
+    fleet.step(|p| Ok(quad(p))).expect("step 1");
+    // kill worker 0's process for real; the next command hits a dead
+    // socket and the fleet must respawn a replacement process
+    {
+        let mut kids = children.lock().unwrap();
+        kids[0].kill().expect("kill worker 0");
+        kids[0].wait().expect("reap worker 0");
+    }
+    fleet.step(|p| Ok(quad(p))).expect("step 2 across the kill");
+    fleet.step(|p| Ok(quad(p))).expect("step 3");
+    assert!(fleet.respawns >= 1, "the kill should have forced a respawn");
+
+    let mut gathered = ParamStore::from_specs(p0.specs.clone());
+    fleet.gather_into(&mut gathered).expect("gather");
+    assert_eq!(bits(&gathered), bits(&dense), "process fleet diverged from dense");
+    assert_eq!(fleet.history, dense_hist, "process fleet history diverged from dense");
+    fleet.shutdown();
+    for child in children.lock().unwrap().iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}

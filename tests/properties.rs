@@ -1518,3 +1518,267 @@ fn prop_fzoo_n1_without_variance_norm_is_the_one_sided_spsa_update() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// MZW1 wire protocol (wire::frame): the adversarial surface. Decoding is
+// total — arbitrary bytes, truncations and bit flips must come back as
+// typed WireErrors, never panics — and a valid encode→decode roundtrip
+// is byte-identical for every frame kind.
+// ---------------------------------------------------------------------------
+
+/// A random parameter-store geometry plus a plan over it — the input
+/// shape every structured frame is built from.
+fn gen_wire_plan(rng: &mut Pcg) -> mezo::shard::ShardPlan {
+    let nt = rng.below(4) + 1;
+    let specs = (0..nt)
+        .map(|i| TensorDesc {
+            name: format!("t{}", i),
+            shape: vec![rng.below(400) + 1],
+            dtype: "f32".into(),
+        })
+        .collect();
+    let p = ParamStore::from_specs(specs);
+    let k = rng.below(8) + 1;
+    mezo::shard::ShardPlan::new(&p, k).expect("k >= 1")
+}
+
+/// One random message of a random kind, covering every frame kind the
+/// protocol has (empty shards and empty buffers included).
+fn gen_wire_msg(rng: &mut Pcg) -> mezo::wire::Msg {
+    use mezo::wire::Msg;
+    let plan = gen_wire_plan(rng);
+    let mut log = Trajectory::new(
+        (0..plan.n_tensors()).filter(|_| rng.below(2) == 0).map(|i| format!("t{}", i)).collect(),
+    );
+    log.records = (0..rng.below(6))
+        .map(|_| StepRecord {
+            seed: rng.next_u64(),
+            pgrad: rng.next_f64() as f32 - 0.5,
+            lr: 1e-3,
+        })
+        .collect();
+    if rng.below(4) == 0 {
+        log = log.with_mask_digest(rng.next_u64());
+    }
+    let k = rng.below(plan.n_shards());
+    let segments: Vec<Vec<f32>> = plan
+        .shard(k)
+        .segments
+        .iter()
+        .map(|seg| (0..seg.len()).map(|_| rng.next_f64() as f32).collect())
+        .collect();
+    match rng.below(13) {
+        0 => Msg::Hello { node: rng.next_u64() as u32 },
+        1 => Msg::Ack,
+        2 => Msg::Nack { message: format!("refused #{} — ünïcode ok", rng.below(100)) },
+        3 => Msg::Plan(Box::new(plan)),
+        4 => Msg::Manifest(plan.manifest()),
+        5 => Msg::Log(Box::new(log)),
+        6 => Msg::LoadShard {
+            shard: k as u32,
+            trainable: log.trainable.clone(),
+            segments,
+            plan: Box::new(plan),
+        },
+        7 => Msg::Perturb {
+            plan_digest: plan.digest(),
+            seed: rng.next_u64(),
+            scale: rng.next_f64() as f32,
+        },
+        8 => Msg::Update {
+            plan_digest: plan.digest(),
+            zs: (0..rng.below(5)).map(|_| (rng.next_u64(), rng.next_f64() as f32)).collect(),
+            lr: 1e-3,
+            wd: 0.1,
+        },
+        9 => Msg::Replay {
+            plan_digest: plan.digest(),
+            log: Box::new(log),
+            seeds_per_step: rng.below(4) as u32,
+        },
+        10 => Msg::FetchShard { plan_digest: plan.digest() },
+        11 => Msg::ShardSlice {
+            plan_digest: plan.digest(),
+            shard: k as u32,
+            shard_digest: plan.shard_digest(k),
+            segments,
+        },
+        _ => Msg::Shutdown,
+    }
+}
+
+#[test]
+fn prop_wire_every_kind_roundtrips_byte_identically() {
+    use mezo::wire::Msg;
+    forall(
+        300,
+        71,
+        gen_wire_msg,
+        |msg| {
+            let bytes = msg.encode();
+            let (back, used) =
+                Msg::decode(&bytes).map_err(|e| format!("{} failed: {}", msg.kind_name(), e))?;
+            ensure(used == bytes.len(), "whole frame consumed")?;
+            ensure(&back == msg, format!("{}: value roundtrip", msg.kind_name()))?;
+            ensure(back.encode() == bytes, format!("{}: byte roundtrip", msg.kind_name()))
+        },
+    );
+}
+
+#[test]
+fn prop_wire_arbitrary_bytes_never_panic() {
+    use mezo::wire::Msg;
+    forall(
+        500,
+        72,
+        |rng| {
+            let n = rng.below(200);
+            (0..n).map(|_| rng.next_u64() as u8).collect::<Vec<u8>>()
+        },
+        |bytes| {
+            // total decoding: any outcome but a panic is acceptable, and
+            // a (vanishingly unlikely) success must re-encode cleanly
+            match Msg::decode(bytes) {
+                Ok((msg, used)) => {
+                    ensure(used <= bytes.len(), "consumed within input")?;
+                    ensure(msg.encode().len() == used, "reencode length")
+                }
+                Err(e) => ensure(!e.kind_name().is_empty(), "typed error"),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_wire_single_bit_flips_are_always_rejected() {
+    use mezo::wire::Msg;
+    forall(
+        250,
+        73,
+        |rng| {
+            let msg = gen_wire_msg(rng);
+            let bytes = msg.encode();
+            let bit = rng.below(bytes.len() * 8);
+            (bytes, bit)
+        },
+        |(bytes, bit)| {
+            let mut corrupt = bytes.clone();
+            corrupt[bit / 8] ^= 1 << (bit % 8);
+            // the digest covers version/kind/len/payload and the trailer
+            // is the digest itself: every single-bit flip must surface as
+            // a typed error (magic/version/kind/len flips hit their own
+            // arms before the digest check)
+            match Msg::decode(&corrupt) {
+                Ok(_) => Err(format!("bit {} flip went undetected", bit)),
+                Err(e) => ensure(
+                    matches!(
+                        e.kind_name(),
+                        "bad_magic"
+                            | "bad_version"
+                            | "unknown_kind"
+                            | "truncated"
+                            | "oversize"
+                            | "bad_digest"
+                            | "bad_payload"
+                    ),
+                    format!("unexpected arm {} for bit {}", e.kind_name(), bit),
+                ),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_wire_every_truncation_is_rejected() {
+    use mezo::wire::Msg;
+    forall(
+        60,
+        74,
+        |rng| gen_wire_msg(rng).encode(),
+        |bytes| {
+            // sample prefixes densely near the boundaries, sparsely inside
+            let mut cuts: Vec<usize> = (0..bytes.len().min(32)).collect();
+            cuts.extend((0..bytes.len()).step_by(97));
+            cuts.push(bytes.len().saturating_sub(1));
+            for cut in cuts {
+                if Msg::decode(&bytes[..cut]).is_ok() {
+                    return Err(format!("{}-byte prefix of {} decoded", cut, bytes.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wire_plan_frames_guard_their_embedded_digest() {
+    use mezo::wire::Msg;
+    forall(
+        100,
+        75,
+        gen_wire_plan,
+        |plan| {
+            // a plan frame whose claimed digest disagrees with the
+            // structure must be rejected even though the FRAME digest is
+            // valid (this is the cross-peer derivation guard): rebuild
+            // the frame around a tampered claimed digest
+            let msg = Msg::Plan(Box::new(plan.clone()));
+            let good = msg.encode();
+            let mut payload =
+                good[mezo::wire::HEADER_LEN..good.len() - mezo::wire::TRAILER_LEN].to_vec();
+            let n = payload.len();
+            payload[n - 1] ^= 0x40; // the claimed digest is the last payload field
+            let mut evil = Vec::new();
+            evil.extend_from_slice(&mezo::wire::MAGIC);
+            evil.push(mezo::wire::VERSION);
+            evil.push(msg.kind());
+            evil.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            evil.extend_from_slice(&payload);
+            evil.extend_from_slice(
+                &mezo::wire::frame_digest(mezo::wire::VERSION, msg.kind(), &payload).to_le_bytes(),
+            );
+            match Msg::decode(&evil) {
+                Ok(_) => Err("tampered plan digest accepted".into()),
+                Err(e) => ensure(
+                    e.kind_name() == "bad_payload",
+                    format!("expected bad_payload, got {}", e.kind_name()),
+                ),
+            }
+        },
+    );
+}
+
+#[test]
+fn wire_shard_edges_survive_the_wire() {
+    use mezo::wire::Msg;
+    // empty trailing shards (more shards than coordinates) roundtrip
+    // with digests intact
+    let specs = vec![TensorDesc { name: "w".into(), shape: vec![3], dtype: "f32".into() }];
+    let p = ParamStore::from_specs(specs);
+    let plan = mezo::shard::ShardPlan::new(&p, 8).unwrap();
+    assert!(plan.shards().iter().any(|s| s.is_empty()), "degenerate plan has empty shards");
+    let bytes = Msg::Plan(Box::new(plan.clone())).encode();
+    match Msg::decode(&bytes).unwrap().0 {
+        Msg::Plan(back) => {
+            assert_eq!(*back, plan);
+            assert_eq!(back.digest(), plan.digest());
+            for k in 0..plan.n_shards() {
+                assert_eq!(back.shard_digest(k), plan.shard_digest(k));
+            }
+        }
+        other => panic!("expected a plan frame, got {}", other.kind_name()),
+    }
+    // an empty shard's LoadShard carries zero buffers and roundtrips
+    let empty_k = plan.shards().iter().position(|s| s.is_empty()).unwrap();
+    let load = Msg::LoadShard {
+        plan: Box::new(plan.clone()),
+        shard: empty_k as u32,
+        trainable: vec!["w".into()],
+        segments: Vec::new(),
+    };
+    assert_eq!(Msg::decode(&load.encode()).unwrap().0, load);
+    // K=1 degenerate "fleet" plan roundtrips too
+    let one = mezo::shard::ShardPlan::new(&p, 1).unwrap();
+    let bytes = Msg::Manifest(one.manifest()).encode();
+    assert_eq!(Msg::decode(&bytes).unwrap().0, Msg::Manifest(one.manifest()));
+}
