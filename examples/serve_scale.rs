@@ -1,0 +1,239 @@
+//! Synthetic multi-tenant serving load: the ROADMAP "million users"
+//! scenario made measurable.
+//!
+//! Builds one dense base store plus N per-user trajectory logs (a mix of
+//! dense, seed-batched, sparse SensZOQ, and shard-decomposed users),
+//! drives Zipf-distributed request traffic through `serve::ServeStore`
+//! across a cache-capacity sweep, and writes materializations/sec, cache
+//! hit rate, and p50/p99 latency per capacity into `BENCH_serving.json`
+//! (distilled into the committed trajectory by
+//! `scripts/bench_summary.py`).
+//!
+//! The run doubles as a correctness smoke: for a sample of users it pins
+//! the served parameters — cache on AND cache off — bitwise against a
+//! fresh dense replay, and exits non-zero on any mismatch, which is how
+//! `scripts/verify.sh` drives it under the `MEZO_THREADS` matrix.
+//!
+//! Knobs: `MEZO_BENCH_QUICK=1` shrinks the grid for CI smoke runs;
+//! `MEZO_SERVE_USERS` / `MEZO_SERVE_REQS` override the population and
+//! request count (verify.sh uses tiny values).
+
+use mezo::model::meta::TensorDesc;
+use mezo::model::params::ParamStore;
+use mezo::optim::mezo::StepRecord;
+use mezo::rng::Pcg;
+use mezo::serve::{ServeConfig, ServeStore, UserLog};
+use mezo::shard::ShardPlan;
+use mezo::storage::Trajectory;
+use mezo::util::json::{obj, Json};
+use mezo::util::stats::{summarize, Timer};
+use mezo::zkernel::{Sensitivity, SparseMask};
+use std::sync::Arc;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Zipf(s) sampler over ranks 1..=n via inverse-CDF binary search.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for i in 1..=n {
+            acc += 1.0 / (i as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Pcg) -> usize {
+        let u = rng.next_f64();
+        // first rank whose CDF covers u
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+fn base_store(d_per_tensor: usize) -> ParamStore {
+    let specs = vec![
+        TensorDesc { name: "emb".into(), shape: vec![d_per_tensor], dtype: "f32".into() },
+        TensorDesc { name: "w1".into(), shape: vec![d_per_tensor], dtype: "f32".into() },
+        TensorDesc { name: "w2".into(), shape: vec![d_per_tensor / 2], dtype: "f32".into() },
+    ];
+    let mut p = ParamStore::from_specs(specs);
+    p.init(0xBA5E);
+    p
+}
+
+fn random_records(rng: &mut Pcg, n: usize) -> Vec<StepRecord> {
+    (0..n)
+        .map(|_| StepRecord {
+            seed: rng.next_u64(),
+            pgrad: (rng.next_f32() - 0.5) * 0.2,
+            lr: 1e-3,
+        })
+        .collect()
+}
+
+/// Build the tenant population: Zipf rank r maps to user id r. Mix of
+/// replay modes — the cache must be bitwise-transparent to all of them.
+fn admit_users(
+    serve: &mut ServeStore,
+    rng: &mut Pcg,
+    n_users: usize,
+    trainable: &[&str],
+) -> anyhow::Result<()> {
+    let base = Arc::clone(serve.base());
+    let mask = Arc::new(
+        SparseMask::top_k(&base, &[0, 1, 2], base.n_params() / 8, Sensitivity::Magnitude)
+            .expect("top_k on the base store"),
+    );
+    let plan = Arc::new(ShardPlan::new(&base, 4).expect("4-way plan on the base store"));
+    let names: Vec<String> = trainable.iter().map(|s| s.to_string()).collect();
+    for user in 0..n_users as u64 {
+        // log length 2..=8, a few KB per tenant — the whole point
+        let n_recs = 2 + rng.below(7);
+        let recs = random_records(rng, n_recs);
+        let ulog = match rng.below(10) {
+            // 60%: dense sequential
+            0..=5 => UserLog::dense(Trajectory::from_run(names.clone(), &recs)),
+            // 20%: dense, fused seed batches (an FZOO-style log)
+            6..=7 => {
+                let sps = if n_recs % 2 == 0 { 2 } else { 1 };
+                UserLog::dense_batched(Trajectory::from_run(names.clone(), &recs), sps)
+            }
+            // 10%: sparse SensZOQ log + its mask
+            8 => UserLog::masked(
+                Trajectory::from_run(names.clone(), &recs).with_mask_digest(mask.digest()),
+                Arc::clone(&mask),
+            ),
+            // 10%: shard-decomposed materialization
+            _ => UserLog::sharded(Trajectory::from_run(names.clone(), &recs), Arc::clone(&plan)),
+        };
+        serve.admit(user, ulog)?;
+    }
+    Ok(())
+}
+
+/// Bitwise gate: served params (hit or miss path alike) == fresh dense
+/// replay for a user sample. Returns false on any mismatch.
+fn bitwise_gate(serve: &mut ServeStore, rng: &mut Pcg, n_users: usize, samples: usize) -> bool {
+    for _ in 0..samples {
+        let user = rng.below(n_users) as u64;
+        let served = match serve.get(user) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve_scale: get({}) failed: {}", user, e);
+                return false;
+            }
+        };
+        let fresh = match serve.materialize_fresh(user) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve_scale: fresh({}) failed: {}", user, e);
+                return false;
+            }
+        };
+        let same = served
+            .data
+            .iter()
+            .flatten()
+            .map(|x| x.to_bits())
+            .eq(fresh.data.iter().flatten().map(|x| x.to_bits()));
+        if !same {
+            eprintln!("serve_scale: user {} served bits != fresh dense replay", user);
+            return false;
+        }
+    }
+    true
+}
+
+fn main() {
+    let quick = std::env::var("MEZO_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let n_users = env_usize("MEZO_SERVE_USERS", if quick { 2_000 } else { 20_000 });
+    let n_reqs = env_usize("MEZO_SERVE_REQS", if quick { 8_000 } else { 60_000 });
+    let d = if quick { 4_096 } else { 16_384 };
+    let zipf_s = 1.1;
+    let trainable = ["emb", "w1", "w2"];
+    // capacity sweep: off, tight, and a working-set-sized cache
+    let capacities = [0usize, (n_users / 64).max(1), (n_users / 8).max(2)];
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut bitwise_ok = true;
+    let zipf = Zipf::new(n_users, zipf_s);
+
+    for &cap in &capacities {
+        let mut rng = Pcg::new(0x5E21E + cap as u64);
+        let mut serve =
+            ServeStore::new(base_store(d), ServeConfig { cache_capacity: cap });
+        admit_users(&mut serve, &mut rng, n_users, &trainable).expect("admit population");
+
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(n_reqs);
+        let wall = Timer::start();
+        for _ in 0..n_reqs {
+            let user = zipf.sample(&mut rng) as u64;
+            let t = Timer::start();
+            serve.get(user).expect("serve a registered user");
+            lat_ms.push(t.ms());
+        }
+        let total_s = wall.secs();
+        let st = serve.stats();
+        let lat = summarize(&lat_ms);
+        println!(
+            "cap {:>6}: {:>8} reqs in {:>6.2}s | hit {:.3} | mats/s {:>9.1} | p50 {:.4}ms p99 {:.4}ms",
+            cap,
+            n_reqs,
+            total_s,
+            st.hit_rate(),
+            st.materializations as f64 / total_s,
+            lat.p50,
+            lat.p99,
+        );
+        bitwise_ok &= bitwise_gate(&mut serve, &mut rng, n_users, if quick { 16 } else { 32 });
+        rows.push(obj(vec![
+            ("capacity", Json::from(cap)),
+            ("requests", Json::from(n_reqs)),
+            ("hit_rate", Json::from(st.hit_rate())),
+            ("hits", Json::from(st.hits)),
+            ("misses", Json::from(st.misses)),
+            ("stale_refreshes", Json::from(st.stale)),
+            ("evictions", Json::from(st.evictions)),
+            ("base_served", Json::from(st.base_served)),
+            ("materializations", Json::from(st.materializations)),
+            ("materializations_per_sec", Json::from(st.materializations as f64 / total_s)),
+            ("requests_per_sec", Json::from(n_reqs as f64 / total_s)),
+            ("p50_ms", Json::from(lat.p50)),
+            ("p90_ms", Json::from(lat.p90)),
+            ("p99_ms", Json::from(lat.p99)),
+            ("mean_ms", Json::from(lat.mean)),
+        ]));
+    }
+
+    let report = obj(vec![
+        ("source", Json::from("examples/serve_scale.rs")),
+        ("quick_mode", Json::from(quick)),
+        ("n_users", Json::from(n_users)),
+        ("n_requests", Json::from(n_reqs)),
+        ("base_params", Json::from(base_store(d).n_params())),
+        ("zipf_s", Json::from(zipf_s)),
+        (
+            "hardware_threads",
+            Json::from(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)),
+        ),
+        ("bitwise_ok", Json::from(bitwise_ok)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_serving.json", report.to_string()).expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json ({} capacities)", capacities.len());
+    if !bitwise_ok {
+        eprintln!("serve_scale: BITWISE GATE FAILED — served params drifted from fresh replay");
+        std::process::exit(1);
+    }
+}

@@ -438,11 +438,21 @@ impl Fzoo {
         // and does NOT land on the trained θ, exactly as for MeZO's own
         // Momentum/Adam flavors.
         let n_f = n as f32;
-        for (&seed, &(_, g)) in seeds.iter().zip(&zs) {
-            self.history.push(StepRecord { seed, pgrad: g / n_f, lr: lr_eff });
-        }
+        let recs: Vec<StepRecord> = seeds
+            .iter()
+            .zip(&zs)
+            .map(|(&seed, &(_, g))| StepRecord { seed, pgrad: g / n_f, lr: lr_eff })
+            .collect();
+        // n >= 1 makes `recs` non-empty; keep the invariant as a typed
+        // error rather than an unwrap panic if it ever breaks (the old
+        // `history.last().unwrap()` also read a *prior* step's record if
+        // this step somehow logged nothing)
+        let last = match recs.last() {
+            Some(r) => *r,
+            None => anyhow::bail!("FZOO step produced no seed records (n must be >= 1)"),
+        };
+        self.history.extend(recs);
         self.step += 1;
-        let last = self.history.last().unwrap();
         Ok(StepInfo {
             loss: l0,
             pgrad: last.pgrad,
@@ -952,6 +962,50 @@ mod tests {
         let mut opt = Fzoo::new(FzooConfig::default(), vec![0, 1], 1);
         opt.shard = Some(ShardPlan::new(&big_params(), 2).unwrap());
         assert!(opt.step(&mut p, |p| quad_loss(p)).is_err());
+    }
+
+    #[test]
+    fn every_scoping_x_moment_flavor_combination_is_typed_and_touches_nothing() {
+        use crate::optim::mezo::ScopeError;
+        use crate::shard::ShardPlan;
+        let mut p = toy_params();
+        let before = p.data.clone();
+        for flavor in [Flavor::Momentum, Flavor::Adam] {
+            for shard in [false, true] {
+                let cfg = FzooConfig { flavor, ..Default::default() };
+                let mut opt = Fzoo::new(cfg, vec![0, 1], 1);
+                if shard {
+                    opt.shard = Some(ShardPlan::new(&p, 2).unwrap());
+                } else {
+                    opt.mask = Some(crate::zkernel::SparseMask::full(&p, &[0, 1]));
+                }
+                let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+                let typed = err.downcast_ref::<ScopeError>().expect("typed ScopeError");
+                let want = if shard {
+                    ScopeError::ShardRequiresSgd(flavor)
+                } else {
+                    ScopeError::MaskRequiresSgd(flavor)
+                };
+                assert_eq!(*typed, want, "{}", err);
+                assert!(opt.history.is_empty(), "no silent partial step");
+                assert_eq!(p.data, before, "θ untouched on the error path");
+            }
+        }
+        // mask + shard together, every flavor: the mask-flavor guard has
+        // precedence for moment flavors, Sgd reaches the exclusivity arm
+        for flavor in [Flavor::Sgd, Flavor::Momentum, Flavor::Adam] {
+            let cfg = FzooConfig { flavor, ..Default::default() };
+            let mut opt = Fzoo::new(cfg, vec![0, 1], 1);
+            opt.mask = Some(crate::zkernel::SparseMask::full(&p, &[0, 1]));
+            opt.shard = Some(ShardPlan::new(&p, 2).unwrap());
+            let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+            let want = match flavor {
+                Flavor::Sgd => ScopeError::MaskShardExclusive,
+                other => ScopeError::MaskRequiresSgd(other),
+            };
+            assert_eq!(*err.downcast_ref::<ScopeError>().unwrap(), want, "{}", err);
+            assert_eq!(p.data, before, "θ untouched on the error path");
+        }
     }
 
     #[test]

@@ -359,9 +359,14 @@ impl MezoSgd {
                 self.apply_with_moments(params, &records);
             }
         }
+        // n_now() >= 1 makes `records` non-empty; keep the invariant as a
+        // typed error rather than an unwrap panic if it ever breaks
+        let last = match records.last() {
+            Some(r) => *r,
+            None => bail!("MeZO step produced no records (n_now() must be >= 1)"),
+        };
         self.history.extend(records.iter().copied());
         self.step += 1;
-        let last = records.last().unwrap();
         Ok(StepInfo { loss: mean_loss, pgrad: last.pgrad, seed: last.seed, forward_passes: fwd })
     }
 
@@ -512,10 +517,58 @@ pub(crate) fn apply_moment_update(
     }
 }
 
+/// Typed rejection of an unsupported scoping × flavor combination.
+///
+/// Masked and shard-scoped stepping support the Sgd flavor only — the
+/// Momentum/Adam moment buffers are dense, neither masked nor
+/// shard-partitioned (ROADMAP carries "unify moment-state scoping" as the
+/// open item that would lift this) — and a mask cannot combine with a
+/// shard plan, because sharding decomposes the DENSE parameter pass.
+/// Every such combination is rejected up front by [`MezoSgd::step`] /
+/// `Fzoo::step` *before* any parameter is touched: never a silent no-op,
+/// never a panic. Returned inside [`anyhow::Error`]; recover the variant
+/// with `err.downcast_ref::<ScopeError>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScopeError {
+    /// a sparse mask was attached with a Momentum/Adam flavor
+    MaskRequiresSgd(Flavor),
+    /// a shard plan was attached with a Momentum/Adam flavor
+    ShardRequiresSgd(Flavor),
+    /// a sparse mask and a shard plan were attached together
+    MaskShardExclusive,
+}
+
+impl std::fmt::Display for ScopeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScopeError::MaskRequiresSgd(flavor) => write!(
+                f,
+                "sparse masks support the Sgd flavor only (a static coordinate set is \
+                 perturbed/updated; the Momentum/Adam moment buffers are dense) — \
+                 got {:?}",
+                flavor
+            ),
+            ScopeError::ShardRequiresSgd(flavor) => write!(
+                f,
+                "shard-scoped stepping supports the Sgd flavor only (the Momentum/Adam \
+                 moment buffers are dense, not shard-partitioned) — got {:?}",
+                flavor
+            ),
+            ScopeError::MaskShardExclusive => write!(
+                f,
+                "a sparse mask and a shard plan cannot combine: sharding decomposes the \
+                 DENSE parameter pass — clear one of the two"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScopeError {}
+
 /// Shared step-entry guard of the scoping modes: a mask must fit the
-/// store and a shard plan must match it; both demand the Sgd flavor
-/// (moment buffers are dense, neither masked nor shard-partitioned);
-/// and the two cannot combine — sharding decomposes the DENSE pass.
+/// store and a shard plan must match it (geometry errors from their own
+/// `validate`), and every unsupported scoping × flavor combination maps
+/// to a typed [`ScopeError`]. Runs before any parameter write.
 pub(crate) fn validate_scoping(
     mask: Option<&SparseMask>,
     shard: Option<&ShardPlan>,
@@ -525,25 +578,16 @@ pub(crate) fn validate_scoping(
     if let Some(m) = mask {
         m.validate(params)?;
         if flavor != Flavor::Sgd {
-            bail!(
-                "sparse masks support the Sgd flavor only (a static coordinate set is \
-                 perturbed/updated; the Momentum/Adam moment buffers are dense)"
-            );
+            return Err(ScopeError::MaskRequiresSgd(flavor).into());
         }
     }
     if let Some(plan) = shard {
         if mask.is_some() {
-            bail!(
-                "a sparse mask and a shard plan cannot combine: sharding decomposes the \
-                 DENSE parameter pass — clear one of the two"
-            );
+            return Err(ScopeError::MaskShardExclusive.into());
         }
         plan.validate(params)?;
         if flavor != Flavor::Sgd {
-            bail!(
-                "shard-scoped stepping supports the Sgd flavor only (the Momentum/Adam \
-                 moment buffers are dense, not shard-partitioned)"
-            );
+            return Err(ScopeError::ShardRequiresSgd(flavor).into());
         }
     }
     Ok(())
@@ -1169,6 +1213,49 @@ mod tests {
         opt.mask = Some(SparseMask::full(&p, &[0, 1]));
         let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
         assert!(err.to_string().contains("Sgd flavor"), "{}", err);
+    }
+
+    #[test]
+    fn every_scoping_x_moment_flavor_combination_is_typed_and_touches_nothing() {
+        use crate::shard::ShardPlan;
+        let mut p = toy_params();
+        let before = p.data.clone();
+        for flavor in [Flavor::Momentum, Flavor::Adam] {
+            for shard in [false, true] {
+                let cfg = MezoConfig { flavor, ..Default::default() };
+                let mut opt = MezoSgd::new(cfg, vec![0, 1], 1);
+                if shard {
+                    opt.shard = Some(ShardPlan::new(&p, 2).unwrap());
+                } else {
+                    opt.mask = Some(SparseMask::full(&p, &[0, 1]));
+                }
+                let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+                let typed = err.downcast_ref::<ScopeError>().expect("typed ScopeError");
+                let want = if shard {
+                    ScopeError::ShardRequiresSgd(flavor)
+                } else {
+                    ScopeError::MaskRequiresSgd(flavor)
+                };
+                assert_eq!(*typed, want, "{}", err);
+                assert!(opt.history.is_empty(), "no silent partial step");
+                assert_eq!(p.data, before, "θ untouched on the error path");
+            }
+        }
+        // mask + shard together: the mask-flavor guard has precedence for
+        // moment flavors; Sgd reaches the exclusivity arm
+        for flavor in [Flavor::Sgd, Flavor::Momentum, Flavor::Adam] {
+            let cfg = MezoConfig { flavor, ..Default::default() };
+            let mut opt = MezoSgd::new(cfg, vec![0, 1], 1);
+            opt.mask = Some(SparseMask::full(&p, &[0, 1]));
+            opt.shard = Some(ShardPlan::new(&p, 2).unwrap());
+            let err = opt.step(&mut p, |p| quad_loss(p)).unwrap_err();
+            let want = match flavor {
+                Flavor::Sgd => ScopeError::MaskShardExclusive,
+                other => ScopeError::MaskRequiresSgd(other),
+            };
+            assert_eq!(*err.downcast_ref::<ScopeError>().unwrap(), want, "{}", err);
+            assert_eq!(p.data, before, "θ untouched on the error path");
+        }
     }
 
     #[test]

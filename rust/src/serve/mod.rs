@@ -1,0 +1,663 @@
+//! Multi-tenant trajectory serving: N fine-tunes as logs over ONE base θ.
+//!
+//! The deepest systems consequence of MeZO's seed-replay determinism
+//! (§2.1 "Storage Efficiency"): a per-user fine-tune is not a parameter
+//! copy, it is a few KB of `(seed, pgrad, lr)` records. A serving tier
+//! therefore needs to hold exactly one dense base [`ParamStore`] plus one
+//! [`Trajectory`] log per user, and *materialize* a user's parameters on
+//! demand by replaying the log over a copy of the base — dense
+//! ([`Trajectory::replay_batched`]), sparse SensZOQ
+//! ([`Trajectory::replay_masked`]), or K-way sharded
+//! ([`Trajectory::replay_sharded`]) — all of which are pinned
+//! `to_bits()`-identical to the training run at any thread count and SIMD
+//! tier by the zkernel determinism contract.
+//!
+//! [`ServeStore`] is that tier:
+//!
+//! * **One refcounted base.** The base store lives behind an [`Arc`];
+//!   users whose log is still empty are served the base itself — zero
+//!   copies, pure refcount traffic.
+//! * **Clone-on-materialize with buffer recycling.** A user with records
+//!   gets a private copy of the base (the "copy" of copy-on-write), but
+//!   the copy's allocations are recycled: evicted materializations whose
+//!   `Arc` refcount has dropped to one return their buffers to a free
+//!   pool, and the next materialization reuses them via
+//!   [`ParamStore::copy_from`] instead of allocating multi-MB tensors.
+//! * **A bounded LRU cache.** Materialized stores are cached up to
+//!   `cache_capacity` entries; a cache hit is a refcount bump. Entries
+//!   remember the log length they were materialized at, so appending
+//!   records to a user's log ([`ServeStore::append_steps`]) makes the
+//!   cached entry stale and the next request re-materializes. Capacity 0
+//!   disables caching entirely (every request replays) without changing
+//!   any result bits.
+//! * **Digest guards survive the cache.** A sparse log (one tagged with a
+//!   mask digest) refuses dense materialization, and a mask with the
+//!   wrong digest is rejected by [`Trajectory::replay_masked`]'s own
+//!   check — errors are never cached, so the guard fires on every
+//!   request, hit path or miss path.
+//!
+//! The synthetic Zipf load harness lives in `examples/serve_scale.rs`
+//! (materializations/sec, cache hit rate, p50/p99 latency into
+//! `BENCH_serving.json`); the bitwise properties — cached == fresh dense
+//! replay under arbitrary eviction orders, capacities 0/1/N, concurrent
+//! same-user requests — are pinned in `tests/serving.rs` and re-run under
+//! the `MEZO_THREADS` matrix by `scripts/verify.sh`.
+
+use crate::model::params::ParamStore;
+use crate::shard::{ShardPlan, ShardedStore};
+use crate::storage::Trajectory;
+use crate::zkernel::{SparseMask, ZEngine};
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+/// One tenant: a trajectory log plus how to replay it.
+///
+/// The mask / shard attachments mirror the optimizer scoping modes: a
+/// masked run must ship the mask whose digest its log carries, a sharded
+/// run may attach the plan its workers used (materialization then runs
+/// shard-by-shard, bitwise the dense result). `seeds_per_step > 0`
+/// selects the fused seed-batched replay (one pass over θ per step of
+/// `seeds_per_step` records — e.g. an FZOO run's n); 0 replays
+/// sequentially. Both are bit-identical by the kernel contract.
+#[derive(Debug, Clone)]
+pub struct UserLog {
+    /// the user's `(seed, pgrad, lr)` fine-tune log
+    pub log: Trajectory,
+    /// the SensZOQ mask a sparse log was recorded under
+    pub mask: Option<Arc<SparseMask>>,
+    /// the shard plan to decompose replay over (dense result, K dispatches)
+    pub shard: Option<Arc<ShardPlan>>,
+    /// records per fused replay batch; 0 = sequential replay
+    pub seeds_per_step: usize,
+}
+
+impl UserLog {
+    /// A dense log, replayed sequentially.
+    pub fn dense(log: Trajectory) -> UserLog {
+        UserLog { log, mask: None, shard: None, seeds_per_step: 0 }
+    }
+
+    /// A dense log replayed in fused batches of `seeds_per_step` records
+    /// (must divide the log length at materialization time).
+    pub fn dense_batched(log: Trajectory, seeds_per_step: usize) -> UserLog {
+        UserLog { log, mask: None, shard: None, seeds_per_step }
+    }
+
+    /// A sparse log with its mask. The digest is checked at replay, not
+    /// here, so a mismatched mask fails loudly on every request.
+    pub fn masked(log: Trajectory, mask: Arc<SparseMask>) -> UserLog {
+        UserLog { log, mask: Some(mask), shard: None, seeds_per_step: 0 }
+    }
+
+    /// A dense log materialized through a K-way shard plan (per-segment
+    /// dispatches — what a worker fleet would run — gathered back dense).
+    pub fn sharded(log: Trajectory, plan: Arc<ShardPlan>) -> UserLog {
+        UserLog { log, mask: None, shard: Some(plan), seeds_per_step: 0 }
+    }
+}
+
+/// Serving counters, reset with [`ServeStore::reset_stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// total [`ServeStore::get`] calls
+    pub requests: usize,
+    /// requests answered from the cache (refcount bump only)
+    pub hits: usize,
+    /// requests that had to materialize (includes stale refreshes)
+    pub misses: usize,
+    /// cache entries discarded because the user's log grew underneath them
+    pub stale: usize,
+    /// entries discarded to respect the capacity bound
+    pub evictions: usize,
+    /// full log replays performed
+    pub materializations: usize,
+    /// empty-log requests served as the refcounted base itself (no copy)
+    pub base_served: usize,
+}
+
+impl ServeStats {
+    /// Cache hit rate over the cacheable traffic (hits + misses);
+    /// base-served requests never touch the cache and are excluded.
+    pub fn hit_rate(&self) -> f64 {
+        let denom = self.hits + self.misses;
+        if denom == 0 {
+            0.0
+        } else {
+            self.hits as f64 / denom as f64
+        }
+    }
+}
+
+struct CacheEntry {
+    store: Arc<ParamStore>,
+    /// log length at materialization; a longer log means stale
+    version: usize,
+    /// recency stamp (key into the LRU order map)
+    tick: u64,
+}
+
+/// The multi-tenant serving store: one refcounted dense base, N per-user
+/// logs, an LRU cache of materialized stores with recycled buffers.
+///
+/// ```
+/// use mezo::model::meta::TensorDesc;
+/// use mezo::model::params::ParamStore;
+/// use mezo::optim::mezo::StepRecord;
+/// use mezo::serve::{ServeConfig, ServeStore, UserLog};
+/// use mezo::storage::Trajectory;
+/// let mut base = ParamStore::from_specs(vec![
+///     TensorDesc { name: "w".into(), shape: vec![64], dtype: "f32".into() },
+/// ]);
+/// base.init(7);
+/// let mut serve = ServeStore::new(base, ServeConfig { cache_capacity: 8 });
+/// let recs = [StepRecord { seed: 1, pgrad: 0.5, lr: 1e-2 }];
+/// serve.admit(42, UserLog::dense(Trajectory::from_run(vec!["w".into()], &recs))).unwrap();
+/// let served = serve.get(42).unwrap();          // miss: replays the log
+/// let again = serve.get(42).unwrap();           // hit: same Arc
+/// assert!(std::sync::Arc::ptr_eq(&served, &again));
+/// let fresh = serve.materialize_fresh(42).unwrap();
+/// assert_eq!(served.data, fresh.data);          // bitwise the fresh replay
+/// ```
+pub struct ServeStore {
+    base: Arc<ParamStore>,
+    engine: ZEngine,
+    users: HashMap<u64, UserLog>,
+    capacity: usize,
+    cache: HashMap<u64, CacheEntry>,
+    /// LRU order: tick -> user; first entry is the eviction victim
+    recency: BTreeMap<u64, u64>,
+    tick: u64,
+    /// recycled materialization buffers (clone-on-materialize reuse)
+    free: Vec<ParamStore>,
+    stats: ServeStats,
+}
+
+/// Construction knobs for [`ServeStore`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// LRU bound on cached materialized stores; 0 disables caching
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { cache_capacity: 64 }
+    }
+}
+
+impl ServeStore {
+    /// Take ownership of the dense base and serve on the process-default
+    /// engine (`MEZO_THREADS` / `MEZO_SIMD` aware).
+    pub fn new(base: ParamStore, cfg: ServeConfig) -> ServeStore {
+        ServeStore::with_engine(base, cfg, ZEngine::default())
+    }
+
+    /// As [`ServeStore::new`] on an explicit engine (thread/tier control).
+    pub fn with_engine(base: ParamStore, cfg: ServeConfig, engine: ZEngine) -> ServeStore {
+        ServeStore {
+            base: Arc::new(base),
+            engine,
+            users: HashMap::new(),
+            capacity: cfg.cache_capacity,
+            cache: HashMap::new(),
+            recency: BTreeMap::new(),
+            tick: 0,
+            free: Vec::new(),
+            stats: ServeStats::default(),
+        }
+    }
+
+    /// The shared base store every materialization starts from.
+    pub fn base(&self) -> &Arc<ParamStore> {
+        &self.base
+    }
+
+    /// Registered tenants.
+    pub fn n_users(&self) -> usize {
+        self.users.len()
+    }
+
+    /// Currently cached materializations.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// The LRU capacity this store was built with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> ServeStats {
+        self.stats
+    }
+
+    /// Zero the counters (cache content is untouched).
+    pub fn reset_stats(&mut self) {
+        self.stats = ServeStats::default();
+    }
+
+    /// Register (or replace) a tenant. Geometry is validated against the
+    /// base up front — tensor names must exist, masks and plans must fit
+    /// the base ABI — so a request can only fail on *log*-level guards
+    /// (digest mismatch, batch divisibility), which are deliberately left
+    /// to the replay layer. Replacing a user invalidates any cached entry.
+    pub fn admit(&mut self, user: u64, ulog: UserLog) -> Result<()> {
+        for name in &ulog.log.trainable {
+            if !self.base.has(name) {
+                bail!("serve: user {}: log names unknown tensor {:?}", user, name);
+            }
+        }
+        if let Some(m) = &ulog.mask {
+            m.validate(&self.base)?;
+        }
+        if let Some(plan) = &ulog.shard {
+            if ulog.mask.is_some() {
+                bail!(
+                    "serve: user {}: a sparse mask and a shard plan cannot combine \
+                     (same rule as stepping — sharding decomposes the DENSE pass)",
+                    user
+                );
+            }
+            plan.validate(&self.base)?;
+        }
+        self.users.insert(user, ulog);
+        self.drop_cached(user);
+        Ok(())
+    }
+
+    /// Extend a user's log — the serving-side view of more fine-tuning
+    /// steps landing. The cached materialization (if any) becomes stale
+    /// and is refreshed on the next request.
+    pub fn append_steps(
+        &mut self,
+        user: u64,
+        records: &[crate::optim::mezo::StepRecord],
+    ) -> Result<()> {
+        match self.users.get_mut(&user) {
+            Some(u) => {
+                u.log.records.extend_from_slice(records);
+                Ok(())
+            }
+            None => bail!("serve: unknown user {}", user),
+        }
+    }
+
+    /// Forget a tenant (and any cached materialization).
+    pub fn remove_user(&mut self, user: u64) {
+        self.users.remove(&user);
+        self.drop_cached(user);
+    }
+
+    /// Drop a user's cached entry, recycling its buffers if unshared.
+    pub fn invalidate(&mut self, user: u64) {
+        self.drop_cached(user);
+    }
+
+    /// Serve a user's parameters: refcounted base for empty logs, cache
+    /// hit when the materialization is current, otherwise a replay over a
+    /// (recycled) copy of the base. The returned store is shared — every
+    /// concurrent holder of the same materialization sees the same bits.
+    pub fn get(&mut self, user: u64) -> Result<Arc<ParamStore>> {
+        self.stats.requests += 1;
+        let ulog = match self.users.get(&user) {
+            Some(u) => u,
+            None => bail!("serve: unknown user {}", user),
+        };
+        let version = ulog.log.records.len();
+        if version == 0 {
+            // an empty log IS the base — copy-on-write's "no write" arm
+            self.stats.base_served += 1;
+            return Ok(Arc::clone(&self.base));
+        }
+        // cache probe (field-precise borrows: users stays borrowed)
+        let mut stale = false;
+        if self.capacity > 0 {
+            if let Some(entry) = self.cache.get_mut(&user) {
+                if entry.version == version {
+                    self.recency.remove(&entry.tick);
+                    self.tick += 1;
+                    entry.tick = self.tick;
+                    self.recency.insert(self.tick, user);
+                    self.stats.hits += 1;
+                    return Ok(Arc::clone(&entry.store));
+                }
+                stale = true;
+            }
+        }
+        // miss (or stale refresh): materialize into a recycled buffer
+        self.stats.misses += 1;
+        let mut store = match self.free.pop() {
+            Some(s) => s,
+            None => self.base.as_ref().clone(),
+        };
+        if let Err(e) = replay_user(&self.engine, &self.base, user, ulog, &mut store) {
+            // errors are never cached: the digest guard must fire again on
+            // the next request; the buffers go back to the pool
+            self.recycle(store);
+            return Err(e);
+        }
+        self.stats.materializations += 1;
+        if stale {
+            self.stats.stale += 1;
+            self.drop_cached(user);
+        }
+        let arc = Arc::new(store);
+        if self.capacity > 0 {
+            self.tick += 1;
+            let tick = self.tick;
+            self.cache
+                .insert(user, CacheEntry { store: Arc::clone(&arc), version, tick });
+            self.recency.insert(tick, user);
+            self.evict_to_capacity();
+        }
+        Ok(arc)
+    }
+
+    /// The uncached reference path: a fresh clone of the base plus a
+    /// sequential dense (or masked) replay — no cache, no pool, no seed
+    /// batching, no shard decomposition. Every [`ServeStore::get`] result
+    /// is pinned `to_bits()`-identical to this.
+    pub fn materialize_fresh(&self, user: u64) -> Result<ParamStore> {
+        let ulog = match self.users.get(&user) {
+            Some(u) => u,
+            None => bail!("serve: unknown user {}", user),
+        };
+        let mut store = self.base.as_ref().clone();
+        if ulog.log.records.is_empty() {
+            return Ok(store);
+        }
+        match &ulog.mask {
+            Some(m) => ulog.log.replay_masked_with(&self.engine, &mut store, m)?,
+            None => {
+                check_dense(user, &ulog.log)?;
+                ulog.log.replay_with(&self.engine, &mut store);
+            }
+        }
+        Ok(store)
+    }
+
+    /// Drop `user`'s cache entry (if any), recycling unshared buffers.
+    fn drop_cached(&mut self, user: u64) {
+        if let Some(entry) = self.cache.remove(&user) {
+            self.recency.remove(&entry.tick);
+            if let Ok(store) = Arc::try_unwrap(entry.store) {
+                self.recycle(store);
+            }
+        }
+    }
+
+    /// Evict least-recently-used entries down to the capacity bound.
+    fn evict_to_capacity(&mut self) {
+        while self.cache.len() > self.capacity {
+            let victim = match self.recency.iter().next() {
+                Some((&tick, &user)) => (tick, user),
+                None => break,
+            };
+            self.recency.remove(&victim.0);
+            if let Some(entry) = self.cache.remove(&victim.1) {
+                self.stats.evictions += 1;
+                // a still-borrowed materialization keeps living with its
+                // holders; only sole-owned buffers return to the pool
+                if let Ok(store) = Arc::try_unwrap(entry.store) {
+                    self.recycle(store);
+                }
+            }
+        }
+    }
+
+    /// Keep at most capacity + 2 spare buffers (bounded memory).
+    fn recycle(&mut self, store: ParamStore) {
+        if self.free.len() <= self.capacity + 1 {
+            self.free.push(store);
+        }
+    }
+}
+
+/// Guard shared by the dense replay paths: a digest-carrying (sparse) log
+/// must never be replayed densely — the run never touched the unmasked
+/// coordinates. The [`Trajectory`] layer enforces the same rule; this
+/// serve-level check turns its dense-path assertion into a typed error
+/// that fires on every request (errors are never cached).
+fn check_dense(user: u64, log: &Trajectory) -> Result<()> {
+    if let Some(d) = log.mask_digest {
+        bail!(
+            "serve: user {} holds a sparse log (mask digest {:#018x}) with no mask \
+             attached — dense materialization refused; admit with UserLog::masked \
+             and the run's mask",
+            user,
+            d
+        );
+    }
+    Ok(())
+}
+
+/// Replay `ulog` over `into` (already a copy of `base` or a recycled
+/// buffer): copy the base in, then run the attachment-appropriate replay.
+fn replay_user(
+    engine: &ZEngine,
+    base: &ParamStore,
+    user: u64,
+    ulog: &UserLog,
+    into: &mut ParamStore,
+) -> Result<()> {
+    into.copy_from(base);
+    let log = &ulog.log;
+    match (&ulog.mask, &ulog.shard) {
+        (Some(mask), _) => {
+            // digest + geometry guards live in the replay layer
+            if ulog.seeds_per_step > 0 {
+                log.replay_batched_masked_with(engine, into, mask, ulog.seeds_per_step)
+            } else {
+                log.replay_masked_with(engine, into, mask)
+            }
+        }
+        (None, Some(plan)) => {
+            // shard-decomposed materialization: per-segment dispatches at
+            // unchanged global z counters, gathered back — bitwise dense
+            check_dense(user, log)?;
+            let manifest = plan.manifest();
+            let mut sharded = ShardedStore::scatter(plan, into)?;
+            if ulog.seeds_per_step > 0 {
+                log.replay_sharded_batched_with(
+                    engine,
+                    &mut sharded,
+                    &manifest,
+                    ulog.seeds_per_step,
+                )?;
+            } else {
+                log.replay_sharded_with(engine, &mut sharded, &manifest)?;
+            }
+            sharded.gather_into(into)
+        }
+        (None, None) => {
+            check_dense(user, log)?;
+            if ulog.seeds_per_step > 0 {
+                log.replay_batched_with(engine, into, ulog.seeds_per_step)
+            } else {
+                log.replay_with(engine, into);
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::TensorDesc;
+    use crate::optim::mezo::StepRecord;
+    use crate::rng::Pcg;
+
+    fn base_store(seed: u64) -> ParamStore {
+        let specs = vec![
+            TensorDesc { name: "emb".into(), shape: vec![300], dtype: "f32".into() },
+            TensorDesc { name: "w".into(), shape: vec![517], dtype: "f32".into() },
+        ];
+        let mut p = ParamStore::from_specs(specs);
+        p.init(seed);
+        p
+    }
+
+    fn random_log(rng: &mut Pcg, n: usize) -> Trajectory {
+        let recs: Vec<StepRecord> = (0..n)
+            .map(|_| StepRecord {
+                seed: rng.next_u64(),
+                pgrad: rng.next_f32() - 0.5,
+                lr: 1e-3,
+            })
+            .collect();
+        Trajectory::from_run(vec!["emb".into(), "w".into()], &recs)
+    }
+
+    fn bits(p: &ParamStore) -> Vec<u32> {
+        p.data.iter().flatten().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn empty_log_serves_the_refcounted_base_itself() {
+        let mut s = ServeStore::new(base_store(1), ServeConfig::default());
+        s.admit(9, UserLog::dense(Trajectory::new(vec!["w".into()]))).unwrap();
+        let got = s.get(9).unwrap();
+        assert!(Arc::ptr_eq(&got, s.base()));
+        assert_eq!(s.stats().base_served, 1);
+        assert_eq!(s.stats().materializations, 0);
+    }
+
+    #[test]
+    fn hit_miss_evict_counters_and_bits() {
+        let mut rng = Pcg::new(11);
+        let mut s = ServeStore::new(base_store(2), ServeConfig { cache_capacity: 1 });
+        s.admit(1, UserLog::dense(random_log(&mut rng, 3))).unwrap();
+        s.admit(2, UserLog::dense(random_log(&mut rng, 5))).unwrap();
+        let a1 = s.get(1).unwrap(); // miss
+        let a2 = s.get(1).unwrap(); // hit
+        assert!(Arc::ptr_eq(&a1, &a2));
+        let b = s.get(2).unwrap(); // miss, evicts user 1
+        let a3 = s.get(1).unwrap(); // miss again
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (1, 3, 2));
+        assert_eq!(bits(&a1), bits(&a3)); // eviction cannot move bits
+        assert_eq!(bits(&a3), bits(&s.materialize_fresh(1).unwrap()));
+        assert_eq!(bits(&b), bits(&s.materialize_fresh(2).unwrap()));
+    }
+
+    #[test]
+    fn append_steps_makes_the_cache_entry_stale() {
+        let mut rng = Pcg::new(12);
+        let mut s = ServeStore::new(base_store(3), ServeConfig { cache_capacity: 4 });
+        s.admit(7, UserLog::dense(random_log(&mut rng, 2))).unwrap();
+        let before = s.get(7).unwrap();
+        let extra = [StepRecord { seed: 99, pgrad: 0.25, lr: 1e-3 }];
+        s.append_steps(7, &extra).unwrap();
+        let after = s.get(7).unwrap();
+        assert_ne!(bits(&before), bits(&after));
+        assert_eq!(bits(&after), bits(&s.materialize_fresh(7).unwrap()));
+        assert_eq!(s.stats().stale, 1);
+    }
+
+    #[test]
+    fn batched_and_sequential_replay_serve_identical_bits() {
+        let mut rng = Pcg::new(13);
+        let log = random_log(&mut rng, 6);
+        let mut s = ServeStore::new(base_store(4), ServeConfig { cache_capacity: 4 });
+        s.admit(1, UserLog::dense(log.clone())).unwrap();
+        s.admit(2, UserLog::dense_batched(log, 3)).unwrap();
+        assert_eq!(bits(&s.get(1).unwrap()), bits(&s.get(2).unwrap()));
+    }
+
+    #[test]
+    fn sharded_materialization_is_bitwise_dense() {
+        let mut rng = Pcg::new(14);
+        let base = base_store(5);
+        let plan = Arc::new(ShardPlan::new(&base, 3).unwrap());
+        let log = random_log(&mut rng, 4);
+        let mut s = ServeStore::new(base, ServeConfig { cache_capacity: 4 });
+        s.admit(1, UserLog::sharded(log.clone(), plan)).unwrap();
+        s.admit(2, UserLog::dense(log)).unwrap();
+        assert_eq!(bits(&s.get(1).unwrap()), bits(&s.get(2).unwrap()));
+        assert_eq!(bits(&s.get(1).unwrap()), bits(&s.materialize_fresh(1).unwrap()));
+    }
+
+    #[test]
+    fn sparse_log_without_mask_refuses_dense_materialization_every_time() {
+        let mut rng = Pcg::new(15);
+        let base = base_store(6);
+        let mask = SparseMask::full(&base, &[0, 1]);
+        let log = random_log(&mut rng, 3).with_mask_digest(mask.digest());
+        let mut s = ServeStore::new(base, ServeConfig { cache_capacity: 4 });
+        s.admit(1, UserLog::dense(log)).unwrap();
+        for _ in 0..3 {
+            let err = s.get(1).unwrap_err();
+            assert!(err.to_string().contains("sparse log"), "{}", err);
+        }
+        assert_eq!(s.stats().materializations, 0);
+    }
+
+    #[test]
+    fn wrong_mask_digest_is_rejected_through_the_cache() {
+        let mut rng = Pcg::new(16);
+        let base = base_store(7);
+        let right = Arc::new(SparseMask::full(&base, &[0, 1]));
+        let wrong = Arc::new(SparseMask::full(&base, &[0]));
+        let log = random_log(&mut rng, 3).with_mask_digest(right.digest());
+        let mut s = ServeStore::new(base, ServeConfig { cache_capacity: 4 });
+        s.admit(1, UserLog::masked(log.clone(), wrong)).unwrap();
+        for _ in 0..2 {
+            let err = s.get(1).unwrap_err();
+            assert!(err.to_string().contains("digest"), "{}", err);
+        }
+        // re-admitting with the recorded mask recovers, and a full-mask
+        // replay is bitwise the dense replay of the same records
+        s.admit(1, UserLog::masked(log.clone(), right)).unwrap();
+        let got = s.get(1).unwrap();
+        let mut dense = s.base().as_ref().clone();
+        Trajectory::from_run(log.trainable.clone(), &log.records).replay(&mut dense);
+        assert_eq!(bits(&got), bits(&dense));
+    }
+
+    #[test]
+    fn eviction_recycles_buffers_into_the_pool() {
+        let mut rng = Pcg::new(17);
+        let mut s = ServeStore::new(base_store(8), ServeConfig { cache_capacity: 1 });
+        for u in 0..4u64 {
+            s.admit(u, UserLog::dense(random_log(&mut rng, 2))).unwrap();
+        }
+        for u in 0..4u64 {
+            let got = s.get(u).unwrap();
+            drop(got); // release the caller's refcount so eviction recycles
+        }
+        assert!(!s.free.is_empty(), "evictions should feed the buffer pool");
+        // pooled buffers must not leak stale bits into later requests
+        for u in 0..4u64 {
+            assert_eq!(bits(&s.get(u).unwrap()), bits(&s.materialize_fresh(u).unwrap()));
+        }
+    }
+
+    #[test]
+    fn capacity_zero_disables_caching_without_changing_bits() {
+        let mut rng = Pcg::new(18);
+        let mut s = ServeStore::new(base_store(9), ServeConfig { cache_capacity: 0 });
+        s.admit(1, UserLog::dense(random_log(&mut rng, 3))).unwrap();
+        let a = s.get(1).unwrap();
+        let b = s.get(1).unwrap();
+        assert_eq!(s.cache_len(), 0);
+        assert_eq!(s.stats().hits, 0);
+        assert_eq!(s.stats().misses, 2);
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn admit_rejects_unknown_tensors_and_mismatched_geometry() {
+        let mut s = ServeStore::new(base_store(10), ServeConfig::default());
+        let log = Trajectory::new(vec!["nope".into()]);
+        assert!(s.admit(1, UserLog::dense(log)).is_err());
+        let other = base_store(10);
+        let mask = Arc::new(SparseMask::full(&other, &[0]));
+        let mut bad = UserLog::masked(Trajectory::new(vec!["w".into()]), mask);
+        bad.shard = Some(Arc::new(ShardPlan::new(&other, 2).unwrap()));
+        let err = s.admit(1, bad).unwrap_err();
+        assert!(err.to_string().contains("cannot combine"), "{}", err);
+    }
+}

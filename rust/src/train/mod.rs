@@ -25,6 +25,7 @@ use std::rc::Rc;
 /// only because MeZO never needs a gradient.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Objective {
+    /// Minibatch cross-entropy loss (the standard differentiable objective)
     CrossEntropy,
     /// 1 − accuracy on the sampled minibatch (classification)
     NegAccuracy,
@@ -32,11 +33,17 @@ pub enum Objective {
     NegF1,
 }
 
+/// Knobs shared by [`train_zo`] and [`train_ft`]: how long to run, how
+/// often to validate, and what to minimize.
 #[derive(Debug, Clone)]
 pub struct TrainCfg {
+    /// optimizer steps to run
     pub steps: usize,
+    /// validate (and best-checkpoint) every this many steps; 0 = final only
     pub eval_every: usize,
+    /// base seed for batch sampling (independent of the optimizer's z seeds)
     pub seed: u64,
+    /// what the run minimizes — see [`Objective`]
     pub objective: Objective,
     /// examples per accuracy/F1 objective evaluation
     pub nondiff_batch: usize,
@@ -54,13 +61,18 @@ impl Default for TrainCfg {
     }
 }
 
+/// What a training run produced: curves, the best validation score (whose
+/// checkpoint is restored into `params` on return), and the forward-pass
+/// count — the paper's cost axis.
 #[derive(Debug, Clone, Default)]
 pub struct TrainResult {
     /// (step, train loss) curve
     pub curve: Vec<(usize, f32)>,
     /// (step, val score) curve
     pub val_curve: Vec<(usize, f64)>,
+    /// best validation score seen; its parameters are restored on return
     pub best_val: f64,
+    /// total forward passes spent (FT counts each grad step as one)
     pub forward_passes: usize,
 }
 

@@ -17,11 +17,16 @@ use crate::tokenizer::Vocab;
 use anyhow::Result;
 use std::path::PathBuf;
 
+/// Pre-training schedule: backprop Adam on the synthetic corpus.
 #[derive(Debug, Clone)]
 pub struct PretrainCfg {
+    /// Adam steps over the packed corpus
     pub steps: usize,
+    /// peak learning rate (linear decay to 0 over `steps`)
     pub lr: f32,
+    /// sequences to pack from the synthetic corpus
     pub corpus_seqs: usize,
+    /// seed for init, corpus generation, and batch sampling
     pub seed: u64,
 }
 
@@ -31,10 +36,14 @@ impl Default for PretrainCfg {
     }
 }
 
+/// Canonical AOT artifact name for a (family, size, mode, tuning) cell,
+/// e.g. `ar_small_full_loss_b8_s64`.
 pub fn artifact_name(family: &str, size: &str, mode: &str, tuning: &str) -> String {
     format!("{}_{}_{}_{}_b8_s64", family, size, tuning, mode)
 }
 
+/// Where the cached pre-trained checkpoint for `family`/`size` lives
+/// (under `$MEZO_RUNS`, default `runs/`).
 pub fn checkpoint_path(family: &str, size: &str) -> PathBuf {
     let dir = std::env::var("MEZO_RUNS").unwrap_or_else(|_| "runs".to_string());
     PathBuf::from(dir).join(format!("pretrained_{}_{}.ckpt", family, size))

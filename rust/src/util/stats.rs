@@ -20,11 +20,15 @@ impl Timer {
     }
 }
 
-/// Summary statistics over a sample.
+/// Summary statistics over a sample. NaN observations are counted in
+/// [`Summary::nan`] and excluded from every other statistic — a single
+/// NaN loss must not take down a bench run or the serving harness.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
-    /// sample size
+    /// sample size (NaN observations included)
     pub n: usize,
+    /// NaN observations — excluded from mean/std/min/max/percentiles
+    pub nan: usize,
     /// arithmetic mean
     pub mean: f64,
     /// population standard deviation
@@ -37,27 +41,43 @@ pub struct Summary {
     pub p50: f64,
     /// 90th percentile (nearest-rank)
     pub p90: f64,
+    /// 99th percentile (nearest-rank) — the serving-latency tail
+    pub p99: f64,
 }
 
-/// Summary statistics of a sample (all-zero [`Summary`] when empty).
+/// Summary statistics of a sample (all-zero [`Summary`] when empty, or
+/// when every observation is NaN — `n`/`nan` still report the counts).
+/// Sorting uses [`f64::total_cmp`], so NaNs sort last instead of
+/// panicking the comparator; they are then dropped from the statistics
+/// and surfaced in [`Summary::nan`].
 pub fn summarize(xs: &[f64]) -> Summary {
     if xs.is_empty() {
         return Summary::default();
     }
     let n = xs.len();
-    let mean = xs.iter().sum::<f64>() / n as f64;
-    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
+    // total order: -NaN < -inf < ... < +inf < NaN; our NaNs (no sign bit
+    // games in timing/loss data) land at the tail
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let nan = sorted.iter().filter(|x| x.is_nan()).count();
+    sorted.retain(|x| !x.is_nan());
+    if sorted.is_empty() {
+        return Summary { n, nan, ..Summary::default() };
+    }
+    let m = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / m as f64;
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / m as f64;
+    let pct = |p: f64| sorted[(((m - 1) as f64) * p).round() as usize];
     Summary {
         n,
+        nan,
         mean,
         std: var.sqrt(),
         min: sorted[0],
-        max: sorted[n - 1],
+        max: sorted[m - 1],
         p50: pct(0.5),
         p90: pct(0.9),
+        p99: pct(0.99),
     }
 }
 
@@ -105,5 +125,33 @@ mod tests {
     #[test]
     fn fmt_matches_paper_style() {
         assert_eq!(fmt_mean_std(&[90.0, 91.0, 92.0]), "91.0 (0.8)");
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_and_are_excluded() {
+        // regression: partial_cmp().unwrap() used to panic on any NaN
+        let s = summarize(&[3.0, f64::NAN, 1.0, 2.0, f64::NAN]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.nan, 2);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+        assert!(s.p99.is_finite());
+    }
+
+    #[test]
+    fn all_nan_sample_is_safe() {
+        let s = summarize(&[f64::NAN, -f64::NAN]);
+        assert_eq!((s.n, s.nan), (2, 2));
+        assert_eq!(s.mean, 0.0); // the empty-statistics default, not NaN
+    }
+
+    #[test]
+    fn p99_is_the_tail_observation() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert_eq!(s.p99, 99.0); // nearest-rank on 0..=99: round(99*.99)=98
+        assert_eq!(s.p90, 90.0);
     }
 }

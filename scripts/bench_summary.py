@@ -8,7 +8,13 @@ its per-(kernel, tier) median ns/element over the reduced CI grid, so the
 committed BENCH_summary.json is a handful of stable, comparable numbers.
 
 Usage:
-    python3 scripts/bench_summary.py BENCH_zkernel.json BENCH_summary.json
+    python3 scripts/bench_summary.py BENCH_zkernel.json BENCH_summary.json \
+        [BENCH_serving.json]
+
+The optional third input is the multi-tenant serving report written by
+`examples/serve_scale.rs`; its per-capacity rows fold in as
+`serving_*` keys (hit rate, materializations/sec, p50/p99 latency) plus
+the run's bitwise gate verdict.
 
 CI (bench-smoke) regenerates the summary from its quick-mode run and diffs
 it against the committed file — report-only, because CI runner timings
@@ -85,17 +91,41 @@ def summarize(report):
     return summary
 
 
+def fold_serving(summary, serving):
+    """Fold a BENCH_serving.json report (examples/serve_scale.rs) into the
+    summary: one value per cache capacity for each headline metric, plus
+    the bitwise-transparency verdict the run exits on."""
+    rows = serving.get("rows") or []
+    if rows:
+        by_cap = lambda field: {
+            str(r["capacity"]): round(float(r[field]), 4) for r in rows
+        }
+        summary["serving_cache_hit_rate"] = by_cap("hit_rate")
+        summary["serving_materializations_per_sec"] = by_cap(
+            "materializations_per_sec"
+        )
+        summary["serving_p50_ms"] = by_cap("p50_ms")
+        summary["serving_p99_ms"] = by_cap("p99_ms")
+    summary["serving_bitwise_ok"] = serving.get("bitwise_ok")
+    summary["serving_n_users"] = serving.get("n_users")
+    return summary
+
+
 def main(argv):
-    if len(argv) != 3:
+    if len(argv) not in (3, 4):
         print(__doc__.strip().splitlines()[0], file=sys.stderr)
         print(
-            "usage: bench_summary.py BENCH_zkernel.json BENCH_summary.json",
+            "usage: bench_summary.py BENCH_zkernel.json BENCH_summary.json"
+            " [BENCH_serving.json]",
             file=sys.stderr,
         )
         return 2
     with open(argv[1]) as f:
         report = json.load(f)
     summary = summarize(report)
+    if len(argv) == 4:
+        with open(argv[3]) as f:
+            fold_serving(summary, json.load(f))
     with open(argv[2], "w") as f:
         json.dump(summary, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -86,6 +86,19 @@ for t in 1 2 8; do
         MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --lib wire
         MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --test properties
         MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --test churn
+        # multi-tenant serving cache: bitwise transparency across
+        # hit/miss/evict and every replay mode must hold at each
+        # process-default thread count and SIMD tier
+        MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --test serving
     done
+done
+
+# serving example smoke: tiny Zipf population per thread count; the
+# example exits non-zero if any served store drifts bitwise from a fresh
+# dense replay, and writes BENCH_serving.json as a side effect
+for t in 1 2 8; do
+    echo "== serving smoke: MEZO_THREADS=$t =="
+    MEZO_THREADS=$t MEZO_SERVE_USERS=64 MEZO_SERVE_REQS=256 MEZO_BENCH_QUICK=1 \
+        cargo run -q --release --example serve_scale
 done
 echo "verify: OK"

@@ -1,0 +1,260 @@
+//! Property suite for the multi-tenant serving cache (`mezo::serve`).
+//!
+//! The single invariant under test: **cache state never moves a bit**.
+//! Whatever the capacity (0/1/N), the eviction order, the request
+//! interleaving, the replay mode (dense / seed-batched / masked /
+//! sharded), or the thread count (`scripts/verify.sh` re-runs this file
+//! under the `MEZO_THREADS` × `MEZO_SIMD` matrix), every served store is
+//! `to_bits()`-identical to a fresh dense replay of the user's log — and
+//! the sparse-log digest guards fire on every request, hit path or miss
+//! path, because errors are never cached.
+
+use mezo::model::meta::TensorDesc;
+use mezo::model::params::ParamStore;
+use mezo::optim::mezo::StepRecord;
+use mezo::rng::Pcg;
+use mezo::serve::{ServeConfig, ServeStore, UserLog};
+use mezo::shard::ShardPlan;
+use mezo::storage::Trajectory;
+use mezo::util::prop::{ensure, forall};
+use mezo::zkernel::SparseMask;
+use std::sync::{Arc, Mutex};
+
+fn base_store(seed: u64) -> ParamStore {
+    let specs = vec![
+        TensorDesc { name: "emb".into(), shape: vec![257], dtype: "f32".into() },
+        TensorDesc { name: "w".into(), shape: vec![130], dtype: "f32".into() },
+    ];
+    let mut p = ParamStore::from_specs(specs);
+    p.init(seed);
+    p
+}
+
+fn names() -> Vec<String> {
+    vec!["emb".into(), "w".into()]
+}
+
+fn random_records(rng: &mut Pcg, n: usize) -> Vec<StepRecord> {
+    (0..n)
+        .map(|_| StepRecord {
+            seed: rng.next_u64(),
+            pgrad: (rng.next_f32() - 0.5) * 0.1,
+            lr: 1e-3,
+        })
+        .collect()
+}
+
+fn bits(p: &ParamStore) -> Vec<u32> {
+    p.data.iter().flatten().map(|x| x.to_bits()).collect()
+}
+
+/// Reference result: fresh base copy + sequential dense replay.
+fn dense_reference(base: &ParamStore, trainable: Vec<String>, recs: &[StepRecord]) -> Vec<u32> {
+    let mut p = base.clone();
+    Trajectory::from_run(trainable, recs).replay(&mut p);
+    bits(&p)
+}
+
+#[test]
+fn prop_served_bits_equal_fresh_dense_replay_under_random_traffic() {
+    forall(
+        25,
+        0x5E21,
+        |rng| {
+            let capacity = [0usize, 1, 2 + rng.below(6)][rng.below(3)];
+            let n_users = 3 + rng.below(6);
+            let seed = rng.next_u64();
+            // request script: (user, append_first) pairs
+            let script: Vec<(usize, bool)> = (0..24)
+                .map(|_| (rng.below(n_users), rng.below(5) == 0))
+                .collect();
+            (capacity, n_users, seed, script)
+        },
+        |(capacity, n_users, seed, script)| {
+            let mut rng = Pcg::new(seed.wrapping_add(1));
+            let base = base_store(*seed);
+            let plan = Arc::new(ShardPlan::new(&base, 2).expect("plan"));
+            let mask = Arc::new(SparseMask::full(&base, &[0, 1]));
+            let mut serve =
+                ServeStore::new(base.clone(), ServeConfig { cache_capacity: *capacity });
+            let mut logs: Vec<Vec<StepRecord>> = Vec::new();
+            for u in 0..*n_users {
+                let n_recs = rng.below(5);
+                let recs = random_records(&mut rng, n_recs);
+                // rotate replay modes; a full mask is bitwise dense, so
+                // the dense reference stays valid for every mode
+                let log = Trajectory::from_run(names(), &recs);
+                let ulog = match u % 4 {
+                    0 => UserLog::dense(log),
+                    1 => UserLog::dense_batched(log, 1),
+                    2 => UserLog::masked(
+                        log.with_mask_digest(mask.digest()),
+                        Arc::clone(&mask),
+                    ),
+                    _ => UserLog::sharded(log, Arc::clone(&plan)),
+                };
+                serve.admit(u as u64, ulog).map_err(|e| e.to_string())?;
+                logs.push(recs);
+            }
+            for &(u, append) in script {
+                if append {
+                    let extra = random_records(&mut rng, 1);
+                    serve.append_steps(u as u64, &extra).map_err(|e| e.to_string())?;
+                    logs[u].extend(extra);
+                }
+                let served = serve.get(u as u64).map_err(|e| e.to_string())?;
+                let want = dense_reference(&base, names(), &logs[u]);
+                ensure(
+                    bits(&served) == want,
+                    format!("user {} served bits != dense reference (cap {})", u, capacity),
+                )?;
+            }
+            // the cache respects its bound at all times
+            ensure(
+                serve.cache_len() <= *capacity,
+                format!("cache {} exceeds capacity {}", serve.cache_len(), capacity),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_arbitrary_eviction_orders_cannot_move_bits() {
+    // capacity 1 forces an eviction on every user switch; the request
+    // order (and therefore the eviction order) is arbitrary
+    forall(
+        20,
+        0x5E22,
+        |rng| {
+            let seed = rng.next_u64();
+            let order: Vec<usize> = (0..30).map(|_| rng.below(4)).collect();
+            (seed, order)
+        },
+        |(seed, order)| {
+            let mut rng = Pcg::new(*seed);
+            let base = base_store(*seed);
+            let mut serve = ServeStore::new(base.clone(), ServeConfig { cache_capacity: 1 });
+            let mut logs = Vec::new();
+            for u in 0..4u64 {
+                let n_recs = 1 + rng.below(4);
+                let recs = random_records(&mut rng, n_recs);
+                serve
+                    .admit(u, UserLog::dense(Trajectory::from_run(names(), &recs)))
+                    .map_err(|e| e.to_string())?;
+                logs.push(recs);
+            }
+            for &u in order {
+                let served = serve.get(u as u64).map_err(|e| e.to_string())?;
+                let want = dense_reference(&base, names(), &logs[u]);
+                ensure(bits(&served) == want, format!("user {} drifted after eviction", u))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn capacity_sweep_0_1_n_serves_identical_bits() {
+    let mut rng = Pcg::new(77);
+    let base = base_store(77);
+    let logs: Vec<Vec<StepRecord>> =
+        (0..6).map(|_| random_records(&mut rng, 3)).collect();
+    let script: Vec<usize> = (0..40).map(|_| rng.below(6)).collect();
+    let mut per_capacity: Vec<Vec<Vec<u32>>> = Vec::new();
+    for cap in [0usize, 1, 4] {
+        let mut serve = ServeStore::new(base.clone(), ServeConfig { cache_capacity: cap });
+        for (u, recs) in logs.iter().enumerate() {
+            serve
+                .admit(u as u64, UserLog::dense(Trajectory::from_run(names(), recs)))
+                .unwrap();
+        }
+        let served: Vec<Vec<u32>> =
+            script.iter().map(|&u| bits(&serve.get(u as u64).unwrap())).collect();
+        if cap == 4 {
+            assert!(serve.stats().hits > 0, "a working-set cache must hit");
+        }
+        if cap == 0 {
+            assert_eq!(serve.stats().hits, 0, "capacity 0 disables the cache");
+        }
+        per_capacity.push(served);
+    }
+    assert_eq!(per_capacity[0], per_capacity[1]);
+    assert_eq!(per_capacity[0], per_capacity[2]);
+}
+
+#[test]
+fn concurrent_same_user_requests_share_one_materialization() {
+    let mut rng = Pcg::new(88);
+    let base = base_store(88);
+    let recs = random_records(&mut rng, 4);
+    let want = dense_reference(&base, names(), &recs);
+    let mut serve = ServeStore::new(base, ServeConfig { cache_capacity: 4 });
+    serve.admit(5, UserLog::dense(Trajectory::from_run(names(), &recs))).unwrap();
+    let serve = Mutex::new(serve);
+    let n_threads = 8;
+    let gets_per_thread = 16;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut got: Vec<Arc<ParamStore>> = Vec::new();
+                    for _ in 0..gets_per_thread {
+                        got.push(serve.lock().unwrap().get(5).unwrap());
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            for arc in h.join().unwrap() {
+                assert_eq!(bits(&arc), want);
+            }
+        }
+    });
+    let st = serve.lock().unwrap().stats();
+    assert_eq!(st.requests, n_threads * gets_per_thread);
+    // one replay total: every other request shared the cached Arc
+    assert_eq!(st.materializations, 1);
+    assert_eq!(st.hits, n_threads * gets_per_thread - 1);
+}
+
+#[test]
+fn sparse_log_digest_guard_fires_on_every_request_through_the_cache() {
+    let mut rng = Pcg::new(99);
+    let base = base_store(99);
+    let mask = Arc::new(SparseMask::full(&base, &[0, 1]));
+    let sparse_recs = random_records(&mut rng, 3);
+    let dense_recs = random_records(&mut rng, 2);
+    let mut serve = ServeStore::new(base.clone(), ServeConfig { cache_capacity: 2 });
+    // user 1: sparse log, NO mask attached -> dense materialization refused
+    serve
+        .admit(
+            1,
+            UserLog::dense(
+                Trajectory::from_run(names(), &sparse_recs).with_mask_digest(mask.digest()),
+            ),
+        )
+        .unwrap();
+    // user 2: healthy dense neighbor (keeps the cache busy in between)
+    serve
+        .admit(2, UserLog::dense(Trajectory::from_run(names(), &dense_recs)))
+        .unwrap();
+    for _ in 0..3 {
+        let err = serve.get(1).unwrap_err();
+        assert!(err.to_string().contains("sparse log"), "{}", err);
+        serve.get(2).unwrap();
+    }
+    assert_eq!(serve.stats().hits, 2, "only user 2's requests may hit");
+    // attaching the recorded mask heals the tenant; a full mask replays
+    // bitwise-dense, so the dense reference still pins the result
+    serve
+        .admit(
+            1,
+            UserLog::masked(
+                Trajectory::from_run(names(), &sparse_recs).with_mask_digest(mask.digest()),
+                mask,
+            ),
+        )
+        .unwrap();
+    assert_eq!(bits(&serve.get(1).unwrap()), dense_reference(&base, names(), &sparse_recs));
+}

@@ -75,6 +75,21 @@ impl Error {
             }),
         }
     }
+
+    /// View the underlying error as a concrete type, looking through any
+    /// `.context(..)` layers — mirrors the real crate's `downcast_ref`,
+    /// which is what lets callers match on typed error enums carried
+    /// inside an [`Error`].
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        let mut err: Option<&(dyn StdError + 'static)> = Some(self.inner.as_ref());
+        while let Some(e) = err {
+            if let Some(typed) = e.downcast_ref::<E>() {
+                return Some(typed);
+            }
+            err = e.source();
+        }
+        None
+    }
 }
 
 impl<E: StdError + Send + Sync + 'static> From<E> for Error {
@@ -212,5 +227,13 @@ mod tests {
         let v: Option<u32> = None;
         let e = v.context("missing value").unwrap_err();
         assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn downcast_ref_sees_through_context_layers() {
+        let e = io_fail().context("outer").unwrap_err();
+        let io = e.downcast_ref::<std::io::Error>().expect("typed error survives context");
+        assert_eq!(io.to_string(), "disk on fire");
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
     }
 }
