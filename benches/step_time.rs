@@ -21,7 +21,11 @@
 //! scalar tier (`simd_dispatch_bench`); a seventh measures the MZW1
 //! wire codec (encode/decode throughput of control vs bulk frames) and
 //! the per-step overhead of driving a channel-transport worker fleet
-//! instead of the dense optimizer (`wire_transport_bench`). Results land
+//! instead of the dense optimizer (`wire_transport_bench`); an eighth
+//! measures the block-quantized SensZOQ store — ns/coord of the
+//! dequantize→update→requantize quant kernels against the dense f32
+//! kernels at matched thread counts, plus the memory-per-replica table
+//! (`quant_kernels_bench`). Results land
 //! in BENCH_zkernel.json so the perf trajectory is tracked across PRs;
 //! `scripts/bench_summary.py` distills per-group medians into the small
 //! committed BENCH_summary.json.
@@ -658,6 +662,93 @@ fn wire_transport_bench() -> Vec<Json> {
     out
 }
 
+/// Bench 8: the block-quantized SensZOQ store. Each quant kernel
+/// invocation dequantizes a block (codes·scale), applies the identical
+/// dense update body, and requantizes in place — the measured delta vs
+/// the dense f32 kernel at the same thread count IS the quantization
+/// tax per coordinate. Measured per (d, bits, threads): axpy_z and
+/// sgd_update dense vs quant (ns/coord and the tax ratio), the 4-pass
+/// perturb+update composite, and the memory-per-replica table
+/// (`QuantStore::bytes()` against 4·n_params — the reason the store
+/// exists: int8 holds ~3.8x more tenant replicas per byte, int4 ~7x).
+/// Results land in BENCH_zkernel.json under "quant_kernels".
+fn quant_kernels_bench() -> Vec<Json> {
+    use mezo::model::meta::TensorDesc;
+    use mezo::model::params::ParamStore;
+    use mezo::model::quant::QuantStore;
+    use mezo::zkernel::QBits;
+
+    let stream = GaussianStream::new(0x0B17);
+    let (lr, g, wd, eps) = (1e-4f32, 0.37f32, 1e-5f32, 1e-3f32);
+    let thread_grid: &[usize] = if quick() { &[1, 4] } else { &[1, 4, 8] };
+    let mut out = Vec::new();
+    for &d in &sizes() {
+        let reps = reps_for(d);
+        let specs =
+            vec![TensorDesc { name: "w".into(), shape: vec![d], dtype: "f32".into() }];
+        let mut p = ParamStore::from_specs(specs);
+        p.init(3);
+        let dense_bytes = 4 * p.n_params();
+        for bits in [QBits::Int8, QBits::Int4] {
+            let mut q = QuantStore::quantize(&p, bits, None).expect("quantize");
+            let compression = dense_bytes as f64 / q.bytes() as f64;
+            let mut best_tax = f64::INFINITY;
+            for &t in thread_grid {
+                let eng = ZEngine::with_threads(t);
+                // warm the pool so one-time worker growth stays out of
+                // the measured reps
+                eng.axpy_z(stream, 0, &mut p.data[0], eps);
+                let dense_axpy = time(reps, || eng.axpy_z(stream, 0, &mut p.data[0], eps));
+                let quant_axpy =
+                    time(reps, || eng.axpy_z_quant(stream, 0, q.view_mut(0), eps));
+                let dense_sgd =
+                    time(reps, || eng.sgd_update(stream, 0, &mut p.data[0], lr, g, wd));
+                let quant_sgd =
+                    time(reps, || eng.sgd_update_quant(stream, 0, q.view_mut(0), lr, g, wd));
+                let dense_step = time(reps, || {
+                    eng.axpy_z(stream, 0, &mut p.data[0], eps);
+                    eng.axpy_z(stream, 0, &mut p.data[0], -2.0 * eps);
+                    eng.axpy_z(stream, 0, &mut p.data[0], eps);
+                    eng.sgd_update(stream, 0, &mut p.data[0], lr, g, wd);
+                });
+                let quant_step = time(reps, || {
+                    eng.axpy_z_quant(stream, 0, q.view_mut(0), eps);
+                    eng.axpy_z_quant(stream, 0, q.view_mut(0), -2.0 * eps);
+                    eng.axpy_z_quant(stream, 0, q.view_mut(0), eps);
+                    eng.sgd_update_quant(stream, 0, q.view_mut(0), lr, g, wd);
+                });
+                best_tax = best_tax.min(quant_step / dense_step);
+                out.push(obj(vec![
+                    ("d", Json::from(d as f64)),
+                    (
+                        "bits",
+                        Json::from(match bits {
+                            QBits::Int8 => 8.0,
+                            QBits::Int4 => 4.0,
+                        }),
+                    ),
+                    ("threads", Json::from(t as f64)),
+                    ("dense_axpy_ns_per_coord", Json::from(dense_axpy * 1e9 / d as f64)),
+                    ("quant_axpy_ns_per_coord", Json::from(quant_axpy * 1e9 / d as f64)),
+                    ("dense_sgd_ns_per_coord", Json::from(dense_sgd * 1e9 / d as f64)),
+                    ("quant_sgd_ns_per_coord", Json::from(quant_sgd * 1e9 / d as f64)),
+                    ("dense_step_s", Json::from(dense_step)),
+                    ("quant_step_s", Json::from(quant_step)),
+                    ("quant_step_tax_x", Json::from(quant_step / dense_step)),
+                    ("store_bytes", Json::from(q.bytes() as f64)),
+                    ("dense_bytes", Json::from(dense_bytes as f64)),
+                    ("replica_compression_x", Json::from(compression)),
+                ]));
+            }
+            println!(
+                "d={:>9} {:?}: {:.2}x bytes/replica saved, best quant step tax {:.2}x",
+                d, bits, compression, best_tax
+            );
+        }
+    }
+    out
+}
+
 fn main() {
     let rows = zkernel_bench();
     let fzoo_rows = fzoo_vs_mezo_bench();
@@ -666,6 +757,7 @@ fn main() {
     let shard_rows = shard_scaling_bench();
     let simd_rows = simd_dispatch_bench();
     let wire_rows = wire_transport_bench();
+    let quant_rows = quant_kernels_bench();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let report = obj(vec![
         ("bench", Json::from("zkernel")),
@@ -678,6 +770,7 @@ fn main() {
         ("shard_scaling", Json::Arr(shard_rows)),
         ("simd_dispatch", Json::Arr(simd_rows)),
         ("wire_transport", Json::Arr(wire_rows)),
+        ("quant_kernels", Json::Arr(quant_rows)),
     ]);
     std::fs::write("BENCH_zkernel.json", report.to_string()).expect("write BENCH_zkernel.json");
     println!("wrote BENCH_zkernel.json ({} rows)", rows.len());

@@ -26,10 +26,11 @@
 #![warn(missing_docs)]
 
 // The core subsystems — rng, zkernel (incl. the sparse mask tier, the
-// SIMD dispatch tiers, and the worker pool), optim, storage, shard,
-// serve, wire, model, util, baselines, memory, data, eval, train — are
-// fully documented and hold the missing_docs line. The remaining modules
-// are grandfathered with module-level allows until their own doc pass;
+// SIMD dispatch tiers, the quant tier, and the worker pool), optim,
+// storage, shard, serve, wire, model (incl. the quantized store), util,
+// baselines, memory, data, eval, tokenizer, train — are fully documented
+// and hold the missing_docs line. The remaining modules are
+// grandfathered with module-level allows until their own doc pass;
 // shrinking this list is cheap follow-up work (document-then-remove a
 // marker, never add one).
 pub mod baselines;
@@ -48,7 +49,6 @@ pub mod runtime;
 pub mod serve;
 pub mod shard;
 pub mod storage;
-#[allow(missing_docs)]
 pub mod tokenizer;
 #[cfg(feature = "pjrt")]
 pub mod train;

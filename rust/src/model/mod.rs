@@ -1,4 +1,236 @@
 //! Model-side state owned by the rust coordinator: artifact ABI metadata
-//! and the in-place parameter store MeZO operates on.
+//! and the parameter stores MeZO operates on — dense f32
+//! ([`params::ParamStore`]) and block-quantized SensZOQ
+//! ([`quant::QuantStore`]) — unified behind the [`Theta`] trait.
 pub mod meta;
 pub mod params;
+pub mod quant;
+
+use crate::rng::GaussianStream;
+use crate::zkernel::ZEngine;
+use meta::TensorDesc;
+use params::ParamStore;
+
+/// The unified parameter-store API: everything the optimizers
+/// ([`crate::optim::mezo::MezoSgd`], [`crate::optim::fzoo::Fzoo`]),
+/// trajectory replay ([`crate::storage::Trajectory`]) and the serving
+/// layer ([`crate::serve::ServeStore`]) need from θ, abstracted over the
+/// representation. Two implementations exist: the dense f32
+/// [`ParamStore`] and the block-quantized [`quant::QuantStore`]
+/// (int8/int4 codes + per-block scales + an f32 overlay for the sparse
+/// masked coordinates — the SensZOQ recipe).
+///
+/// The design splits into three tiers:
+///
+/// 1. **Shape/identity** — [`Theta::specs`], [`Theta::tensor_offset`],
+///    [`Theta::tensor_index`]: the tensor list, the global flat offsets
+///    that define the z-indexing ABI, and name lookup. These are the
+///    *same* for a dense store and any quantized view of it, which is
+///    what lets a trajectory recorded against one replay against the
+///    other.
+/// 2. **Reads** — [`Theta::read_tensor_into`] materializes one tensor as
+///    f32 (a copy for the dense store, a dequantization pass for the
+///    quantized one).
+/// 3. **Engine-chunked mutation** — the per-tensor kernel entry points
+///    ([`Theta::axpy_z`], [`Theta::sgd_update`], … and their `_masked`
+///    forms). Each takes the [`ZEngine`] that supplies threading/SIMD
+///    dispatch and a tensor index; the implementation routes to the
+///    dense or quantized kernel tier. Masked forms touch only the given
+///    sorted coordinate list, reading z at the same global counters as
+///    the dense kernels — on a `QuantStore` they walk the f32 overlay,
+///    so masked coordinates stay `to_bits()`-identical to the dense
+///    path (the acceptance bar pinned by `tests/quant.rs`).
+///
+/// [`Theta::as_dense`] / [`Theta::as_dense_mut`] are capability probes:
+/// paths that genuinely need raw f32 buffers (moment-carrying flavors,
+/// shard scatter, checkpointing) ask for the dense store and fail
+/// loudly — with a typed error, not a silent wrong answer — when θ is
+/// quantized.
+///
+/// The trait is object-safe: `&mut dyn Theta` is how
+/// [`crate::storage::ReplayTarget`] carries either store.
+pub trait Theta {
+    /// Tensor descriptors in ABI order (parallel to offsets/data).
+    fn specs(&self) -> &[TensorDesc];
+
+    /// Global flat offset of tensor `ti` — the base z counter every
+    /// kernel pass over that tensor uses.
+    fn tensor_offset(&self, ti: usize) -> u64;
+
+    /// Index of a named tensor, if present.
+    fn tensor_index(&self, name: &str) -> Option<usize>;
+
+    /// Materialize tensor `ti` as f32 into `out` (length must equal the
+    /// tensor's length): a copy for a dense store, a dequantization
+    /// (codes·scale, overlay spliced exactly) for a quantized one.
+    fn read_tensor_into(&self, ti: usize, out: &mut [f32]);
+
+    /// Number of tensors.
+    fn n_tensors(&self) -> usize {
+        self.specs().len()
+    }
+
+    /// Scalar length of tensor `ti`.
+    fn tensor_len(&self, ti: usize) -> usize {
+        self.specs()[ti].len()
+    }
+
+    /// Total scalar count across all tensors.
+    fn n_params(&self) -> usize {
+        self.specs().iter().map(|s| s.len()).sum()
+    }
+
+    /// Index of a named tensor; panics on an unknown name (the store is
+    /// the ABI — a missing name is a programming error, not input).
+    fn tensor_idx(&self, name: &str) -> usize {
+        self.tensor_index(name)
+            .unwrap_or_else(|| panic!("no parameter named '{}'", name))
+    }
+
+    /// Indices of the tensors in `names`, in `names` order.
+    fn indices_of(&self, names: &[String]) -> Vec<usize> {
+        names.iter().map(|n| self.tensor_idx(n)).collect()
+    }
+
+    /// Total scalar count across the given tensor indices.
+    fn len_of(&self, idxs: &[usize]) -> u64 {
+        idxs.iter().map(|&i| self.tensor_len(i) as u64).sum()
+    }
+
+    /// The dense store behind this θ, if it is one (capability probe —
+    /// see the trait docs). Default: not dense.
+    fn as_dense(&self) -> Option<&ParamStore> {
+        None
+    }
+
+    /// Mutable form of [`Theta::as_dense`].
+    fn as_dense_mut(&mut self) -> Option<&mut ParamStore> {
+        None
+    }
+
+    // ---- engine-chunked per-tensor kernels (dense tier or quant tier) ----
+
+    /// θ[j] += s · z(offset + j) over tensor `ti` — perturb / restore /
+    /// replay ([`ZEngine::axpy_z`] resp. [`ZEngine::axpy_z_quant`]).
+    fn axpy_z(&mut self, engine: &ZEngine, ti: usize, stream: GaussianStream, s: f32);
+
+    /// out[j] = θ[j] + s · z(offset + j) for tensor `ti`; θ untouched
+    /// (`out` length = tensor length).
+    fn perturb_into(
+        &self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        s: f32,
+        out: &mut [f32],
+    );
+
+    /// The MeZO-SGD update θ −= lr·(g·z + wd·θ) over tensor `ti`.
+    fn sgd_update(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        lr: f32,
+        g: f32,
+        wd: f32,
+    );
+
+    /// n-SPSA: every `(stream, g)` update applied in slice order, one
+    /// pass over tensor `ti`.
+    fn multi_sgd_update(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        lr: f32,
+        wd: f32,
+    );
+
+    /// FZOO batched one-sided mean update over tensor `ti`.
+    fn fzoo_update(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        lr: f32,
+        wd: f32,
+    );
+
+    /// Batched multi-seed axpy θ += Σᵢ sᵢ·zᵢ over tensor `ti` — the
+    /// seed-batched replay primitive.
+    fn multi_axpy_z(&mut self, engine: &ZEngine, ti: usize, zs: &[(GaussianStream, f32)]);
+
+    // ---- masked (SensZOQ) forms: sorted coordinate lists, same global
+    // ---- z counters as the dense kernels --------------------------------
+
+    /// Masked [`Theta::axpy_z`]: only the coordinates in `idxs`.
+    fn axpy_z_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        idxs: &[u32],
+        s: f32,
+    );
+
+    /// Masked [`Theta::perturb_into`]: only the coordinates in `idxs`
+    /// are written to `out` (callers keep the rest mirroring θ).
+    #[allow(clippy::too_many_arguments)]
+    fn perturb_into_masked(
+        &self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        idxs: &[u32],
+        s: f32,
+        out: &mut [f32],
+    );
+
+    /// Masked [`Theta::sgd_update`].
+    #[allow(clippy::too_many_arguments)]
+    fn sgd_update_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        idxs: &[u32],
+        lr: f32,
+        g: f32,
+        wd: f32,
+    );
+
+    /// Masked [`Theta::multi_sgd_update`].
+    #[allow(clippy::too_many_arguments)]
+    fn multi_sgd_update_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        idxs: &[u32],
+        lr: f32,
+        wd: f32,
+    );
+
+    /// Masked [`Theta::fzoo_update`].
+    #[allow(clippy::too_many_arguments)]
+    fn fzoo_update_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        idxs: &[u32],
+        lr: f32,
+        wd: f32,
+    );
+
+    /// Masked [`Theta::multi_axpy_z`] — the sparse seed-batched replay
+    /// primitive.
+    fn multi_axpy_z_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        idxs: &[u32],
+    );
+}

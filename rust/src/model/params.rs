@@ -83,8 +83,11 @@ impl ParamStore {
         &self.data[self.idx(name)]
     }
 
-    /// Mutably borrow a tensor's buffer by name.
-    pub fn get_mut(&mut self, name: &str) -> &mut Vec<f32> {
+    /// Mutably borrow a tensor's values by name. Returns a slice, not
+    /// the `Vec` itself: tensor lengths are part of the z-indexing ABI
+    /// (`offsets`/`n_params` are derived from them at construction), so
+    /// callers may rewrite values but never resize a buffer.
+    pub fn get_mut(&mut self, name: &str) -> &mut [f32] {
         let i = self.idx(name);
         &mut self.data[i]
     }
@@ -222,6 +225,170 @@ impl ParamStore {
     }
 }
 
+impl super::Theta for ParamStore {
+    fn specs(&self) -> &[TensorDesc] {
+        &self.specs
+    }
+
+    fn tensor_offset(&self, ti: usize) -> u64 {
+        self.offsets[ti]
+    }
+
+    fn tensor_index(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    fn read_tensor_into(&self, ti: usize, out: &mut [f32]) {
+        out.copy_from_slice(&self.data[ti]);
+    }
+
+    fn n_params(&self) -> usize {
+        ParamStore::n_params(self)
+    }
+
+    fn as_dense(&self) -> Option<&ParamStore> {
+        Some(self)
+    }
+
+    fn as_dense_mut(&mut self) -> Option<&mut ParamStore> {
+        Some(self)
+    }
+
+    fn axpy_z(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        stream: crate::rng::GaussianStream,
+        s: f32,
+    ) {
+        engine.axpy_z(stream, self.offsets[ti], &mut self.data[ti], s);
+    }
+
+    fn perturb_into(
+        &self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        stream: crate::rng::GaussianStream,
+        s: f32,
+        out: &mut [f32],
+    ) {
+        engine.perturb_into(stream, self.offsets[ti], &self.data[ti], s, out);
+    }
+
+    fn sgd_update(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        stream: crate::rng::GaussianStream,
+        lr: f32,
+        g: f32,
+        wd: f32,
+    ) {
+        engine.sgd_update(stream, self.offsets[ti], &mut self.data[ti], lr, g, wd);
+    }
+
+    fn multi_sgd_update(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        zs: &[(crate::rng::GaussianStream, f32)],
+        lr: f32,
+        wd: f32,
+    ) {
+        engine.multi_sgd_update(zs, self.offsets[ti], &mut self.data[ti], lr, wd);
+    }
+
+    fn fzoo_update(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        zs: &[(crate::rng::GaussianStream, f32)],
+        lr: f32,
+        wd: f32,
+    ) {
+        engine.fzoo_update(zs, self.offsets[ti], &mut self.data[ti], lr, wd);
+    }
+
+    fn multi_axpy_z(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        zs: &[(crate::rng::GaussianStream, f32)],
+    ) {
+        engine.multi_axpy_z(zs, self.offsets[ti], &mut self.data[ti]);
+    }
+
+    fn axpy_z_masked(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        stream: crate::rng::GaussianStream,
+        idxs: &[u32],
+        s: f32,
+    ) {
+        engine.axpy_z_masked(stream, self.offsets[ti], idxs, &mut self.data[ti], s);
+    }
+
+    fn perturb_into_masked(
+        &self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        stream: crate::rng::GaussianStream,
+        idxs: &[u32],
+        s: f32,
+        out: &mut [f32],
+    ) {
+        engine.perturb_into_masked(stream, self.offsets[ti], idxs, &self.data[ti], s, out);
+    }
+
+    fn sgd_update_masked(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        stream: crate::rng::GaussianStream,
+        idxs: &[u32],
+        lr: f32,
+        g: f32,
+        wd: f32,
+    ) {
+        engine.sgd_update_masked(stream, self.offsets[ti], idxs, &mut self.data[ti], lr, g, wd);
+    }
+
+    fn multi_sgd_update_masked(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        zs: &[(crate::rng::GaussianStream, f32)],
+        idxs: &[u32],
+        lr: f32,
+        wd: f32,
+    ) {
+        engine.multi_sgd_update_masked(zs, self.offsets[ti], idxs, &mut self.data[ti], lr, wd);
+    }
+
+    fn fzoo_update_masked(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        zs: &[(crate::rng::GaussianStream, f32)],
+        idxs: &[u32],
+        lr: f32,
+        wd: f32,
+    ) {
+        engine.fzoo_update_masked(zs, self.offsets[ti], idxs, &mut self.data[ti], lr, wd);
+    }
+
+    fn multi_axpy_z_masked(
+        &mut self,
+        engine: &crate::zkernel::ZEngine,
+        ti: usize,
+        zs: &[(crate::rng::GaussianStream, f32)],
+        idxs: &[u32],
+    ) {
+        engine.multi_axpy_z_masked(zs, self.offsets[ti], idxs, &mut self.data[ti]);
+    }
+}
+
 fn is_bias(name: &str) -> bool {
     name.ends_with(".b")
         || name.ends_with(".bq")
@@ -257,6 +424,19 @@ mod tests {
             (d.iter().map(|x| x * x).sum::<f32>() / d.len() as f32).sqrt()
         };
         assert!((std - 0.02).abs() < 0.01, "std {}", std);
+    }
+
+    #[test]
+    fn get_mut_cannot_desync_n_params() {
+        let mut p = ParamStore::from_specs(toy_specs());
+        let n = p.n_params();
+        let offs = p.offsets.clone();
+        // get_mut hands out a slice: values may change, lengths cannot,
+        // so offsets/n_params (the z-indexing ABI) stay pinned.
+        p.get_mut("embed.tok").iter_mut().for_each(|x| *x = 1.5);
+        assert_eq!(p.n_params(), n);
+        assert_eq!(p.offsets, offs);
+        assert!(p.get("embed.tok").iter().all(|&x| x == 1.5));
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! QuantStore: the block-quantized (SensZOQ) parameter store.
+//!
+//! The full SensZOQ recipe (PAPERS.md, 2410.09823) on top of the sparse
+//! masks the crate already has: keep θ's dense bulk in int8/int4 blocks
+//! with one f32 scale per [`QBLOCK`] coordinates, and keep ONLY the
+//! sparse *sensitive* coordinates (a [`SparseMask`]'s per-tensor lists)
+//! in exact f32, compacted into a per-tensor **overlay**. That is a
+//! 4–8× memory cut per replica versus a dense [`ParamStore`] — the
+//! quantity that decides how many tenants a serving box fits and how
+//! many bytes a shard scatter ships.
+//!
+//! [`QuantStore`] carries the same tensor specs and the same global
+//! flat offsets as the dense store it was quantized from, so it speaks
+//! the same z-indexing ABI: a trajectory recorded against the dense
+//! store replays against the quantized one at identical z counters.
+//! Both stores are served through the [`Theta`] trait; kernel passes
+//! route to the `_quant` tier ([`crate::zkernel::quant`]), which keeps
+//! overlay coordinates `to_bits()`-identical to the dense path and
+//! everything else within the per-block dequantization bound (half a
+//! scale step — see [`QBits::levels`]).
+
+use crate::model::meta::TensorDesc;
+use crate::model::params::ParamStore;
+use crate::model::Theta;
+use crate::rng::GaussianStream;
+use crate::zkernel::{quant, QBits, QuantTensorMut, QuantTensorRef, SparseMask, ZEngine, QBLOCK};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// One tensor's quantized payload (layout contract in
+/// [`QuantTensorRef`]).
+#[derive(Debug, Clone)]
+struct QTensor {
+    len: usize,
+    data: Vec<u8>,
+    scales: Vec<f32>,
+    idxs: Vec<u32>,
+    overlay: Vec<f32>,
+}
+
+/// Block-quantized parameter store: int8/int4 codes + per-block f32
+/// scales + an exact-f32 overlay for the coordinates of the
+/// [`SparseMask`] it was quantized under (see the [module docs](self)).
+///
+/// ```
+/// use mezo::model::meta::TensorDesc;
+/// use mezo::model::params::ParamStore;
+/// use mezo::model::quant::QuantStore;
+/// use mezo::model::Theta;
+/// use mezo::zkernel::QBits;
+///
+/// let specs = vec![TensorDesc { name: "w".into(), shape: vec![300], dtype: "f32".into() }];
+/// let mut p = ParamStore::from_specs(specs);
+/// p.init(7);
+/// let q = QuantStore::quantize(&p, QBits::Int8, None).unwrap();
+/// assert_eq!(q.n_params(), p.n_params());
+/// // every coordinate dequantizes within half a scale step
+/// let d = q.to_dense();
+/// let bound = q.dequant_error_bound();
+/// for (a, b) in p.data[0].iter().zip(&d.data[0]) {
+///     assert!((a - b).abs() <= bound);
+/// }
+/// ```
+#[derive(Debug, Clone)]
+pub struct QuantStore {
+    /// tensor descriptors, in ABI order (parallel to `offsets`)
+    pub specs: Vec<TensorDesc>,
+    /// global flat offset of each tensor — identical to the dense
+    /// store's, which is what keeps the z-indexing ABI shared
+    pub offsets: Vec<u64>,
+    bits: QBits,
+    tensors: Vec<QTensor>,
+    index: HashMap<String, usize>,
+    mask_digest: Option<u64>,
+}
+
+impl QuantStore {
+    /// Quantize a dense store: per tensor, the coordinates of `mask`
+    /// (validated against `params` first) are lifted verbatim into the
+    /// f32 overlay; everything else is symmetric-absmax quantized per
+    /// [`QBLOCK`] (masked coordinates excluded from each block's absmax
+    /// and stored as code 0). `mask: None` quantizes with an empty
+    /// overlay — every coordinate lives in the codes.
+    pub fn quantize(
+        params: &ParamStore,
+        bits: QBits,
+        mask: Option<&SparseMask>,
+    ) -> Result<QuantStore> {
+        if let Some(m) = mask {
+            m.validate(params)?;
+        }
+        let mut tensors = Vec::with_capacity(params.specs.len());
+        for (ti, vals) in params.data.iter().enumerate() {
+            let idxs: Vec<u32> =
+                mask.map(|m| m.indices(ti).to_vec()).unwrap_or_default();
+            let overlay: Vec<f32> = idxs.iter().map(|&i| vals[i as usize]).collect();
+            let mut data = vec![0u8; bits.bytes_for(vals.len())];
+            let mut scales = vec![0.0f32; vals.len().div_ceil(QBLOCK)];
+            quant::quantize(bits, vals, &idxs, &mut data, &mut scales);
+            tensors.push(QTensor { len: vals.len(), data, scales, idxs, overlay });
+        }
+        let index = params
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect();
+        Ok(QuantStore {
+            specs: params.specs.clone(),
+            offsets: params.offsets.clone(),
+            bits,
+            tensors,
+            index,
+            mask_digest: mask.map(|m| m.digest()),
+        })
+    }
+
+    /// Code width of this store.
+    pub fn bits(&self) -> QBits {
+        self.bits
+    }
+
+    /// Digest of the [`SparseMask`] the store was quantized under, if
+    /// any — the same digest a masked [`crate::storage::Trajectory`]
+    /// logs, so serving can guard mask/store agreement.
+    pub fn mask_digest(&self) -> Option<u64> {
+        self.mask_digest
+    }
+
+    /// Read-only kernel view of tensor `ti`.
+    pub fn view(&self, ti: usize) -> QuantTensorRef<'_> {
+        let t = &self.tensors[ti];
+        QuantTensorRef {
+            bits: self.bits,
+            len: t.len,
+            data: &t.data,
+            scales: &t.scales,
+            idxs: &t.idxs,
+            overlay: &t.overlay,
+        }
+    }
+
+    /// Mutable kernel view of tensor `ti`.
+    pub fn view_mut(&mut self, ti: usize) -> QuantTensorMut<'_> {
+        let bits = self.bits;
+        let t = &mut self.tensors[ti];
+        QuantTensorMut {
+            bits,
+            len: t.len,
+            data: &mut t.data,
+            scales: &mut t.scales,
+            idxs: &t.idxs,
+            overlay: &mut t.overlay,
+        }
+    }
+
+    /// Dequantize every tensor into a dense store with identical specs
+    /// (codes·scale everywhere, overlay values exact).
+    pub fn dequantize_into(&self, out: &mut ParamStore) {
+        assert_eq!(
+            self.specs.len(),
+            out.specs.len(),
+            "QuantStore: dequantize target has different tensor count"
+        );
+        for (ti, buf) in out.data.iter_mut().enumerate() {
+            quant::dequantize(self.view(ti), buf);
+        }
+    }
+
+    /// A fresh dense store holding this store's dequantized values.
+    pub fn to_dense(&self) -> ParamStore {
+        let mut p = ParamStore::from_specs(self.specs.clone());
+        self.dequantize_into(&mut p);
+        p
+    }
+
+    /// Payload bytes of the quantized representation (codes + scales +
+    /// overlay indices + overlay values) — the memory-per-replica
+    /// number the `quant_kernels` bench group reports against
+    /// `4 * n_params` for the dense store.
+    pub fn bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| t.data.len() + 4 * t.scales.len() + 4 * t.idxs.len() + 4 * t.overlay.len())
+            .sum()
+    }
+
+    /// The pinned dequantization error bound: every unmasked coordinate
+    /// is within `max(scale) / 2` of its f32 value (round-to-nearest on
+    /// a symmetric absmax grid; masked coordinates are exact).
+    pub fn dequant_error_bound(&self) -> f32 {
+        let mut worst = 0.0f32;
+        for t in &self.tensors {
+            for &s in &t.scales {
+                worst = worst.max(s);
+            }
+        }
+        worst * 0.5
+    }
+}
+
+impl Theta for QuantStore {
+    fn specs(&self) -> &[TensorDesc] {
+        &self.specs
+    }
+
+    fn tensor_offset(&self, ti: usize) -> u64 {
+        self.offsets[ti]
+    }
+
+    fn tensor_index(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    fn read_tensor_into(&self, ti: usize, out: &mut [f32]) {
+        quant::dequantize(self.view(ti), out);
+    }
+
+    fn axpy_z(&mut self, engine: &ZEngine, ti: usize, stream: GaussianStream, s: f32) {
+        let off = self.offsets[ti];
+        engine.axpy_z_quant(stream, off, self.view_mut(ti), s);
+    }
+
+    fn perturb_into(
+        &self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        s: f32,
+        out: &mut [f32],
+    ) {
+        engine.perturb_into_quant(stream, self.offsets[ti], self.view(ti), s, out);
+    }
+
+    fn sgd_update(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        lr: f32,
+        g: f32,
+        wd: f32,
+    ) {
+        let off = self.offsets[ti];
+        engine.sgd_update_quant(stream, off, self.view_mut(ti), lr, g, wd);
+    }
+
+    fn multi_sgd_update(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        lr: f32,
+        wd: f32,
+    ) {
+        let off = self.offsets[ti];
+        engine.multi_sgd_update_quant(zs, off, self.view_mut(ti), lr, wd);
+    }
+
+    fn fzoo_update(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        lr: f32,
+        wd: f32,
+    ) {
+        let off = self.offsets[ti];
+        engine.fzoo_update_quant(zs, off, self.view_mut(ti), lr, wd);
+    }
+
+    fn multi_axpy_z(&mut self, engine: &ZEngine, ti: usize, zs: &[(GaussianStream, f32)]) {
+        let off = self.offsets[ti];
+        engine.multi_axpy_z_quant(zs, off, self.view_mut(ti));
+    }
+
+    fn axpy_z_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        idxs: &[u32],
+        s: f32,
+    ) {
+        let off = self.offsets[ti];
+        engine.axpy_z_quant_masked(stream, off, idxs, self.view_mut(ti), s);
+    }
+
+    fn perturb_into_masked(
+        &self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        idxs: &[u32],
+        s: f32,
+        out: &mut [f32],
+    ) {
+        engine.perturb_into_quant_masked(stream, self.offsets[ti], idxs, self.view(ti), s, out);
+    }
+
+    fn sgd_update_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        stream: GaussianStream,
+        idxs: &[u32],
+        lr: f32,
+        g: f32,
+        wd: f32,
+    ) {
+        let off = self.offsets[ti];
+        engine.sgd_update_quant_masked(stream, off, idxs, self.view_mut(ti), lr, g, wd);
+    }
+
+    fn multi_sgd_update_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        idxs: &[u32],
+        lr: f32,
+        wd: f32,
+    ) {
+        let off = self.offsets[ti];
+        engine.multi_sgd_update_quant_masked(zs, off, idxs, self.view_mut(ti), lr, wd);
+    }
+
+    fn fzoo_update_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        idxs: &[u32],
+        lr: f32,
+        wd: f32,
+    ) {
+        let off = self.offsets[ti];
+        engine.fzoo_update_quant_masked(zs, off, idxs, self.view_mut(ti), lr, wd);
+    }
+
+    fn multi_axpy_z_masked(
+        &mut self,
+        engine: &ZEngine,
+        ti: usize,
+        zs: &[(GaussianStream, f32)],
+        idxs: &[u32],
+    ) {
+        let off = self.offsets[ti];
+        engine.multi_axpy_z_quant_masked(zs, off, idxs, self.view_mut(ti));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_store(seed: u64, lens: &[usize]) -> ParamStore {
+        let specs = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| TensorDesc {
+                name: format!("t{}", i),
+                shape: vec![n],
+                dtype: "f32".into(),
+            })
+            .collect();
+        let mut p = ParamStore::from_specs(specs);
+        p.init(seed);
+        p
+    }
+
+    #[test]
+    fn roundtrip_within_bound_int8_and_int4() {
+        // unaligned lengths on purpose: 300 is not a QBLOCK multiple,
+        // 257 is not a BLOCK multiple
+        let p = toy_store(3, &[300, 257]);
+        for bits in [QBits::Int8, QBits::Int4] {
+            let q = QuantStore::quantize(&p, bits, None).unwrap();
+            let d = q.to_dense();
+            let bound = q.dequant_error_bound();
+            for (a, b) in p.data.iter().flatten().zip(d.data.iter().flatten()) {
+                assert!((a - b).abs() <= bound, "{} vs {} (bound {})", a, b, bound);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_coordinates_are_exact() {
+        let p = toy_store(5, &[200, 90]);
+        let mask = SparseMask::top_k(&p, &[0, 1], 40, crate::zkernel::Sensitivity::Magnitude);
+        let q = QuantStore::quantize(&p, QBits::Int4, Some(&mask)).unwrap();
+        assert_eq!(q.mask_digest(), Some(mask.digest()));
+        let d = q.to_dense();
+        for ti in 0..2 {
+            for &idx in mask.indices(ti) {
+                assert_eq!(
+                    p.data[ti][idx as usize].to_bits(),
+                    d.data[ti][idx as usize].to_bits(),
+                    "masked coordinate must dequantize bit-exactly"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_store_shares_the_z_abi() {
+        let p = toy_store(9, &[64, 100]);
+        let q = QuantStore::quantize(&p, QBits::Int8, None).unwrap();
+        assert_eq!(q.offsets, p.offsets);
+        assert_eq!(q.n_params(), p.n_params());
+        assert_eq!(q.tensor_index("t1"), Some(1));
+        assert_eq!(Theta::tensor_offset(&q, 1), 64);
+    }
+
+    #[test]
+    fn quantized_bytes_beat_dense() {
+        let p = toy_store(11, &[4096]);
+        let q8 = QuantStore::quantize(&p, QBits::Int8, None).unwrap();
+        let q4 = QuantStore::quantize(&p, QBits::Int4, None).unwrap();
+        let dense = 4 * p.n_params();
+        assert!(q8.bytes() * 3 < dense, "int8 {} vs dense {}", q8.bytes(), dense);
+        assert!(q4.bytes() * 6 < dense, "int4 {} vs dense {}", q4.bytes(), dense);
+    }
+}

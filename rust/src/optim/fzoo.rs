@@ -41,6 +41,7 @@
 //! variance-adapted step size, one pass over θ + moments per step.
 
 use crate::model::params::ParamStore;
+use crate::model::Theta;
 use crate::optim::mezo::{Flavor, StepInfo, StepRecord};
 use crate::rng::{GaussianStream, Pcg};
 use crate::shard::{trainable_flags, ShardPlan};
@@ -201,23 +202,35 @@ impl Fzoo {
     /// tensors still in the staging copy. The optimizer is therefore
     /// bound to one logical store per run — call
     /// [`Fzoo::invalidate_scratch`] when that assumption breaks.
-    fn take_scratch(&mut self, params: &ParamStore) -> ParamStore {
+    fn take_scratch<T: Theta + ?Sized>(&mut self, params: &T) -> ParamStore {
         let digest = self.mask.as_ref().map(|m| m.digest());
+        let specs = params.specs();
         let s = match self.scratch.take() {
             Some(mut s)
-                if s.data.len() == params.data.len()
-                    && s.data.iter().zip(&params.data).all(|(a, b)| a.len() == b.len()) =>
+                if s.data.len() == specs.len()
+                    && s.data.iter().zip(specs).all(|(a, b)| a.len() == b.len()) =>
             {
                 if self.scratch_stale {
-                    s.copy_from(params);
+                    for (ti, buf) in s.data.iter_mut().enumerate() {
+                        params.read_tensor_into(ti, buf);
+                    }
                 } else if self.scratch_digest != digest {
                     for &ti in &self.trainable {
-                        s.data[ti].copy_from_slice(&params.data[ti]);
+                        params.read_tensor_into(ti, &mut s.data[ti]);
                     }
                 }
                 s
             }
-            _ => params.clone(),
+            _ => {
+                // fresh allocation: materialize every tensor as f32 (a
+                // copy for a dense store, a dequantization for a
+                // quantized one)
+                let mut s = ParamStore::from_specs(specs.to_vec());
+                for (ti, buf) in s.data.iter_mut().enumerate() {
+                    params.read_tensor_into(ti, buf);
+                }
+                s
+            }
         };
         self.scratch_stale = false;
         self.scratch_digest = digest;
@@ -291,8 +304,19 @@ impl Fzoo {
     }
 
     /// One FZOO step: n + 1 forward passes (`loss` is called once on the
-    /// unperturbed `params` and once per staged θ + ε·zᵢ), then the whole
+    /// unperturbed θ and once per staged θ + ε·zᵢ), then the whole
     /// n-seed update in a single fused pass over every trainable tensor.
+    ///
+    /// Generic over [`Theta`]; `loss` always receives a dense
+    /// [`ParamStore`] because staging is dense by construction. For a
+    /// dense store the anchor pass evaluates `params` itself; for a
+    /// quantized store ([`QuantStore`](crate::model::quant::QuantStore))
+    /// the anchor is evaluated through the staging store after its
+    /// trainable tensors are refreshed from θ — pair quantized stepping
+    /// with a sparse mask so every walk stays on the exact f32 overlay.
+    /// Moment flavors and shard plans require raw dense buffers and are
+    /// rejected with a typed
+    /// [`ScopeError`](crate::optim::mezo::ScopeError) on any other store.
     ///
     /// ```
     /// use mezo::model::meta::TensorDesc;
@@ -310,8 +334,9 @@ impl Fzoo {
     /// assert_eq!(info.forward_passes, 5); // anchor + one per seed
     /// assert_eq!(opt.history.len(), 4);   // one record per seed
     /// ```
-    pub fn step<F>(&mut self, params: &mut ParamStore, mut loss: F) -> Result<StepInfo>
+    pub fn step<T, F>(&mut self, params: &mut T, mut loss: F) -> Result<StepInfo>
     where
+        T: Theta + ?Sized,
         F: FnMut(&ParamStore) -> Result<f32>,
     {
         crate::optim::mezo::validate_scoping(
@@ -322,16 +347,28 @@ impl Fzoo {
         )?;
         let n = self.cfg.n.max(1);
         let eps = self.cfg.eps;
-        // anchor: one forward at the unperturbed θ
-        let l0 = loss(params)?;
         let mut scratch = self.take_scratch(params);
+        // anchor: one forward at the unperturbed θ. A dense store is
+        // evaluated directly; any other store is evaluated through the
+        // staging copy, whose trainable tensors are refreshed first (the
+        // masked coordinates may still hold the previous step's staged
+        // ±εz values).
+        let l0 = match params.as_dense() {
+            Some(dense) => loss(dense)?,
+            None => {
+                for &ti in &self.trainable {
+                    params.read_tensor_into(ti, &mut scratch.data[ti]);
+                }
+                loss(&scratch)?
+            }
+        };
         let mut zs: Vec<(GaussianStream, f32)> = Vec::with_capacity(n);
         let mut seeds: Vec<u64> = Vec::with_capacity(n);
         let mut diffs: Vec<f32> = Vec::with_capacity(n);
         let tr = self
             .shard
             .as_ref()
-            .map(|_| trainable_flags(params.specs.len(), &self.trainable));
+            .map(|_| trainable_flags(params.specs().len(), &self.trainable));
         for _ in 0..n {
             let seed = self.seed_rng.next_u64();
             let stream = GaussianStream::new(seed);
@@ -343,24 +380,27 @@ impl Fzoo {
             match (&self.mask, &self.shard) {
                 (Some(m), _) => {
                     for &ti in &self.trainable {
-                        self.engine.perturb_into_masked(
+                        params.perturb_into_masked(
+                            &self.engine,
+                            ti,
                             stream,
-                            params.offsets[ti],
                             m.indices(ti),
-                            &params.data[ti],
                             eps,
                             &mut scratch.data[ti],
                         );
                     }
                 }
                 (None, Some(plan)) => {
+                    let dp = params
+                        .as_dense()
+                        .expect("validated at step entry: shard staging requires a dense store");
                     for seg in plan.segments_where(tr.as_ref().unwrap()) {
                         self.engine.perturb_into_shard(
                             stream,
-                            params.offsets[seg.tensor],
+                            dp.offsets[seg.tensor],
                             seg.lo,
                             seg.hi,
-                            &params.data[seg.tensor],
+                            &dp.data[seg.tensor],
                             eps,
                             &mut scratch.data[seg.tensor],
                         );
@@ -368,10 +408,10 @@ impl Fzoo {
                 }
                 (None, None) => {
                     for &ti in &self.trainable {
-                        self.engine.perturb_into(
+                        params.perturb_into(
+                            &self.engine,
+                            ti,
                             stream,
-                            params.offsets[ti],
-                            &params.data[ti],
                             eps,
                             &mut scratch.data[ti],
                         );
@@ -391,13 +431,16 @@ impl Fzoo {
                 // the whole n-seed batch in one fused pass per tensor (or
                 // per shard segment)
                 if let Some(plan) = &self.shard {
+                    let dp = params
+                        .as_dense_mut()
+                        .expect("validated at step entry: shard stepping requires a dense store");
                     for seg in plan.segments_where(tr.as_ref().unwrap()) {
                         self.engine.fzoo_update_shard(
                             &zs,
-                            params.offsets[seg.tensor],
+                            dp.offsets[seg.tensor],
                             seg.lo,
                             seg.hi,
-                            &mut params.data[seg.tensor],
+                            &mut dp.data[seg.tensor],
                             lr_eff,
                             self.cfg.weight_decay,
                         );
@@ -405,18 +448,18 @@ impl Fzoo {
                 } else {
                     for &ti in &self.trainable {
                         match &self.mask {
-                            None => self.engine.fzoo_update(
+                            None => params.fzoo_update(
+                                &self.engine,
+                                ti,
                                 &zs,
-                                params.offsets[ti],
-                                &mut params.data[ti],
                                 lr_eff,
                                 self.cfg.weight_decay,
                             ),
-                            Some(m) => self.engine.fzoo_update_masked(
+                            Some(m) => params.fzoo_update_masked(
+                                &self.engine,
+                                ti,
                                 &zs,
-                                params.offsets[ti],
                                 m.indices(ti),
-                                &mut params.data[ti],
                                 lr_eff,
                                 self.cfg.weight_decay,
                             ),
@@ -427,7 +470,12 @@ impl Fzoo {
             // FZOO-Adam / FZOO-momentum: the same batched one-sided
             // estimate — g = (Σᵢ gᵢ·zᵢ)/n + wd·θ per coordinate — through
             // the fused moment kernels, at the variance-adapted lr
-            Flavor::Momentum | Flavor::Adam => self.apply_with_moments(params, &zs, lr_eff),
+            Flavor::Momentum | Flavor::Adam => {
+                let dp = params
+                    .as_dense_mut()
+                    .expect("validated at step entry: moment flavors require a dense store");
+                self.apply_with_moments(dp, &zs, lr_eff)
+            }
         }
         // one record per seed, gradient mean-normalized so that replay's
         // θ −= lr·pgrad·z reconstructs this step's update for the Sgd

@@ -28,6 +28,7 @@
 //!   order — the same floating-point sequence, n× less parameter traffic.
 
 use crate::model::params::ParamStore;
+use crate::model::Theta;
 use crate::rng::{GaussianStream, Pcg};
 use crate::shard::{trainable_flags, ShardPlan};
 use crate::zkernel::{AdamParams, SparseMask, ZEngine};
@@ -179,20 +180,27 @@ impl MezoSgd {
     /// tensors but indexing z by each tensor's *global* offset so every
     /// pass regenerates identical coordinates. Under a sparse mask, only
     /// the masked coordinates are touched (same z per coordinate).
-    pub fn perturb(&self, params: &mut ParamStore, seed: u64, scale: f32) {
+    ///
+    /// Generic over [`Theta`]: a dense [`ParamStore`] routes to the dense
+    /// kernel tier, a [`QuantStore`](crate::model::quant::QuantStore) to
+    /// the quantized one. Shard-scoped perturbation stays dense-only (the
+    /// shard kernels walk raw f32 buffers) and panics on a non-dense
+    /// store; [`MezoSgd::step`] rejects that combination up front with a
+    /// typed [`ScopeError`] instead.
+    pub fn perturb<T: Theta + ?Sized>(&self, params: &mut T, seed: u64, scale: f32) {
         let tr = self
             .shard
             .as_ref()
-            .map(|_| trainable_flags(params.specs.len(), &self.trainable));
+            .map(|_| trainable_flags(params.specs().len(), &self.trainable));
         self.perturb_scoped(params, seed, scale, tr.as_deref());
     }
 
     /// Body of [`MezoSgd::perturb`] with the shard-walk flags already
     /// built — `step` hoists them once per step instead of once per pass
     /// (a step runs 3n+ perturb passes).
-    fn perturb_scoped(
+    fn perturb_scoped<T: Theta + ?Sized>(
         &self,
-        params: &mut ParamStore,
+        params: &mut T,
         seed: u64,
         scale: f32,
         tr: Option<&[bool]>,
@@ -201,27 +209,24 @@ impl MezoSgd {
             (Some(m), _) => {
                 let stream = GaussianStream::new(seed);
                 for &ti in &self.trainable {
-                    self.engine.axpy_z_masked(
-                        stream,
-                        params.offsets[ti],
-                        m.indices(ti),
-                        &mut params.data[ti],
-                        scale,
-                    );
+                    params.axpy_z_masked(&self.engine, ti, stream, m.indices(ti), scale);
                 }
             }
             (None, Some(plan)) => {
                 // shard-major walk over the trainable segments: the same
                 // coordinates at the same global z counters as the dense
                 // arm, each segment an independent shard-local dispatch
+                let dp = params
+                    .as_dense_mut()
+                    .expect("shard-scoped perturbation requires a dense store (step validates)");
                 let stream = GaussianStream::new(seed);
                 for seg in plan.segments_where(tr.expect("shard flags built with the plan")) {
                     self.engine.axpy_z_shard(
                         stream,
-                        params.offsets[seg.tensor],
+                        dp.offsets[seg.tensor],
                         seg.lo,
                         seg.hi,
-                        &mut params.data[seg.tensor],
+                        &mut dp.data[seg.tensor],
                         scale,
                     );
                 }
@@ -244,6 +249,16 @@ impl MezoSgd {
     /// One optimization step. `loss` evaluates L(θ; B) for the *current*
     /// in-place parameters (two calls per z for SPSA, one for one-point).
     ///
+    /// Generic over [`Theta`]: stepping a dense [`ParamStore`] is the
+    /// paper's Algorithm 1 verbatim; stepping a
+    /// [`QuantStore`](crate::model::quant::QuantStore) is the SensZOQ
+    /// recipe — pair it with a sparse mask so the walk stays on the exact
+    /// f32 overlay (masked stepping on a quantized store is
+    /// `to_bits()`-identical to the dense masked step; see
+    /// `tests/quant.rs`). Moment flavors and shard plans need raw dense
+    /// buffers and are rejected with a typed [`ScopeError`] on any other
+    /// store.
+    ///
     /// ```
     /// use mezo::model::meta::TensorDesc;
     /// use mezo::model::params::ParamStore;
@@ -259,9 +274,10 @@ impl MezoSgd {
     /// assert_eq!(info.forward_passes, 2); // Algorithm 1: +ε and −ε
     /// assert_eq!(opt.history.len(), 1);   // replayable (seed, g, lr) log
     /// ```
-    pub fn step<F>(&mut self, params: &mut ParamStore, mut loss: F) -> Result<StepInfo>
+    pub fn step<T, F>(&mut self, params: &mut T, mut loss: F) -> Result<StepInfo>
     where
-        F: FnMut(&ParamStore) -> Result<f32>,
+        T: Theta + ?Sized,
+        F: FnMut(&T) -> Result<f32>,
     {
         validate_scoping(self.mask.as_ref(), self.shard.as_ref(), self.cfg.flavor, params)?;
         let n = self.n_now();
@@ -275,7 +291,7 @@ impl MezoSgd {
         let shard_tr = self
             .shard
             .as_ref()
-            .map(|_| trainable_flags(params.specs.len(), &self.trainable));
+            .map(|_| trainable_flags(params.specs().len(), &self.trainable));
 
         for _ in 0..n {
             let seed = self.seed_rng.next_u64();
@@ -321,14 +337,17 @@ impl MezoSgd {
                     // shard-major: each segment's fused update is its own
                     // dispatch at the segment's global counters — bitwise
                     // the slice of the dense update below
+                    let dp = params
+                        .as_dense_mut()
+                        .expect("validated at step entry: shard stepping requires a dense store");
                     let tr = shard_tr.as_deref().expect("shard flags built with the plan");
                     for seg in plan.segments_where(tr) {
                         self.engine.multi_sgd_update_shard(
                             &zs,
-                            params.offsets[seg.tensor],
+                            dp.offsets[seg.tensor],
                             seg.lo,
                             seg.hi,
-                            &mut params.data[seg.tensor],
+                            &mut dp.data[seg.tensor],
                             lr,
                             self.cfg.weight_decay,
                         );
@@ -336,18 +355,18 @@ impl MezoSgd {
                 } else {
                     for &ti in &self.trainable {
                         match &self.mask {
-                            None => self.engine.multi_sgd_update(
+                            None => params.multi_sgd_update(
+                                &self.engine,
+                                ti,
                                 &zs,
-                                params.offsets[ti],
-                                &mut params.data[ti],
                                 lr,
                                 self.cfg.weight_decay,
                             ),
-                            Some(m) => self.engine.multi_sgd_update_masked(
+                            Some(m) => params.multi_sgd_update_masked(
+                                &self.engine,
+                                ti,
                                 &zs,
-                                params.offsets[ti],
                                 m.indices(ti),
-                                &mut params.data[ti],
                                 lr,
                                 self.cfg.weight_decay,
                             ),
@@ -356,7 +375,10 @@ impl MezoSgd {
                 }
             }
             Flavor::Momentum | Flavor::Adam => {
-                self.apply_with_moments(params, &records);
+                let dp = params
+                    .as_dense_mut()
+                    .expect("validated at step entry: moment flavors require a dense store");
+                self.apply_with_moments(dp, &records);
             }
         }
         // n_now() >= 1 makes `records` non-empty; keep the invariant as a
@@ -536,6 +558,12 @@ pub enum ScopeError {
     ShardRequiresSgd(Flavor),
     /// a sparse mask and a shard plan were attached together
     MaskShardExclusive,
+    /// a shard plan was attached but the store is not dense (the shard
+    /// kernels walk raw f32 buffers — a quantized θ cannot be sharded)
+    ShardRequiresDense,
+    /// a Momentum/Adam flavor was requested on a non-dense store (the
+    /// moment buffers mirror raw f32 tensors)
+    MomentRequiresDense(Flavor),
 }
 
 impl std::fmt::Display for ScopeError {
@@ -559,6 +587,17 @@ impl std::fmt::Display for ScopeError {
                 "a sparse mask and a shard plan cannot combine: sharding decomposes the \
                  DENSE parameter pass — clear one of the two"
             ),
+            ScopeError::ShardRequiresDense => write!(
+                f,
+                "shard-scoped stepping requires a dense ParamStore: the shard kernels walk \
+                 raw f32 buffers, which a quantized store does not expose"
+            ),
+            ScopeError::MomentRequiresDense(flavor) => write!(
+                f,
+                "the {:?} flavor requires a dense ParamStore (its moment buffers mirror \
+                 raw f32 tensors) — step a quantized store with the Sgd flavor",
+                flavor
+            ),
         }
     }
 }
@@ -569,11 +608,11 @@ impl std::error::Error for ScopeError {}
 /// store and a shard plan must match it (geometry errors from their own
 /// `validate`), and every unsupported scoping × flavor combination maps
 /// to a typed [`ScopeError`]. Runs before any parameter write.
-pub(crate) fn validate_scoping(
+pub(crate) fn validate_scoping<T: Theta + ?Sized>(
     mask: Option<&SparseMask>,
     shard: Option<&ShardPlan>,
     flavor: Flavor,
-    params: &ParamStore,
+    params: &T,
 ) -> Result<()> {
     if let Some(m) = mask {
         m.validate(params)?;
@@ -589,27 +628,40 @@ pub(crate) fn validate_scoping(
         if flavor != Flavor::Sgd {
             return Err(ScopeError::ShardRequiresSgd(flavor).into());
         }
+        if params.as_dense().is_none() {
+            return Err(ScopeError::ShardRequiresDense.into());
+        }
+    }
+    if flavor != Flavor::Sgd && params.as_dense().is_none() {
+        return Err(ScopeError::MomentRequiresDense(flavor).into());
     }
     Ok(())
 }
 
 /// θ += scale · z(seed) over the given tensors (shared with variance
-/// variants and trajectory replay), on the default kernel engine.
-pub fn perturb_tensors(params: &mut ParamStore, tensors: &[usize], seed: u64, scale: f32) {
+/// variants and trajectory replay), on the default kernel engine. Generic
+/// over [`Theta`]: dense stores take the dense kernel tier, quantized
+/// stores the block-dequantizing one.
+pub fn perturb_tensors<T: Theta + ?Sized>(
+    params: &mut T,
+    tensors: &[usize],
+    seed: u64,
+    scale: f32,
+) {
     perturb_tensors_with(&ZEngine::default(), params, tensors, seed, scale);
 }
 
 /// As [`perturb_tensors`], on an explicit engine (thread-count control).
-pub fn perturb_tensors_with(
+pub fn perturb_tensors_with<T: Theta + ?Sized>(
     engine: &ZEngine,
-    params: &mut ParamStore,
+    params: &mut T,
     tensors: &[usize],
     seed: u64,
     scale: f32,
 ) {
     let stream = GaussianStream::new(seed);
     for &ti in tensors {
-        engine.axpy_z(stream, params.offsets[ti], &mut params.data[ti], scale);
+        params.axpy_z(engine, ti, stream, scale);
     }
 }
 

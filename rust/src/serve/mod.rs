@@ -3,8 +3,9 @@
 //! The deepest systems consequence of MeZO's seed-replay determinism
 //! (§2.1 "Storage Efficiency"): a per-user fine-tune is not a parameter
 //! copy, it is a few KB of `(seed, pgrad, lr)` records. A serving tier
-//! therefore needs to hold exactly one dense base [`ParamStore`] plus one
-//! [`Trajectory`] log per user, and *materialize* a user's parameters on
+//! therefore needs to hold exactly one base θ ([`ServeBase`]: a dense
+//! [`ParamStore`], or a block-quantized [`QuantStore`] 4–8× smaller) plus
+//! one [`Trajectory`] log per user, and *materialize* a user's parameters on
 //! demand by replaying the log over a copy of the base — dense
 //! ([`Trajectory::replay_batched`]), sparse SensZOQ
 //! ([`Trajectory::replay_masked`]), or K-way sharded
@@ -15,8 +16,10 @@
 //! [`ServeStore`] is that tier:
 //!
 //! * **One refcounted base.** The base store lives behind an [`Arc`];
-//!   users whose log is still empty are served the base itself — zero
-//!   copies, pure refcount traffic.
+//!   users whose log is still empty are served a dense base itself — zero
+//!   copies, pure refcount traffic. (A quantized base cannot be handed
+//!   out raw, so its empty-log requests materialize a dequantized copy
+//!   through the cache like any other request.)
 //! * **Clone-on-materialize with buffer recycling.** A user with records
 //!   gets a private copy of the base (the "copy" of copy-on-write), but
 //!   the copy's allocations are recycled: evicted materializations whose
@@ -44,6 +47,8 @@
 //! the `MEZO_THREADS` matrix by `scripts/verify.sh`.
 
 use crate::model::params::ParamStore;
+use crate::model::quant::QuantStore;
+use crate::model::Theta;
 use crate::shard::{ShardPlan, ShardedStore};
 use crate::storage::Trajectory;
 use crate::zkernel::{SparseMask, ZEngine};
@@ -129,6 +134,42 @@ impl ServeStats {
     }
 }
 
+/// The shared θ every materialization starts from: a dense f32 store, or
+/// a block-quantized SensZOQ [`QuantStore`] (int8/int4 codes + per-block
+/// scales + the f32 overlay of its masked coordinates). Served tenants
+/// always receive DENSE parameters — a quantized base is dequantized
+/// into the materialization buffer before the log replays — and because
+/// the overlay splices masked coordinates back exactly, a masked log
+/// served from a quantized base stays `to_bits()`-identical to the
+/// training run on every masked coordinate (pinned in `tests/quant.rs`).
+#[derive(Debug, Clone)]
+pub enum ServeBase {
+    /// a dense f32 base store
+    Dense(Arc<ParamStore>),
+    /// a block-quantized base store (4–8× smaller per replica)
+    Quant(Arc<QuantStore>),
+}
+
+impl ServeBase {
+    /// The base as a [`Theta`] — shapes, names and offsets for the
+    /// admission-time geometry guards.
+    fn theta(&self) -> &dyn Theta {
+        match self {
+            ServeBase::Dense(p) => p.as_ref(),
+            ServeBase::Quant(q) => q.as_ref(),
+        }
+    }
+
+    /// A fresh dense buffer holding the base's values (a clone for a
+    /// dense base, a full dequantization for a quantized one).
+    fn to_param_store(&self) -> ParamStore {
+        match self {
+            ServeBase::Dense(p) => p.as_ref().clone(),
+            ServeBase::Quant(q) => q.to_dense(),
+        }
+    }
+}
+
 struct CacheEntry {
     store: Arc<ParamStore>,
     /// log length at materialization; a longer log means stale
@@ -160,7 +201,7 @@ struct CacheEntry {
 /// assert_eq!(served.data, fresh.data);          // bitwise the fresh replay
 /// ```
 pub struct ServeStore {
-    base: Arc<ParamStore>,
+    base: ServeBase,
     engine: ZEngine,
     users: HashMap<u64, UserLog>,
     capacity: usize,
@@ -193,10 +234,25 @@ impl ServeStore {
         ServeStore::with_engine(base, cfg, ZEngine::default())
     }
 
+    /// Serve from a block-quantized base ([`ServeBase::Quant`]): one
+    /// [`QuantStore`] replica (4–8× smaller than dense f32) backs every
+    /// tenant; materializations dequantize it into recycled dense
+    /// buffers before replaying. Empty logs cannot be answered with a
+    /// refcount bump here (the base is not a dense store), so they go
+    /// through the cache/materialize path like any other request.
+    pub fn new_quant(base: QuantStore, cfg: ServeConfig) -> ServeStore {
+        ServeStore::with_base(ServeBase::Quant(Arc::new(base)), cfg, ZEngine::default())
+    }
+
     /// As [`ServeStore::new`] on an explicit engine (thread/tier control).
     pub fn with_engine(base: ParamStore, cfg: ServeConfig, engine: ZEngine) -> ServeStore {
+        ServeStore::with_base(ServeBase::Dense(Arc::new(base)), cfg, engine)
+    }
+
+    /// The fully general constructor: any [`ServeBase`], any engine.
+    pub fn with_base(base: ServeBase, cfg: ServeConfig, engine: ZEngine) -> ServeStore {
         ServeStore {
-            base: Arc::new(base),
+            base,
             engine,
             users: HashMap::new(),
             capacity: cfg.cache_capacity,
@@ -208,8 +264,22 @@ impl ServeStore {
         }
     }
 
-    /// The shared base store every materialization starts from.
+    /// The shared dense base store every materialization starts from.
+    /// Panics if this store serves a quantized base — match on
+    /// [`ServeStore::serve_base`] instead when the representation is not
+    /// known statically.
     pub fn base(&self) -> &Arc<ParamStore> {
+        match &self.base {
+            ServeBase::Dense(p) => p,
+            ServeBase::Quant(_) => panic!(
+                "ServeStore::base: this store serves a quantized base — use serve_base()"
+            ),
+        }
+    }
+
+    /// The shared base — dense or quantized — every materialization
+    /// starts from.
+    pub fn serve_base(&self) -> &ServeBase {
         &self.base
     }
 
@@ -245,12 +315,12 @@ impl ServeStore {
     /// to the replay layer. Replacing a user invalidates any cached entry.
     pub fn admit(&mut self, user: u64, ulog: UserLog) -> Result<()> {
         for name in &ulog.log.trainable {
-            if !self.base.has(name) {
+            if self.base.theta().tensor_index(name).is_none() {
                 bail!("serve: user {}: log names unknown tensor {:?}", user, name);
             }
         }
         if let Some(m) = &ulog.mask {
-            m.validate(&self.base)?;
+            m.validate(self.base.theta())?;
         }
         if let Some(plan) = &ulog.shard {
             if ulog.mask.is_some() {
@@ -260,7 +330,7 @@ impl ServeStore {
                     user
                 );
             }
-            plan.validate(&self.base)?;
+            plan.validate(self.base.theta())?;
         }
         self.users.insert(user, ulog);
         self.drop_cached(user);
@@ -307,9 +377,14 @@ impl ServeStore {
         };
         let version = ulog.log.records.len();
         if version == 0 {
-            // an empty log IS the base — copy-on-write's "no write" arm
-            self.stats.base_served += 1;
-            return Ok(Arc::clone(&self.base));
+            if let ServeBase::Dense(base) = &self.base {
+                // an empty log IS the base — copy-on-write's "no write" arm
+                self.stats.base_served += 1;
+                return Ok(Arc::clone(base));
+            }
+            // a quantized base cannot be handed out as dense parameters;
+            // fall through so the dequantized copy is cached like any
+            // other materialization
         }
         // cache probe (field-precise borrows: users stays borrowed)
         let mut stale = false;
@@ -330,7 +405,7 @@ impl ServeStore {
         self.stats.misses += 1;
         let mut store = match self.free.pop() {
             Some(s) => s,
-            None => self.base.as_ref().clone(),
+            None => self.base.to_param_store(),
         };
         if let Err(e) = replay_user(&self.engine, &self.base, user, ulog, &mut store) {
             // errors are never cached: the digest guard must fire again on
@@ -364,7 +439,7 @@ impl ServeStore {
             Some(u) => u,
             None => bail!("serve: unknown user {}", user),
         };
-        let mut store = self.base.as_ref().clone();
+        let mut store = self.base.to_param_store();
         if ulog.log.records.is_empty() {
             return Ok(store);
         }
@@ -434,15 +509,20 @@ fn check_dense(user: u64, log: &Trajectory) -> Result<()> {
 }
 
 /// Replay `ulog` over `into` (already a copy of `base` or a recycled
-/// buffer): copy the base in, then run the attachment-appropriate replay.
+/// buffer): seed it with the base — a bitwise copy of a dense base, a
+/// dequantization pass over a quantized one — then run the
+/// attachment-appropriate replay.
 fn replay_user(
     engine: &ZEngine,
-    base: &ParamStore,
+    base: &ServeBase,
     user: u64,
     ulog: &UserLog,
     into: &mut ParamStore,
 ) -> Result<()> {
-    into.copy_from(base);
+    match base {
+        ServeBase::Dense(b) => into.copy_from(b),
+        ServeBase::Quant(q) => q.dequantize_into(into),
+    }
     let log = &ulog.log;
     match (&ulog.mask, &ulog.shard) {
         (Some(mask), _) => {
@@ -646,6 +726,58 @@ mod tests {
         assert_eq!(s.stats().hits, 0);
         assert_eq!(s.stats().misses, 2);
         assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn quant_base_serves_masked_logs_bitwise_on_masked_coordinates() {
+        use crate::zkernel::QBits;
+        let mut rng = Pcg::new(19);
+        let dense_base = base_store(20);
+        let mask = Arc::new(SparseMask::full(&dense_base, &[0, 1]));
+        let log = random_log(&mut rng, 4).with_mask_digest(mask.digest());
+        // dense reference: the same masked log served from the dense base
+        let mut dense_srv = ServeStore::new(dense_base.clone(), ServeConfig::default());
+        dense_srv.admit(1, UserLog::masked(log.clone(), Arc::clone(&mask))).unwrap();
+        let want = dense_srv.get(1).unwrap();
+        for bits_w in [QBits::Int8, QBits::Int4] {
+            let q = QuantStore::quantize(&dense_base, bits_w, Some(&mask)).unwrap();
+            let mut s = ServeStore::new_quant(q, ServeConfig::default());
+            s.admit(1, UserLog::masked(log.clone(), Arc::clone(&mask))).unwrap();
+            let got = s.get(1).unwrap();
+            // cache hit path returns the same materialization
+            assert!(Arc::ptr_eq(&got, &s.get(1).unwrap()));
+            // and it is bitwise the fresh replay
+            assert_eq!(bits(&got), bits(&s.materialize_fresh(1).unwrap()));
+            // masked coordinates are bitwise the dense-base serving result
+            // (the full mask makes that every coordinate here)
+            assert_eq!(bits(&got), bits(&want), "bits={:?}", bits_w);
+        }
+    }
+
+    #[test]
+    fn quant_base_materializes_empty_logs_through_the_cache() {
+        use crate::zkernel::QBits;
+        let dense_base = base_store(21);
+        let q = QuantStore::quantize(&dense_base, QBits::Int8, None).unwrap();
+        let reference = q.to_dense();
+        let mut s = ServeStore::new_quant(q, ServeConfig::default());
+        s.admit(5, UserLog::dense(Trajectory::new(vec!["w".into()]))).unwrap();
+        let got = s.get(5).unwrap();
+        // not a refcount on the base (there is no dense base): a cached
+        // dequantized materialization, within the pinned dequant bound
+        assert_eq!(s.stats().base_served, 0);
+        assert_eq!(s.stats().materializations, 1);
+        assert_eq!(bits(&got), bits(&reference));
+        assert!(Arc::ptr_eq(&got, &s.get(5).unwrap()));
+    }
+
+    #[test]
+    #[should_panic(expected = "quantized base")]
+    fn base_accessor_panics_on_a_quant_base() {
+        use crate::zkernel::QBits;
+        let q = QuantStore::quantize(&base_store(22), QBits::Int8, None).unwrap();
+        let s = ServeStore::new_quant(q, ServeConfig::default());
+        let _ = s.base();
     }
 
     #[test]

@@ -288,29 +288,34 @@ impl ShardPlan {
     /// Check the plan is applicable to a store: same tensor names and
     /// lengths, in the same order. A plan built against a different ABI
     /// would mis-address z counters, so mismatch is an error.
-    pub fn validate(&self, params: &ParamStore) -> Result<()> {
-        if self.names.len() != params.specs.len() {
+    ///
+    /// Generic over [`Theta`](crate::model::Theta): only the tensor ABI
+    /// (names + lengths) is consulted, so a plan validates against dense
+    /// and quantized stores alike.
+    pub fn validate<T: crate::model::Theta + ?Sized>(&self, params: &T) -> Result<()> {
+        let specs = params.specs();
+        if self.names.len() != specs.len() {
             bail!(
                 "ShardPlan: plan covers {} tensors, store has {}",
                 self.names.len(),
-                params.specs.len()
+                specs.len()
             );
         }
         for (ti, (name, &len)) in self.names.iter().zip(&self.lens).enumerate() {
-            if params.specs[ti].name != *name {
+            if specs[ti].name != *name {
                 bail!(
                     "ShardPlan: tensor {} is '{}' in the plan but '{}' in the store",
                     ti,
                     name,
-                    params.specs[ti].name
+                    specs[ti].name
                 );
             }
-            if params.data[ti].len() != len {
+            if specs[ti].len() != len {
                 bail!(
                     "ShardPlan: tensor '{}' has {} coordinates in the plan but {} in the store",
                     name,
                     len,
-                    params.data[ti].len()
+                    specs[ti].len()
                 );
             }
         }

@@ -5,12 +5,18 @@
 //! step (the paper quantizes grads to 2 bytes; we store f32 and report both
 //! sizes). `replay` re-applies every update with the counter-based z
 //! stream and *no forward passes and no data access*.
+//!
+//! Replay is ONE dispatcher, [`Trajectory::replay_as`], parameterized by
+//! [`ReplayTarget`] (any [`Theta`] store — dense or quantized — or a
+//! sharded copy) × [`ReplayMode`] (sequential / seed-batched / masked /
+//! both); the named `replay_*` methods are thin forwarding wrappers kept
+//! for call-site clarity.
 
-use crate::model::params::ParamStore;
+use crate::model::Theta;
 use crate::optim::mezo::StepRecord;
 use crate::rng::GaussianStream;
 use crate::shard::{trainable_flags, ShardManifest, ShardedStore};
-use crate::zkernel::{SparseMask, ZEngine};
+use crate::zkernel::{SparseMask, ZEngine, QBLOCK};
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
 use std::path::Path;
@@ -27,6 +33,56 @@ pub struct Trajectory {
     /// mask — the masked replay paths verify the digest and fail loudly
     /// on mismatch, and the dense paths refuse digest-carrying logs.
     pub mask_digest: Option<u64>,
+}
+
+/// HOW a log applies in [`Trajectory::replay_as`]: the four replay
+/// disciplines the named `replay_*` entry points collapse to.
+/// Sequential-vs-batched only changes how many passes are made over θ
+/// (per coordinate the records apply in log order either way, so the
+/// results are bit-identical); dense-vs-masked must match how the log
+/// was recorded — the digest guards fail loudly on a mismatch.
+#[derive(Debug, Clone, Copy)]
+pub enum ReplayMode<'m> {
+    /// One pass over each trainable tensor per record, in log order —
+    /// the discipline of [`Trajectory::replay`]. Dense logs only.
+    Sequential,
+    /// Consecutive groups of `seeds_per_step` records fuse into ONE
+    /// pass per tensor ([`ZEngine::multi_axpy_z`]) — the discipline of
+    /// [`Trajectory::replay_batched`]. Dense logs only.
+    Batched {
+        /// records per optimizer step (FZOO's `n`); must divide the
+        /// record count — a remainder means a truncated/mislabeled log
+        seeds_per_step: usize,
+    },
+    /// Walk only the mask's coordinates, exactly as the recorded run
+    /// did — the discipline of [`Trajectory::replay_masked`]. Sparse
+    /// logs only; `mask` must digest-match the logged one.
+    Masked {
+        /// the sensitive-coordinate mask the run trained under
+        mask: &'m SparseMask,
+    },
+    /// Masked and seed-batched at once — the discipline of
+    /// [`Trajectory::replay_batched_masked`].
+    MaskedBatched {
+        /// the sensitive-coordinate mask the run trained under
+        mask: &'m SparseMask,
+        /// records per optimizer step; must divide the record count
+        seeds_per_step: usize,
+    },
+}
+
+/// WHERE a log lands in [`Trajectory::replay_as`].
+pub enum ReplayTarget<'a> {
+    /// Any [`Theta`] store — the dense
+    /// [`ParamStore`](crate::model::params::ParamStore) or the
+    /// block-quantized [`QuantStore`](crate::model::quant::QuantStore)
+    /// (whose f32 overlay keeps masked replay bit-identical to dense).
+    Store(&'a mut dyn Theta),
+    /// A sharded copy of the parameters plus the MZT3 manifest of the
+    /// plan it was scattered under (digest-checked before any write).
+    /// Dense modes only: sharding partitions the DENSE parameter pass,
+    /// so the masked modes are rejected on this target.
+    Sharded(&'a mut ShardedStore, &'a ShardManifest),
 }
 
 impl Trajectory {
@@ -56,9 +112,14 @@ impl Trajectory {
         self.records.len() * (8 + 4 + 4)
     }
 
-    /// bytes at the paper's 2-byte grad quantization (+ one master seed)
+    /// Bytes at the paper's 2-byte grad quantization, accounted in the
+    /// same block format [`QuantStore`](crate::model::quant::QuantStore)
+    /// uses for θ: one 8-byte master seed, 2 bytes of codes per record,
+    /// plus one 4-byte f32 scale per [`QBLOCK`]-record block (symmetric
+    /// absmax codes are meaningless without their per-block scale, so
+    /// honest accounting includes it).
     pub fn bytes_quantized(&self) -> usize {
-        8 + self.records.len() * 2
+        8 + self.records.len() * 2 + self.records.len().div_ceil(QBLOCK) * 4
     }
 
     /// Re-apply every recorded update in order: θ ← θ − lr·g·z(seed).
@@ -69,30 +130,18 @@ impl Trajectory {
     /// Dense logs only — panics on a sparse (digest-carrying) log, whose
     /// updates only ever touched its mask's coordinates: use
     /// [`Trajectory::replay_masked`] with the run's mask instead.
-    pub fn replay(&self, params: &mut ParamStore) {
+    ///
+    /// Thin wrapper over the [`Trajectory::replay_as`] dispatcher with
+    /// [`ReplayMode::Sequential`] — as are all the named `replay_*`
+    /// entry points.
+    pub fn replay<T: Theta + ?Sized>(&self, params: &mut T) {
         self.replay_with(&ZEngine::default(), params)
     }
 
     /// As [`Trajectory::replay`], on an explicit kernel engine.
-    pub fn replay_with(&self, engine: &ZEngine, params: &mut ParamStore) {
-        assert!(
-            self.mask_digest.is_none(),
-            "replay: this log was recorded under a sparse mask (digest {:#x}); \
-             dense replay would update coordinates the run never touched — \
-             use replay_masked with the run's mask",
-            self.mask_digest.unwrap()
-        );
-        let idxs = params.indices_of(&self.trainable);
-        for r in &self.records {
-            let stream = GaussianStream::new(r.seed);
-            for &ti in &idxs {
-                engine.axpy_z(
-                    stream,
-                    params.offsets[ti],
-                    &mut params.data[ti],
-                    -(r.lr * r.pgrad),
-                );
-            }
+    pub fn replay_with<T: Theta + ?Sized>(&self, engine: &ZEngine, params: &mut T) {
+        if let Err(e) = self.replay_store_as(engine, params, ReplayMode::Sequential) {
+            panic!("{}", e);
         }
     }
 
@@ -101,37 +150,27 @@ impl Trajectory {
     /// must equal the logged one — a reconstruction under a different
     /// sensitive-weight set would silently train different coordinates,
     /// so mismatch is an error, as is handing a mask to a dense log.
-    pub fn replay_masked(&self, params: &mut ParamStore, mask: &SparseMask) -> Result<()> {
+    pub fn replay_masked<T: Theta + ?Sized>(
+        &self,
+        params: &mut T,
+        mask: &SparseMask,
+    ) -> Result<()> {
         self.replay_masked_with(&ZEngine::default(), params, mask)
     }
 
     /// As [`Trajectory::replay_masked`], on an explicit kernel engine.
-    pub fn replay_masked_with(
+    pub fn replay_masked_with<T: Theta + ?Sized>(
         &self,
         engine: &ZEngine,
-        params: &mut ParamStore,
+        params: &mut T,
         mask: &SparseMask,
     ) -> Result<()> {
-        self.check_mask(params, mask)?;
-        let idxs = params.indices_of(&self.trainable);
-        for r in &self.records {
-            let stream = GaussianStream::new(r.seed);
-            for &ti in &idxs {
-                engine.axpy_z_masked(
-                    stream,
-                    params.offsets[ti],
-                    mask.indices(ti),
-                    &mut params.data[ti],
-                    -(r.lr * r.pgrad),
-                );
-            }
-        }
-        Ok(())
+        self.replay_store_as(engine, params, ReplayMode::Masked { mask })
     }
 
     /// Shared guard of the masked replay paths: the log must carry a
     /// digest and the handed mask must hash to it (and fit the store).
-    fn check_mask(&self, params: &ParamStore, mask: &SparseMask) -> Result<()> {
+    fn check_mask<T: Theta + ?Sized>(&self, params: &T, mask: &SparseMask) -> Result<()> {
         let logged = match self.mask_digest {
             Some(d) => d,
             None => bail!(
@@ -165,45 +204,31 @@ impl Trajectory {
     /// count that does not split into whole seed-batches means a
     /// truncated/corrupt log or a wrong belief about the run's batch
     /// size, and erroring beats quietly replaying such a log.
-    pub fn replay_batched(&self, params: &mut ParamStore, seeds_per_step: usize) -> Result<()> {
+    pub fn replay_batched<T: Theta + ?Sized>(
+        &self,
+        params: &mut T,
+        seeds_per_step: usize,
+    ) -> Result<()> {
         self.replay_batched_with(&ZEngine::default(), params, seeds_per_step)
     }
 
     /// As [`Trajectory::replay_batched`], on an explicit kernel engine.
-    pub fn replay_batched_with(
+    pub fn replay_batched_with<T: Theta + ?Sized>(
         &self,
         engine: &ZEngine,
-        params: &mut ParamStore,
+        params: &mut T,
         seeds_per_step: usize,
     ) -> Result<()> {
-        if let Some(d) = self.mask_digest {
-            bail!(
-                "replay_batched: this log was recorded under a sparse mask (digest {:#x}); \
-                 use replay_batched_masked with the run's mask",
-                d
-            );
-        }
-        self.check_batches(seeds_per_step)?;
-        let idxs = params.indices_of(&self.trainable);
-        for batch in self.records.chunks(seeds_per_step) {
-            let zs: Vec<(GaussianStream, f32)> = batch
-                .iter()
-                .map(|r| (GaussianStream::new(r.seed), -(r.lr * r.pgrad)))
-                .collect();
-            for &ti in &idxs {
-                engine.multi_axpy_z(&zs, params.offsets[ti], &mut params.data[ti]);
-            }
-        }
-        Ok(())
+        self.replay_store_as(engine, params, ReplayMode::Batched { seeds_per_step })
     }
 
     /// Sparse counterpart of [`Trajectory::replay_batched`]: consecutive
     /// batches of `seeds_per_step` records apply as ONE fused masked pass
     /// per tensor. Digest and divisibility guards as in the sequential
     /// and dense variants.
-    pub fn replay_batched_masked(
+    pub fn replay_batched_masked<T: Theta + ?Sized>(
         &self,
-        params: &mut ParamStore,
+        params: &mut T,
         mask: &SparseMask,
         seeds_per_step: usize,
     ) -> Result<()> {
@@ -211,31 +236,149 @@ impl Trajectory {
     }
 
     /// As [`Trajectory::replay_batched_masked`], on an explicit engine.
-    pub fn replay_batched_masked_with(
+    pub fn replay_batched_masked_with<T: Theta + ?Sized>(
         &self,
         engine: &ZEngine,
-        params: &mut ParamStore,
+        params: &mut T,
         mask: &SparseMask,
         seeds_per_step: usize,
     ) -> Result<()> {
-        self.check_mask(params, mask)?;
-        self.check_batches(seeds_per_step)?;
-        let idxs = params.indices_of(&self.trainable);
-        for batch in self.records.chunks(seeds_per_step) {
-            let zs: Vec<(GaussianStream, f32)> = batch
-                .iter()
-                .map(|r| (GaussianStream::new(r.seed), -(r.lr * r.pgrad)))
-                .collect();
-            for &ti in &idxs {
-                engine.multi_axpy_z_masked(
-                    &zs,
-                    params.offsets[ti],
-                    mask.indices(ti),
-                    &mut params.data[ti],
-                );
+        self.replay_store_as(engine, params, ReplayMode::MaskedBatched { mask, seeds_per_step })
+    }
+
+    /// The unified replay dispatcher: every named `replay_*` entry point
+    /// is a thin wrapper that forwards here. Pick WHERE the log lands
+    /// with [`ReplayTarget`] and HOW it applies with [`ReplayMode`]; the
+    /// guards (dense-vs-sparse log kind, mask digest, manifest digest,
+    /// seed-batch divisibility) run per combination exactly as the named
+    /// wrappers always enforced them, before any coordinate is written.
+    /// The masked modes do not compose with the sharded target.
+    ///
+    /// Two per-worker primitives stay OUTSIDE this collapse on purpose:
+    /// [`Trajectory::replay_shard_with`] and
+    /// [`Trajectory::replay_shard_batched_with`] replay one named shard
+    /// `k` for a distributed worker — an operand no [`ReplayMode`]
+    /// carries, because it selects a slice of the work rather than a
+    /// replay discipline.
+    pub fn replay_as(
+        &self,
+        engine: &ZEngine,
+        target: ReplayTarget<'_>,
+        mode: ReplayMode<'_>,
+    ) -> Result<()> {
+        match target {
+            ReplayTarget::Store(params) => self.replay_store_as(engine, params, mode),
+            ReplayTarget::Sharded(store, manifest) => {
+                self.replay_sharded_as(engine, store, manifest, mode)
+            }
+        }
+    }
+
+    /// Store-target body behind [`Trajectory::replay_as`] and the named
+    /// wrappers. Generic so monomorphized callers skip the vtable the
+    /// `dyn Theta` of [`ReplayTarget::Store`] pays.
+    fn replay_store_as<T: Theta + ?Sized>(
+        &self,
+        engine: &ZEngine,
+        params: &mut T,
+        mode: ReplayMode<'_>,
+    ) -> Result<()> {
+        match mode {
+            ReplayMode::Sequential => {
+                if let Some(d) = self.mask_digest {
+                    bail!(
+                        "replay: this log was recorded under a sparse mask (digest {:#x}); \
+                         dense replay would update coordinates the run never touched — \
+                         use replay_masked with the run's mask",
+                        d
+                    );
+                }
+                let idxs = params.indices_of(&self.trainable);
+                for r in &self.records {
+                    let stream = GaussianStream::new(r.seed);
+                    for &ti in &idxs {
+                        params.axpy_z(engine, ti, stream, -(r.lr * r.pgrad));
+                    }
+                }
+            }
+            ReplayMode::Batched { seeds_per_step } => {
+                if let Some(d) = self.mask_digest {
+                    bail!(
+                        "replay_batched: this log was recorded under a sparse mask \
+                         (digest {:#x}); use replay_batched_masked with the run's mask",
+                        d
+                    );
+                }
+                self.check_batches(seeds_per_step)?;
+                let idxs = params.indices_of(&self.trainable);
+                for zs in self.batched_coeffs(seeds_per_step) {
+                    for &ti in &idxs {
+                        params.multi_axpy_z(engine, ti, &zs);
+                    }
+                }
+            }
+            ReplayMode::Masked { mask } => {
+                self.check_mask(params, mask)?;
+                let idxs = params.indices_of(&self.trainable);
+                for r in &self.records {
+                    let stream = GaussianStream::new(r.seed);
+                    for &ti in &idxs {
+                        params.axpy_z_masked(
+                            engine,
+                            ti,
+                            stream,
+                            mask.indices(ti),
+                            -(r.lr * r.pgrad),
+                        );
+                    }
+                }
+            }
+            ReplayMode::MaskedBatched { mask, seeds_per_step } => {
+                self.check_mask(params, mask)?;
+                self.check_batches(seeds_per_step)?;
+                let idxs = params.indices_of(&self.trainable);
+                for zs in self.batched_coeffs(seeds_per_step) {
+                    for &ti in &idxs {
+                        params.multi_axpy_z_masked(engine, ti, &zs, mask.indices(ti));
+                    }
+                }
             }
         }
         Ok(())
+    }
+
+    /// Sharded-target body behind [`Trajectory::replay_as`] and the
+    /// `replay_sharded*` wrappers.
+    fn replay_sharded_as(
+        &self,
+        engine: &ZEngine,
+        store: &mut ShardedStore,
+        manifest: &ShardManifest,
+        mode: ReplayMode<'_>,
+    ) -> Result<()> {
+        match mode {
+            ReplayMode::Sequential => {
+                let trainable = self.check_sharded(store, manifest)?;
+                for k in 0..store.plan().n_shards() {
+                    self.replay_shard_unchecked(engine, store, &trainable, k);
+                }
+                Ok(())
+            }
+            ReplayMode::Batched { seeds_per_step } => {
+                let trainable = self.check_sharded(store, manifest)?;
+                self.check_batches(seeds_per_step)?;
+                let batches = self.batched_coeffs(seeds_per_step);
+                for k in 0..store.plan().n_shards() {
+                    replay_shard_batched_unchecked(engine, store, &trainable, k, &batches);
+                }
+                Ok(())
+            }
+            ReplayMode::Masked { .. } | ReplayMode::MaskedBatched { .. } => bail!(
+                "replay_as: masked replay does not compose with a sharded target — \
+                 sharding partitions the DENSE parameter pass; replay a sparse log \
+                 against a dense or quantized store with ReplayMode::Masked"
+            ),
+        }
     }
 
     /// Re-apply the whole log onto a sharded copy of the parameters: for
@@ -266,17 +409,17 @@ impl Trajectory {
         store: &mut ShardedStore,
         manifest: &ShardManifest,
     ) -> Result<()> {
-        let trainable = self.check_sharded(store, manifest)?;
-        for k in 0..store.plan().n_shards() {
-            self.replay_shard_unchecked(engine, store, &trainable, k);
-        }
-        Ok(())
+        self.replay_sharded_as(engine, store, manifest, ReplayMode::Sequential)
     }
 
     /// One worker's share of [`Trajectory::replay_sharded`]: replay the
     /// log over shard `k`'s segments only. Safe to run per shard on
     /// separate machines — shards are disjoint and each reads z from the
     /// log's seeds alone.
+    ///
+    /// Deliberately NOT part of the [`Trajectory::replay_as`] collapse:
+    /// the shard index `k` names one worker's slice of the work, which
+    /// is not a replay discipline a [`ReplayMode`] could carry.
     pub fn replay_shard_with(
         &self,
         engine: &ZEngine,
@@ -342,16 +485,13 @@ impl Trajectory {
         manifest: &ShardManifest,
         seeds_per_step: usize,
     ) -> Result<()> {
-        let trainable = self.check_sharded(store, manifest)?;
-        self.check_batches(seeds_per_step)?;
-        let batches = self.batched_coeffs(seeds_per_step);
-        for k in 0..store.plan().n_shards() {
-            replay_shard_batched_unchecked(engine, store, &trainable, k, &batches);
-        }
-        Ok(())
+        self.replay_sharded_as(engine, store, manifest, ReplayMode::Batched { seeds_per_step })
     }
 
     /// One worker's share of [`Trajectory::replay_sharded_batched`].
+    /// Like [`Trajectory::replay_shard_with`], deliberately outside the
+    /// [`Trajectory::replay_as`] collapse — it names one shard's slice
+    /// of the work.
     pub fn replay_shard_batched_with(
         &self,
         engine: &ZEngine,
@@ -518,6 +658,7 @@ fn replay_shard_batched_unchecked(
 mod tests {
     use super::*;
     use crate::model::meta::TensorDesc;
+    use crate::model::params::ParamStore;
     use crate::optim::mezo::{MezoConfig, MezoSgd};
 
     fn toy() -> ParamStore {
@@ -807,6 +948,143 @@ mod tests {
         assert_eq!(&bytes[..4], b"MZTJ");
         assert_eq!(Trajectory::load(&path).unwrap().mask_digest, None);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_as_matches_the_named_wrappers_bitwise() {
+        use crate::zkernel::{Sensitivity, SparseMask};
+        let mut traj = Trajectory::new(vec!["w1".into(), "w2".into()]);
+        for i in 0..6u64 {
+            traj.records.push(StepRecord {
+                seed: 300 + i,
+                pgrad: 0.08 * i as f32 - 0.2,
+                lr: 1e-3,
+            });
+        }
+        let engine = ZEngine::default();
+        let same_bits = |x: &ParamStore, y: &ParamStore| {
+            x.data
+                .iter()
+                .flatten()
+                .zip(y.data.iter().flatten())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+        };
+        // dense: Sequential and Batched through replay_as == the wrappers
+        let mut a = toy();
+        let mut b = toy();
+        traj.replay_with(&engine, &mut a);
+        traj.replay_as(&engine, ReplayTarget::Store(&mut b), ReplayMode::Sequential).unwrap();
+        assert!(same_bits(&a, &b));
+        let mut c = toy();
+        traj.replay_as(
+            &engine,
+            ReplayTarget::Store(&mut c),
+            ReplayMode::Batched { seeds_per_step: 3 },
+        )
+        .unwrap();
+        assert!(same_bits(&a, &c));
+        // sparse: Masked and MaskedBatched through replay_as == wrappers
+        let mask = SparseMask::top_k(&toy(), &[0, 1], 7, Sensitivity::Magnitude).unwrap();
+        let sparse = Trajectory::from_run(vec!["w1".into(), "w2".into()], &traj.records)
+            .with_mask_digest(mask.digest());
+        let mut ma = toy();
+        let mut mb = toy();
+        sparse.replay_masked_with(&engine, &mut ma, &mask).unwrap();
+        sparse
+            .replay_as(&engine, ReplayTarget::Store(&mut mb), ReplayMode::Masked { mask: &mask })
+            .unwrap();
+        assert!(same_bits(&ma, &mb));
+        let mut mc = toy();
+        sparse
+            .replay_as(
+                &engine,
+                ReplayTarget::Store(&mut mc),
+                ReplayMode::MaskedBatched { mask: &mask, seeds_per_step: 2 },
+            )
+            .unwrap();
+        assert!(same_bits(&ma, &mc));
+        // the guards fire through the dispatcher too
+        let err = sparse
+            .replay_as(&engine, ReplayTarget::Store(&mut toy()), ReplayMode::Sequential)
+            .unwrap_err();
+        assert!(err.to_string().contains("sparse mask"), "{}", err);
+    }
+
+    #[test]
+    fn replay_as_rejects_masked_modes_on_sharded_targets() {
+        use crate::shard::{ShardPlan, ShardedStore};
+        use crate::zkernel::{Sensitivity, SparseMask};
+        let p = toy();
+        let mask = SparseMask::top_k(&p, &[0, 1], 5, Sensitivity::Magnitude).unwrap();
+        let mut traj = Trajectory::new(vec!["w1".into()]).with_mask_digest(mask.digest());
+        traj.records.push(StepRecord { seed: 5, pgrad: 0.1, lr: 1e-3 });
+        let plan = ShardPlan::new(&p, 2).unwrap();
+        let manifest = plan.manifest();
+        let mut sharded = ShardedStore::scatter(&plan, &p).unwrap();
+        let engine = ZEngine::default();
+        for mode in [
+            ReplayMode::Masked { mask: &mask },
+            ReplayMode::MaskedBatched { mask: &mask, seeds_per_step: 1 },
+        ] {
+            let err = traj
+                .replay_as(&engine, ReplayTarget::Sharded(&mut sharded, &manifest), mode)
+                .unwrap_err();
+            assert!(err.to_string().contains("sharded target"), "{}", err);
+        }
+        // and the dense sharded modes still dispatch (dense log)
+        let dense = Trajectory::from_run(vec!["w1".into()], &traj.records);
+        dense
+            .replay_as(
+                &engine,
+                ReplayTarget::Sharded(&mut sharded, &manifest),
+                ReplayMode::Sequential,
+            )
+            .unwrap();
+        dense
+            .replay_as(
+                &engine,
+                ReplayTarget::Sharded(&mut sharded, &manifest),
+                ReplayMode::Batched { seeds_per_step: 1 },
+            )
+            .unwrap();
+    }
+
+    #[test]
+    fn masked_replay_on_a_quant_store_is_bitwise_the_dense_masked_replay() {
+        use crate::model::quant::QuantStore;
+        use crate::zkernel::{QBits, Sensitivity, SparseMask};
+        let base = toy();
+        let mask = SparseMask::top_k(&base, &[0, 1], 6, Sensitivity::Magnitude).unwrap();
+        let mut traj = Trajectory::new(vec!["w1".into(), "w2".into()])
+            .with_mask_digest(mask.digest());
+        for i in 0..8u64 {
+            traj.records.push(StepRecord {
+                seed: 900 + i,
+                pgrad: 0.09 * i as f32 - 0.31,
+                lr: 2e-3,
+            });
+        }
+        let mut dense = base.clone();
+        traj.replay_masked(&mut dense, &mask).unwrap();
+        for bits in [QBits::Int8, QBits::Int4] {
+            let mut q = QuantStore::quantize(&base, bits, Some(&mask)).unwrap();
+            traj.replay_masked(&mut q, &mask).unwrap();
+            // every masked coordinate lives in the f32 overlay, so the
+            // quantized replay is bit-identical there to the dense one
+            let out = q.to_dense();
+            for ti in 0..base.specs.len() {
+                for &i in mask.indices(ti) {
+                    assert_eq!(
+                        dense.data[ti][i as usize].to_bits(),
+                        out.data[ti][i as usize].to_bits(),
+                        "bits={:?} ti={} i={}",
+                        bits,
+                        ti,
+                        i
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -12,22 +12,38 @@
 //!   polarity adjectives (40+40+20), persons (30), places (30), verbs (20),
 //!   digit words (10), then reserved/unused padding ids.
 
+/// Total vocabulary size — fixed at 512 ids to match the vocab dimension
+/// the AOT model artifacts were compiled against.
 pub const VOCAB_SIZE: usize = 512;
 
+/// Padding token id.
 pub const PAD: u32 = 0;
+/// Mask token id (the MLM pre-training target slot).
 pub const MASK: u32 = 1;
+/// Beginning-of-sequence token id.
 pub const BOS: u32 = 2;
+/// End-of-sequence token id.
 pub const EOS: u32 = 3;
+/// Separator token id (between prompt segments).
 pub const SEP: u32 = 4;
 
+/// The six latent topics every content noun is drawn from.
 pub const TOPICS: [&str; 6] = ["sports", "science", "politics", "music", "food", "travel"];
+/// Content nouns per topic (`sports_n0` … `sports_n29`, …).
 pub const NOUNS_PER_TOPIC: usize = 30;
+/// Positive-polarity adjectives (`pos_a0` …).
 pub const N_POS_ADJ: usize = 40;
+/// Negative-polarity adjectives (`neg_a0` …).
 pub const N_NEG_ADJ: usize = 40;
+/// Neutral-polarity adjectives (`neu_a0` …).
 pub const N_NEU_ADJ: usize = 20;
+/// Person entities (`person0` … — coref / QA subjects).
 pub const N_PERSON: usize = 30;
+/// Place entities (`place0` …).
 pub const N_PLACE: usize = 30;
+/// Content verbs (`verb0` …).
 pub const N_VERB: usize = 20;
+/// Digit words (`num0` … `num9` — the arithmetic task's operands).
 pub const N_DIGIT: usize = 10;
 
 /// Function / template words every prompt is built from.
@@ -44,21 +60,37 @@ pub const LABEL_WORDS: [&str; 11] = [
     "he", "she", "they",                         // coref fillers
 ];
 
+/// The closed word-level vocabulary: id ↔ word tables plus the category
+/// range markers the attribute accessors ([`Vocab::polarity`],
+/// [`Vocab::topic_of_noun`], …) decode ids against. Categories occupy
+/// contiguous id ranges `[start, next_start)` in the layout order the
+/// module doc lists.
 #[derive(Debug, Clone)]
 pub struct Vocab {
     words: Vec<String>,
     index: std::collections::HashMap<String, u32>,
-    // category ranges [start, end)
+    /// First function/template word id (specials end here).
     pub fn_start: u32,
+    /// First label-word (verbalizer) id.
     pub label_start: u32,
+    /// First topic-noun id (topic labels sit between labels and nouns).
     pub noun_start: u32,
+    /// First positive-adjective id.
     pub pos_adj_start: u32,
+    /// First negative-adjective id.
     pub neg_adj_start: u32,
+    /// First neutral-adjective id.
     pub neu_adj_start: u32,
+    /// First person-entity id.
     pub person_start: u32,
+    /// First place-entity id.
     pub place_start: u32,
+    /// First content-verb id.
     pub verb_start: u32,
+    /// First digit-word id.
     pub digit_start: u32,
+    /// One past the last assigned id; ids in `used..VOCAB_SIZE` are
+    /// reserved `[UNUSEDi]` padding.
     pub used: u32,
 }
 
@@ -138,6 +170,7 @@ impl Vocab {
         }
     }
 
+    /// Id of `word`; panics on a word outside the closed vocabulary.
     pub fn id(&self, word: &str) -> u32 {
         *self
             .index
@@ -145,14 +178,17 @@ impl Vocab {
             .unwrap_or_else(|| panic!("unknown word '{}'", word))
     }
 
+    /// Surface form of `id`.
     pub fn word(&self, id: u32) -> &str {
         &self.words[id as usize]
     }
 
+    /// Whitespace-split `text` into ids (every word must be in-vocab).
     pub fn encode(&self, text: &str) -> Vec<u32> {
         text.split_whitespace().map(|w| self.id(w)).collect()
     }
 
+    /// Space-join `ids` back into their surface forms.
     pub fn decode(&self, ids: &[u32]) -> String {
         ids.iter()
             .map(|&i| self.word(i))
@@ -161,13 +197,17 @@ impl Vocab {
     }
 
     // ----- category accessors ------------------------------------------
+    /// Id of the label word naming `topic` (the topic-classification
+    /// verbalizer).
     pub fn topic_label(&self, topic: usize) -> u32 {
         // topic labels sit right after LABEL_WORDS
         self.label_start + LABEL_WORDS.len() as u32 + topic as u32
     }
+    /// Id of noun `i` of `topic`.
     pub fn noun(&self, topic: usize, i: usize) -> u32 {
         self.noun_start + (topic * NOUNS_PER_TOPIC + i) as u32
     }
+    /// Topic index of a noun id; `None` if `id` is not a topic noun.
     pub fn topic_of_noun(&self, id: u32) -> Option<usize> {
         if id >= self.noun_start && id < self.pos_adj_start {
             Some(((id - self.noun_start) as usize) / NOUNS_PER_TOPIC)
@@ -175,12 +215,15 @@ impl Vocab {
             None
         }
     }
+    /// Id of positive adjective `i`.
     pub fn pos_adj(&self, i: usize) -> u32 {
         self.pos_adj_start + i as u32
     }
+    /// Id of negative adjective `i`.
     pub fn neg_adj(&self, i: usize) -> u32 {
         self.neg_adj_start + i as u32
     }
+    /// Id of neutral adjective `i`.
     pub fn neu_adj(&self, i: usize) -> u32 {
         self.neu_adj_start + i as u32
     }
@@ -196,18 +239,23 @@ impl Vocab {
             None
         }
     }
+    /// Id of person entity `i`.
     pub fn person(&self, i: usize) -> u32 {
         self.person_start + i as u32
     }
+    /// Id of place entity `i`.
     pub fn place(&self, i: usize) -> u32 {
         self.place_start + i as u32
     }
+    /// Id of content verb `i`.
     pub fn verb(&self, i: usize) -> u32 {
         self.verb_start + i as u32
     }
+    /// Id of digit word `i` (`num{i}`).
     pub fn digit(&self, i: usize) -> u32 {
         self.digit_start + i as u32
     }
+    /// Numeric value of a digit-word id; `None` if not a digit word.
     pub fn digit_value(&self, id: u32) -> Option<usize> {
         if id >= self.digit_start && id < self.digit_start + N_DIGIT as u32 {
             Some((id - self.digit_start) as usize)

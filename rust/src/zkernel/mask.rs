@@ -239,22 +239,26 @@ impl SparseMask {
     /// tensor, every index in range. (Sortedness/uniqueness hold by
     /// construction.) Optimizers call this before stepping so a mask built
     /// against the wrong store fails loudly instead of mis-addressing z.
-    pub fn validate(&self, params: &ParamStore) -> Result<()> {
-        if self.tensors.len() != params.specs.len() {
+    ///
+    /// Generic over [`Theta`](crate::model::Theta): a mask validates
+    /// against any store sharing the tensor ABI — dense or quantized —
+    /// because only shapes are consulted, never values.
+    pub fn validate<T: crate::model::Theta + ?Sized>(&self, params: &T) -> Result<()> {
+        if self.tensors.len() != params.specs().len() {
             bail!(
                 "SparseMask: mask covers {} tensors, store has {}",
                 self.tensors.len(),
-                params.specs.len()
+                params.specs().len()
             );
         }
         for (ti, idxs) in self.tensors.iter().enumerate() {
             if let Some(&last) = idxs.last() {
-                if last as usize >= params.data[ti].len() {
+                if last as usize >= params.tensor_len(ti) {
                     bail!(
                         "SparseMask: tensor {} index {} out of range (len {})",
                         ti,
                         last,
-                        params.data[ti].len()
+                        params.tensor_len(ti)
                     );
                 }
             }

@@ -100,6 +100,14 @@
 //! dense kernel's, which is what lets K workers each own one shard of a
 //! MeZO pass and still land on the dense bits.
 //!
+//! The quantized tier ([`quant`]) adds `_quant` variants of the same six
+//! kernels for block-quantized θ (int8/int4 codes + per-[`QBLOCK`]
+//! scales + an f32 overlay for the masked coordinates — the full
+//! SensZOQ layout): blocks are dequantized on the fly, run through the
+//! SAME dense serial bodies at the same z counters, and requantized, so
+//! overlay coordinates stay bitwise the dense kernel's and everything
+//! else lands within half a scale step.
+//!
 //! Every kernel is bit-for-bit equivalent to the scalar per-coordinate
 //! reference (same per-coordinate operation order as the seed code); the
 //! tests in this module enforce that across thread counts 1/2/8 and across
@@ -109,9 +117,11 @@ mod kernels;
 pub mod mask;
 pub(crate) mod numa;
 mod pool;
+pub mod quant;
 mod simd;
 
 pub use mask::{Sensitivity, SparseMask};
+pub use quant::{QBits, QuantTensorMut, QuantTensorRef, QBLOCK};
 pub use simd::Tier;
 
 use crate::rng::GaussianStream;

@@ -1,0 +1,710 @@
+//! Quantized (SensZOQ) kernel tier: block-quantized θ under the dense
+//! kernel arithmetic.
+//!
+//! The SensZOQ recipe (PAPERS.md, 2410.09823) keeps the *dense* weights
+//! in fixed-width integer blocks — [`QBLOCK`] coordinates per block, one
+//! f32 scale each, int8 or int4 codes ([`QBits`]) — and only the sparse
+//! *sensitive* coordinates (a [`super::SparseMask`]'s lists) in full f32,
+//! stored compacted in an **overlay** (`idxs[k] ↦ overlay[k]`). This
+//! module supplies the kernel entry points for that layout:
+//!
+//! * **Dense quant kernels** ([`ZEngine::axpy_z_quant`],
+//!   [`ZEngine::sgd_update_quant`], [`ZEngine::multi_sgd_update_quant`],
+//!   [`ZEngine::fzoo_update_quant`], [`ZEngine::multi_axpy_z_quant`],
+//!   [`ZEngine::perturb_into_quant`]) dequantize one [`BLOCK`] at a time
+//!   into a stack buffer, splice the overlay's exact f32 values over the
+//!   masked slots, run the *existing* dense serial kernel body (the same
+//!   `block_apply8!`/SIMD dispatch, at the same global z counters) over
+//!   the block, write masked results back to the overlay, and requantize
+//!   each [`QBLOCK`] sub-block. Masked (overlay) coordinates therefore
+//!   see bit-for-bit the dense kernel's arithmetic; unmasked coordinates
+//!   land within the per-block dequantization bound (half a scale step —
+//!   see [`QBits`]) of where the dense kernel would put them.
+//! * **Masked quant kernels** ([`ZEngine::axpy_z_quant_masked`] and
+//!   friends) walk the overlay directly — pure f32, per-coordinate
+//!   `z(offset + idx)` through the same shared `*1` op bodies as the
+//!   dense kernels ([`GaussianStream::fill`] is elementwise `z()`, so
+//!   blocked and per-coordinate generation agree bitwise) — which is
+//!   what makes masked quantized stepping `to_bits()`-identical to the
+//!   dense masked path at any thread count and SIMD tier (pinned in
+//!   `tests/quant.rs` under the verify matrix).
+//!
+//! Threading reuses the engine's block-aligned range carving: chunk
+//! boundaries are [`BLOCK`]-aligned, [`QBLOCK`] divides [`BLOCK`], and
+//! int4 codes pack two per byte, so every chunk owns disjoint code
+//! bytes, scale slots and overlay runs — the same determinism argument
+//! as the dense kernels, extended to the quantized buffers.
+
+use super::{kernels, pool, Tier, ZEngine, BLOCK, PAR_MIN};
+use crate::rng::GaussianStream;
+
+/// Coordinates per quantization block (one f32 scale each). Divides
+/// [`BLOCK`], so engine chunk boundaries never split a scale block.
+pub const QBLOCK: usize = 64;
+
+/// Code width of a quantized tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QBits {
+    /// One signed byte per coordinate; codes in [−127, 127].
+    Int8,
+    /// One nibble per coordinate (two per byte, even index in the low
+    /// nibble, stored biased by +8); codes in [−7, 7].
+    Int4,
+}
+
+impl QBits {
+    /// Largest code magnitude: 127 (int8) or 7 (int4). A block's scale
+    /// is `absmax / levels`, so every unmasked coordinate dequantizes
+    /// within `scale / 2` of its f32 value — the pinned per-block
+    /// dequantization error bound.
+    pub fn levels(self) -> f32 {
+        match self {
+            QBits::Int8 => 127.0,
+            QBits::Int4 => 7.0,
+        }
+    }
+
+    /// [`QBits::levels`] as the integer clamp limit.
+    pub fn q_max(self) -> i32 {
+        match self {
+            QBits::Int8 => 127,
+            QBits::Int4 => 7,
+        }
+    }
+
+    /// Code bytes needed for the first `len` coordinates of a tensor.
+    pub fn bytes_for(self, len: usize) -> usize {
+        match self {
+            QBits::Int8 => len,
+            QBits::Int4 => len.div_ceil(2),
+        }
+    }
+}
+
+/// Read-only view of one quantized tensor (codes + scales + overlay).
+/// The overlay is compacted: `idxs[k]` (tensor-absolute, strictly
+/// increasing) holds its exact f32 value in `overlay[k]`, and the code
+/// under a masked coordinate is 0 — reads go through the overlay.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantTensorRef<'a> {
+    /// Code width.
+    pub bits: QBits,
+    /// Tensor length in coordinates.
+    pub len: usize,
+    /// Packed codes (`bits.bytes_for(len)` bytes).
+    pub data: &'a [u8],
+    /// Per-[`QBLOCK`] scales (`len.div_ceil(QBLOCK)` of them).
+    pub scales: &'a [f32],
+    /// Sorted masked coordinates (tensor-absolute).
+    pub idxs: &'a [u32],
+    /// Exact f32 values of the masked coordinates, parallel to `idxs`.
+    pub overlay: &'a [f32],
+}
+
+/// Mutable view of one quantized tensor — what the quant kernels write
+/// through. Same layout contract as [`QuantTensorRef`].
+#[derive(Debug)]
+pub struct QuantTensorMut<'a> {
+    /// Code width.
+    pub bits: QBits,
+    /// Tensor length in coordinates.
+    pub len: usize,
+    /// Packed codes (`bits.bytes_for(len)` bytes).
+    pub data: &'a mut [u8],
+    /// Per-[`QBLOCK`] scales (`len.div_ceil(QBLOCK)` of them).
+    pub scales: &'a mut [f32],
+    /// Sorted masked coordinates (tensor-absolute).
+    pub idxs: &'a [u32],
+    /// Exact f32 values of the masked coordinates, parallel to `idxs`.
+    pub overlay: &'a mut [f32],
+}
+
+impl QuantTensorMut<'_> {
+    /// Reborrow as a read-only view.
+    pub fn as_ref(&self) -> QuantTensorRef<'_> {
+        QuantTensorRef {
+            bits: self.bits,
+            len: self.len,
+            data: self.data,
+            scales: self.scales,
+            idxs: self.idxs,
+            overlay: self.overlay,
+        }
+    }
+}
+
+/// A malformed quant view would silently read codes or scales at the
+/// wrong slots, so fail fast with named errors (mirrors `check_mask`).
+fn check_quant(bits: QBits, len: usize, data: &[u8], scales: &[f32], idxs: &[u32], overlay: &[f32]) {
+    assert_eq!(data.len(), bits.bytes_for(len), "zkernel: quant code buffer length mismatch");
+    assert_eq!(scales.len(), len.div_ceil(QBLOCK), "zkernel: quant scale buffer length mismatch");
+    assert_eq!(overlay.len(), idxs.len(), "zkernel: quant overlay/index length mismatch");
+    debug_assert!(
+        idxs.windows(2).all(|w| w[0] < w[1]),
+        "zkernel: quant overlay indices not sorted/unique"
+    );
+    if let Some(&last) = idxs.last() {
+        assert!(
+            (last as usize) < len,
+            "zkernel: quant overlay index {} out of range for tensor of length {}",
+            last,
+            len
+        );
+    }
+}
+
+/// Code of coordinate `i` (buffer-local), sign-extended.
+#[inline(always)]
+fn q_get(bits: QBits, data: &[u8], i: usize) -> i32 {
+    match bits {
+        QBits::Int8 => data[i] as i8 as i32,
+        QBits::Int4 => {
+            let b = data[i / 2];
+            let nib = if i % 2 == 0 { b & 0x0f } else { b >> 4 };
+            nib as i32 - 8
+        }
+    }
+}
+
+/// Store code `q` at coordinate `i` (buffer-local).
+#[inline(always)]
+fn q_set(bits: QBits, data: &mut [u8], i: usize, q: i32) {
+    match bits {
+        QBits::Int8 => data[i] = q as i8 as u8,
+        QBits::Int4 => {
+            let nib = (q + 8) as u8;
+            let b = &mut data[i / 2];
+            if i % 2 == 0 {
+                *b = (*b & 0xf0) | nib;
+            } else {
+                *b = (*b & 0x0f) | (nib << 4);
+            }
+        }
+    }
+}
+
+/// Quantize one whole tensor: symmetric absmax per [`QBLOCK`] over the
+/// UNMASKED coordinates (`idxs` sorted, tensor-absolute), codes
+/// round-to-nearest clamped to ±[`QBits::q_max`]; masked coordinates
+/// store code 0 (their value lives in the overlay). An all-zero (or
+/// fully masked) block stores scale 0 with all-zero codes.
+pub fn quantize(bits: QBits, vals: &[f32], idxs: &[u32], data: &mut [u8], scales: &mut [f32]) {
+    assert_eq!(data.len(), bits.bytes_for(vals.len()), "zkernel: quant code buffer length mismatch");
+    assert_eq!(
+        scales.len(),
+        vals.len().div_ceil(QBLOCK),
+        "zkernel: quant scale buffer length mismatch"
+    );
+    let levels = bits.levels();
+    let lim = bits.q_max();
+    let mut mi = 0usize;
+    let mut b = 0usize;
+    while b < vals.len() {
+        let n = QBLOCK.min(vals.len() - b);
+        let m0 = mi;
+        while mi < idxs.len() && (idxs[mi] as usize) < b + n {
+            mi += 1;
+        }
+        let masked = &idxs[m0..mi];
+        let mut amax = 0.0f32;
+        let mut mk = 0usize;
+        for j in 0..n {
+            if mk < masked.len() && masked[mk] as usize == b + j {
+                mk += 1;
+                continue;
+            }
+            amax = amax.max(vals[b + j].abs());
+        }
+        let scale = if amax > 0.0 { amax / levels } else { 0.0 };
+        scales[b / QBLOCK] = scale;
+        mk = 0;
+        for j in 0..n {
+            let q = if (mk < masked.len() && masked[mk] as usize == b + j) || scale == 0.0 {
+                if mk < masked.len() && masked[mk] as usize == b + j {
+                    mk += 1;
+                }
+                0
+            } else {
+                ((vals[b + j] / scale).round() as i32).clamp(-lim, lim)
+            };
+            q_set(bits, data, b + j, q);
+        }
+        b += n;
+    }
+}
+
+/// Dequantize one whole tensor into `out`: codes·scale everywhere, then
+/// the overlay's exact f32 values spliced over the masked coordinates.
+pub fn dequantize(t: QuantTensorRef<'_>, out: &mut [f32]) {
+    assert_eq!(out.len(), t.len, "zkernel: quant dequantize length mismatch");
+    check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+    for (c, o) in out.iter_mut().enumerate() {
+        *o = q_get(t.bits, t.data, c) as f32 * t.scales[c / QBLOCK];
+    }
+    for (k, &idx) in t.idxs.iter().enumerate() {
+        out[idx as usize] = t.overlay[k];
+    }
+}
+
+/// One fused dense-kernel op, carried into the per-chunk quant driver.
+enum QuantOp<'a> {
+    /// θ += s·z
+    Axpy { stream: GaussianStream, s: f32 },
+    /// θ −= lr·(g·z + wd·θ)
+    Sgd { stream: GaussianStream, lr: f32, g: f32, wd: f32 },
+    /// n-SPSA: every (stream, g) update in slice order
+    MultiSgd { zs: &'a [(GaussianStream, f32)], lr: f32, wd: f32 },
+    /// FZOO batched one-sided mean update
+    Fzoo { zs: &'a [(GaussianStream, f32)], lr: f32, wd: f32 },
+    /// θ += Σᵢ sᵢ·zᵢ
+    MultiAxpy { zs: &'a [(GaussianStream, f32)] },
+}
+
+impl QuantOp<'_> {
+    /// Run the op's dense serial body over one dequantized block whose
+    /// first coordinate has global z counter `zoff` — exactly the
+    /// arithmetic (and z) the dense kernel applies to that block.
+    fn apply(&self, tier: Tier, zoff: u64, buf: &mut [f32]) {
+        match *self {
+            QuantOp::Axpy { stream, s } => kernels::axpy_serial(tier, stream, zoff, buf, s),
+            QuantOp::Sgd { stream, lr, g, wd } => {
+                kernels::sgd_serial(tier, stream, zoff, buf, lr, g, wd)
+            }
+            QuantOp::MultiSgd { zs, lr, wd } => {
+                kernels::multi_sgd_serial(tier, zs, zoff, buf, lr, wd)
+            }
+            QuantOp::Fzoo { zs, lr, wd } => kernels::fzoo_serial(tier, zs, zoff, buf, lr, wd),
+            QuantOp::MultiAxpy { zs } => kernels::multi_axpy_serial(tier, zs, zoff, buf),
+        }
+    }
+}
+
+/// Serial quant-op driver over one chunk: per [`BLOCK`], dequantize into
+/// a stack buffer, splice the overlay, run the dense serial body at the
+/// block's global z counters, copy masked results back to the overlay,
+/// and requantize each [`QBLOCK`] sub-block (masked coordinates excluded
+/// from the absmax, stored as code 0).
+#[allow(clippy::too_many_arguments)]
+fn quant_chunk(
+    tier: Tier,
+    op: &QuantOp<'_>,
+    zoff: u64,
+    start: usize,
+    len: usize,
+    bits: QBits,
+    data: &mut [u8],
+    scales: &mut [f32],
+    idxs: &[u32],
+    overlay: &mut [f32],
+) {
+    let levels = bits.levels();
+    let lim = bits.q_max();
+    let mut buf = [0.0f32; BLOCK];
+    let mut mi = 0usize;
+    let mut i = 0usize;
+    while i < len {
+        let n = BLOCK.min(len - i);
+        let mut masked = [false; BLOCK];
+        for (j, b) in buf[..n].iter_mut().enumerate() {
+            let c = i + j;
+            *b = q_get(bits, data, c) as f32 * scales[c / QBLOCK];
+        }
+        let m0 = mi;
+        while mi < idxs.len() && (idxs[mi] as usize) < start + i + n {
+            let j = idxs[mi] as usize - start - i;
+            buf[j] = overlay[mi];
+            masked[j] = true;
+            mi += 1;
+        }
+        op.apply(tier, zoff + i as u64, &mut buf[..n]);
+        for k in m0..mi {
+            overlay[k] = buf[idxs[k] as usize - start - i];
+        }
+        let mut qb = 0usize;
+        while qb < n {
+            let qn = QBLOCK.min(n - qb);
+            let mut amax = 0.0f32;
+            for j in qb..qb + qn {
+                if !masked[j] {
+                    amax = amax.max(buf[j].abs());
+                }
+            }
+            let scale = if amax > 0.0 { amax / levels } else { 0.0 };
+            scales[(i + qb) / QBLOCK] = scale;
+            for j in qb..qb + qn {
+                let q = if masked[j] || scale == 0.0 {
+                    0
+                } else {
+                    ((buf[j] / scale).round() as i32).clamp(-lim, lim)
+                };
+                q_set(bits, data, i + j, q);
+            }
+            qb += qn;
+        }
+        i += n;
+    }
+}
+
+impl ZEngine {
+    /// Run `f(start, len, codes, scales, idxs, overlay)` over disjoint
+    /// chunks of a quantized tensor, carved on the engine's block-aligned
+    /// ranges. [`QBLOCK`] divides [`BLOCK`] and int4 packs two codes per
+    /// byte, so every boundary lands between scale blocks and between
+    /// code bytes; the overlay is carved by `partition_point` on the
+    /// chunk's coordinate range.
+    fn run_quant<F>(&self, t: QuantTensorMut<'_>, min_per_thread: usize, f: F)
+    where
+        F: Fn(usize, usize, &mut [u8], &mut [f32], &[u32], &mut [f32]) + Sync,
+    {
+        let QuantTensorMut { bits, len, data, scales, idxs, overlay } = t;
+        let ranges = self.ranges(len, min_per_thread);
+        if ranges.len() <= 1 {
+            f(0, len, data, scales, idxs, overlay);
+            return;
+        }
+        let fr = &f;
+        let mut rest_d = data;
+        let mut rest_s = scales;
+        let mut rest_o = overlay;
+        let mut rest_i = idxs;
+        let mut done_b = 0usize;
+        let mut done_s = 0usize;
+        let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(ranges.len());
+        for &(start, end) in &ranges {
+            let nb = bits.bytes_for(end) - done_b;
+            let (cd, td) = std::mem::take(&mut rest_d).split_at_mut(nb);
+            let ns = end.div_ceil(QBLOCK) - done_s;
+            let (cs, ts) = std::mem::take(&mut rest_s).split_at_mut(ns);
+            let cut = rest_i.partition_point(|&ix| (ix as usize) < end);
+            let (ci, tri) = rest_i.split_at(cut);
+            let (co, to) = std::mem::take(&mut rest_o).split_at_mut(cut);
+            rest_d = td;
+            rest_s = ts;
+            rest_i = tri;
+            rest_o = to;
+            done_b += nb;
+            done_s += ns;
+            jobs.push(Box::new(move || fr(start, end - start, cd, cs, ci, co)));
+        }
+        self.execute(jobs);
+    }
+
+    /// As [`ZEngine::run_quant`], for the staging shape: the quantized
+    /// tensor is read-only and a full-length f32 `out` is carved mutably
+    /// in lockstep.
+    fn run_quant_src<F>(&self, t: QuantTensorRef<'_>, out: &mut [f32], min_per_thread: usize, f: F)
+    where
+        F: Fn(usize, &[u8], &[f32], &[u32], &[f32], &mut [f32]) + Sync,
+    {
+        assert_eq!(t.len, out.len(), "zkernel: quant src/dst length mismatch");
+        let ranges = self.ranges(t.len, min_per_thread);
+        if ranges.len() <= 1 {
+            f(0, t.data, t.scales, t.idxs, t.overlay, out);
+            return;
+        }
+        let fr = &f;
+        let mut rest = out;
+        let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(ranges.len());
+        for &(start, end) in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+            rest = tail;
+            let cd = &t.data[t.bits.bytes_for(start)..t.bits.bytes_for(end)];
+            let cs = &t.scales[start / QBLOCK..end.div_ceil(QBLOCK)];
+            let a = t.idxs.partition_point(|&ix| (ix as usize) < start);
+            let b = t.idxs.partition_point(|&ix| (ix as usize) < end);
+            let ci = &t.idxs[a..b];
+            let co = &t.overlay[a..b];
+            jobs.push(Box::new(move || fr(start, cd, cs, ci, co, chunk)));
+        }
+        self.execute(jobs);
+    }
+
+    // ---------------- dense quant kernels --------------------------------
+    //
+    // Each is the quantized counterpart of the like-named dense kernel:
+    // same per-coordinate arithmetic, same global z counters, applied to
+    // the dequantized block and requantized after. Overlay (masked)
+    // coordinates pass through in exact f32 — bitwise the dense kernel's
+    // result; unmasked coordinates are within half a scale step.
+
+    /// Quantized [`ZEngine::axpy_z`]: θ[j] += s · z(offset + j) over a
+    /// quantized tensor.
+    pub fn axpy_z_quant(&self, stream: GaussianStream, offset: u64, t: QuantTensorMut<'_>, s: f32) {
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let tier = self.simd;
+        let bits = t.bits;
+        let op = QuantOp::Axpy { stream, s };
+        self.run_quant(t, PAR_MIN, |start, len, d, sc, ix, ov| {
+            quant_chunk(tier, &op, offset + start as u64, start, len, bits, d, sc, ix, ov);
+        });
+    }
+
+    /// Quantized [`ZEngine::sgd_update`]: the MeZO-SGD update over a
+    /// quantized tensor.
+    pub fn sgd_update_quant(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        t: QuantTensorMut<'_>,
+        lr: f32,
+        g: f32,
+        wd: f32,
+    ) {
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let tier = self.simd;
+        let bits = t.bits;
+        let op = QuantOp::Sgd { stream, lr, g, wd };
+        self.run_quant(t, PAR_MIN, |start, len, d, sc, ix, ov| {
+            quant_chunk(tier, &op, offset + start as u64, start, len, bits, d, sc, ix, ov);
+        });
+    }
+
+    /// Quantized [`ZEngine::multi_sgd_update`]: all n-SPSA updates in one
+    /// pass over a quantized tensor.
+    pub fn multi_sgd_update_quant(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        t: QuantTensorMut<'_>,
+        lr: f32,
+        wd: f32,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let tier = self.simd;
+        let bits = t.bits;
+        let op = QuantOp::MultiSgd { zs, lr, wd };
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run_quant(t, min, |start, len, d, sc, ix, ov| {
+            quant_chunk(tier, &op, offset + start as u64, start, len, bits, d, sc, ix, ov);
+        });
+    }
+
+    /// Quantized [`ZEngine::fzoo_update`]: the FZOO batched one-sided
+    /// mean update over a quantized tensor.
+    pub fn fzoo_update_quant(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        t: QuantTensorMut<'_>,
+        lr: f32,
+        wd: f32,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let tier = self.simd;
+        let bits = t.bits;
+        let op = QuantOp::Fzoo { zs, lr, wd };
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run_quant(t, min, |start, len, d, sc, ix, ov| {
+            quant_chunk(tier, &op, offset + start as u64, start, len, bits, d, sc, ix, ov);
+        });
+    }
+
+    /// Quantized [`ZEngine::multi_axpy_z`]: θ[j] += Σᵢ sᵢ·zᵢ(offset + j)
+    /// over a quantized tensor — the seed-batched replay primitive.
+    pub fn multi_axpy_z_quant(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        t: QuantTensorMut<'_>,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let tier = self.simd;
+        let bits = t.bits;
+        let op = QuantOp::MultiAxpy { zs };
+        let min = (PAR_MIN / zs.len()).max(BLOCK);
+        self.run_quant(t, min, |start, len, d, sc, ix, ov| {
+            quant_chunk(tier, &op, offset + start as u64, start, len, bits, d, sc, ix, ov);
+        });
+    }
+
+    /// Quantized [`ZEngine::perturb_into`]: out[j] = θ[j] + s · z(offset
+    /// + j) with θ dequantized on the fly (overlay exact, codes·scale
+    /// elsewhere); the quantized tensor is untouched. The `θ + s·z` is
+    /// applied by the dense axpy body over the dequantized chunk — the
+    /// identical per-coordinate arithmetic and z as
+    /// [`ZEngine::perturb_into`] on a dense θ.
+    pub fn perturb_into_quant(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        t: QuantTensorRef<'_>,
+        s: f32,
+        out: &mut [f32],
+    ) {
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let tier = self.simd;
+        let bits = t.bits;
+        self.run_quant_src(t, out, PAR_MIN, |start, d, sc, ix, ov, chunk| {
+            for (c, o) in chunk.iter_mut().enumerate() {
+                *o = q_get(bits, d, c) as f32 * sc[c / QBLOCK];
+            }
+            for (k, &idx) in ix.iter().enumerate() {
+                chunk[idx as usize - start] = ov[k];
+            }
+            kernels::axpy_serial(tier, stream, offset + start as u64, chunk, s);
+        });
+    }
+
+    // ---------------- masked quant kernels -------------------------------
+    //
+    // Sparse SensZOQ stepping on a quantized store touches ONLY overlay
+    // coordinates — exact f32, per-coordinate z at the dense counters,
+    // through the same `*1` op bodies as every other kernel tier — so
+    // each is `to_bits()`-identical to its dense `_masked` counterpart.
+    // The walk is serial (overlay lists are small by construction);
+    // every op index must have an overlay slot, else the store was
+    // quantized under a different mask — fail fast.
+
+    /// Masked quantized axpy: overlay[idx] += s · z(offset + idx) for
+    /// each `idx` in `idxs` (every idx must be an overlay coordinate).
+    pub fn axpy_z_quant_masked(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        idxs: &[u32],
+        t: QuantTensorMut<'_>,
+        s: f32,
+    ) {
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let mut slot = 0usize;
+        for &idx in idxs {
+            slot = overlay_slot(t.idxs, slot, idx);
+            kernels::axpy1(&mut t.overlay[slot], stream.z(offset + idx as u64), s);
+        }
+    }
+
+    /// Masked quantized perturb-into: out[idx] = overlay[idx] + s ·
+    /// z(offset + idx); other coordinates of `out` are NOT written.
+    pub fn perturb_into_quant_masked(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        idxs: &[u32],
+        t: QuantTensorRef<'_>,
+        s: f32,
+        out: &mut [f32],
+    ) {
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        assert_eq!(t.len, out.len(), "zkernel: quant src/dst length mismatch");
+        let mut slot = 0usize;
+        for &idx in idxs {
+            slot = overlay_slot(t.idxs, slot, idx);
+            let z = stream.z(offset + idx as u64);
+            kernels::perturb1(&mut out[idx as usize], t.overlay[slot], z, s);
+        }
+    }
+
+    /// Masked quantized MeZO-SGD update over the overlay coordinates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgd_update_quant_masked(
+        &self,
+        stream: GaussianStream,
+        offset: u64,
+        idxs: &[u32],
+        t: QuantTensorMut<'_>,
+        lr: f32,
+        g: f32,
+        wd: f32,
+    ) {
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let mut slot = 0usize;
+        for &idx in idxs {
+            slot = overlay_slot(t.idxs, slot, idx);
+            kernels::sgd1(&mut t.overlay[slot], stream.z(offset + idx as u64), lr, g, wd);
+        }
+    }
+
+    /// Masked quantized n-SPSA: every `(stream, g)` update applied in
+    /// slice order per overlay coordinate.
+    pub fn multi_sgd_update_quant_masked(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        idxs: &[u32],
+        t: QuantTensorMut<'_>,
+        lr: f32,
+        wd: f32,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let mut slot = 0usize;
+        for &idx in idxs {
+            slot = overlay_slot(t.idxs, slot, idx);
+            let z = |kk: usize| zs[kk].0.z(offset + idx as u64);
+            kernels::multi_sgd1(&mut t.overlay[slot], zs, z, lr, wd);
+        }
+    }
+
+    /// Masked quantized FZOO batched one-sided mean update over the
+    /// overlay coordinates.
+    pub fn fzoo_update_quant_masked(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        idxs: &[u32],
+        t: QuantTensorMut<'_>,
+        lr: f32,
+        wd: f32,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let n_f = zs.len() as f32;
+        let mut slot = 0usize;
+        for &idx in idxs {
+            slot = overlay_slot(t.idxs, slot, idx);
+            let z = |kk: usize| zs[kk].0.z(offset + idx as u64);
+            kernels::fzoo1(&mut t.overlay[slot], zs, z, n_f, lr, wd);
+        }
+    }
+
+    /// Masked quantized multi-seed axpy — the sparse seed-batched replay
+    /// primitive over the overlay coordinates.
+    pub fn multi_axpy_z_quant_masked(
+        &self,
+        zs: &[(GaussianStream, f32)],
+        offset: u64,
+        idxs: &[u32],
+        t: QuantTensorMut<'_>,
+    ) {
+        if zs.is_empty() {
+            return;
+        }
+        check_quant(t.bits, t.len, t.data, t.scales, t.idxs, t.overlay);
+        let mut slot = 0usize;
+        for &idx in idxs {
+            slot = overlay_slot(t.idxs, slot, idx);
+            let z = |kk: usize| zs[kk].0.z(offset + idx as u64);
+            kernels::multi_axpy1(&mut t.overlay[slot], zs, z);
+        }
+    }
+}
+
+/// Advance the two-pointer overlay walk to `idx`'s slot; panics when the
+/// store's overlay has no such coordinate (the op's mask is not the mask
+/// the store was quantized under).
+#[inline]
+fn overlay_slot(overlay_idxs: &[u32], from: usize, idx: u32) -> usize {
+    let mut slot = from;
+    while slot < overlay_idxs.len() && overlay_idxs[slot] < idx {
+        slot += 1;
+    }
+    assert!(
+        slot < overlay_idxs.len() && overlay_idxs[slot] == idx,
+        "zkernel: quant masked index {} has no overlay coordinate (mask/store mismatch)",
+        idx
+    );
+    slot
+}

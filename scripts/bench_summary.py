@@ -83,6 +83,16 @@ def summarize(report):
             summary["wire_step_overhead_x"] = _median_ns(
                 fleet, "wire_overhead_x", ["d", "shards"]
             )
+    # quantized SensZOQ store: median quant-vs-dense step tax per bit
+    # width and thread count, and the bytes-per-replica compression the
+    # store buys (constant per bit width, medianed for free)
+    if report.get("quant_kernels"):
+        summary["quant_step_tax_x"] = _median_ns(
+            report["quant_kernels"], "quant_step_tax_x", ["bits", "threads"]
+        )
+        summary["quant_replica_compression_x"] = _median_ns(
+            report["quant_kernels"], "replica_compression_x", ["bits"]
+        )
     # FZOO vs MeZO at matched budgets: median step speedup per budget
     if report.get("fzoo_vs_mezo"):
         summary["fzoo_speedup_vs_mezo"] = _median_ns(

@@ -90,6 +90,10 @@ for t in 1 2 8; do
         # hit/miss/evict and every replay mode must hold at each
         # process-default thread count and SIMD tier
         MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --test serving
+        # quantized (SensZOQ) store: round-trips within the pinned block
+        # bound, and masked-coordinate bit-identity with the dense path
+        # through kernels, stepping, replay and serving
+        MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --test quant
     done
 done
 

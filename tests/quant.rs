@@ -1,0 +1,347 @@
+//! Acceptance suite for the block-quantized SensZOQ parameter store
+//! behind the unified `Theta` API: quantize→dequantize round-trips stay
+//! within the pinned per-block bound, masked (overlay) coordinates are
+//! `to_bits()`-identical to the dense path through kernels, optimizer
+//! steps, trajectory replay and serving, and none of it moves across
+//! thread counts or dispatch strategies. `scripts/verify.sh` re-runs
+//! this file under the full `MEZO_THREADS` × `MEZO_SIMD` matrix.
+
+use mezo::model::meta::TensorDesc;
+use mezo::model::params::ParamStore;
+use mezo::model::quant::QuantStore;
+use mezo::model::Theta;
+use mezo::optim::fzoo::{Fzoo, FzooConfig};
+use mezo::optim::mezo::{MezoConfig, MezoSgd, StepRecord};
+use mezo::rng::{GaussianStream, Pcg};
+use mezo::serve::{ServeConfig, ServeStore, UserLog};
+use mezo::storage::Trajectory;
+use mezo::util::prop::{ensure, forall};
+use mezo::zkernel::{QBits, Sensitivity, SparseMask, ZEngine, QBLOCK};
+use std::sync::Arc;
+
+fn store_with(seed: u64, shapes: &[(&str, usize)]) -> ParamStore {
+    let specs = shapes
+        .iter()
+        .map(|(n, l)| TensorDesc { name: (*n).into(), shape: vec![*l], dtype: "f32".into() })
+        .collect();
+    let mut p = ParamStore::from_specs(specs);
+    p.init(seed);
+    p
+}
+
+/// The bit patterns of every masked coordinate, in mask order.
+fn masked_bits(p: &ParamStore, mask: &SparseMask) -> Vec<u32> {
+    (0..p.specs.len())
+        .flat_map(|ti| {
+            mask.indices(ti).iter().map(move |&i| p.data[ti][i as usize].to_bits())
+        })
+        .collect()
+}
+
+#[test]
+fn prop_quantize_dequantize_roundtrips_within_the_pinned_bound() {
+    forall(
+        60,
+        71,
+        |rng| {
+            let bits = if rng.below(2) == 0 { QBits::Int8 } else { QBits::Int4 };
+            // deliberately unaligned lengths, including sub-block tensors
+            let len = rng.below(5 * QBLOCK) + 1;
+            (bits, len, rng.next_u64())
+        },
+        |&(bits, len, seed)| {
+            let p = store_with(seed, &[("w", len)]);
+            let q = QuantStore::quantize(&p, bits, None).map_err(|e| e.to_string())?;
+            let d = q.to_dense();
+            let bound = q.dequant_error_bound();
+            for (j, (a, b)) in p.data[0].iter().zip(&d.data[0]).enumerate() {
+                ensure(
+                    (a - b).abs() <= bound,
+                    format!("{:?} len={} j={}: |{} - {}| > {}", bits, len, j, a, b, bound),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn all_zero_and_single_outlier_blocks_roundtrip_within_their_scale() {
+    for bits in [QBits::Int8, QBits::Int4] {
+        let len = 3 * QBLOCK + 17; // unaligned tail block
+        let mut p = store_with(5, &[("w", len)]);
+        for v in &mut p.data[0][QBLOCK..2 * QBLOCK] {
+            *v = 0.0; // an all-zero block quantizes to scale 0
+        }
+        p.data[0][2 * QBLOCK + 3] = 1000.0; // a single outlier owns its block's scale
+        let q = QuantStore::quantize(&p, bits, None).unwrap();
+        let d = q.to_dense();
+        for j in QBLOCK..2 * QBLOCK {
+            assert_eq!(
+                d.data[0][j].to_bits(),
+                0.0f32.to_bits(),
+                "{:?}: zero block must dequantize to exact zero at {}",
+                bits,
+                j
+            );
+        }
+        // the outlier block's half-step bound: 0.5 · absmax / q_max
+        let worst = 0.5 * 1000.0 / bits.q_max() as f32;
+        for (j, (a, b)) in p.data[0].iter().zip(&d.data[0]).enumerate() {
+            assert!(
+                (a - b).abs() <= worst + 1e-6,
+                "{:?} j={}: {} vs {}",
+                bits,
+                j,
+                a,
+                b
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_masked_coordinates_survive_quantization_bitwise() {
+    forall(
+        40,
+        72,
+        |rng| {
+            let bits = if rng.below(2) == 0 { QBits::Int8 } else { QBits::Int4 };
+            let len = rng.below(4 * QBLOCK) + 1;
+            let k = rng.below(len) + 1;
+            (bits, len, k, rng.next_u64())
+        },
+        |&(bits, len, k, seed)| {
+            let p = store_with(seed, &[("w", len)]);
+            let mask = SparseMask::top_k(&p, &[0], k, Sensitivity::Magnitude)
+                .map_err(|e| e.to_string())?;
+            let q = QuantStore::quantize(&p, bits, Some(&mask)).map_err(|e| e.to_string())?;
+            let d = q.to_dense();
+            for &i in mask.indices(0) {
+                ensure(
+                    p.data[0][i as usize].to_bits() == d.data[0][i as usize].to_bits(),
+                    format!("{:?} i={}: overlay coordinate moved", bits, i),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn masked_kernels_on_a_quant_store_match_dense_bitwise_across_dispatch() {
+    // one tensor big enough that the threaded dense kernels actually fan
+    // out, one small; the quant path must agree bit for bit either way
+    let p = store_with(31, &[("emb", 70_000), ("w", 517)]);
+    let mask = SparseMask::top_k(&p, &[0, 1], 4_000, Sensitivity::Magnitude).unwrap();
+    let engines = [
+        ZEngine::with_threads(1),
+        ZEngine::with_threads(2),
+        ZEngine::with_threads(8),
+        ZEngine::with_threads_scoped(8),
+    ];
+    let stream = GaussianStream::new(99);
+    let zs: Vec<(GaussianStream, f32)> = (0..3)
+        .map(|i| (GaussianStream::new(200 + i), 0.01 * (i as f32 + 1.0)))
+        .collect();
+    let mut reference: Option<Vec<u32>> = None;
+    for engine in &engines {
+        for bits in [QBits::Int8, QBits::Int4] {
+            let mut dense = p.clone();
+            let mut quant = QuantStore::quantize(&p, bits, Some(&mask)).unwrap();
+            for ti in 0..2 {
+                dense.axpy_z_masked(engine, ti, stream, mask.indices(ti), 0.02);
+                quant.axpy_z_masked(engine, ti, stream, mask.indices(ti), 0.02);
+                dense.multi_axpy_z_masked(engine, ti, &zs, mask.indices(ti));
+                quant.multi_axpy_z_masked(engine, ti, &zs, mask.indices(ti));
+                dense.sgd_update_masked(engine, ti, stream, mask.indices(ti), 1e-2, 0.3, 1e-4);
+                quant.sgd_update_masked(engine, ti, stream, mask.indices(ti), 1e-2, 0.3, 1e-4);
+            }
+            let got = masked_bits(&quant.to_dense(), &mask);
+            assert_eq!(got, masked_bits(&dense, &mask), "{:?}: quant != dense", bits);
+            let r = reference.get_or_insert_with(|| got.clone());
+            assert_eq!(&got, r, "{:?}: dispatch variation moved bits", bits);
+        }
+    }
+}
+
+#[test]
+fn unmasked_quant_kernels_stay_within_the_pinned_dequant_bound() {
+    let base = store_with(61, &[("w", 2 * QBLOCK + 13)]);
+    for bits in [QBits::Int8, QBits::Int4] {
+        let mut q = QuantStore::quantize(&base, bits, None).unwrap();
+        // the exact update applies to the DEQUANTIZED values; the store
+        // may only add one requantization half-step on top of that
+        let mut exact = q.to_dense();
+        let engine = ZEngine::default();
+        let stream = GaussianStream::new(7);
+        q.axpy_z(&engine, 0, stream, 0.02);
+        exact.axpy_z(&engine, 0, stream, 0.02);
+        let bound = q.dequant_error_bound();
+        let d = q.to_dense();
+        for (j, (a, b)) in exact.data[0].iter().zip(&d.data[0]).enumerate() {
+            assert!(
+                (a - b).abs() <= bound,
+                "{:?} j={}: |{} - {}| > {}",
+                bits,
+                j,
+                a,
+                b,
+                bound
+            );
+        }
+    }
+}
+
+#[test]
+fn mezo_sgd_masked_stepping_on_a_quant_store_is_bitwise_the_dense_run() {
+    let base = store_with(41, &[("emb", 300), ("w", 517)]);
+    let mask = SparseMask::top_k(&base, &[0, 1], 64, Sensitivity::Magnitude).unwrap();
+    let cfg = MezoConfig { lr: 1e-2, eps: 1e-3, ..Default::default() };
+
+    // the loss sequence is a deterministic script shared by both runs, so
+    // every (seed, pgrad, lr) record — and thus every masked update — is
+    // identical; only the store representation differs
+    let mut dense = base.clone();
+    let mut opt_d = MezoSgd::new(cfg.clone(), vec![0, 1], 77);
+    opt_d.mask = Some(mask.clone());
+    let mut script = Pcg::new(1234);
+    for _ in 0..25 {
+        opt_d.step(&mut dense, |_| Ok(script.next_f32() - 0.5)).unwrap();
+    }
+
+    for bits in [QBits::Int8, QBits::Int4] {
+        let mut q = QuantStore::quantize(&base, bits, Some(&mask)).unwrap();
+        let before = q.to_dense();
+        let mut opt_q = MezoSgd::new(cfg.clone(), vec![0, 1], 77);
+        opt_q.mask = Some(mask.clone());
+        let mut script = Pcg::new(1234);
+        for _ in 0..25 {
+            opt_q.step(&mut q, |_| Ok(script.next_f32() - 0.5)).unwrap();
+        }
+        assert_eq!(opt_q.history, opt_d.history, "{:?}: records diverged", bits);
+        let after = q.to_dense();
+        assert_eq!(
+            masked_bits(&after, &mask),
+            masked_bits(&dense, &mask),
+            "{:?}: masked coordinates diverged",
+            bits
+        );
+        // masked stepping must never move an unmasked (code-held) coordinate
+        for ti in 0..2 {
+            let idxs = mask.indices(ti);
+            for j in 0..after.data[ti].len() {
+                if idxs.binary_search(&(j as u32)).is_err() {
+                    assert_eq!(
+                        after.data[ti][j].to_bits(),
+                        before.data[ti][j].to_bits(),
+                        "{:?}: unmasked coordinate ({}, {}) moved",
+                        bits,
+                        ti,
+                        j
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fzoo_masked_stepping_on_a_quant_store_is_bitwise_the_dense_run() {
+    let base = store_with(42, &[("emb", 300), ("w", 517)]);
+    let mask = SparseMask::top_k(&base, &[0, 1], 96, Sensitivity::Magnitude).unwrap();
+    let cfg = FzooConfig { lr: 1e-2, eps: 1e-3, n: 3, ..Default::default() };
+
+    let mut dense = base.clone();
+    let mut opt_d = Fzoo::new(cfg.clone(), vec![0, 1], 88);
+    opt_d.mask = Some(mask.clone());
+    let mut script = Pcg::new(4321);
+    for _ in 0..15 {
+        opt_d.step(&mut dense, |_| Ok(script.next_f32())).unwrap();
+    }
+
+    for bits in [QBits::Int8, QBits::Int4] {
+        let mut q = QuantStore::quantize(&base, bits, Some(&mask)).unwrap();
+        let mut opt_q = Fzoo::new(cfg.clone(), vec![0, 1], 88);
+        opt_q.mask = Some(mask.clone());
+        let mut script = Pcg::new(4321);
+        for _ in 0..15 {
+            opt_q.step(&mut q, |_| Ok(script.next_f32())).unwrap();
+        }
+        assert_eq!(opt_q.history, opt_d.history, "{:?}: records diverged", bits);
+        assert_eq!(
+            masked_bits(&q.to_dense(), &mask),
+            masked_bits(&dense, &mask),
+            "{:?}: masked coordinates diverged",
+            bits
+        );
+    }
+}
+
+#[test]
+fn masked_replay_on_a_quant_store_matches_dense_across_modes_and_threads() {
+    let base = store_with(51, &[("emb", 300), ("w", 517)]);
+    let mask = SparseMask::top_k(&base, &[0, 1], 96, Sensitivity::Magnitude).unwrap();
+    let mut traj =
+        Trajectory::new(vec!["emb".into(), "w".into()]).with_mask_digest(mask.digest());
+    for i in 0..12u64 {
+        traj.records.push(StepRecord {
+            seed: 500 + i,
+            pgrad: 0.05 * i as f32 - 0.25,
+            lr: 2e-3,
+        });
+    }
+    let mut dense = base.clone();
+    traj.replay_masked_with(&ZEngine::with_threads(1), &mut dense, &mask).unwrap();
+    let want = masked_bits(&dense, &mask);
+    for engine in [
+        ZEngine::with_threads(1),
+        ZEngine::with_threads(8),
+        ZEngine::with_threads_scoped(8),
+    ] {
+        for bits in [QBits::Int8, QBits::Int4] {
+            let mut seq = QuantStore::quantize(&base, bits, Some(&mask)).unwrap();
+            traj.replay_masked_with(&engine, &mut seq, &mask).unwrap();
+            assert_eq!(masked_bits(&seq.to_dense(), &mask), want, "{:?} sequential", bits);
+            let mut bat = QuantStore::quantize(&base, bits, Some(&mask)).unwrap();
+            traj.replay_batched_masked_with(&engine, &mut bat, &mask, 3).unwrap();
+            assert_eq!(masked_bits(&bat.to_dense(), &mask), want, "{:?} batched", bits);
+        }
+    }
+}
+
+#[test]
+fn serving_from_a_quant_base_passes_the_masked_bitwise_gate() {
+    let base = store_with(71, &[("emb", 300), ("w", 517)]);
+    let mask =
+        Arc::new(SparseMask::top_k(&base, &[0, 1], 128, Sensitivity::Magnitude).unwrap());
+    let mut rng = Pcg::new(72);
+    let recs: Vec<StepRecord> = (0..6)
+        .map(|_| StepRecord {
+            seed: rng.next_u64(),
+            pgrad: rng.next_f32() - 0.5,
+            lr: 1e-3,
+        })
+        .collect();
+    let log = Trajectory::from_run(vec!["emb".into(), "w".into()], &recs)
+        .with_mask_digest(mask.digest());
+
+    let mut dense_srv = ServeStore::new(base.clone(), ServeConfig::default());
+    dense_srv.admit(1, UserLog::masked(log.clone(), Arc::clone(&mask))).unwrap();
+    let want = dense_srv.get(1).unwrap();
+
+    for bits in [QBits::Int8, QBits::Int4] {
+        let q = QuantStore::quantize(&base, bits, Some(&mask)).unwrap();
+        let mut srv = ServeStore::new_quant(q, ServeConfig::default());
+        srv.admit(1, UserLog::masked(log.clone(), Arc::clone(&mask))).unwrap();
+        let got = srv.get(1).unwrap();
+        // the serving gate: every masked coordinate of a tenant served
+        // from the quantized base is bitwise the dense-base serving result
+        assert_eq!(masked_bits(&got, &mask), masked_bits(&want, &mask), "{:?}", bits);
+        // and the cached path is bitwise the uncached reference path
+        assert_eq!(
+            masked_bits(&got, &mask),
+            masked_bits(&srv.materialize_fresh(1).unwrap(), &mask)
+        );
+    }
+}
