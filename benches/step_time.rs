@@ -25,7 +25,11 @@
 //! measures the block-quantized SensZOQ store — ns/coord of the
 //! dequantize→update→requantize quant kernels against the dense f32
 //! kernels at matched thread counts, plus the memory-per-replica table
-//! (`quant_kernels_bench`). Results land
+//! (`quant_kernels_bench`); a ninth times the 4-pass composite at each
+//! `MEZO_OBS` level to bound the observability tax — the acceptance gate
+//! is < 2% at the default counters level (`obs_overhead_bench`), and the
+//! run also drops a `Registry::render_text` Prometheus snapshot into
+//! OBS_snapshot.prom. Results land
 //! in BENCH_zkernel.json so the perf trajectory is tracked across PRs;
 //! `scripts/bench_summary.py` distills per-group medians into the small
 //! committed BENCH_summary.json.
@@ -749,6 +753,67 @@ fn quant_kernels_bench() -> Vec<Json> {
     out
 }
 
+/// Bench 9: the observability tax. The 4-pass perturb+update composite
+/// (the hot path every instrumented kernel entry point rides) timed at
+/// each `MEZO_OBS` level via `obs::set_level` — off, counters (the
+/// default), spans — with each row reporting percent overhead against
+/// the off baseline at the same (d, threads). The acceptance gate is
+/// < 2% at the counters level; `scripts/bench_summary.py` folds the
+/// per-level medians into the committed trajectory as
+/// `obs_overhead_pct`. The process level is restored afterwards.
+/// Results land in BENCH_zkernel.json under "obs_overhead".
+fn obs_overhead_bench() -> Vec<Json> {
+    use mezo::obs::{self, Level};
+
+    let stream = GaussianStream::new(0x0B5);
+    let (lr, g, wd, eps) = (1e-4f32, 0.37f32, 1e-5f32, 1e-3f32);
+    let thread_grid: &[usize] = if quick() { &[1, 4] } else { &[1, 4, 8] };
+    let levels =
+        [("off", Level::Off), ("counters", Level::Counters), ("spans", Level::Spans)];
+    let prev = obs::level();
+    let mut out = Vec::new();
+    for &d in &sizes() {
+        // the deltas are tiny fractions of a step: extra medians, like
+        // the pool-dispatch bench
+        let reps = reps_for(d) * 2 + 1;
+        let mut theta = vec![0.01f32; d];
+        let mut worst = 0.0f64;
+        for &t in thread_grid {
+            let eng = ZEngine::with_threads(t);
+            // warm the pool so one-time worker growth stays out of the reps
+            eng.axpy_z(stream, 0, &mut theta, eps);
+            let mut level_s = Vec::with_capacity(levels.len());
+            for &(_, lv) in &levels {
+                obs::set_level(lv);
+                level_s.push(time(reps, || {
+                    eng.axpy_z(stream, 0, &mut theta, eps);
+                    eng.axpy_z(stream, 0, &mut theta, -2.0 * eps);
+                    eng.axpy_z(stream, 0, &mut theta, eps);
+                    eng.sgd_update(stream, 0, &mut theta, lr, g, wd);
+                }));
+            }
+            let off_s = level_s[0];
+            for (&(name, _), &s) in levels.iter().zip(&level_s) {
+                let pct = (s / off_s - 1.0) * 100.0;
+                if name == "counters" {
+                    worst = worst.max(pct);
+                }
+                out.push(obj(vec![
+                    ("d", Json::from(d as f64)),
+                    ("threads", Json::from(t as f64)),
+                    ("level", Json::from(name)),
+                    ("step_s", Json::from(s)),
+                    ("off_step_s", Json::from(off_s)),
+                    ("overhead_pct", Json::from(pct)),
+                ]));
+            }
+        }
+        println!("d={:>9}: worst counters-level obs overhead {:+.2}%", d, worst);
+    }
+    obs::set_level(prev);
+    out
+}
+
 fn main() {
     let rows = zkernel_bench();
     let fzoo_rows = fzoo_vs_mezo_bench();
@@ -758,6 +823,7 @@ fn main() {
     let simd_rows = simd_dispatch_bench();
     let wire_rows = wire_transport_bench();
     let quant_rows = quant_kernels_bench();
+    let obs_rows = obs_overhead_bench();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let report = obj(vec![
         ("bench", Json::from("zkernel")),
@@ -771,9 +837,15 @@ fn main() {
         ("simd_dispatch", Json::Arr(simd_rows)),
         ("wire_transport", Json::Arr(wire_rows)),
         ("quant_kernels", Json::Arr(quant_rows)),
+        ("obs_overhead", Json::Arr(obs_rows)),
     ]);
     std::fs::write("BENCH_zkernel.json", report.to_string()).expect("write BENCH_zkernel.json");
     println!("wrote BENCH_zkernel.json ({} rows)", rows.len());
+    // the live-metrics snapshot of everything the bench run just did —
+    // CI bench-smoke uploads this alongside the JSON trajectory
+    std::fs::write("OBS_snapshot.prom", mezo::obs::Registry::render_text())
+        .expect("write OBS_snapshot.prom");
+    println!("wrote OBS_snapshot.prom");
 
     #[cfg(feature = "pjrt")]
     {

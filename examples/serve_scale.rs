@@ -20,6 +20,7 @@
 
 use mezo::model::meta::TensorDesc;
 use mezo::model::params::ParamStore;
+use mezo::obs::Histo;
 use mezo::optim::mezo::StepRecord;
 use mezo::rng::Pcg;
 use mezo::serve::{ServeConfig, ServeStore, UserLog};
@@ -175,13 +176,20 @@ fn main() {
             ServeStore::new(base_store(d), ServeConfig { cache_capacity: cap });
         admit_users(&mut serve, &mut rng, n_users, &trainable).expect("admit population");
 
+        // one Timer per request: the exact ns reading feeds BOTH the
+        // float summary (the committed JSON keys) and an obs-layer
+        // log2 histogram (the same type the serving spans feed), whose
+        // coarse tail is reported alongside as hist_p99_ns
         let mut lat_ms: Vec<f64> = Vec::with_capacity(n_reqs);
+        let lat_hist = Histo::new();
         let wall = Timer::start();
         for _ in 0..n_reqs {
             let user = zipf.sample(&mut rng) as u64;
             let t = Timer::start();
             serve.get(user).expect("serve a registered user");
-            lat_ms.push(t.ms());
+            let ns = t.ns();
+            lat_hist.record(ns);
+            lat_ms.push(ns as f64 / 1e6);
         }
         let total_s = wall.secs();
         let st = serve.stats();
@@ -213,6 +221,8 @@ fn main() {
             ("p90_ms", Json::from(lat.p90)),
             ("p99_ms", Json::from(lat.p99)),
             ("mean_ms", Json::from(lat.mean)),
+            ("hist_p50_ns", Json::from(lat_hist.snapshot().p50() as f64)),
+            ("hist_p99_ns", Json::from(lat_hist.snapshot().p99() as f64)),
         ]));
     }
 

@@ -15,10 +15,19 @@
 //! on expiry the worker exits nonzero, so an orphaned worker whose
 //! coordinator died mid-command does not linger.
 //!
+//! `--metrics-dump` prints a `Registry::render_text` Prometheus
+//! snapshot to stderr on the orderly shutdown path: after the session
+//! in `--connect` mode, after EVERY completed session in `--listen`
+//! mode. (The substrate is pure stdlib, so there is no SIGTERM handler
+//! to hook — a supervisor that wants a final scrape sends Shutdown or
+//! closes the connection rather than SIGKILL.) Metric levels come from
+//! `MEZO_OBS` as everywhere else.
+//!
 //! Thread count / SIMD tier come from the usual `MEZO_THREADS` /
 //! `MEZO_SIMD` environment, so a fleet inherits the verify matrix.
 
 use anyhow::{bail, Result};
+use mezo::obs;
 use mezo::util::args::Args;
 use mezo::wire::{ShardWorker, TcpTransport};
 use std::net::{TcpListener, TcpStream};
@@ -35,13 +44,18 @@ fn main() -> Result<()> {
                 .map_err(|_| anyhow::anyhow!("--timeout-ms takes an integer, got '{}'", s))
         })
         .transpose()?;
+    let metrics_dump = args.bool("metrics-dump", false);
 
     match (args.flags.get("connect"), args.flags.get("listen")) {
         (Some(addr), None) => {
             let stream = TcpStream::connect(addr.as_str())
                 .map_err(|e| anyhow::anyhow!("mezo-worker: connect {}: {}", addr, e))?;
             let mut transport = TcpTransport::new(stream, timeout)?;
-            ShardWorker::new().serve(&mut transport)?;
+            let served = ShardWorker::new().serve(&mut transport);
+            if metrics_dump {
+                eprint!("{}", obs::Registry::render_text());
+            }
+            served?;
             Ok(())
         }
         (None, Some(addr)) => {
@@ -52,13 +66,20 @@ fn main() -> Result<()> {
             for stream in listener.incoming() {
                 let mut transport = TcpTransport::new(stream?, timeout)?;
                 if let Err(e) = ShardWorker::new().serve(&mut transport) {
-                    eprintln!("mezo-worker: session ended: {}", e);
+                    obs::event::warn(
+                        "mezo-worker",
+                        &format!("mezo-worker: session ended: {}", e),
+                    );
+                }
+                if metrics_dump {
+                    eprint!("{}", obs::Registry::render_text());
                 }
             }
             Ok(())
         }
         _ => bail!(
-            "usage: mezo-worker (--connect HOST:PORT | --listen HOST:PORT) [--timeout-ms N]"
+            "usage: mezo-worker (--connect HOST:PORT | --listen HOST:PORT) \
+             [--timeout-ms N] [--metrics-dump]"
         ),
     }
 }

@@ -24,15 +24,25 @@ use crate::util::json::{obj, Json};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 
+/// Shared experiment context: the PJRT runtime, the vocabulary, the
+/// quick/full scale switch, and where result JSON lands.
 pub struct Ctx {
+    /// The artifact runtime every cell executes against.
     pub rt: Runtime,
+    /// The synthetic-task vocabulary (fixed across all experiments).
     pub vocab: Vocab,
+    /// Quick mode: shrunk step counts / test sets for CI smoke runs.
     pub quick: bool,
+    /// Directory receiving one `<name>.json` record per table.
     pub out_dir: PathBuf,
+    /// Pre-training steps for checkpoints built on demand.
     pub pretrain_steps: usize,
 }
 
 impl Ctx {
+    /// Build a context from the environment: `Runtime::from_env()` plus
+    /// a `runs/results` output directory (override the root with
+    /// `MEZO_RUNS`).
     pub fn new(quick: bool) -> Result<Ctx> {
         let rt = Runtime::from_env()?;
         let out_dir = PathBuf::from(
@@ -43,6 +53,7 @@ impl Ctx {
         Ok(Ctx { rt, vocab: Vocab::standard(), quick, out_dir, pretrain_steps: 3000 })
     }
 
+    /// Pick the full-run or quick-mode value of a size knob.
     pub fn scale(&self, full: usize, quick: usize) -> usize {
         if self.quick {
             quick
@@ -51,6 +62,7 @@ impl Ctx {
         }
     }
 
+    /// The artifact name for a (family, size, mode, tuning) cell.
     pub fn art(&self, family: &str, size: &str, mode: &str, tuning: &str) -> String {
         pretrain::artifact_name(family, size, mode, tuning)
     }
@@ -66,6 +78,8 @@ impl Ctx {
         Ok(())
     }
 
+    /// An [`Evaluator`] over the cell's loss artifact (plus the logits
+    /// artifact when one exists for greedy decoding).
     pub fn evaluator(&self, family: &str, size: &str, tuning: &str) -> Result<Evaluator> {
         let loss = self.rt.load(&self.art(family, size, "loss", tuning))?;
         let logits_name = self.art(family, size, "logits", tuning);
@@ -125,6 +139,8 @@ impl Ctx {
         Ok(())
     }
 
+    /// Generate a task's prompted train/val/test splits at this
+    /// context's scale.
     pub fn task_data(&self, task: Task, n_train: usize, seed: u64) -> TaskData {
         let n_test = self.scale(192, 96);
         generate(
@@ -134,6 +150,7 @@ impl Ctx {
         )
     }
 
+    /// Write one result record to `<out_dir>/<name>.json`.
     pub fn write_json(&self, name: &str, value: &Json) -> Result<()> {
         let path = self.out_dir.join(format!("{}.json", name));
         std::fs::write(&path, value.to_string())?;
@@ -144,18 +161,43 @@ impl Ctx {
 /// One method cell in a results table.
 #[derive(Debug, Clone)]
 pub enum Method {
+    /// No adaptation: evaluate the pre-trained model as-is.
     ZeroShot,
-    Icl { demos: usize },
+    /// In-context learning with `demos` demonstrations in the prompt.
+    Icl {
+        /// demonstrations prepended per test example
+        demos: usize,
+    },
+    /// Logistic-regression linear probe over frozen features.
     LinearProbe,
-    Mezo { tuning: &'static str, flavor: Flavor, cfg: Option<MezoConfig> },
-    Ft { tuning: &'static str, flavor: FtFlavor, lr: Option<f32> },
+    /// MeZO fine-tuning under a tuning mode (full / prefix / lora).
+    Mezo {
+        /// parameter-efficiency mode: "full", "prefix" or "lora"
+        tuning: &'static str,
+        /// update rule (SGD / momentum / Adam)
+        flavor: Flavor,
+        /// explicit hyperparameters; `None` = the per-tuning defaults
+        cfg: Option<MezoConfig>,
+    },
+    /// Backprop fine-tuning under a tuning mode.
+    Ft {
+        /// parameter-efficiency mode: "full", "prefix" or "lora"
+        tuning: &'static str,
+        /// optimizer (SGD / Adam)
+        flavor: FtFlavor,
+        /// explicit learning rate; `None` = [`default_ft_lr`]
+        lr: Option<f32>,
+    },
+    /// Table 19's linear-probe-then-MeZO warm start.
     LpMezo,
 }
 
 impl Method {
+    /// MeZO-SGD under `tuning` with default hyperparameters.
     pub fn mezo(tuning: &'static str) -> Method {
         Method::Mezo { tuning, flavor: Flavor::Sgd, cfg: None }
     }
+    /// The method's row label, matching the paper's tables.
     pub fn name(&self) -> String {
         match self {
             Method::ZeroShot => "Zero-shot".into(),
@@ -187,6 +229,7 @@ pub fn default_mezo_cfg(tuning: &str, steps: usize) -> MezoConfig {
     MezoConfig { lr, eps, total_steps: steps, ..Default::default() }
 }
 
+/// Default backprop-FT learning rate per tuning mode.
 pub fn default_ft_lr(tuning: &str) -> f32 {
     match tuning {
         "prefix" | "lora" => 1e-3,
@@ -194,13 +237,20 @@ pub fn default_ft_lr(tuning: &str) -> f32 {
     }
 }
 
+/// What one executed cell reports back to its table.
 #[derive(Debug, Clone, Default)]
 pub struct RunOut {
+    /// test metric (accuracy or F1, task-dependent)
     pub score: f64,
+    /// exact-match rate for generation tasks (0 elsewhere)
     pub em: f64,
+    /// best validation metric seen during training
     pub best_val: f64,
+    /// total forward passes consumed (the ZO budget axis)
     pub forward_passes: usize,
+    /// (step, val metric) checkpoints
     pub val_curve: Vec<(usize, f64)>,
+    /// (step, train loss) samples
     pub train_curve: Vec<(usize, f32)>,
 }
 

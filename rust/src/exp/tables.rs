@@ -1,7 +1,14 @@
 //! One driver per paper exhibit. Each prints the paper-shaped rows and
 //! persists a JSON record under runs/results/ (consumed by EXPERIMENTS.md).
+//!
+//! Progress goes through the structured event log ([`crate::obs::event`]):
+//! per-cell ticks as sub-line dots, per-row completions as info events
+//! (same stderr text as the `eprintln!` lines they replaced, so CI greps
+//! keep working; `MEZO_LOG=warn` silences them, `MEZO_OBS_JSONL` records
+//! them). Table output itself is program output and stays on stdout.
 
 use super::{default_mezo_cfg, pct, print_table, run_method, table_json, Ctx, Method};
+use crate::obs::event;
 use crate::data::tasks::{generate, GenOpts, Task, TaskType, OPT_TASKS, ROBERTA_TASKS};
 use crate::memory::{self, Method as MemMethod, PROFILED_METHODS, SIZES};
 use crate::optim::ft::FtFlavor;
@@ -44,9 +51,9 @@ pub fn table1(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
         for &task in OPT_TASKS.iter() {
             let data = ctx.task_data(task, n_train, 0);
             row.push(cell(run_method(ctx, family, size, task, &data, m, 0)));
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" {}", m.name());
+        event::info("exp", &format!(" {}", m.name()));
         rows.push(row);
     }
     let title = format!("Table 1 / Figure 1 — {}-{} on the 11-task suite", family, size);
@@ -90,9 +97,9 @@ pub fn table18(ctx: &Ctx, size: &str) -> Result<()> {
                 let n = k * task.n_classes();
                 let data = ctx.task_data(task, n, 0);
                 row.push(cell(run_method(ctx, family, size, task, &data, m, 0)));
-                eprint!(".");
+                event::progress_tick();
             }
-            eprintln!(" k={} {}", k, m.name());
+            event::info("exp", &format!(" k={} {}", k, m.name()));
             rows.push(row);
         }
     }
@@ -120,9 +127,9 @@ pub fn table2(ctx: &Ctx) -> Result<()> {
             for &task in &tasks {
                 let data = ctx.task_data(task, ctx.scale(256, 128), 0);
                 row.push(cell(run_method(ctx, "ar", size, task, &data, m, 0)));
-                eprint!(".");
+                event::progress_tick();
             }
-            eprintln!(" {} {}", size, m.name());
+            event::info("exp", &format!(" {} {}", size, m.name()));
             rows.push(row);
         }
     }
@@ -161,11 +168,11 @@ pub fn table3(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
         for &task in cls_tasks.iter() {
             let data = ctx.task_data(task, ctx.scale(256, 128), 0);
             row.push(cell(run_method(ctx, family, size, task, &data, &m, 0)));
-            eprint!(".");
+            event::progress_tick();
         }
         let data = ctx.task_data(Task::Squad, ctx.scale(256, 128), 0);
         row.push(cell(run_method(ctx, family, size, Task::Squad, &data, &m, 0)));
-        eprintln!(" {}", m.name());
+        event::info("exp", &format!(" {}", m.name()));
         rows.push(row);
     }
     // non-differentiable objective row: accuracy for cls, F1 for squad
@@ -201,9 +208,9 @@ pub fn table3(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
                 }
                 Err(_) => row.push(na()),
             }
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" nondiff");
+        event::info("exp", " nondiff");
         rows.push(row);
     }
     let title = format!("Table 3 — non-differentiable objectives ({}-{})", family, size);
@@ -230,9 +237,9 @@ pub fn table5(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
             });
             row.push(cell(run_method(ctx, family, size, task, &data,
                                      &Method::mezo("full"), 0)));
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" {}", label);
+        event::info("exp", &format!(" {}", label));
         rows.push(row);
     }
     let title = "Table 5 — prompt vs no-prompt (MeZO, k=16)";
@@ -269,9 +276,9 @@ pub fn table6(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
             let data = ctx.task_data(task, 16 * task.n_classes(), 0);
             let m = Method::Mezo { tuning: "full", flavor: Flavor::Sgd, cfg: Some(cfg) };
             row.push(cell(run_method(ctx, family, size, task, &data, &m, 0)));
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" {}", label);
+        event::info("exp", &format!(" {}", label));
         rows.push(row);
     }
     let title = format!("Table 6 — n-SPSA schedules at {} forward passes", budget);
@@ -329,9 +336,9 @@ pub fn table8910(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
                 Ok(ev.evaluate(&params, task, &data.test)?.score)
             })();
             row.push(score.map(pct).unwrap_or_else(|_| na()));
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" {}", label);
+        event::info("exp", &format!(" {}", label));
         rows.push(row);
     }
     let title = "Tables 8/9/10 — variance/expectation-modified SPSA (k=16)";
@@ -363,9 +370,9 @@ pub fn table11(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
             let data = ctx.task_data(task, 16 * task.n_classes(), 0);
             let m = Method::Mezo { tuning: "full", flavor: Flavor::Sgd, cfg: Some(cfg) };
             row.push(cell(run_method(ctx, family, size, task, &data, &m, 0)));
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" {}", label);
+        event::info("exp", &format!(" {}", label));
         rows.push(row);
     }
     let title = "Table 11 — SPSA vs one-point estimator";
@@ -478,9 +485,9 @@ pub fn table17(ctx: &Ctx) -> Result<()> {
                 Ok(ev.evaluate(&params, task, &data.test)?.score)
             })();
             row.push(score.map(pct).unwrap_or_else(|_| na()));
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" {}", label);
+        event::info("exp", &format!(" {}", label));
         rows.push(row);
     }
     let title = "Table 17 — prefix-tuning init ablation (FT-prefix, mlm-small)";
@@ -501,9 +508,9 @@ pub fn table19(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
         for &task in &tasks {
             let data = ctx.task_data(task, 16 * task.n_classes(), 0);
             row.push(cell(run_method(ctx, family, size, task, &data, m, 0)));
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" {}", m.name());
+        event::info("exp", &format!(" {}", m.name()));
         rows.push(row);
     }
     let title = "Table 19 — LP, MeZO, LP-then-MeZO (k=16)";
@@ -552,9 +559,9 @@ pub fn table21(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
                 Ok(ev.evaluate(&params, task, &data.test)?.score)
             })();
             row.push(score.map(pct).unwrap_or_else(|_| na()));
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" BBT");
+        event::info("exp", " BBT");
         rows.push(row);
     }
     for m in [Method::mezo("full"), Method::mezo("lora"), Method::mezo("prefix")] {
@@ -562,9 +569,9 @@ pub fn table21(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
         for &task in &tasks {
             let data = ctx.task_data(task, 16 * task.n_classes(), 0);
             row.push(cell(run_method(ctx, family, size, task, &data, &m, 0)));
-            eprint!(".");
+            event::progress_tick();
         }
-        eprintln!(" {}", m.name());
+        event::info("exp", &format!(" {}", m.name()));
         rows.push(row);
     }
     let title = "Table 21 — MeZO vs BBTv2-style baseline (k=16)";
@@ -654,9 +661,9 @@ pub fn table23(ctx: &Ctx) -> Result<()> {
         fused_row.push(fused_ms.map(|x| format!("{:.1}ms", x)).unwrap_or_else(na));
         ft_row.push(format!("{:.1}ms", ft_ms));
         ratio_row.push(format!("{:.2}x", ft_ms / fast_ms));
-        eprint!(".");
+        event::progress_tick();
     }
-    eprintln!(" table23");
+    event::info("exp", " table23");
     let rows = vec![mezo_row, fast_row, fused_row, ft_row, ratio_row];
     let title = "Table 23 — wall-clock per step (B=8, S=64, 1 CPU core)";
     print_table(title, &header, &rows);
@@ -677,7 +684,7 @@ pub fn figure5(ctx: &Ctx, family: &str, size: &str) -> Result<()> {
             "full" => "full", "lora" => "lora", _ => "prefix" },
             flavor: Flavor::Sgd, cfg: Some(cfg) };
         let out = run_method(ctx, family, size, task, &data, &m, 0)?;
-        eprintln!("figure5: {} final {:.3}", tuning, out.score);
+        event::info("exp", &format!("figure5: {} final {:.3}", tuning, out.score));
         series.push((tuning.to_string(), out.val_curve));
     }
     println!("\n=== Figure 5 — MeZO convergence, full vs LoRA vs prefix ({}) ===", task.name());
@@ -734,7 +741,7 @@ pub fn run(ctx: &Ctx, id: &str, family: &str, size: &str) -> Result<()> {
                        "figure5", "table1", "table18", "table2", "table17"] {
                 println!("\n########## {} ##########", id);
                 if let Err(e) = run(ctx, id, family, size) {
-                    eprintln!("[exp {}] failed: {:#}", id, e);
+                    event::error("exp", &format!("[exp {}] failed: {:#}", id, e));
                 }
             }
             Ok(())
@@ -743,6 +750,7 @@ pub fn run(ctx: &Ctx, id: &str, family: &str, size: &str) -> Result<()> {
     }
 }
 
+/// Every id [`run`] accepts, for the CLI's usage text.
 pub const EXPERIMENT_IDS: [&str; 16] = [
     "table1", "table18", "table2", "table3", "table5", "table6", "table8910",
     "table11", "table17", "table19", "table21", "table22", "table23",

@@ -1,0 +1,193 @@
+//! Level-filtered structured event log.
+//!
+//! Every event has a severity ([`EventLevel`]), a `target` (the
+//! subsystem emitting it) and a message. Two sinks:
+//!
+//! * **stderr** — the human-readable message, printed verbatim when
+//!   the event's level passes the `MEZO_LOG` threshold (default
+//!   `info`). At the default threshold the text output is
+//!   byte-identical to the `eprintln!` lines this module replaced, so
+//!   existing CI greps keep working.
+//! * **JSONL** — when `MEZO_OBS_JSONL` names a file, EVERY event is
+//!   appended to it as one JSON object per line, regardless of the
+//!   stderr threshold (`MEZO_LOG` filters what a human sees, not what
+//!   the machine record keeps).
+//!
+//! Both knobs are read once per process. The event log is deliberately
+//! independent of the `MEZO_OBS` metrics level: flipping metrics off
+//! for a bit-identity run must not change what the program prints.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Event severity, most severe first (so `lv <= threshold` means
+/// "at least as severe as the threshold allows").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventLevel {
+    /// Operation failed; the program is giving up on something.
+    Error = 0,
+    /// Something went wrong but was recovered or tolerated.
+    Warn = 1,
+    /// Normal operational milestones — the default threshold.
+    Info = 2,
+    /// High-volume diagnostic detail, off by default.
+    Debug = 3,
+}
+
+impl EventLevel {
+    /// The `level` field value in the JSONL record.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventLevel::Error => "error",
+            EventLevel::Warn => "warn",
+            EventLevel::Info => "info",
+            EventLevel::Debug => "debug",
+        }
+    }
+}
+
+/// The stderr threshold (`MEZO_LOG`), parsed once per process.
+/// Accepts `error|warn|info|debug` (case-insensitive) or `0`–`3`;
+/// unset or empty means [`EventLevel::Info`]; anything else panics
+/// loudly, like the `zkernel` knobs.
+pub fn threshold() -> EventLevel {
+    static THRESHOLD: OnceLock<EventLevel> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| match std::env::var("MEZO_LOG") {
+        Err(_) => EventLevel::Info,
+        Ok(s) => match s.trim().to_ascii_lowercase().as_str() {
+            "" | "info" | "2" => EventLevel::Info,
+            "error" | "0" => EventLevel::Error,
+            "warn" | "1" => EventLevel::Warn,
+            "debug" | "3" => EventLevel::Debug,
+            other => panic!(
+                "MEZO_LOG={:?} is not a recognized level (use error, warn, info or debug)",
+                other
+            ),
+        },
+    })
+}
+
+/// Whether an event at `lv` would be printed to stderr.
+#[inline]
+pub fn enabled(lv: EventLevel) -> bool {
+    lv <= threshold()
+}
+
+/// The JSONL sink: opened append/create from `MEZO_OBS_JSONL` once;
+/// `None` when the knob is unset or the open fails (an event log must
+/// never take the process down).
+fn jsonl_sink() -> Option<&'static Mutex<File>> {
+    static SINK: OnceLock<Option<Mutex<File>>> = OnceLock::new();
+    SINK.get_or_init(|| {
+        let path = std::env::var("MEZO_OBS_JSONL").ok()?;
+        if path.is_empty() {
+            return None;
+        }
+        let f = OpenOptions::new().create(true).append(true).open(&path);
+        match f {
+            Ok(f) => Some(Mutex::new(f)),
+            Err(e) => {
+                eprintln!("obs: cannot open MEZO_OBS_JSONL={:?}: {}", path, e);
+                None
+            }
+        }
+    })
+    .as_ref()
+}
+
+/// Escape a string for a JSON string literal (quotes, backslashes,
+/// control characters).
+fn json_escape(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Emit one event: verbatim `msg` to stderr when [`enabled`], and a
+/// `{"ts_ms":…,"level":…,"target":…,"msg":…}` line to the JSONL sink
+/// (always, when configured).
+pub fn emit(lv: EventLevel, target: &str, msg: &str) {
+    if enabled(lv) {
+        eprintln!("{}", msg);
+    }
+    if let Some(sink) = jsonl_sink() {
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0);
+        let mut line = String::with_capacity(msg.len() + target.len() + 64);
+        line.push_str("{\"ts_ms\":");
+        line.push_str(&ts_ms.to_string());
+        line.push_str(",\"level\":\"");
+        line.push_str(lv.name());
+        line.push_str("\",\"target\":\"");
+        json_escape(target, &mut line);
+        line.push_str("\",\"msg\":\"");
+        json_escape(msg, &mut line);
+        line.push_str("\"}\n");
+        if let Ok(mut f) = sink.lock() {
+            // best-effort: a full disk must not take the worker down
+            let _ = f.write_all(line.as_bytes());
+        }
+    }
+}
+
+/// [`emit`] at [`EventLevel::Error`].
+pub fn error(target: &str, msg: &str) {
+    emit(EventLevel::Error, target, msg);
+}
+
+/// [`emit`] at [`EventLevel::Warn`].
+pub fn warn(target: &str, msg: &str) {
+    emit(EventLevel::Warn, target, msg);
+}
+
+/// [`emit`] at [`EventLevel::Info`].
+pub fn info(target: &str, msg: &str) {
+    emit(EventLevel::Info, target, msg);
+}
+
+/// [`emit`] at [`EventLevel::Debug`].
+pub fn debug(target: &str, msg: &str) {
+    emit(EventLevel::Debug, target, msg);
+}
+
+/// A sub-line progress tick: `.` to stderr with no newline when info
+/// events are enabled, nothing to the JSONL sink (dots are cosmetic
+/// pacing, not events). Used by the `exp` table runners.
+pub fn progress_tick() {
+    if enabled(EventLevel::Info) {
+        eprint!(".");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(EventLevel::Error < EventLevel::Warn);
+        assert!(EventLevel::Warn < EventLevel::Info);
+        assert!(EventLevel::Info < EventLevel::Debug);
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        let mut out = String::new();
+        json_escape("a\"b\\c\nd\te\u{1}", &mut out);
+        assert_eq!(out, "a\\\"b\\\\c\\nd\\te\\u0001");
+    }
+}

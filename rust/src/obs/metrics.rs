@@ -1,0 +1,397 @@
+//! The static metric registry: every counter, gauge and histogram the
+//! instrumented hot seams feed, plus [`Registry::render_text`], the
+//! Prometheus text exposition of the whole set.
+//!
+//! Metrics are `static`s constructed `const` — registration is the act
+//! of adding a static here and a line to the renderer, so the hot path
+//! never takes a lock, never hashes a name, and never allocates.
+//! Label sets are fixed arrays indexed by small enums
+//! ([`KernelFamily`]) or a closed name table ([`MSG_KINDS`]).
+
+use super::{Counter, Gauge, Histo, HistoSnapshot};
+
+/// The kernel families the `zkernel` engine dispatches, one dispatch
+/// counter and latency histogram per family. Masked variants count
+/// under their base family; shard wrappers delegate to the dense entry
+/// points and are therefore counted there automatically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelFamily {
+    /// `fill_z` — Gaussian stream materialization.
+    Fill = 0,
+    /// `axpy_z` (+ masked) — `theta += scale * z`.
+    Axpy = 1,
+    /// `perturb_into` (+ masked) — out-of-place perturbation.
+    PerturbInto = 2,
+    /// `sgd_update` (+ masked) — fused single-seed SGD step.
+    Sgd = 3,
+    /// `multi_sgd_update` (+ masked) — fused k-seed SGD step.
+    MultiSgd = 4,
+    /// `fzoo_update` (+ masked) — FZOO-normalized update.
+    Fzoo = 5,
+    /// `multi_axpy_z` (+ masked) — k-seed accumulated perturbation.
+    MultiAxpy = 6,
+    /// `momentum_update` — heavy-ball buffer + step.
+    Momentum = 7,
+    /// `adam_update` — Adam moments + step.
+    Adam = 8,
+    /// `ema_z` — exponential moving average toward the z stream.
+    Ema = 9,
+    /// `project_rows` — row-subset projection.
+    Project = 10,
+}
+
+impl KernelFamily {
+    /// Number of families (length of the per-family metric arrays).
+    pub const COUNT: usize = 11;
+
+    /// Every family, in index order.
+    pub const ALL: [KernelFamily; KernelFamily::COUNT] = [
+        KernelFamily::Fill,
+        KernelFamily::Axpy,
+        KernelFamily::PerturbInto,
+        KernelFamily::Sgd,
+        KernelFamily::MultiSgd,
+        KernelFamily::Fzoo,
+        KernelFamily::MultiAxpy,
+        KernelFamily::Momentum,
+        KernelFamily::Adam,
+        KernelFamily::Ema,
+        KernelFamily::Project,
+    ];
+
+    /// The `family=` label value in the exposition.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelFamily::Fill => "fill",
+            KernelFamily::Axpy => "axpy",
+            KernelFamily::PerturbInto => "perturb_into",
+            KernelFamily::Sgd => "sgd",
+            KernelFamily::MultiSgd => "multi_sgd",
+            KernelFamily::Fzoo => "fzoo",
+            KernelFamily::MultiAxpy => "multi_axpy",
+            KernelFamily::Momentum => "momentum",
+            KernelFamily::Adam => "adam",
+            KernelFamily::Ema => "ema",
+            KernelFamily::Project => "project",
+        }
+    }
+}
+
+// const-item repeat seeds for the static arrays; the interior
+// mutability is the point (see clippy::declare_interior_mutable_const)
+#[allow(clippy::declare_interior_mutable_const)]
+const C0: Counter = Counter::new();
+#[allow(clippy::declare_interior_mutable_const)]
+const H0: Histo = Histo::new();
+
+/// Dispatch count per [`KernelFamily`] (`mezo_kernel_dispatches_total`).
+pub static KERNEL_DISPATCHES: [Counter; KernelFamily::COUNT] =
+    [C0; KernelFamily::COUNT];
+
+/// Wall-clock nanoseconds per dispatch, per [`KernelFamily`]
+/// (`mezo_kernel_ns`; populated only at span level).
+pub static KERNEL_NS: [Histo; KernelFamily::COUNT] = [H0; KernelFamily::COUNT];
+
+/// Helper jobs handed to the worker pool by `run_jobs`
+/// (`mezo_pool_jobs_enqueued_total`; the caller's own slice is not a
+/// job, so a k-way carve enqueues k − 1).
+pub static POOL_JOBS_ENQUEUED: Counter = Counter::new();
+
+/// Times the pool grew its worker set (`mezo_pool_grow_events_total`).
+pub static POOL_GROW_EVENTS: Counter = Counter::new();
+
+/// Live pool worker threads (`mezo_pool_workers`).
+pub static POOL_WORKERS: Gauge = Gauge::new();
+
+/// Slots in the per-message-kind metric arrays: the 13 MZW1 frame
+/// kinds plus a trailing `other` catch-all.
+pub const MSG_KIND_SLOTS: usize = 14;
+
+/// The `kind=` label values, aligned with `Msg::kind_name()` (pinned
+/// by wire tests); index 13 is the `other` catch-all.
+pub static MSG_KINDS: [&str; MSG_KIND_SLOTS] = [
+    "hello",
+    "ack",
+    "nack",
+    "plan",
+    "manifest",
+    "log",
+    "load_shard",
+    "perturb",
+    "update",
+    "replay",
+    "fetch_shard",
+    "shard_slice",
+    "shutdown",
+    "other",
+];
+
+/// Metric-array slot for a `Msg::kind_name()` string (unknown names
+/// land in the trailing `other` slot).
+pub fn msg_kind_index(name: &str) -> usize {
+    MSG_KINDS
+        .iter()
+        .position(|&k| k == name)
+        .unwrap_or(MSG_KIND_SLOTS - 1)
+}
+
+/// Fleet-side RPC round-trip nanoseconds per request kind
+/// (`mezo_fleet_rpc_ns`; includes retries and respawn time).
+pub static FLEET_RPC_NS: [Histo; MSG_KIND_SLOTS] = [H0; MSG_KIND_SLOTS];
+
+/// Fleet RPC attempts beyond the first (`mezo_fleet_retries_total`).
+pub static FLEET_RETRIES: Counter = Counter::new();
+
+/// Worker processes respawned after transport failure
+/// (`mezo_fleet_respawns_total`).
+pub static FLEET_RESPAWNS: Counter = Counter::new();
+
+/// Nack frames received by the fleet (`mezo_fleet_nacks_total`).
+pub static FLEET_NACKS: Counter = Counter::new();
+
+/// Frames received by a `ShardWorker`, per kind
+/// (`mezo_worker_frames_total`).
+pub static WORKER_FRAMES: [Counter; MSG_KIND_SLOTS] = [C0; MSG_KIND_SLOTS];
+
+/// Inbound frames rejected for a digest mismatch
+/// (`mezo_worker_digest_failures_total`).
+pub static WORKER_DIGEST_FAILURES: Counter = Counter::new();
+
+/// Nack frames sent by a `ShardWorker` (`mezo_worker_nacks_total`).
+pub static WORKER_NACKS: Counter = Counter::new();
+
+/// Serving requests (`mezo_serve_requests_total`).
+pub static SERVE_REQUESTS: Counter = Counter::new();
+
+/// Requests answered from the materialization cache
+/// (`mezo_serve_hits_total`).
+pub static SERVE_HITS: Counter = Counter::new();
+
+/// Requests that missed the cache (`mezo_serve_misses_total`).
+pub static SERVE_MISSES: Counter = Counter::new();
+
+/// Cache entries invalidated by trajectory growth
+/// (`mezo_serve_stale_total`).
+pub static SERVE_STALE: Counter = Counter::new();
+
+/// Cache entries evicted for capacity (`mezo_serve_evictions_total`).
+pub static SERVE_EVICTIONS: Counter = Counter::new();
+
+/// Trajectory replays materialized (`mezo_serve_materializations_total`).
+pub static SERVE_MATERIALIZATIONS: Counter = Counter::new();
+
+/// Requests served straight from base weights
+/// (`mezo_serve_base_served_total`).
+pub static SERVE_BASE_SERVED: Counter = Counter::new();
+
+/// Cache-hit service nanoseconds (`mezo_serve_hit_ns`).
+pub static SERVE_HIT_NS: Histo = Histo::new();
+
+/// Miss-path materialization nanoseconds (`mezo_serve_materialize_ns`).
+pub static SERVE_MATERIALIZE_NS: Histo = Histo::new();
+
+/// Optimizer steps completed (`mezo_opt_steps_total`).
+pub static OPT_STEPS: Counter = Counter::new();
+
+/// Forward passes consumed by stepping
+/// (`mezo_opt_forward_passes_total`).
+pub static OPT_FORWARD_PASSES: Counter = Counter::new();
+
+/// Loss from the most recent optimizer step (`mezo_opt_loss`).
+pub static OPT_LOSS: Gauge = Gauge::new();
+
+/// Handle for whole-registry operations — currently
+/// [`Registry::render_text`], the Prometheus snapshot.
+#[derive(Debug, Clone, Copy)]
+pub struct Registry;
+
+impl Registry {
+    /// Render every metric in Prometheus text exposition format.
+    ///
+    /// Counters and gauges become plain `name{labels} value` lines
+    /// under a `# TYPE` header; histograms are rendered summary-style:
+    /// `quantile="0.5|0.9|0.99"` lines (log2-resolution upper bounds,
+    /// see [`HistoSnapshot::percentile`]) plus `_sum` and `_count`.
+    /// Zero-valued series are included, so the output shape is
+    /// deterministic (pinned in `tests/obs.rs`).
+    pub fn render_text() -> String {
+        let mut out = String::with_capacity(8 * 1024);
+
+        out.push_str("# TYPE mezo_kernel_dispatches_total counter\n");
+        for f in KernelFamily::ALL {
+            push_labeled(
+                &mut out,
+                "mezo_kernel_dispatches_total",
+                "family",
+                f.name(),
+                KERNEL_DISPATCHES[f as usize].get(),
+            );
+        }
+        out.push_str("# TYPE mezo_kernel_ns summary\n");
+        for f in KernelFamily::ALL {
+            push_summary(
+                &mut out,
+                "mezo_kernel_ns",
+                Some(("family", f.name())),
+                &KERNEL_NS[f as usize].snapshot(),
+            );
+        }
+
+        push_scalar_counter(&mut out, "mezo_pool_jobs_enqueued_total", &POOL_JOBS_ENQUEUED);
+        push_scalar_counter(&mut out, "mezo_pool_grow_events_total", &POOL_GROW_EVENTS);
+        push_gauge(&mut out, "mezo_pool_workers", &POOL_WORKERS);
+
+        out.push_str("# TYPE mezo_fleet_rpc_ns summary\n");
+        for (i, kind) in MSG_KINDS.iter().enumerate() {
+            push_summary(
+                &mut out,
+                "mezo_fleet_rpc_ns",
+                Some(("kind", kind)),
+                &FLEET_RPC_NS[i].snapshot(),
+            );
+        }
+        push_scalar_counter(&mut out, "mezo_fleet_retries_total", &FLEET_RETRIES);
+        push_scalar_counter(&mut out, "mezo_fleet_respawns_total", &FLEET_RESPAWNS);
+        push_scalar_counter(&mut out, "mezo_fleet_nacks_total", &FLEET_NACKS);
+
+        out.push_str("# TYPE mezo_worker_frames_total counter\n");
+        for (i, kind) in MSG_KINDS.iter().enumerate() {
+            push_labeled(
+                &mut out,
+                "mezo_worker_frames_total",
+                "kind",
+                kind,
+                WORKER_FRAMES[i].get(),
+            );
+        }
+        push_scalar_counter(
+            &mut out,
+            "mezo_worker_digest_failures_total",
+            &WORKER_DIGEST_FAILURES,
+        );
+        push_scalar_counter(&mut out, "mezo_worker_nacks_total", &WORKER_NACKS);
+
+        push_scalar_counter(&mut out, "mezo_serve_requests_total", &SERVE_REQUESTS);
+        push_scalar_counter(&mut out, "mezo_serve_hits_total", &SERVE_HITS);
+        push_scalar_counter(&mut out, "mezo_serve_misses_total", &SERVE_MISSES);
+        push_scalar_counter(&mut out, "mezo_serve_stale_total", &SERVE_STALE);
+        push_scalar_counter(&mut out, "mezo_serve_evictions_total", &SERVE_EVICTIONS);
+        push_scalar_counter(
+            &mut out,
+            "mezo_serve_materializations_total",
+            &SERVE_MATERIALIZATIONS,
+        );
+        push_scalar_counter(&mut out, "mezo_serve_base_served_total", &SERVE_BASE_SERVED);
+        out.push_str("# TYPE mezo_serve_hit_ns summary\n");
+        push_summary(&mut out, "mezo_serve_hit_ns", None, &SERVE_HIT_NS.snapshot());
+        out.push_str("# TYPE mezo_serve_materialize_ns summary\n");
+        push_summary(
+            &mut out,
+            "mezo_serve_materialize_ns",
+            None,
+            &SERVE_MATERIALIZE_NS.snapshot(),
+        );
+
+        push_scalar_counter(&mut out, "mezo_opt_steps_total", &OPT_STEPS);
+        push_scalar_counter(
+            &mut out,
+            "mezo_opt_forward_passes_total",
+            &OPT_FORWARD_PASSES,
+        );
+        push_gauge(&mut out, "mezo_opt_loss", &OPT_LOSS);
+
+        out
+    }
+}
+
+fn push_labeled(out: &mut String, name: &str, key: &str, val: &str, v: u64) {
+    out.push_str(name);
+    out.push('{');
+    out.push_str(key);
+    out.push_str("=\"");
+    out.push_str(val);
+    out.push_str("\"} ");
+    out.push_str(&v.to_string());
+    out.push('\n');
+}
+
+fn push_scalar_counter(out: &mut String, name: &str, c: &Counter) {
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push_str(" counter\n");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&c.get().to_string());
+    out.push('\n');
+}
+
+fn push_gauge(out: &mut String, name: &str, g: &Gauge) {
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push_str(" gauge\n");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&g.get().to_string());
+    out.push('\n');
+}
+
+fn push_summary(
+    out: &mut String,
+    name: &str,
+    label: Option<(&str, &str)>,
+    s: &HistoSnapshot,
+) {
+    for (q, v) in [(0.5, s.p50()), (0.9, s.p90()), (0.99, s.p99())] {
+        out.push_str(name);
+        out.push('{');
+        if let Some((k, val)) = label {
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(val);
+            out.push_str("\",");
+        }
+        out.push_str("quantile=\"");
+        out.push_str(&q.to_string());
+        out.push_str("\"} ");
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    for (suffix, v) in [("_sum", s.sum()), ("_count", s.count())] {
+        out.push_str(name);
+        out.push_str(suffix);
+        if let Some((k, val)) = label {
+            out.push('{');
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(val);
+            out.push_str("\"}");
+        }
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_kind_index_covers_all_wire_kinds() {
+        for (i, kind) in MSG_KINDS.iter().enumerate() {
+            assert_eq!(msg_kind_index(kind), i);
+        }
+        assert_eq!(msg_kind_index("no_such_kind"), MSG_KIND_SLOTS - 1);
+        assert_eq!(MSG_KINDS[MSG_KIND_SLOTS - 1], "other");
+    }
+
+    #[test]
+    fn family_names_are_distinct() {
+        for (i, a) in KernelFamily::ALL.iter().enumerate() {
+            assert_eq!(*a as usize, i);
+            for b in &KernelFamily::ALL[i + 1..] {
+                assert_ne!(a.name(), b.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,437 @@
+//! obs — process-wide, stdlib-only observability: counters, gauges,
+//! latency histograms, span timing, structured events, and a
+//! Prometheus-text snapshot.
+//!
+//! The system spans SIMD kernels, a TCP worker fleet with churn
+//! recovery, a multi-tenant serving cache and quantized stores; its
+//! runtime visibility used to be ad-hoc `eprintln!` lines plus offline
+//! bench JSON. This module is the single home for live metrics:
+//!
+//! * [`Counter`] / [`Gauge`] — relaxed atomics, level-gated.
+//! * [`Histo`] — fixed [`HISTO_BUCKETS`] log2-bucket latency histogram
+//!   with p50/p90/p99 [`HistoSnapshot`]s; lock-free, allocation-free.
+//! * [`Span`] — RAII timing guard that records elapsed nanoseconds into
+//!   a histogram on drop (only when spans are enabled).
+//! * [`event`] — the level-filtered structured event log (human text on
+//!   stderr via `MEZO_LOG`, JSONL sink via `MEZO_OBS_JSONL`).
+//! * [`metrics`] — the static metric registry for the instrumented hot
+//!   seams (kernels, pool, wire fleet/worker, serving, optimizer) and
+//!   [`Registry::render_text`], the Prometheus text exposition.
+//!
+//! # Environment knobs
+//!
+//! * `MEZO_OBS` — the metrics level: `0` off, `1` counters/gauges
+//!   (the default when unset), `2` counters plus span timing (clock
+//!   reads feeding the latency histograms). Unlike the `zkernel` knobs
+//!   this one is NOT latched in a `OnceLock`: [`set_level`] lets tests
+//!   and benches flip the level inside one process (the neutrality
+//!   suite and the `obs_overhead` bench group depend on that). A bogus
+//!   value panics, like `MEZO_SIMD`.
+//! * `MEZO_LOG` — stderr event threshold: `error|warn|info|debug`
+//!   (default `info`). See [`event`].
+//! * `MEZO_OBS_JSONL` — path of an append-only JSONL file receiving
+//!   every structured event. Unset: no structured sink.
+//!
+//! # Neutrality
+//!
+//! Observability must be invisible to the numerics — the crate's
+//! bit-identity story is its crown jewel. Instrumentation therefore
+//! only ever reads clocks and bumps atomics: it never touches an f32
+//! buffer, never changes chunk carving or z-counter math, and never
+//! allocates on the kernel hot path (metrics are `static`s; a disabled
+//! level costs one relaxed load and a branch). `tests/obs.rs` pins
+//! dense/masked/shard/quant stepping and replay `to_bits()`-identical
+//! under `MEZO_OBS=0` vs `MEZO_OBS=2`, re-run by `scripts/verify.sh`
+//! under the full `MEZO_THREADS` × `MEZO_SIMD` matrix, and the
+//! `obs_overhead` bench group bounds the default-level step-time tax.
+
+pub mod event;
+pub mod metrics;
+
+pub use metrics::Registry;
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::time::Instant;
+
+/// The process observability level (`MEZO_OBS`). Ordered: each level
+/// includes everything below it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Metrics fully disabled: counters, gauges and spans are no-ops.
+    Off = 0,
+    /// Counters and gauges on — the default. No clock reads.
+    Counters = 1,
+    /// Counters plus span timing: RAII guards read the clock and feed
+    /// the latency histograms.
+    Spans = 2,
+}
+
+/// Sentinel for "not read from the environment yet".
+const LEVEL_UNINIT: u8 = 0xFF;
+
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNINIT);
+
+/// The current observability level: one relaxed atomic load on the
+/// fast path; the first call per process reads `MEZO_OBS`.
+#[inline]
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Off,
+        1 => Level::Counters,
+        2 => Level::Spans,
+        _ => init_level(),
+    }
+}
+
+/// Cold path of [`level`]: parse `MEZO_OBS` once and latch the result
+/// (until a [`set_level`] override).
+#[cold]
+fn init_level() -> Level {
+    let lv = match std::env::var("MEZO_OBS") {
+        Err(_) => Level::Counters,
+        Ok(s) => match s.trim() {
+            "" | "1" => Level::Counters,
+            "0" => Level::Off,
+            "2" => Level::Spans,
+            other => panic!(
+                "MEZO_OBS={:?} is not a recognized level (use 0, 1 or 2)",
+                other
+            ),
+        },
+    };
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+    lv
+}
+
+/// Override the process observability level, beating `MEZO_OBS`.
+///
+/// The hook the in-process neutrality tests and the `obs_overhead`
+/// bench group use to compare levels without respawning; takes effect
+/// for every subsequent metric call in the process. Never affects
+/// numerics — only whether atomics are bumped and clocks read.
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+/// Whether counters and gauges are live (`MEZO_OBS >= 1`).
+#[inline]
+pub fn counting() -> bool {
+    level() >= Level::Counters
+}
+
+/// Whether span timing is live (`MEZO_OBS >= 2`).
+#[inline]
+pub fn spans() -> bool {
+    level() >= Level::Spans
+}
+
+/// A monotonically increasing event count (relaxed atomic). Gated on
+/// [`counting`]; construction is `const`, so counters live in statics
+/// and the hot path never allocates.
+#[derive(Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A zeroed counter (`const`: usable in statics).
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add 1 (no-op below [`Level::Counters`]).
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n` (no-op below [`Level::Counters`]).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if counting() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// A last-value-wins instantaneous measurement (f64 bits in a relaxed
+/// atomic) — loss, live worker count. Gated on [`counting`].
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// A gauge reading 0.0 (`const`: usable in statics).
+    pub const fn new() -> Gauge {
+        // f64 0.0 is the all-zero bit pattern
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Set the value (no-op below [`Level::Counters`]).
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if counting() {
+            self.0.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+/// Buckets per [`Histo`]: one per power of two, covering the full u64
+/// range (bucket `b` holds values with `floor(log2(v)) == b`; 0 and 1
+/// both land in bucket 0).
+pub const HISTO_BUCKETS: usize = 64;
+
+/// A fixed log2-bucket histogram of u64 observations (latency in
+/// nanoseconds, by convention). Lock-free and allocation-free: an
+/// observation is two relaxed `fetch_add`s; bucket resolution is one
+/// `leading_zeros`.
+///
+/// Unlike [`Counter`]/[`Gauge`], [`Histo::record`] is NOT level-gated:
+/// gating belongs to whoever reads the clock (a [`Span`], or a caller
+/// like `examples/serve_scale.rs` that always wants its sample).
+#[derive(Debug)]
+pub struct Histo {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Histo {
+    /// An empty histogram (`const`: usable in statics).
+    pub const fn new() -> Histo {
+        // interior mutability is the whole point of an atomic cell; the
+        // const is only the repeat seed for the bucket array
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histo { buckets: [ZERO; HISTO_BUCKETS], sum: AtomicU64::new(0) }
+    }
+
+    /// The bucket index holding `v`: `floor(log2(v))`, with 0 mapped to
+    /// bucket 0. Always `< HISTO_BUCKETS`.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (63 - v.leading_zeros()) as usize
+        }
+    }
+
+    /// Inclusive upper bound of bucket `b` (`2^(b+1) − 1`; the last
+    /// bucket saturates at `u64::MAX`).
+    #[inline]
+    pub fn bucket_upper(b: usize) -> u64 {
+        if b >= HISTO_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (2u64 << b) - 1
+        }
+    }
+
+    /// Record one observation. Two relaxed atomic adds; never gated,
+    /// never allocates.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Histo::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the buckets. Buckets are read
+    /// individually (relaxed), so a snapshot taken under concurrent
+    /// recording is a valid histogram of *some* subset of the
+    /// observations — counts are never lost, only possibly not yet
+    /// visible (pinned in `tests/obs.rs`).
+    pub fn snapshot(&self) -> HistoSnapshot {
+        let mut counts = [0u64; HISTO_BUCKETS];
+        for (c, b) in counts.iter_mut().zip(self.buckets.iter()) {
+            *c = b.load(Ordering::Relaxed);
+        }
+        HistoSnapshot { counts, sum: self.sum.load(Ordering::Relaxed) }
+    }
+}
+
+impl Default for Histo {
+    fn default() -> Histo {
+        Histo::new()
+    }
+}
+
+/// A point-in-time copy of a [`Histo`]'s buckets, with nearest-rank
+/// percentile queries.
+#[derive(Debug, Clone)]
+pub struct HistoSnapshot {
+    counts: [u64; HISTO_BUCKETS],
+    sum: u64,
+}
+
+impl HistoSnapshot {
+    /// Total observations in the snapshot.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Sum of all observed values (mean = `sum / count`).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Per-bucket counts (index by [`Histo::bucket_of`]).
+    pub fn buckets(&self) -> &[u64; HISTO_BUCKETS] {
+        &self.counts
+    }
+
+    /// The nearest-rank `q`-quantile (`0.0 ..= 1.0`), reported as the
+    /// inclusive upper bound of the bucket containing that rank — a
+    /// conservative (never under-reporting) log2-resolution estimate.
+    /// 0 on an empty snapshot.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (((total - 1) as f64) * q.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Histo::bucket_upper(b);
+            }
+        }
+        Histo::bucket_upper(HISTO_BUCKETS - 1)
+    }
+
+    /// Median ([`HistoSnapshot::percentile`] at 0.5).
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.5)
+    }
+
+    /// 90th percentile.
+    pub fn p90(&self) -> u64 {
+        self.percentile(0.9)
+    }
+
+    /// 99th percentile — the latency tail.
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+}
+
+/// RAII span guard: started against a [`Histo`], records the elapsed
+/// nanoseconds into it on drop. Reads the clock ONLY at
+/// [`Level::Spans`]; below that, construction and drop are a relaxed
+/// load and a branch each.
+#[must_use = "a span records on drop; binding it to _ drops immediately"]
+#[derive(Debug)]
+pub struct Span<'a> {
+    inner: Option<(Instant, &'a Histo)>,
+}
+
+impl<'a> Span<'a> {
+    /// Start timing into `h` (inert below [`Level::Spans`]).
+    #[inline]
+    pub fn start(h: &'a Histo) -> Span<'a> {
+        Span { inner: if spans() { Some((Instant::now(), h)) } else { None } }
+    }
+}
+
+impl Drop for Span<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some((t0, h)) = self.inner.take() {
+            h.record(u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX));
+        }
+    }
+}
+
+/// `Some(now)` iff spans are enabled — the manual-timing twin of
+/// [`Span`] for paths where one measurement feeds one of several
+/// histograms (serve hit vs. materialize).
+#[inline]
+pub fn clock() -> Option<Instant> {
+    if spans() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Record the elapsed nanoseconds since a [`clock`] reading into `h`
+/// (no-op on `None`).
+#[inline]
+pub fn record_since(t0: Option<Instant>, h: &Histo) {
+    if let Some(t0) = t0 {
+        h.record(u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX));
+    }
+}
+
+/// Count one kernel dispatch for `family` and (at [`Level::Spans`])
+/// start a span into the family's latency histogram. The single call
+/// every instrumented `ZEngine` entry point makes:
+///
+/// ```
+/// use mezo::obs::{self, metrics::KernelFamily};
+/// let _span = obs::kernel_dispatch(KernelFamily::Axpy);
+/// // ... kernel body runs; the span records on scope exit ...
+/// ```
+#[inline]
+pub fn kernel_dispatch(family: metrics::KernelFamily) -> Span<'static> {
+    metrics::KERNEL_DISPATCHES[family as usize].inc();
+    Span::start(&metrics::KERNEL_NS[family as usize])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_exact_powers_of_two() {
+        assert_eq!(Histo::bucket_of(0), 0);
+        assert_eq!(Histo::bucket_of(1), 0);
+        assert_eq!(Histo::bucket_of(2), 1);
+        assert_eq!(Histo::bucket_of(3), 1);
+        assert_eq!(Histo::bucket_of(4), 2);
+        for b in 1..HISTO_BUCKETS {
+            let lo = 1u64 << b;
+            assert_eq!(Histo::bucket_of(lo), b);
+            assert_eq!(Histo::bucket_of(lo - 1), b - 1);
+        }
+        assert_eq!(Histo::bucket_of(u64::MAX), HISTO_BUCKETS - 1);
+        assert_eq!(Histo::bucket_upper(0), 1);
+        assert_eq!(Histo::bucket_upper(10), 2047);
+        assert_eq!(Histo::bucket_upper(HISTO_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn percentiles_report_bucket_upper_bounds() {
+        let h = Histo::new();
+        for v in [1u64, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.sum(), 1106);
+        // ranks 0..=4: values 1,2,3,100,1000 → p50 is rank 2 (value 3,
+        // bucket 1, upper 3); p99 is rank 4 (bucket 9, upper 1023)
+        assert_eq!(s.p50(), 3);
+        assert_eq!(s.p99(), 1023);
+        assert_eq!(Histo::new().snapshot().percentile(0.5), 0);
+    }
+}

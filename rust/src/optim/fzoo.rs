@@ -501,6 +501,9 @@ impl Fzoo {
         };
         self.history.extend(recs);
         self.step += 1;
+        crate::obs::metrics::OPT_STEPS.inc();
+        crate::obs::metrics::OPT_FORWARD_PASSES.add((n + 1) as u64);
+        crate::obs::metrics::OPT_LOSS.set(l0 as f64);
         Ok(StepInfo {
             loss: l0,
             pgrad: last.pgrad,

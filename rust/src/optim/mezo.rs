@@ -389,6 +389,9 @@ impl MezoSgd {
         };
         self.history.extend(records.iter().copied());
         self.step += 1;
+        crate::obs::metrics::OPT_STEPS.inc();
+        crate::obs::metrics::OPT_FORWARD_PASSES.add(fwd as u64);
+        crate::obs::metrics::OPT_LOSS.set(mean_loss as f64);
         Ok(StepInfo { loss: mean_loss, pgrad: last.pgrad, seed: last.seed, forward_passes: fwd })
     }
 

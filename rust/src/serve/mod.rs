@@ -49,6 +49,7 @@
 use crate::model::params::ParamStore;
 use crate::model::quant::QuantStore;
 use crate::model::Theta;
+use crate::obs::{self, metrics};
 use crate::shard::{ShardPlan, ShardedStore};
 use crate::storage::Trajectory;
 use crate::zkernel::{SparseMask, ZEngine};
@@ -103,6 +104,11 @@ impl UserLog {
 }
 
 /// Serving counters, reset with [`ServeStore::reset_stats`].
+///
+/// Per-store and exact (plain fields, not gated) — tests pin precise
+/// tuples against them. Each increment is mirrored into the process-wide
+/// [`crate::obs`] registry (`mezo_serve_*`), which additionally times the
+/// hit and materialize paths at span level.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServeStats {
     /// total [`ServeStore::get`] calls
@@ -371,6 +377,8 @@ impl ServeStore {
     /// concurrent holder of the same materialization sees the same bits.
     pub fn get(&mut self, user: u64) -> Result<Arc<ParamStore>> {
         self.stats.requests += 1;
+        metrics::SERVE_REQUESTS.inc();
+        let t0 = obs::clock();
         let ulog = match self.users.get(&user) {
             Some(u) => u,
             None => bail!("serve: unknown user {}", user),
@@ -380,6 +388,7 @@ impl ServeStore {
             if let ServeBase::Dense(base) = &self.base {
                 // an empty log IS the base — copy-on-write's "no write" arm
                 self.stats.base_served += 1;
+                metrics::SERVE_BASE_SERVED.inc();
                 return Ok(Arc::clone(base));
             }
             // a quantized base cannot be handed out as dense parameters;
@@ -396,6 +405,8 @@ impl ServeStore {
                     entry.tick = self.tick;
                     self.recency.insert(self.tick, user);
                     self.stats.hits += 1;
+                    metrics::SERVE_HITS.inc();
+                    obs::record_since(t0, &metrics::SERVE_HIT_NS);
                     return Ok(Arc::clone(&entry.store));
                 }
                 stale = true;
@@ -403,6 +414,7 @@ impl ServeStore {
         }
         // miss (or stale refresh): materialize into a recycled buffer
         self.stats.misses += 1;
+        metrics::SERVE_MISSES.inc();
         let mut store = match self.free.pop() {
             Some(s) => s,
             None => self.base.to_param_store(),
@@ -414,8 +426,11 @@ impl ServeStore {
             return Err(e);
         }
         self.stats.materializations += 1;
+        metrics::SERVE_MATERIALIZATIONS.inc();
+        obs::record_since(t0, &metrics::SERVE_MATERIALIZE_NS);
         if stale {
             self.stats.stale += 1;
+            metrics::SERVE_STALE.inc();
             self.drop_cached(user);
         }
         let arc = Arc::new(store);
@@ -473,6 +488,7 @@ impl ServeStore {
             self.recency.remove(&victim.0);
             if let Some(entry) = self.cache.remove(&victim.1) {
                 self.stats.evictions += 1;
+                metrics::SERVE_EVICTIONS.inc();
                 // a still-borrowed materialization keeps living with its
                 // holders; only sole-owned buffers return to the pool
                 if let Ok(store) = Arc::try_unwrap(entry.store) {

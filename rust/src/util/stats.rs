@@ -2,7 +2,9 @@
 
 use std::time::Instant;
 
-/// Simple wall-clock timer.
+/// Simple wall-clock timer: one `Instant` with unit-converting readers.
+/// The single timing primitive for benches, examples and the obs layer —
+/// hand-rolled `Instant::now()` deltas belong here instead.
 pub struct Timer(Instant);
 
 impl Timer {
@@ -17,6 +19,12 @@ impl Timer {
     /// Milliseconds elapsed since [`Timer::start`].
     pub fn ms(&self) -> f64 {
         self.secs() * 1e3
+    }
+    /// Whole nanoseconds elapsed since [`Timer::start`], saturating at
+    /// `u64::MAX` (~585 years) — the unit the obs-layer latency
+    /// histograms ([`crate::obs::Histo::record`]) take.
+    pub fn ns(&self) -> u64 {
+        u64::try_from(self.0.elapsed().as_nanos()).unwrap_or(u64::MAX)
     }
 }
 

@@ -34,6 +34,7 @@
 use super::frame::{Msg, WireError};
 use super::transport::Transport;
 use crate::model::params::ParamStore;
+use crate::obs::{self, metrics};
 use crate::optim::mezo::{StepInfo, StepRecord};
 use crate::rng::Pcg;
 use crate::shard::ShardPlan;
@@ -210,6 +211,9 @@ impl Fleet {
         self.history.extend(records.iter().copied());
         self.step += 1;
         let last = records.last().expect("n >= 1");
+        metrics::OPT_STEPS.inc();
+        metrics::OPT_FORWARD_PASSES.add(fwd as u64);
+        metrics::OPT_LOSS.set(mean_loss as f64);
         Ok(StepInfo { loss: mean_loss, pgrad: last.pgrad, seed: last.seed, forward_passes: fwd })
     }
 
@@ -284,6 +288,8 @@ impl Fleet {
     /// re-drive) and retry, up to `cfg.max_retries` times; protocol
     /// refusals abort immediately.
     fn rpc(&mut self, k: usize, msg: &Msg) -> Result<Msg> {
+        let _rtt =
+            obs::Span::start(&metrics::FLEET_RPC_NS[metrics::msg_kind_index(msg.kind_name())]);
         let mut attempts = 0usize;
         loop {
             let err = match self.attempt(k, msg) {
@@ -292,6 +298,7 @@ impl Fleet {
                 Err(CallErr::Churn(e)) => e,
             };
             attempts += 1;
+            metrics::FLEET_RETRIES.inc();
             if attempts > self.cfg.max_retries {
                 return Err(anyhow::Error::new(err).context(format!(
                     "Fleet: worker {} still failing after {} respawn attempts",
@@ -311,12 +318,15 @@ impl Fleet {
         let t = &mut self.workers[k];
         t.send(msg).map_err(CallErr::Churn)?;
         match t.recv().map_err(CallErr::Churn)? {
-            Msg::Nack { message } => Err(CallErr::Fatal(anyhow::anyhow!(
-                "Fleet: worker {} refused {}: {}",
-                k,
-                msg.kind_name(),
-                message
-            ))),
+            Msg::Nack { message } => {
+                metrics::FLEET_NACKS.inc();
+                Err(CallErr::Fatal(anyhow::anyhow!(
+                    "Fleet: worker {} refused {}: {}",
+                    k,
+                    msg.kind_name(),
+                    message
+                )))
+            }
             reply => Ok(reply),
         }
     }
@@ -325,6 +335,11 @@ impl Fleet {
     /// re-drive happens lazily on the next [`Fleet::attempt`].
     fn respawn(&mut self, k: usize, cause: &WireError) -> Result<()> {
         self.respawns += 1;
+        metrics::FLEET_RESPAWNS.inc();
+        obs::event::debug(
+            "fleet",
+            &format!("Fleet: respawning worker {} after {}", k, cause.kind_name()),
+        );
         self.workers[k] = (self.spawn)(k).map_err(|e| {
             e.context(format!(
                 "Fleet: respawning worker {} after transport failure ({})",

@@ -18,6 +18,7 @@
 
 use super::frame::{Msg, WireError};
 use super::transport::Transport;
+use crate::obs::metrics;
 use crate::rng::GaussianStream;
 use crate::shard::ShardPlan;
 use crate::storage::Trajectory;
@@ -74,14 +75,22 @@ impl ShardWorker {
                 // decode-level failure: the frame was delivered but is
                 // corrupt or skewed — tell the peer loudly, keep serving
                 Err(e) => {
+                    if e.kind_name() == "bad_digest" {
+                        metrics::WORKER_DIGEST_FAILURES.inc();
+                    }
+                    metrics::WORKER_NACKS.inc();
                     transport.send(&Msg::Nack { message: e.to_string() })?;
                     continue;
                 }
             };
+            metrics::WORKER_FRAMES[metrics::msg_kind_index(msg.kind_name())].inc();
             let shutdown = matches!(msg, Msg::Shutdown);
             let reply = match self.handle(msg) {
                 Ok(r) => r,
-                Err(e) => Msg::Nack { message: e.to_string() },
+                Err(e) => {
+                    metrics::WORKER_NACKS.inc();
+                    Msg::Nack { message: e.to_string() }
+                }
             };
             transport.send(&reply)?;
             if shutdown {

@@ -56,6 +56,16 @@
 //! * `MEZO_PIN` — set to `0` to disable best-effort worker→core pinning
 //!   and huge-page/first-touch hints (`numa.rs`). Any other value (or
 //!   unset) leaves them on. Never affects results, only locality.
+//! * `MEZO_OBS` — observability level for [`crate::obs`]: `0` off, `1`
+//!   counters (default), `2` counters + span timing. The one deliberate
+//!   exception to the latch rule: [`crate::obs::set_level`] can override
+//!   it in-process so the neutrality tests and the `obs_overhead` bench
+//!   can compare levels without respawning. Bogus values PANIC. Never
+//!   affects results — obs only reads clocks and bumps atomics.
+//! * `MEZO_LOG` — stderr threshold for the structured event log
+//!   (`error|warn|info|debug`, default `info`). See [`crate::obs::event`].
+//! * `MEZO_OBS_JSONL` — append-only JSONL file receiving every
+//!   structured event. Unset → no machine-readable sink.
 //!
 //! Precedence: an explicit constructor argument (`with_threads(n)`,
 //! `with_threads_simd(n, tier)`) always beats the environment; the
@@ -124,6 +134,7 @@ pub use mask::{Sensitivity, SparseMask};
 pub use quant::{QBits, QuantTensorMut, QuantTensorRef, QBLOCK};
 pub use simd::Tier;
 
+use crate::obs::{self, metrics::KernelFamily};
 use crate::rng::GaussianStream;
 use std::sync::OnceLock;
 
@@ -466,6 +477,7 @@ impl ZEngine {
 
     /// out[j] = z(offset + j).
     pub fn fill_z(&self, stream: GaussianStream, offset: u64, out: &mut [f32]) {
+        let _obs = obs::kernel_dispatch(KernelFamily::Fill);
         let sf = self.simd.simd_fill();
         self.run(out, PAR_MIN, |start, chunk| {
             stream.fill_dispatch(chunk, offset + start as u64, sf);
@@ -512,6 +524,7 @@ impl ZEngine {
     /// assert!(theta.iter().all(|&x| (x - 1.0).abs() < 1e-6));
     /// ```
     pub fn axpy_z(&self, stream: GaussianStream, offset: u64, theta: &mut [f32], s: f32) {
+        let _obs = obs::kernel_dispatch(KernelFamily::Axpy);
         let tier = self.simd;
         self.run(theta, PAR_MIN, |start, chunk| {
             kernels::axpy_serial(tier, stream, offset + start as u64, chunk, s);
@@ -528,6 +541,7 @@ impl ZEngine {
         s: f32,
         out: &mut [f32],
     ) {
+        let _obs = obs::kernel_dispatch(KernelFamily::PerturbInto);
         let tier = self.simd;
         self.run_src(theta, out, PAR_MIN, |start, src, chunk| {
             kernels::perturb_into_serial(tier, stream, offset + start as u64, src, s, chunk);
@@ -544,6 +558,7 @@ impl ZEngine {
         g: f32,
         wd: f32,
     ) {
+        let _obs = obs::kernel_dispatch(KernelFamily::Sgd);
         let tier = self.simd;
         self.run(theta, PAR_MIN, |start, chunk| {
             kernels::sgd_serial(tier, stream, offset + start as u64, chunk, lr, g, wd);
@@ -564,6 +579,7 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let _obs = obs::kernel_dispatch(KernelFamily::MultiSgd);
         let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run(theta, min, |start, chunk| {
@@ -588,6 +604,7 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let _obs = obs::kernel_dispatch(KernelFamily::Fzoo);
         let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run(theta, min, |start, chunk| {
@@ -603,6 +620,7 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let _obs = obs::kernel_dispatch(KernelFamily::MultiAxpy);
         let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run(theta, min, |start, chunk| {
@@ -627,6 +645,7 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let _obs = obs::kernel_dispatch(KernelFamily::Momentum);
         let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run2(theta, m, min, |start, th, mk| {
@@ -657,6 +676,7 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let _obs = obs::kernel_dispatch(KernelFamily::Adam);
         let tier = self.simd;
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run3(theta, m, v, min, |start, th, mk, vk| {
@@ -677,6 +697,7 @@ impl ZEngine {
         beta: f32,
         adam_style: bool,
     ) {
+        let _obs = obs::kernel_dispatch(KernelFamily::Ema);
         let tier = self.simd;
         self.run(m, PAR_MIN, |start, chunk| {
             kernels::ema_serial(
@@ -703,6 +724,7 @@ impl ZEngine {
         out: &mut [f32],
     ) {
         assert_eq!(v.len(), d_low, "zkernel: projection input length != d_low");
+        let _obs = obs::kernel_dispatch(KernelFamily::Project);
         let tier = self.simd;
         let min = (PAR_MIN / d_low.max(1)).max(1);
         self.run_src(base, out, min, |start, b, chunk| {
@@ -730,6 +752,7 @@ impl ZEngine {
         theta: &mut [f32],
         s: f32,
     ) {
+        let _obs = obs::kernel_dispatch(KernelFamily::Axpy);
         check_mask(idxs, theta.len());
         self.run_masked(idxs, theta, PAR_MIN, |ci, base, chunk| {
             kernels::masked_axpy_serial(stream, offset, ci, base, chunk, s);
@@ -749,6 +772,7 @@ impl ZEngine {
         s: f32,
         out: &mut [f32],
     ) {
+        let _obs = obs::kernel_dispatch(KernelFamily::PerturbInto);
         check_mask(idxs, theta.len());
         self.run_src_masked(idxs, theta, out, PAR_MIN, |ci, base, src, chunk| {
             kernels::masked_perturb_into_serial(stream, offset, ci, base, src, s, chunk);
@@ -768,6 +792,7 @@ impl ZEngine {
         g: f32,
         wd: f32,
     ) {
+        let _obs = obs::kernel_dispatch(KernelFamily::Sgd);
         check_mask(idxs, theta.len());
         self.run_masked(idxs, theta, PAR_MIN, |ci, base, chunk| {
             kernels::masked_sgd_serial(stream, offset, ci, base, chunk, lr, g, wd);
@@ -788,6 +813,7 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let _obs = obs::kernel_dispatch(KernelFamily::MultiSgd);
         check_mask(idxs, theta.len());
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run_masked(idxs, theta, min, |ci, base, chunk| {
@@ -809,6 +835,7 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let _obs = obs::kernel_dispatch(KernelFamily::Fzoo);
         check_mask(idxs, theta.len());
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run_masked(idxs, theta, min, |ci, base, chunk| {
@@ -829,6 +856,7 @@ impl ZEngine {
         if zs.is_empty() {
             return;
         }
+        let _obs = obs::kernel_dispatch(KernelFamily::MultiAxpy);
         check_mask(idxs, theta.len());
         let min = (PAR_MIN / zs.len()).max(BLOCK);
         self.run_masked(idxs, theta, min, |ci, base, chunk| {

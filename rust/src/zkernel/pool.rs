@@ -107,7 +107,8 @@ impl Pool {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
         };
-        let mut have = self.workers.load(Ordering::Relaxed);
+        let before = self.workers.load(Ordering::Relaxed);
+        let mut have = before;
         while have < want {
             let idx = have;
             let spawned = std::thread::Builder::new()
@@ -123,6 +124,14 @@ impl Pool {
             }
         }
         self.workers.store(have, Ordering::Relaxed);
+        if have > before {
+            crate::obs::metrics::POOL_GROW_EVENTS.inc();
+            crate::obs::metrics::POOL_WORKERS.set(have as f64);
+            crate::obs::event::debug(
+                "zkernel",
+                &format!("zkernel: pool grew {} -> {} workers", before, have),
+            );
+        }
         have
     }
 
@@ -199,6 +208,7 @@ pub(super) fn run_jobs(mut jobs: Vec<Job<'_>>) {
         return;
     }
     let p = pool();
+    crate::obs::metrics::POOL_JOBS_ENQUEUED.add(jobs.len() as u64);
     // Size to the aggregate in-flight helper demand, not just this
     // dispatch's chunk count: with two callers each fanning out 7 helper
     // jobs concurrently, the pool grows to 14 workers, matching the

@@ -93,6 +93,13 @@ def summarize(report):
         summary["quant_replica_compression_x"] = _median_ns(
             report["quant_kernels"], "replica_compression_x", ["bits"]
         )
+    # observability tax: median percent overhead of the 4-pass composite
+    # vs the MEZO_OBS=0 baseline, per level — the "counters" entry is the
+    # < 2% acceptance number (default-level tax)
+    if report.get("obs_overhead"):
+        summary["obs_overhead_pct"] = _median_ns(
+            report["obs_overhead"], "overhead_pct", ["level"]
+        )
     # FZOO vs MeZO at matched budgets: median step speedup per budget
     if report.get("fzoo_vs_mezo"):
         summary["fzoo_speedup_vs_mezo"] = _median_ns(

@@ -94,6 +94,12 @@ for t in 1 2 8; do
         # bound, and masked-coordinate bit-identity with the dense path
         # through kernels, stepping, replay and serving
         MEZO_THREADS=$t MEZO_SIMD=$s cargo test -q --release --test quant
+        # observability neutrality: with full span timing enabled,
+        # dense/masked/shard/quant stepping, replay and serving must stay
+        # to_bits()-identical to MEZO_OBS=0 (the suite flips levels
+        # in-process via obs::set_level and compares)
+        MEZO_THREADS=$t MEZO_SIMD=$s MEZO_OBS=2 \
+            cargo test -q --release --test obs
     done
 done
 

@@ -1,0 +1,293 @@
+//! Acceptance suite for the observability layer: the neutrality gate
+//! (the crown jewel — flipping `MEZO_OBS` between fully-off and full
+//! span timing must not move a single bit of dense, masked, sharded or
+//! quantized stepping, replay, or serving), plus histogram semantics
+//! under concurrent recording, level gating, and the Prometheus
+//! renderer's output shape. `scripts/verify.sh` re-runs this file with
+//! `MEZO_OBS=2` under the full `MEZO_THREADS` × `MEZO_SIMD` matrix.
+//!
+//! Tests that flip the process-wide level serialize on [`LEVEL_LOCK`]
+//! and restore the previous level before asserting, so they compose
+//! with the test harness running everything else in parallel.
+
+use mezo::model::meta::TensorDesc;
+use mezo::model::params::ParamStore;
+use mezo::model::quant::QuantStore;
+use mezo::obs::{self, Counter, Gauge, Histo, Level, Registry, Span};
+use mezo::optim::mezo::{MezoConfig, MezoSgd, StepRecord};
+use mezo::rng::Pcg;
+use mezo::serve::{ServeConfig, ServeStore, UserLog};
+use mezo::shard::{ShardPlan, ShardedStore};
+use mezo::storage::Trajectory;
+use mezo::zkernel::{QBits, Sensitivity, SparseMask};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Serializes the tests that flip the process-wide obs level.
+static LEVEL_LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the level lock, shrugging off poison: a failed level test must
+/// not cascade into spurious failures here.
+fn level_lock() -> MutexGuard<'static, ()> {
+    LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn store_with(seed: u64, shapes: &[(&str, usize)]) -> ParamStore {
+    let specs = shapes
+        .iter()
+        .map(|(n, l)| TensorDesc { name: (*n).into(), shape: vec![*l], dtype: "f32".into() })
+        .collect();
+    let mut p = ParamStore::from_specs(specs);
+    p.init(seed);
+    p
+}
+
+fn bits(p: &ParamStore) -> Vec<u32> {
+    p.data.iter().flatten().map(|x| x.to_bits()).collect()
+}
+
+/// One deterministic pass over every numeric seam the obs layer
+/// instruments: dense and masked MeZO stepping, dense / sharded /
+/// masked trajectory replay, quantized masked stepping, and cached
+/// serving. Returns the concatenated bit patterns of every result.
+fn workload_bits() -> Vec<u32> {
+    let base = store_with(91, &[("emb", 600), ("w", 517)]);
+    let names: Vec<String> = vec!["emb".into(), "w".into()];
+    let cfg = MezoConfig { lr: 1e-2, eps: 1e-3, ..Default::default() };
+    let mut out = Vec::new();
+
+    // dense stepping (pool dispatch, optimizer metrics)
+    let mut dense = base.clone();
+    let mut opt = MezoSgd::new(cfg.clone(), vec![0, 1], 7);
+    let mut script = Pcg::new(11);
+    for _ in 0..8 {
+        opt.step(&mut dense, |_| Ok(script.next_f32() - 0.5)).unwrap();
+    }
+    out.extend(bits(&dense));
+
+    // masked stepping on the SensZOQ path
+    let mask = SparseMask::top_k(&base, &[0, 1], 96, Sensitivity::Magnitude).unwrap();
+    let mut masked = base.clone();
+    let mut opt_m = MezoSgd::new(cfg.clone(), vec![0, 1], 8);
+    opt_m.mask = Some(mask.clone());
+    let mut script = Pcg::new(12);
+    for _ in 0..8 {
+        opt_m.step(&mut masked, |_| Ok(script.next_f32() - 0.5)).unwrap();
+    }
+    out.extend(bits(&masked));
+
+    // quantized masked stepping, compared via dequantization
+    let mut quant = QuantStore::quantize(&base, QBits::Int8, Some(&mask)).unwrap();
+    let mut opt_q = MezoSgd::new(cfg, vec![0, 1], 8);
+    opt_q.mask = Some(mask.clone());
+    let mut script = Pcg::new(12);
+    for _ in 0..8 {
+        opt_q.step(&mut quant, |_| Ok(script.next_f32() - 0.5)).unwrap();
+    }
+    out.extend(bits(&quant.to_dense()));
+
+    // replay: the same log applied dense, sharded, and masked
+    let recs: Vec<StepRecord> = (0..10)
+        .map(|i| StepRecord {
+            seed: 900 + i as u64,
+            pgrad: 0.05 * i as f32 - 0.2,
+            lr: 2e-3,
+        })
+        .collect();
+    let traj = Trajectory::from_run(names.clone(), &recs);
+    let mut replayed = base.clone();
+    traj.replay(&mut replayed);
+    out.extend(bits(&replayed));
+
+    let plan = ShardPlan::new(&base, 3).unwrap();
+    let mut sharded = ShardedStore::scatter(&plan, &base).unwrap();
+    traj.replay_sharded(&mut sharded, &plan.manifest()).unwrap();
+    let mut gathered = base.clone();
+    sharded.gather_into(&mut gathered).unwrap();
+    out.extend(bits(&gathered));
+
+    let masked_traj =
+        Trajectory::from_run(names.clone(), &recs).with_mask_digest(mask.digest());
+    let mut replayed_m = base.clone();
+    masked_traj.replay_masked(&mut replayed_m, &mask).unwrap();
+    out.extend(bits(&replayed_m));
+
+    // serving: hit, miss and base paths (the clock()-guarded seams)
+    let mut serve =
+        ServeStore::new(base.clone(), ServeConfig { cache_capacity: 1 });
+    serve.admit(1, UserLog::dense(traj.clone())).unwrap();
+    serve
+        .admit(2, UserLog::masked(masked_traj.clone(), Arc::new(mask.clone())))
+        .unwrap();
+    for user in [1u64, 2, 1, 1] {
+        out.extend(bits(&serve.get(user).unwrap()));
+    }
+
+    out
+}
+
+#[test]
+fn obs_level_is_invisible_to_numerics() {
+    let _g = level_lock();
+    let prev = obs::level();
+    obs::set_level(Level::Off);
+    let off = workload_bits();
+    obs::set_level(Level::Spans);
+    let spans = workload_bits();
+    obs::set_level(prev);
+    assert_eq!(
+        off, spans,
+        "MEZO_OBS=0 vs MEZO_OBS=2 moved bits — instrumentation touched the numerics"
+    );
+}
+
+#[test]
+fn counters_and_gauges_gate_on_the_level() {
+    let _g = level_lock();
+    let prev = obs::level();
+    let c = Counter::new();
+    let gauge = Gauge::new();
+    obs::set_level(Level::Off);
+    c.inc();
+    c.add(5);
+    gauge.set(3.5);
+    assert_eq!(c.get(), 0, "counter moved at Level::Off");
+    assert_eq!(gauge.get(), 0.0, "gauge moved at Level::Off");
+    obs::set_level(Level::Counters);
+    c.inc();
+    c.add(4);
+    gauge.set(2.5);
+    obs::set_level(prev);
+    assert_eq!(c.get(), 5);
+    assert_eq!(gauge.get(), 2.5);
+}
+
+#[test]
+fn spans_read_the_clock_only_at_level_2() {
+    let _g = level_lock();
+    let prev = obs::level();
+    let h = Histo::new();
+    obs::set_level(Level::Counters);
+    drop(Span::start(&h));
+    assert!(obs::clock().is_none(), "clock() live below Level::Spans");
+    assert_eq!(h.snapshot().count(), 0, "span recorded below Level::Spans");
+    obs::set_level(Level::Spans);
+    drop(Span::start(&h));
+    obs::record_since(obs::clock(), &h);
+    obs::set_level(prev);
+    assert_eq!(h.snapshot().count(), 2);
+}
+
+#[test]
+fn snapshot_under_concurrent_recording_is_monotone_and_finally_exact() {
+    const WRITERS: u64 = 4;
+    const PER: u64 = 20_000;
+    let h = Arc::new(Histo::new());
+    let handles: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            let h = Arc::clone(&h);
+            std::thread::spawn(move || {
+                for i in 0..PER {
+                    // each writer records a disjoint value range, so the
+                    // final sum is the exact 0..WRITERS*PER triangle sum
+                    h.record(w * PER + i);
+                }
+            })
+        })
+        .collect();
+    // a concurrent snapshot is a valid histogram of some subset of the
+    // observations: counts never exceed what was issued, and successive
+    // snapshots never lose counts (per-bucket relaxed loads respect
+    // each atomic's modification order)
+    let mut last = 0u64;
+    for _ in 0..200 {
+        let c = h.snapshot().count();
+        assert!(c >= last, "snapshot count went backwards: {} -> {}", last, c);
+        assert!(c <= WRITERS * PER, "snapshot overshot: {}", c);
+        last = c;
+    }
+    for t in handles {
+        t.join().unwrap();
+    }
+    let s = h.snapshot();
+    let n = WRITERS * PER;
+    assert_eq!(s.count(), n);
+    assert_eq!(s.sum(), n * (n - 1) / 2);
+}
+
+#[test]
+fn render_text_has_the_pinned_prometheus_shape() {
+    let text = {
+        // hold the lock only while touching the level-gated registry
+        let _g = level_lock();
+        let prev = obs::level();
+        obs::set_level(Level::Counters);
+        mezo::obs::metrics::KERNEL_DISPATCHES
+            [mezo::obs::metrics::KernelFamily::Axpy as usize]
+            .inc();
+        let text = Registry::render_text();
+        obs::set_level(prev);
+        text
+    };
+    // headers + one representative line of each renderer form; values
+    // are NOT pinned (the registry is process-global and other tests
+    // bump it concurrently)
+    for needle in [
+        "# TYPE mezo_kernel_dispatches_total counter\n",
+        "mezo_kernel_dispatches_total{family=\"axpy\"} ",
+        "mezo_kernel_dispatches_total{family=\"multi_sgd\"} ",
+        "# TYPE mezo_kernel_ns summary\n",
+        "mezo_kernel_ns{family=\"axpy\",quantile=\"0.99\"} ",
+        "mezo_kernel_ns_count{family=\"axpy\"} ",
+        "# TYPE mezo_pool_workers gauge\n",
+        "mezo_fleet_rpc_ns{kind=\"perturb\",quantile=\"0.5\"} ",
+        "mezo_worker_frames_total{kind=\"shard_slice\"} ",
+        "# TYPE mezo_serve_requests_total counter\n",
+        "mezo_serve_hit_ns{quantile=\"0.9\"} ",
+        "mezo_serve_materialize_ns_sum ",
+        "# TYPE mezo_opt_steps_total counter\n",
+        "# TYPE mezo_opt_loss gauge\n",
+    ] {
+        assert!(text.contains(needle), "snapshot lacks {:?}", needle);
+    }
+    // zero-valued series are included: the line set is level- and
+    // load-independent, only the values move
+    assert!(text.ends_with('\n'));
+    for line in text.lines() {
+        if line.starts_with("# TYPE ") {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("metric line without a value: {:?}", line)
+        });
+        assert!(!name.is_empty(), "empty metric name in {:?}", line);
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "unparseable value {:?} in {:?}",
+            value,
+            line
+        );
+    }
+}
+
+#[test]
+fn kernel_dispatch_counts_once_per_entry_and_times_at_span_level() {
+    use mezo::obs::metrics::{KernelFamily, KERNEL_DISPATCHES, KERNEL_NS};
+    let _g = level_lock();
+    let prev = obs::level();
+    let fam = KernelFamily::Ema; // quiet family: no other test drives ema here
+    obs::set_level(Level::Counters);
+    let c0 = KERNEL_DISPATCHES[fam as usize].get();
+    let n0 = KERNEL_NS[fam as usize].snapshot().count();
+    drop(obs::kernel_dispatch(fam));
+    assert_eq!(KERNEL_DISPATCHES[fam as usize].get(), c0 + 1);
+    assert_eq!(
+        KERNEL_NS[fam as usize].snapshot().count(),
+        n0,
+        "latency recorded below span level"
+    );
+    obs::set_level(Level::Spans);
+    drop(obs::kernel_dispatch(fam));
+    obs::set_level(prev);
+    assert_eq!(KERNEL_DISPATCHES[fam as usize].get(), c0 + 2);
+    assert_eq!(KERNEL_NS[fam as usize].snapshot().count(), n0 + 1);
+}
